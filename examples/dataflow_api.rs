@@ -1,0 +1,86 @@
+//! The dataflow API (paper §3.1): Q7 declared in a handful of lines —
+//! the Flink-like veneer over the procedural API, with the determinism,
+//! exactly-once and work-stealing guarantees inherited from the engine.
+//! Also demonstrates §3.2's out-of-order handling (`allowed_lateness`).
+//!
+//! Run: cargo run --release --example dataflow_api
+
+use holon::api::WindowQueryBuilder;
+use holon::clock::SimClock;
+use holon::codec::{Encode, Writer};
+use holon::config::HolonConfig;
+use holon::crdt::BoundedTopK;
+use holon::engine::node::decode_output;
+use holon::engine::HolonCluster;
+use holon::nexmark::{producer, Event};
+
+fn main() {
+    // Q7 ("highest bid per window") in the dataflow API:
+    let q7 = WindowQueryBuilder::<BoundedTopK>::tumbling(1000)
+        .allowed_lateness(100) // tolerate 100 ms of event disorder
+        .insert(|p, ev, tk| {
+            if let Event::Bid { auction, price, .. } = ev {
+                tk.set_k(3); // keep the top three bids, not just the max
+                tk.offer(*price, *auction, p as u64);
+            }
+        })
+        .emit(|w, tk| {
+            let mut wr = Writer::new();
+            wr.put_u64(w);
+            let top: Vec<(f64, u64)> = tk.top().iter().map(|&(s, a, _)| (s.0, a)).collect();
+            wr.put_u32(top.len() as u32);
+            for (price, auction) in top {
+                wr.put_f64(price);
+                wr.put_u64(auction);
+            }
+            Some(wr.into_bytes())
+        });
+
+    let mut cfg = HolonConfig::default();
+    cfg.nodes = 3;
+    cfg.partitions = 6;
+    cfg.events_per_sec_per_partition = 1000;
+    cfg.wall_ms_per_sim_sec = 50.0;
+    cfg.duration_ms = 6000;
+
+    println!("top-3 bids per 1s window, declared in the dataflow API:\n");
+    let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
+    let cluster = HolonCluster::start_with_clock(cfg.clone(), q7, clock.clone());
+    let prod = producer::spawn(
+        cluster.input.clone(),
+        clock.clone(),
+        cfg.seed,
+        cfg.events_per_sec_per_partition,
+        cfg.duration_ms,
+    );
+    std::thread::sleep(clock.wall_for(cfg.duration_ms + 4000));
+    prod.stop();
+    cluster.stop();
+
+    // read partition 0's deduplicated outputs (all partitions agree)
+    let (recs, _) = cluster.output.read(0, 0, usize::MAX >> 1);
+    let mut seen = 0u64;
+    for rec in recs {
+        let (seq, _ts, inner) = decode_output(&rec.payload).unwrap();
+        if seq < seen {
+            continue;
+        }
+        seen = seq + 1;
+        let mut r = holon::codec::Reader::new(&inner);
+        let w = r.get_u64().unwrap();
+        let n = r.get_u32().unwrap();
+        let mut tops = Vec::new();
+        for _ in 0..n {
+            let price = r.get_f64().unwrap();
+            let auction = r.get_u64().unwrap();
+            tops.push(format!("${price:.2} (auction {auction})"));
+        }
+        println!("window {w}: {}", tops.join("  >  "));
+    }
+    let _ = Encode::to_bytes(&0u8); // keep the Encode import exercised
+    println!(
+        "\n{} outputs, mean latency {:.0} sim-ms — same guarantees as the procedural API.",
+        cluster.metrics.outputs.load(std::sync::atomic::Ordering::Acquire),
+        cluster.metrics.latency.mean()
+    );
+}

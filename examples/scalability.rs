@@ -1,0 +1,39 @@
+//! Scalability sweep (the paper's Figure 9 shape, scaled down for an
+//! example): average Q7 latency as the cluster grows, Holon vs the
+//! centralized baseline. Input volume scales with cluster size, as in
+//! the paper's single-host methodology (§5.3).
+//!
+//! Run: cargo run --release --example scalability
+
+use holon::benchkit::{ratio, row, secs, section};
+use holon::config::HolonConfig;
+use holon::experiments::{run_flink, run_holon, Workload};
+
+fn main() {
+    section("Q7 average latency vs cluster size (volume scales with nodes)");
+    for nodes in [4u32, 8, 16] {
+        let mut cfg = HolonConfig::default();
+        cfg.nodes = nodes;
+        cfg.partitions = nodes * 2;
+        cfg.events_per_sec_per_partition = 1000;
+        cfg.wall_ms_per_sim_sec = 20.0;
+        cfg.duration_ms = 15_000;
+        cfg.window_ms = 1000;
+
+        let holon = run_holon(&cfg, Workload::Q7, vec![]);
+        let flink = run_flink(&cfg, Workload::Q7, false, vec![]);
+        row(
+            &format!("{nodes} nodes"),
+            &[
+                ("holon_avg_s", secs(holon.latency_mean_ms)),
+                ("flink_avg_s", secs(flink.latency_mean_ms)),
+                (
+                    "advantage",
+                    ratio(flink.latency_mean_ms, holon.latency_mean_ms),
+                ),
+                ("holon_consumed", holon.consumed.to_string()),
+            ],
+        );
+    }
+    println!("\nThe full 10..100-node sweep is `cargo bench --bench fig9_scalability`.");
+}

@@ -1,0 +1,57 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts for the rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``).  The HLO text parser on the rust side reassigns ids, so text
+round-trips cleanly.  See /opt/xla-example/gen_hlo.py.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text, return_tuple=True."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+EXPORTS = {
+    "window_agg": (model.window_batch, model.window_batch_specs),
+    "crdt_merge": (model.merge_batch, model.merge_batch_specs),
+}
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--only", choices=sorted(EXPORTS), default=None)
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = [args.only] if args.only else sorted(EXPORTS)
+    for name in names:
+        fn, specs = EXPORTS[name]
+        lowered = jax.jit(fn).lower(*specs())
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path}")
+
+
+if __name__ == "__main__":
+    main()

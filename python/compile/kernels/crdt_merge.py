@@ -1,0 +1,51 @@
+"""Layer-1 Pallas kernel: CRDT lattice merge (element-wise join).
+
+State-based CRDT synchronization merges two replicas by a join-semilattice
+`merge`.  For the numeric CRDTs Holon Streaming gossips at high rate —
+GCounter per-node contribution vectors, MaxRegister/TopK score tables —
+the join is an element-wise max over equally-shaped matrices:
+
+    merged[i, j] = max(a[i, j], b[i, j])
+
+For PNCounter-style state the increment and decrement planes are stored as
+separate rows, so a single element-wise max still implements the join.
+
+Pure VPU workload: tiled element-wise max with (8, 128)-aligned blocks —
+no MXU involvement, no cross-lane traffic.  interpret=True for the CPU
+PJRT path (see window_agg.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default AOT merge-tile shape: 64 replicas/rows x 128 lanes.
+ROWS = 64
+COLS = 128
+ROW_TILE = 8
+
+
+def _merge_kernel(a_ref, b_ref, out_ref):
+    out_ref[...] = jnp.maximum(a_ref[...], b_ref[...])
+
+
+@jax.jit
+def crdt_merge(a, b):
+    """Element-wise lattice join of two f32[R, C] state matrices."""
+    rows, cols = a.shape
+    assert a.shape == b.shape
+    assert rows % ROW_TILE == 0
+    grid = (rows // ROW_TILE,)
+    spec = pl.BlockSpec((ROW_TILE, cols), lambda i: (i, 0))
+    return pl.pallas_call(
+        _merge_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+No pallas imports here: these are straight-line jax.numpy implementations
+that pytest/hypothesis compare the kernels against.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+
+
+def window_aggregate_ref(values, window_ids, *, windows):
+    """Reference segment reduce: per-window (sums, counts, maxes)."""
+    wids = window_ids[None, :] == jnp.arange(windows, dtype=jnp.int32)[:, None]
+    vals = jnp.broadcast_to(values[None, :], wids.shape)
+    sums = jnp.sum(jnp.where(wids, vals, 0.0), axis=1)
+    counts = jnp.sum(wids.astype(jnp.float32), axis=1)
+    maxes = jnp.max(jnp.where(wids, vals, NEG_INF), axis=1)
+    return sums, counts, maxes
+
+
+def crdt_merge_ref(a, b):
+    """Reference lattice join: element-wise max."""
+    return jnp.maximum(a, b)
+
+
+def averages_ref(sums, counts):
+    """Guarded per-window average: 0 where the window is empty."""
+    return jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), 0.0)

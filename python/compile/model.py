@@ -1,0 +1,57 @@
+"""Layer-2 JAX compute graphs (build-time only; AOT-lowered by aot.py).
+
+Two graphs are exported for the rust hot path:
+
+* ``window_batch`` — the per-batch aggregation step of the node executor:
+  calls the Pallas ``window_aggregate`` kernel and derives per-window
+  averages (guarded division) in the same fused module.  One executable
+  invocation folds a whole event batch into per-window partial aggregates
+  (sum, count, max, avg) that rust then joins into WCRDT lattice state.
+
+* ``merge_batch`` — the gossip-path lattice join: calls the Pallas
+  ``crdt_merge`` kernel on stacked replica state matrices.
+
+Both are pure functions of their inputs — no trainable state — so forward
+lowering is all the paper's system needs (there is no bwd pass in a
+stream-aggregation workload).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.window_agg import window_aggregate, BATCH, WINDOWS
+from compile.kernels.crdt_merge import crdt_merge, ROWS, COLS
+
+
+def window_batch(values, window_ids):
+    """Aggregate one event batch.
+
+    Args:
+      values:     f32[BATCH]  event values (padded entries arbitrary).
+      window_ids: i32[BATCH]  window index in [0, WINDOWS); negative = pad.
+
+    Returns:
+      (sums, counts, maxes, avgs): four f32[WINDOWS] vectors.
+    """
+    sums, counts, maxes = window_aggregate(values, window_ids, windows=WINDOWS)
+    avgs = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), 0.0)
+    return sums, counts, maxes, avgs
+
+
+def merge_batch(a, b):
+    """Join two stacked replica state matrices (f32[ROWS, COLS])."""
+    return (crdt_merge(a, b),)
+
+
+def window_batch_specs():
+    return (
+        jax.ShapeDtypeStruct((BATCH,), jnp.float32),
+        jax.ShapeDtypeStruct((BATCH,), jnp.int32),
+    )
+
+
+def merge_batch_specs():
+    spec = jax.ShapeDtypeStruct((ROWS, COLS), jnp.float32)
+    return (spec, spec)

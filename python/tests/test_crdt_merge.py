@@ -1,0 +1,60 @@
+"""Pallas crdt_merge kernel vs oracle + lattice laws."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile.kernels import ref
+from compile.kernels.crdt_merge import COLS, ROW_TILE, ROWS, crdt_merge
+
+
+def rand(seed, rows=ROWS, cols=COLS):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(scale=50.0, size=(rows, cols)), jnp.float32)
+
+
+def test_matches_ref():
+    a, b = rand(1), rand(2)
+    np.testing.assert_array_equal(
+        np.asarray(crdt_merge(a, b)), np.asarray(ref.crdt_merge_ref(a, b))
+    )
+
+
+def test_idempotent():
+    a = rand(3)
+    np.testing.assert_array_equal(np.asarray(crdt_merge(a, a)), np.asarray(a))
+
+
+def test_commutative():
+    a, b = rand(4), rand(5)
+    np.testing.assert_array_equal(
+        np.asarray(crdt_merge(a, b)), np.asarray(crdt_merge(b, a))
+    )
+
+
+def test_associative():
+    a, b, c = rand(6), rand(7), rand(8)
+    left = crdt_merge(crdt_merge(a, b), c)
+    right = crdt_merge(a, crdt_merge(b, c))
+    np.testing.assert_array_equal(np.asarray(left), np.asarray(right))
+
+
+def test_monotone_wrt_inputs():
+    a, b = rand(9), rand(10)
+    m = np.asarray(crdt_merge(a, b))
+    assert (m >= np.asarray(a)).all() and (m >= np.asarray(b)).all()
+
+
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    rows=st.sampled_from([ROW_TILE, 16, ROWS]),
+    cols=st.sampled_from([8, COLS, 256]),
+)
+@settings(max_examples=30, deadline=None)
+def test_hypothesis_shapes(seed, rows, cols):
+    a = rand(seed, rows, cols)
+    b = rand(seed + 1, rows, cols)
+    np.testing.assert_array_equal(
+        np.asarray(crdt_merge(a, b)), np.maximum(np.asarray(a), np.asarray(b))
+    )

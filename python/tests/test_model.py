@@ -1,0 +1,54 @@
+"""L2 model graphs: shapes, averaging, and AOT lowering round-trip."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.aot import EXPORTS, to_hlo_text
+from compile.kernels import ref
+from compile.kernels.window_agg import BATCH, WINDOWS
+
+
+def test_window_batch_shapes():
+    vals = jnp.ones((BATCH,), jnp.float32)
+    wids = jnp.zeros((BATCH,), jnp.int32)
+    sums, counts, maxes, avgs = model.window_batch(vals, wids)
+    for out in (sums, counts, maxes, avgs):
+        assert out.shape == (WINDOWS,)
+        assert out.dtype == jnp.float32
+
+
+def test_window_batch_avg_guarded():
+    vals = jnp.asarray(np.full(BATCH, 4.0, np.float32))
+    wids = jnp.asarray(np.full(BATCH, -1, np.int32))  # no valid events
+    _, counts, _, avgs = model.window_batch(vals, wids)
+    assert float(counts.sum()) == 0.0
+    assert float(jnp.abs(avgs).sum()) == 0.0  # no NaN/inf from 0/0
+
+
+def test_window_batch_avg_matches_ref():
+    rng = np.random.default_rng(11)
+    vals = jnp.asarray(rng.normal(size=BATCH), jnp.float32)
+    wids = jnp.asarray(rng.integers(0, WINDOWS, BATCH), jnp.int32)
+    sums, counts, _, avgs = model.window_batch(vals, wids)
+    np.testing.assert_allclose(
+        np.asarray(avgs), np.asarray(ref.averages_ref(sums, counts)), rtol=1e-6
+    )
+
+
+def test_merge_batch_is_join():
+    a, b = model.merge_batch_specs()
+    x = jnp.zeros(a.shape, a.dtype) + 1.0
+    y = jnp.zeros(b.shape, b.dtype) + 2.0
+    (m,) = model.merge_batch(x, y)
+    assert float(m.min()) == 2.0
+
+
+def test_all_exports_lower_to_hlo_text():
+    """Every artifact aot.py exports must lower and contain an ENTRY."""
+    for name, (fn, specs) in EXPORTS.items():
+        lowered = jax.jit(fn).lower(*specs())
+        text = to_hlo_text(lowered)
+        assert "ENTRY" in text, name
+        assert len(text) > 200, name

@@ -1,0 +1,116 @@
+"""Pallas window_aggregate kernel vs pure-jnp oracle (the core L1 signal)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import ref
+from compile.kernels.window_agg import (
+    BATCH,
+    NEG_INF,
+    WINDOW_TILE,
+    WINDOWS,
+    window_aggregate,
+)
+
+hypothesis.settings.register_profile("ci", deadline=None, max_examples=50)
+hypothesis.settings.load_profile("ci")
+
+
+def run_both(values, window_ids, windows=WINDOWS):
+    values = jnp.asarray(values, jnp.float32)
+    window_ids = jnp.asarray(window_ids, jnp.int32)
+    got = window_aggregate(values, window_ids, windows=windows)
+    want = ref.window_aggregate_ref(values, window_ids, windows=windows)
+    return got, want
+
+
+def assert_matches(got, want):
+    for g, w, name in zip(got, want, ["sums", "counts", "maxes"]):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=1e-6, atol=1e-5, err_msg=name
+        )
+
+
+def test_single_window():
+    got, want = run_both(np.ones(BATCH), np.zeros(BATCH))
+    assert_matches(got, want)
+    assert float(got[0][0]) == BATCH  # all values land in window 0
+    assert float(got[1][0]) == BATCH
+    assert float(got[2][0]) == 1.0
+
+
+def test_round_robin_windows():
+    wids = np.arange(BATCH) % WINDOWS
+    vals = np.arange(BATCH, dtype=np.float32)
+    got, want = run_both(vals, wids)
+    assert_matches(got, want)
+
+
+def test_padding_is_ignored():
+    vals = np.full(BATCH, 7.0, np.float32)
+    wids = np.full(BATCH, -1, np.int32)  # everything is padding
+    wids[:3] = 5
+    got, _ = run_both(vals, wids)
+    sums, counts, maxes = got
+    assert float(sums[5]) == 21.0
+    assert float(counts[5]) == 3.0
+    assert float(counts.sum()) == 3.0
+
+
+def test_empty_window_max_is_neg_inf():
+    vals = np.ones(BATCH, np.float32)
+    wids = np.zeros(BATCH, np.int32)
+    got, _ = run_both(vals, wids)
+    assert float(got[2][1]) == NEG_INF
+
+
+def test_negative_values():
+    rng = np.random.default_rng(0)
+    vals = rng.normal(size=BATCH).astype(np.float32) - 10.0
+    wids = rng.integers(0, WINDOWS, BATCH).astype(np.int32)
+    got, want = run_both(vals, wids)
+    assert_matches(got, want)
+
+
+def test_out_of_range_ids_are_dropped():
+    vals = np.ones(BATCH, np.float32)
+    wids = np.full(BATCH, WINDOWS + 3, np.int32)  # beyond the window range
+    got, _ = run_both(vals, wids)
+    assert float(got[1].sum()) == 0.0
+
+
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    windows=st.sampled_from([WINDOW_TILE, 16, WINDOWS, 64]),
+    batch=st.sampled_from([8, 64, 256, BATCH]),
+)
+@settings(max_examples=40, deadline=None)
+def test_hypothesis_matches_ref(seed, windows, batch):
+    rng = np.random.default_rng(seed)
+    vals = rng.normal(scale=100.0, size=batch).astype(np.float32)
+    # include padding (-1) and out-of-range ids in the sweep
+    wids = rng.integers(-1, windows + 1, batch).astype(np.int32)
+    got, want = run_both(vals, wids, windows=windows)
+    assert_matches(got, want)
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=20, deadline=None)
+def test_sum_of_counts_equals_valid_events(seed):
+    rng = np.random.default_rng(seed)
+    vals = rng.normal(size=BATCH).astype(np.float32)
+    wids = rng.integers(-1, WINDOWS, BATCH).astype(np.int32)
+    got, _ = run_both(vals, wids)
+    valid = int((wids >= 0).sum())
+    assert int(np.asarray(got[1]).sum()) == valid
+
+
+def test_batch_must_match_grid_assert():
+    with pytest.raises(AssertionError):
+        window_aggregate(
+            jnp.ones((8,), jnp.float32), jnp.zeros((8,), jnp.int32), windows=12
+        )  # 12 is not a multiple of WINDOW_TILE

@@ -1,0 +1,78 @@
+//! Ablations over the design choices DESIGN.md calls out: gossip mode
+//! (full-state vs delta, §7), gossip interval, gossip fan-out, and
+//! batch size — each swept on the Q7 failure-free workload.
+
+mod common;
+
+use holon::benchkit::{row, section};
+use holon::experiments::{run_holon, Workload};
+
+fn main() {
+    let base = {
+        let mut cfg = common::failure_cfg();
+        cfg.duration_ms = 20_000;
+        cfg
+    };
+
+    section("Ablation: gossip payload mode (full vs delta, paper §7)");
+    for (name, delta) in [("full-state", false), ("delta+anti-entropy", true)] {
+        let mut cfg = base.clone();
+        cfg.gossip_delta = delta;
+        let r = run_holon(&cfg, Workload::Q7, vec![]);
+        row(
+            name,
+            &[
+                ("avg_latency_ms", format!("{:.0}", r.latency_mean_ms)),
+                ("p99_ms", r.latency_p99_ms.to_string()),
+                ("outputs", r.outputs.to_string()),
+            ],
+        );
+    }
+
+    section("Ablation: gossip interval (latency floor vs sync traffic)");
+    for interval in [25u64, 50, 100, 200, 400] {
+        let mut cfg = base.clone();
+        cfg.gossip_interval_ms = interval;
+        let r = run_holon(&cfg, Workload::Q7, vec![]);
+        row(
+            &format!("{interval} ms"),
+            &[
+                ("avg_latency_ms", format!("{:.0}", r.latency_mean_ms)),
+                ("p99_ms", r.latency_p99_ms.to_string()),
+            ],
+        );
+    }
+
+    section("Ablation: gossip fan-out (convergence depth)");
+    for fanout in [0u32, 2, 4, 8] {
+        let mut cfg = base.clone();
+        cfg.gossip_fanout = fanout;
+        let r = run_holon(&cfg, Workload::Q7, vec![]);
+        row(
+            &(if fanout == 0 {
+                "broadcast".to_string()
+            } else {
+                format!("fanout {fanout}")
+            }),
+            &[
+                ("avg_latency_ms", format!("{:.0}", r.latency_mean_ms)),
+                ("p99_ms", r.latency_p99_ms.to_string()),
+            ],
+        );
+    }
+
+    section("Ablation: run-loop batch size");
+    for batch in [64usize, 256, 1024, 4096] {
+        let mut cfg = base.clone();
+        cfg.batch_size = batch;
+        let r = run_holon(&cfg, Workload::Q7, vec![]);
+        row(
+            &format!("batch {batch}"),
+            &[
+                ("avg_latency_ms", format!("{:.0}", r.latency_mean_ms)),
+                ("p99_ms", r.latency_p99_ms.to_string()),
+                ("consumed", r.consumed.to_string()),
+            ],
+        );
+    }
+}

@@ -1,0 +1,27 @@
+//! Shared configuration for the paper-reproduction benches.
+//!
+//! All benches run Q7 on the §5.2 deployment shape (5 nodes, 10
+//! partitions) unless stated otherwise, at a sim-time scale that keeps
+//! `cargo bench` in the minutes range. Paper constants (checkpoint 5 s,
+//! heartbeat 4 s / timeout 6 s, restart 10 s) are kept verbatim in
+//! sim-time, so ratios between systems are preserved.
+
+use holon::config::HolonConfig;
+
+/// The §5.2 failure-experiment deployment: Q7 on five nodes.
+pub fn failure_cfg() -> HolonConfig {
+    let mut cfg = HolonConfig::default();
+    cfg.nodes = 5;
+    cfg.partitions = 10;
+    cfg.events_per_sec_per_partition = 1000;
+    cfg.wall_ms_per_sim_sec = 20.0; // 60 sim-s in 1.2 wall-s
+    cfg.duration_ms = 60_000;
+    cfg.window_ms = 1000;
+    cfg
+}
+
+/// When the failure scenarios begin (sim-ms into the run).
+pub const FAILURE_T0: u64 = 20_000;
+
+/// Bucket width of the latency/throughput series (sim-ms).
+pub const BUCKET_MS: u64 = 500;

@@ -1,0 +1,95 @@
+//! Figure 6 — latency & throughput during node failure scenarios
+//! (Holon top, Flink bottom). Regenerates the time series of §5.2: Q7
+//! on five nodes; two nodes failed at t=20 s per scenario.
+//!
+//! Expected shape (paper): Holon recovers within ~2 s and catches up;
+//! Flink takes tens of seconds (detection 6 s + restart 10 s + restore
+//! + replay); on crash without restart Holon reconfigures and continues
+//! while Flink stalls.
+
+mod common;
+
+use common::{failure_cfg, FAILURE_T0};
+use holon::benchkit::{row, secs, section, sparkline};
+use holon::experiments::{run_flink, run_holon, RunResult, Scenario, Workload};
+
+fn print_series(label: &str, r: &RunResult) {
+    let lat: Vec<f64> = r.latency_series.iter().map(|v| v.unwrap_or(0.0)).collect();
+    println!("{label:<22} latency    {}", sparkline(&lat));
+    println!("{label:<22} throughput {}", sparkline(&r.throughput_series));
+    // numeric rows for EXPERIMENTS.md (one sample per 2 s of sim time)
+    let step = 4; // 4 x 500ms buckets
+    let lat_samples: Vec<String> = lat
+        .iter()
+        .step_by(step)
+        .map(|v| format!("{:.0}", v))
+        .collect();
+    println!("{label:<22} lat_ms[2s] {}", lat_samples.join(","));
+}
+
+/// Disturbance duration after the failure: buckets with *no* output
+/// (outage) plus buckets with latency > 3x the pre-failure mean
+/// (catch-up), in paper-seconds.
+fn recovery_seconds(r: &RunResult, pre_fail_buckets: usize) -> f64 {
+    if r.latency_series.len() <= pre_fail_buckets {
+        return 0.0;
+    }
+    let pre: Vec<f64> = r.latency_series[..pre_fail_buckets]
+        .iter()
+        .filter_map(|v| *v)
+        .collect();
+    let pre_mean = pre.iter().sum::<f64>() / pre.len().max(1) as f64;
+    let disturbed = r.latency_series[pre_fail_buckets..]
+        .iter()
+        .filter(|v| match v {
+            None => true,                          // outage: nothing emitted
+            Some(x) => *x > 3.0 * pre_mean.max(1.0), // catch-up spike
+        })
+        .count();
+    disturbed as f64 * 0.5
+}
+
+fn main() {
+    let cfg = failure_cfg();
+    for scenario in [
+        Scenario::ConcurrentFailures,
+        Scenario::SubsequentFailures,
+        Scenario::CrashFailures,
+    ] {
+        section(&format!("Figure 6 — {}", scenario.name()));
+        let holon = run_holon(&cfg, Workload::Q7, scenario.schedule(FAILURE_T0));
+        let flink = run_flink(&cfg, Workload::Q7, false, scenario.schedule(FAILURE_T0));
+        print_series("Holon", &holon);
+        print_series("Flink (model)", &flink);
+
+        let pre = (FAILURE_T0 / common::BUCKET_MS) as usize;
+        row(
+            "recovery (elevated lat.)",
+            &[
+                ("holon_s", format!("{:.1}", recovery_seconds(&holon, pre))),
+                ("flink_s", format!("{:.1}", recovery_seconds(&flink, pre))),
+            ],
+        );
+        row(
+            "avg latency",
+            &[
+                ("holon_s", secs(holon.latency_mean_ms)),
+                ("flink_s", secs(flink.latency_mean_ms)),
+            ],
+        );
+        row(
+            "outputs (progress)",
+            &[
+                ("holon", holon.outputs.to_string()),
+                ("flink", flink.outputs.to_string()),
+            ],
+        );
+        if scenario == Scenario::CrashFailures {
+            println!(
+                "crash: Holon continues after reconfiguration ({} steals); the \
+                 baseline without spare slots stalls permanently",
+                holon.steals
+            );
+        }
+    }
+}

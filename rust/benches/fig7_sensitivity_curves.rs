@@ -1,0 +1,63 @@
+//! Figure 7 — latency sensitivity curves for concurrent failures: the
+//! latency-over-time curve of each system under the concurrent-failure
+//! scenario, against its own failure-free baseline. The sensitivity is
+//! the area between the two curves (Gramoli et al.).
+
+mod common;
+
+use common::{failure_cfg, FAILURE_T0};
+use holon::benchkit::{row, section, sparkline};
+use holon::experiments::{run_flink, run_holon, Scenario, Workload};
+
+fn main() {
+    let cfg = failure_cfg();
+    section("Figure 7 — sensitivity curves (concurrent failures at t=20s)");
+
+    let holon_base = run_holon(&cfg, Workload::Q7, vec![]);
+    let holon_fail = run_holon(
+        &cfg,
+        Workload::Q7,
+        Scenario::ConcurrentFailures.schedule(FAILURE_T0),
+    );
+    let flink_base = run_flink(&cfg, Workload::Q7, false, vec![]);
+    let flink_fail = run_flink(
+        &cfg,
+        Workload::Q7,
+        false,
+        Scenario::ConcurrentFailures.schedule(FAILURE_T0),
+    );
+
+    // excess-latency curves (failure minus baseline; outages age)
+    for (name, fail, base) in [
+        ("Holon", &holon_fail, &holon_base),
+        ("Flink (model)", &flink_fail, &flink_base),
+    ] {
+        // skip the 10 s startup transient, as sensitivity_vs does
+        let excess = holon::metrics::excess_series(
+            &fail.latency_series[20.min(fail.latency_series.len())..],
+            &base.latency_series[20.min(base.latency_series.len())..],
+            common::BUCKET_MS,
+        );
+        println!("{name:<16} excess latency {}", sparkline(&excess));
+        let curve: Vec<String> = excess
+            .iter()
+            .step_by(4)
+            .map(|v| format!("{:.0}", v))
+            .collect();
+        println!("{name:<16} excess_ms[2s] {}", curve.join(","));
+    }
+
+    let s_holon = holon_fail.sensitivity_vs(&holon_base);
+    let s_flink = flink_fail.sensitivity_vs(&flink_base);
+    row(
+        "sensitivity (area, s^2)",
+        &[
+            ("holon", format!("{s_holon:.2}")),
+            ("flink", format!("{s_flink:.2}")),
+            (
+                "flink/holon",
+                format!("{:.0}x", s_flink / s_holon.max(1e-9)),
+            ),
+        ],
+    );
+}

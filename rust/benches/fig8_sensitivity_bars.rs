@@ -1,0 +1,39 @@
+//! Figure 8 — latency sensitivity across failure scenarios: one bar per
+//! (system, scenario) pair. Paper shape: Holon ≥ 20× lower sensitivity
+//! than Flink in every scenario.
+
+mod common;
+
+use common::{failure_cfg, FAILURE_T0};
+use holon::benchkit::{row, section};
+use holon::experiments::{run_flink, run_holon, Scenario, Workload};
+
+fn main() {
+    let cfg = failure_cfg();
+    section("Figure 8 — latency sensitivity across failure scenarios");
+
+    let holon_base = run_holon(&cfg, Workload::Q7, vec![]);
+    let flink_base = run_flink(&cfg, Workload::Q7, false, vec![]);
+
+    for scenario in [
+        Scenario::ConcurrentFailures,
+        Scenario::SubsequentFailures,
+        Scenario::CrashFailures,
+    ] {
+        let holon = run_holon(&cfg, Workload::Q7, scenario.schedule(FAILURE_T0));
+        let flink = run_flink(&cfg, Workload::Q7, false, scenario.schedule(FAILURE_T0));
+        let s_holon = holon.sensitivity_vs(&holon_base);
+        let s_flink = flink.sensitivity_vs(&flink_base);
+        row(
+            scenario.name(),
+            &[
+                ("holon_s2", format!("{s_holon:.2}")),
+                ("flink_s2", format!("{s_flink:.2}")),
+                (
+                    "flink/holon",
+                    format!("{:.0}x", s_flink / s_holon.max(1e-9)),
+                ),
+            ],
+        );
+    }
+}

@@ -1,0 +1,114 @@
+//! Hot-path micro benchmarks (the §Perf working set): CRDT merges,
+//! WCRDT gossip encode/join, log append/read, and the batch aggregators
+//! (scalar vs AOT XLA kernel). These are the numbers the perf pass in
+//! EXPERIMENTS.md §Perf iterates on.
+
+use holon::api::{BatchAggregator, ScalarAggregator};
+use holon::benchkit::{bench, section};
+use holon::clock::SimClock;
+use holon::codec::{Decode, Encode};
+use holon::crdt::{BoundedTopK, Crdt, GCounter, MapCrdt, PrefixAgg};
+use holon::log::LogBroker;
+use holon::runtime::{XlaMergeKernel, XlaWindowAggregator, MERGE_COLS, MERGE_ROWS};
+use holon::util::XorShift64;
+use holon::wcrdt::{WindowAssigner, WindowedCrdt};
+
+fn main() {
+    section("micro: CRDT merge");
+    let mut rng = XorShift64::new(7);
+    let mut a = GCounter::new();
+    let mut b = GCounter::new();
+    for p in 0..50u64 {
+        a.add(p, rng.next_below(1000));
+        b.add(p, rng.next_below(1000));
+    }
+    bench("gcounter_merge_50_contributors", 100, 10_000, || {
+        let mut x = a.clone();
+        x.merge(&b);
+        std::hint::black_box(&x);
+    });
+
+    let mut ta = BoundedTopK::new(10);
+    let mut tb = BoundedTopK::new(10);
+    for i in 0..200 {
+        ta.offer(rng.next_f64() * 1000.0, i, i % 8);
+        tb.offer(rng.next_f64() * 1000.0, i + 200, i % 8);
+    }
+    bench("topk10_merge", 100, 10_000, || {
+        let mut x = ta.clone();
+        x.merge(&tb);
+        std::hint::black_box(&x);
+    });
+
+    section("micro: WCRDT gossip path (encode + decode + join)");
+    let mut w: WindowedCrdt<MapCrdt<u64, PrefixAgg>> =
+        WindowedCrdt::new(WindowAssigner::tumbling(1000), 0..50);
+    for t in 0..16_000u64 {
+        let p = (t % 50) as u32;
+        let _ = w.insert_with(p, t, |m| m.entry(t % 10).observe(p as u64, 1.0));
+    }
+    let bytes = w.to_bytes();
+    println!("gossip payload: {} bytes ({} windows live)", bytes.len(), w.live_windows());
+    bench("wcrdt_encode", 10, 2_000, || {
+        std::hint::black_box(w.to_bytes());
+    });
+    bench("wcrdt_decode", 10, 2_000, || {
+        std::hint::black_box(
+            WindowedCrdt::<MapCrdt<u64, PrefixAgg>>::from_bytes(&bytes).unwrap(),
+        );
+    });
+    let other = w.clone();
+    bench("wcrdt_join", 10, 2_000, || {
+        let mut x = w.clone();
+        x.merge(&other);
+        std::hint::black_box(&x);
+    });
+
+    section("micro: logged stream");
+    let clock = SimClock::manual();
+    let broker = LogBroker::new(clock);
+    let topic = broker.topic("bench", 1);
+    let payload = vec![0u8; 64];
+    bench("log_append_64B", 1000, 200_000, || {
+        topic.append(0, 1, payload.clone());
+    });
+    bench("log_read_batch_256", 10, 5_000, || {
+        let (recs, _) = topic.read(0, 0, 256);
+        std::hint::black_box(recs);
+    });
+
+    section("micro: batch aggregation (1024 events, 4 windows)");
+    let items: Vec<(f64, u64)> = (0..1024)
+        .map(|i| (((i * 37) % 9999) as f64, (i % 4) as u64))
+        .collect();
+    let mut scalar = ScalarAggregator;
+    bench("scalar_aggregate_1024", 100, 10_000, || {
+        std::hint::black_box(scalar.aggregate(&items));
+    });
+    match XlaWindowAggregator::load(std::path::Path::new("artifacts")) {
+        Ok(mut xla) => {
+            bench("xla_aggregate_1024", 20, 500, || {
+                std::hint::black_box(xla.aggregate(&items));
+            });
+            println!("xla kernel calls: {}", xla.calls());
+        }
+        Err(e) => println!("xla aggregate skipped: {e} (run `make artifacts`)"),
+    }
+
+    section("micro: CRDT merge kernel (XLA, 64x128 f32)");
+    match XlaMergeKernel::load(std::path::Path::new("artifacts")) {
+        Ok(kernel) => {
+            let a: Vec<f32> = (0..MERGE_ROWS * MERGE_COLS).map(|i| i as f32).collect();
+            let b: Vec<f32> = a.iter().rev().copied().collect();
+            bench("xla_crdt_merge_64x128", 20, 500, || {
+                std::hint::black_box(kernel.merge(&a, &b).unwrap());
+            });
+            // scalar reference for the same join
+            bench("scalar_crdt_merge_64x128", 100, 10_000, || {
+                let m: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x.max(*y)).collect();
+                std::hint::black_box(m);
+            });
+        }
+        Err(e) => println!("xla merge skipped: {e}"),
+    }
+}

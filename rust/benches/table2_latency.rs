@@ -1,0 +1,65 @@
+//! Table 2 — latency comparison (seconds) under failure scenarios:
+//! Avg and P99 for Holon, Flink and Flink-with-spare-slots, in the
+//! Baseline / Concurrent / Subsequent / Crash scenarios.
+//!
+//! Paper shape: Holon ~5× lower avg latency at baseline, ≥ 11× under
+//! failures; plain Flink has no entry for Crash (it stalls); spare
+//! slots recover Flink's crash case but stay well above Holon.
+
+mod common;
+
+use common::{failure_cfg, FAILURE_T0};
+use holon::benchkit::{secs, section};
+use holon::experiments::{run_flink, run_holon, RunResult, Scenario, Workload};
+#[allow(unused_imports)]
+use holon::benchkit::row;
+
+fn cell(r: &RunResult) -> String {
+    if r.stalled {
+        // the paper's "–": the job stopped making progress
+        return "    - /     -".to_string();
+    }
+    format!("{:>5} / {:>5}", secs(r.latency_mean_ms), secs(r.latency_p99_ms as f64))
+}
+
+fn main() {
+    let cfg = failure_cfg();
+    section("Table 2 — latency (avg s / p99 s) per failure scenario");
+    println!(
+        "{:<22} {:>14} {:>14} {:>14} {:>14}",
+        "System", "Baseline", "Concurrent", "Subsequent", "Crash"
+    );
+
+    let mut rows: Vec<(String, Vec<String>)> = Vec::new();
+
+    // Holon row
+    let mut cells = Vec::new();
+    for sc in Scenario::all() {
+        let r = run_holon(&cfg, Workload::Q7, sc.schedule(FAILURE_T0));
+        cells.push(cell(&r));
+    }
+    rows.push(("Holon".to_string(), cells));
+
+    // Flink row (plain: crash stalls -> "-")
+    let mut cells = Vec::new();
+    for sc in Scenario::all() {
+        let r = run_flink(&cfg, Workload::Q7, false, sc.schedule(FAILURE_T0));
+        cells.push(cell(&r));
+    }
+    rows.push(("Flink (model)".to_string(), cells));
+
+    // Flink with spare slots
+    let mut cells = Vec::new();
+    for sc in Scenario::all() {
+        let r = run_flink(&cfg, Workload::Q7, true, sc.schedule(FAILURE_T0));
+        cells.push(cell(&r));
+    }
+    rows.push(("Flink (Spare Slots)".to_string(), cells));
+
+    for (name, cells) in &rows {
+        println!(
+            "{:<22} {:>14} {:>14} {:>14} {:>14}",
+            name, cells[0], cells[1], cells[2], cells[3]
+        );
+    }
+}

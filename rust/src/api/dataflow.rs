@@ -1,0 +1,415 @@
+//! The dataflow API (paper §3.1): a Flink-like declarative veneer over
+//! the procedural API. "Programs in the dataflow API are always
+//! deterministic" (§3.3) because they compile to the safe emission
+//! pattern: windows are drained in sequence behind a cursor, so the
+//! nondeterministic completion *timing* never reaches the user code.
+//!
+//! A [`WindowQuery`] is the paper's Figure-2 pipeline: source →
+//! windowed CRDT insert → (completed) window value → map → emit. The
+//! user supplies two closures — how an event folds into the CRDT and
+//! how a completed window value maps to an output — and gets a full
+//! [`Processor`] with exactly-once, work stealing and determinism for
+//! free.
+
+use std::marker::PhantomData;
+
+use crate::crdt::Crdt;
+use crate::log::Record;
+use crate::nexmark::Event;
+use crate::util::{PartitionId, SimTime};
+use crate::wcrdt::{WatermarkGen, WindowAssigner, WindowId, WindowedCrdt};
+
+use super::{Ctx, Processor};
+
+/// Emission cursor local state (same layout as queries::Cursor, kept
+/// here so the dataflow API has no dependency on the query module).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DfCursor {
+    pub next: WindowId,
+}
+
+impl crate::codec::Encode for DfCursor {
+    fn encode(&self, w: &mut crate::codec::Writer) {
+        w.put_u64(self.next);
+    }
+}
+
+impl crate::codec::Decode for DfCursor {
+    fn decode(r: &mut crate::codec::Reader) -> crate::codec::DecodeResult<Self> {
+        Ok(DfCursor { next: r.get_u64()? })
+    }
+}
+
+/// A declarative windowed global aggregation.
+///
+/// ```ignore
+/// // Q7 in the dataflow API: five lines.
+/// let q7 = WindowQueryBuilder::<BoundedTopK>::tumbling(1000)
+///     .insert(|p, ev, tk| {
+///         if let Event::Bid { auction, price, .. } = ev {
+///             tk.offer(*price, *auction, p as u64);
+///         }
+///     })
+///     .emit(|w, tk| Some(encode(w, tk.max_score())));
+/// ```
+#[derive(Clone)]
+pub struct WindowQuery<C, FIns, FEmit>
+where
+    C: Crdt,
+    FIns: Fn(PartitionId, &Event, &mut C) + Clone + Send + Sync + 'static,
+    FEmit: Fn(WindowId, &C) -> Option<Vec<u8>> + Clone + Send + Sync + 'static,
+{
+    assigner: WindowAssigner,
+    watermark_gen: WatermarkGen,
+    insert: FIns,
+    emit: FEmit,
+    _marker: PhantomData<fn() -> C>,
+}
+
+/// Builder entry point: a tumbling-window query over a CRDT type.
+pub struct WindowQueryBuilder<C: Crdt> {
+    assigner: WindowAssigner,
+    watermark_gen: WatermarkGen,
+    _marker: PhantomData<fn() -> C>,
+}
+
+impl<C: Crdt> WindowQueryBuilder<C> {
+    /// Start building a tumbling-window query.
+    pub fn tumbling(window_ms: SimTime) -> Self {
+        Self {
+            assigner: WindowAssigner::tumbling(window_ms),
+            watermark_gen: WatermarkGen::Ascending,
+            _marker: PhantomData,
+        }
+    }
+
+    /// Start building a sliding-window query (§7 window generalization;
+    /// events fold into every covering window).
+    pub fn sliding(size_ms: SimTime, slide_ms: SimTime) -> Self {
+        Self {
+            assigner: WindowAssigner::sliding(size_ms, slide_ms),
+            watermark_gen: WatermarkGen::Ascending,
+            _marker: PhantomData,
+        }
+    }
+
+    /// Tolerate events arriving up to `max_delay_ms` late (paper §3.2's
+    /// out-of-order handling): the partition watermark trails the max
+    /// observed event time by the bound; later events are dropped.
+    pub fn allowed_lateness(mut self, max_delay_ms: SimTime) -> Self {
+        self.watermark_gen = WatermarkGen::BoundedOutOfOrder { max_delay_ms };
+        self
+    }
+
+    /// Provide the event-fold: how one event updates this partition's
+    /// contribution to its window.
+    pub fn insert<FIns>(self, insert: FIns) -> WindowQueryEmit<C, FIns>
+    where
+        FIns: Fn(PartitionId, &Event, &mut C) + Clone + Send + Sync + 'static,
+    {
+        WindowQueryEmit {
+            assigner: self.assigner,
+            watermark_gen: self.watermark_gen,
+            insert,
+            _marker: PhantomData,
+        }
+    }
+}
+
+/// Intermediate builder holding the insert fold.
+pub struct WindowQueryEmit<C: Crdt, FIns> {
+    assigner: WindowAssigner,
+    watermark_gen: WatermarkGen,
+    insert: FIns,
+    _marker: PhantomData<fn() -> C>,
+}
+
+impl<C, FIns> WindowQueryEmit<C, FIns>
+where
+    C: Crdt,
+    FIns: Fn(PartitionId, &Event, &mut C) + Clone + Send + Sync + 'static,
+{
+    /// Provide the output map over completed (deterministic) window
+    /// values; `None` suppresses the window's output.
+    pub fn emit<FEmit>(self, emit: FEmit) -> WindowQuery<C, FIns, FEmit>
+    where
+        FEmit: Fn(WindowId, &C) -> Option<Vec<u8>> + Clone + Send + Sync + 'static,
+    {
+        WindowQuery {
+            assigner: self.assigner,
+            watermark_gen: self.watermark_gen,
+            insert: self.insert,
+            emit,
+            _marker: PhantomData,
+        }
+    }
+}
+
+impl<C, FIns, FEmit> Processor for WindowQuery<C, FIns, FEmit>
+where
+    C: Crdt,
+    FIns: Fn(PartitionId, &Event, &mut C) + Clone + Send + Sync + 'static,
+    FEmit: Fn(WindowId, &C) -> Option<Vec<u8>> + Clone + Send + Sync + 'static,
+{
+    type Shared = WindowedCrdt<C>;
+    type Local = DfCursor;
+
+    fn init_shared(&self, partitions: &[PartitionId]) -> Self::Shared {
+        WindowedCrdt::new(self.assigner, partitions.iter().copied())
+    }
+
+    fn process(
+        &self,
+        ctx: &mut Ctx,
+        shared: &Self::Shared,
+        own: &mut Self::Shared,
+        local: &mut DfCursor,
+        events: &[Record],
+    ) {
+        let p = ctx.partition;
+        let mut max_ts = own.progress_of(p)
+            + match self.watermark_gen {
+                WatermarkGen::Ascending => 0,
+                WatermarkGen::BoundedOutOfOrder { max_delay_ms } => max_delay_ms,
+            };
+        let mut saw_event = false;
+        for rec in events {
+            if let Ok(ev) = crate::codec::Decode::from_bytes(&rec.payload) {
+                let ev: Event = ev;
+                max_ts = max_ts.max(rec.event_ts);
+                saw_event = true;
+                if self.watermark_gen.is_late(rec.event_ts, max_ts) {
+                    continue; // beyond the allowed lateness: drop
+                }
+                // fold into every covering window (1 for tumbling)
+                for w in self.assigner.windows_of(rec.event_ts) {
+                    own.insert_window_with(p, w, |c| (self.insert)(p, &ev, c));
+                }
+            }
+        }
+        if saw_event {
+            own.increment_watermark(p, self.watermark_gen.watermark(max_ts));
+        }
+
+        // The safe emission pattern (cursor-sequenced deterministic reads).
+        if local.next < shared.first_available() {
+            local.next = shared.first_available();
+        }
+        while let Some(value) = shared.window_value(local.next) {
+            let w = local.next;
+            if let Some(payload) = (self.emit)(w, &value) {
+                ctx.emit(self.assigner.window_end(w), payload);
+            }
+            local.next += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{ScalarAggregator, SharedState};
+    use crate::codec::{Decode, Encode};
+    use crate::crdt::{BoundedTopK, GCounter};
+    use crate::nexmark::queries::{Q7Out, Q7};
+    use std::sync::Arc;
+
+    fn bid(offset: u64, ts: u64, auction: u64, price: f64) -> Record {
+        Record {
+            offset,
+            event_ts: ts,
+            insert_ts: ts,
+            payload: Arc::new(
+                Event::Bid {
+                    auction,
+                    bidder: 0,
+                    price,
+                    category: auction % 10,
+                }
+                .to_bytes(),
+            ),
+        }
+    }
+
+    fn run<P: Processor>(
+        q: &P,
+        shared: &mut P::Shared,
+        own: &mut P::Shared,
+        local: &mut P::Local,
+        events: &[Record],
+    ) -> Vec<crate::api::Output> {
+        let mut agg = ScalarAggregator;
+        let mut ctx = Ctx::new(0, 0, &mut agg);
+        q.process(&mut ctx, shared, own, local, events);
+        shared.join(own);
+        ctx.into_outputs()
+    }
+
+    /// Q7 expressed in the dataflow API.
+    fn dataflow_q7() -> impl Processor<Shared = WindowedCrdt<BoundedTopK>, Local = DfCursor> {
+        WindowQueryBuilder::<BoundedTopK>::tumbling(1000)
+            .insert(|p, ev, tk: &mut BoundedTopK| {
+                if let Event::Bid { auction, price, .. } = ev {
+                    tk.set_k(1);
+                    tk.offer(*price, *auction, p as u64);
+                }
+            })
+            .emit(|w, tk| {
+                let (price, auction) = tk
+                    .top()
+                    .first()
+                    .map(|&(s, a, _)| (s.0, a))
+                    .unwrap_or((0.0, 0));
+                Some(
+                    Q7Out {
+                        window: w,
+                        price,
+                        auction,
+                    }
+                    .to_bytes(),
+                )
+            })
+    }
+
+    #[test]
+    fn dataflow_q7_matches_procedural_q7() {
+        let df = dataflow_q7();
+        let proc_q7 = Q7::new(1000);
+
+        let events = vec![
+            bid(0, 100, 1, 50.0),
+            bid(1, 600, 2, 90.0),
+            bid(2, 1200, 3, 10.0),
+            bid(3, 2300, 4, 70.0),
+        ];
+
+        // run the dataflow version
+        let mut s1 = df.init_shared(&[0]);
+        let mut o1 = df.init_shared(&[0]);
+        let mut l1 = DfCursor::default();
+        run(&df, &mut s1, &mut o1, &mut l1, &events);
+        let out_df = run(&df, &mut s1, &mut o1, &mut l1, &[]);
+
+        // run the hand-written version
+        let mut s2 = proc_q7.init_shared(&[0]);
+        let mut o2 = proc_q7.init_shared(&[0]);
+        let mut l2 = crate::nexmark::queries::Cursor::default();
+        let mut agg = ScalarAggregator;
+        let mut ctx = Ctx::new(0, 0, &mut agg);
+        proc_q7.process(&mut ctx, &s2, &mut o2, &mut l2, &events);
+        s2.join(&o2);
+        let mut ctx = Ctx::new(0, 0, &mut agg);
+        proc_q7.process(&mut ctx, &s2, &mut o2, &mut l2, &[]);
+        let out_proc = ctx.into_outputs();
+
+        assert_eq!(out_df.len(), out_proc.len());
+        for (a, b) in out_df.iter().zip(out_proc.iter()) {
+            assert_eq!(
+                Q7Out::from_bytes(&a.payload).unwrap(),
+                Q7Out::from_bytes(&b.payload).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn dataflow_counts_bids_per_window() {
+        let q = WindowQueryBuilder::<GCounter>::tumbling(1000)
+            .insert(|p, ev, c: &mut GCounter| {
+                if ev.is_bid() {
+                    c.add(p as u64, 1);
+                }
+            })
+            .emit(|w, c| {
+                let mut wr = crate::codec::Writer::new();
+                wr.put_u64(w);
+                wr.put_u64(c.value());
+                Some(wr.into_bytes())
+            });
+        let mut s = q.init_shared(&[0]);
+        let mut o = q.init_shared(&[0]);
+        let mut l = DfCursor::default();
+        run(
+            &q,
+            &mut s,
+            &mut o,
+            &mut l,
+            &[bid(0, 100, 1, 1.0), bid(1, 200, 2, 1.0), bid(2, 1500, 3, 1.0)],
+        );
+        let outs = run(&q, &mut s, &mut o, &mut l, &[]);
+        assert_eq!(outs.len(), 1);
+        let mut r = crate::codec::Reader::new(&outs[0].payload);
+        assert_eq!(r.get_u64().unwrap(), 0); // window
+        assert_eq!(r.get_u64().unwrap(), 2); // bids in window 0
+    }
+
+    #[test]
+    fn allowed_lateness_accepts_bounded_disorder() {
+        let count_query = |lateness: Option<u64>| {
+            let b = WindowQueryBuilder::<GCounter>::tumbling(1000);
+            let b = match lateness {
+                Some(ms) => b.allowed_lateness(ms),
+                None => b,
+            };
+            b.insert(|p, ev, c: &mut GCounter| {
+                if ev.is_bid() {
+                    c.add(p as u64, 1);
+                }
+            })
+            .emit(|w, c| {
+                let mut wr = crate::codec::Writer::new();
+                wr.put_u64(w);
+                wr.put_u64(c.value());
+                Some(wr.into_bytes())
+            })
+        };
+        // out-of-order stream: 100, 700, 400 (300 late), 2600
+        let events = vec![
+            bid(0, 100, 1, 1.0),
+            bid(1, 700, 2, 1.0),
+            bid(2, 400, 3, 1.0),
+            bid(3, 2600, 4, 1.0),
+        ];
+        // with 500 ms allowed lateness, the 400-ts event counts
+        let q = count_query(Some(500));
+        let mut s = q.init_shared(&[0]);
+        let mut o = q.init_shared(&[0]);
+        let mut l = DfCursor::default();
+        run(&q, &mut s, &mut o, &mut l, &events);
+        let outs = run(&q, &mut s, &mut o, &mut l, &[]);
+        // watermark = 2600 - 500 = 2100 => window 0 and 1 complete
+        assert_eq!(outs.len(), 2);
+        let mut r = crate::codec::Reader::new(&outs[0].payload);
+        r.get_u64().unwrap();
+        assert_eq!(r.get_u64().unwrap(), 3, "late-but-bounded event counted");
+    }
+
+    #[test]
+    fn sliding_window_folds_into_covering_windows() {
+        let q = WindowQueryBuilder::<GCounter>::sliding(2000, 1000)
+            .insert(|p, ev, c: &mut GCounter| {
+                if ev.is_bid() {
+                    c.add(p as u64, 1);
+                }
+            })
+            .emit(|w, c| {
+                let mut wr = crate::codec::Writer::new();
+                wr.put_u64(w);
+                wr.put_u64(c.value());
+                Some(wr.into_bytes())
+            });
+        let mut s = q.init_shared(&[0]);
+        let mut o = q.init_shared(&[0]);
+        let mut l = DfCursor::default();
+        // ts=1500 is covered by windows 0 ([0,2000)) and 1 ([1000,3000))
+        run(&q, &mut s, &mut o, &mut l, &[bid(0, 1500, 1, 1.0), bid(1, 3500, 2, 1.0)]);
+        let outs = run(&q, &mut s, &mut o, &mut l, &[]);
+        // watermark 3500 completes windows 0 ([0,2000)) and 1 ([1000,3000))
+        assert_eq!(outs.len(), 2);
+        let mut r = crate::codec::Reader::new(&outs[0].payload);
+        r.get_u64().unwrap();
+        assert_eq!(r.get_u64().unwrap(), 1); // window 0 sees the ts=1500 bid
+        let mut r = crate::codec::Reader::new(&outs[1].payload);
+        r.get_u64().unwrap();
+        assert_eq!(r.get_u64().unwrap(), 1); // window 1 sees it too
+    }
+}

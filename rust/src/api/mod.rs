@@ -1,0 +1,226 @@
+//! The Holon Streaming programming model (paper §3, Table 1).
+//!
+//! A query is a [`Processor`]: one *processing function* over a
+//! partition's events, combining three kinds of state:
+//!
+//! * `Shared` — replicated [`WindowedCrdt`]s (or tuples of them),
+//!   synchronized in the background by gossip; reads of completed
+//!   windows are globally deterministic;
+//! * `Local` — partition-local state ([`Local`]/[`WLocal`] and friends),
+//!   checkpointed and recovered with the partition;
+//! * the event batch itself.
+//!
+//! The engine guarantees exactly-once effects per partition: events are
+//! consumed in deterministic order, state reflects each event once, and
+//! outputs (which may be physically duplicated) carry `(partition, seq)`
+//! tags for consumer-side deduplication (§3.3).
+
+use crate::codec::{Decode, Encode};
+use crate::crdt::Crdt;
+use crate::log::Record;
+use crate::util::{PartitionId, SimTime};
+use crate::wcrdt::{WindowId, WindowedCrdt};
+
+pub mod dataflow;
+pub mod shared;
+pub use dataflow::{DfCursor, WindowQuery, WindowQueryBuilder};
+pub use shared::SharedState;
+
+/// One output produced by a processing function.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Output {
+    /// Latency reference: the sim-time this output *became due* (the
+    /// window end for windowed outputs, the input insertion time for
+    /// passthrough outputs). End-to-end latency = emit time − ref_ts.
+    pub ref_ts: SimTime,
+    /// Encoded output payload.
+    pub payload: Vec<u8>,
+}
+
+impl Output {
+    pub fn new(ref_ts: SimTime, payload: Vec<u8>) -> Self {
+        Self { ref_ts, payload }
+    }
+}
+
+/// Per-batch execution context handed to the processing function.
+pub struct Ctx<'a> {
+    /// The partition this invocation processes (the contributor id for
+    /// all CRDT inserts).
+    pub partition: PartitionId,
+    /// Current sim-time.
+    pub now: SimTime,
+    /// Batch aggregation service (XLA-backed when artifacts are loaded,
+    /// pure Rust otherwise). See [`crate::runtime`].
+    pub aggregator: &'a mut dyn BatchAggregator,
+    outputs: Vec<Output>,
+}
+
+impl<'a> Ctx<'a> {
+    pub fn new(partition: PartitionId, now: SimTime, aggregator: &'a mut dyn BatchAggregator) -> Self {
+        Self {
+            partition,
+            now,
+            aggregator,
+            outputs: Vec::new(),
+        }
+    }
+
+    /// Emit an output record.
+    pub fn emit(&mut self, ref_ts: SimTime, payload: Vec<u8>) {
+        self.outputs.push(Output::new(ref_ts, payload));
+    }
+
+    /// Finish the invocation, returning accumulated outputs.
+    pub fn into_outputs(self) -> Vec<Output> {
+        self.outputs
+    }
+}
+
+/// Per-window partial aggregates of one event batch — what the L1/L2
+/// kernel computes in one fused invocation.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WindowAggregates {
+    /// (window id, sum, count, max) for every window with ≥1 event.
+    pub windows: Vec<(WindowId, f64, u64, f64)>,
+}
+
+/// Batched windowed aggregation: fold `(value, window)` pairs into
+/// per-window (sum, count, max). Implemented by the pure-Rust fallback
+/// and by the AOT XLA executable ([`crate::runtime`]).
+pub trait BatchAggregator {
+    fn aggregate(&mut self, items: &[(f64, WindowId)]) -> WindowAggregates;
+}
+
+/// Reference scalar implementation (also the test oracle for the XLA
+/// path — mirrored by python/compile/kernels/ref.py on the L1 side).
+#[derive(Debug, Default, Clone)]
+pub struct ScalarAggregator;
+
+impl BatchAggregator for ScalarAggregator {
+    fn aggregate(&mut self, items: &[(f64, WindowId)]) -> WindowAggregates {
+        let mut out: Vec<(WindowId, f64, u64, f64)> = Vec::new();
+        for &(v, w) in items {
+            match out.iter_mut().find(|(ow, ..)| *ow == w) {
+                Some((_, sum, count, max)) => {
+                    *sum += v;
+                    *count += 1;
+                    if v > *max {
+                        *max = v;
+                    }
+                }
+                None => out.push((w, v, 1, v)),
+            }
+        }
+        out.sort_by_key(|&(w, ..)| w);
+        WindowAggregates { windows: out }
+    }
+}
+
+/// A Holon query: the single processing function plus its state types.
+///
+/// `Clone` because every node materializes the processor; processors
+/// must be cheap, immutable descriptors (all mutable state lives in
+/// `Shared`/`Local`).
+pub trait Processor: Clone + Send + Sync + 'static {
+    /// Replicated shared state (WCRDTs).
+    type Shared: SharedState;
+    /// Partition-local state.
+    type Local: Clone + Default + Send + Encode + Decode + 'static;
+
+    /// Build the initial shared-state replica for a node. `partitions`
+    /// is the full partition set (WCRDT watermark participants).
+    fn init_shared(&self, partitions: &[PartitionId]) -> Self::Shared;
+
+    /// Process a batch of events for one partition.
+    ///
+    /// * `shared` — the node's gossip-merged replica: **read-only** for
+    ///   window values / global watermarks (deterministic reads).
+    /// * `own` — the partition's *own contribution* accumulator (same
+    ///   type, restored verbatim from the checkpoint): **all inserts and
+    ///   watermark increments go here.** The engine joins `own` into
+    ///   `shared` after every batch. This split is what makes replays
+    ///   after work stealing idempotent: a replay recomputes the same
+    ///   deterministic contribution values in `own` and joining them
+    ///   again is a no-op — contributions are never added on top of a
+    ///   gossip-merged state.
+    /// * `local` — plain partition-local state (cursors, WLocals).
+    ///
+    /// Called with an empty batch at idle so window emission keeps
+    /// progressing as gossip completes windows.
+    fn process(
+        &self,
+        ctx: &mut Ctx,
+        shared: &Self::Shared,
+        own: &mut Self::Shared,
+        local: &mut Self::Local,
+        events: &[Record],
+    );
+}
+
+/// Convenience: iterate the completed-but-unemitted windows of a WCRDT,
+/// in order, bumping the cursor — the Listing-2 emission idiom (safe use
+/// of the unsafe-mode read: acyclic data dependencies, windows processed
+/// in sequence, so the nondeterministic completion *timing* never
+/// affects the emitted values).
+pub fn drain_completed<C: Crdt>(
+    wcrdt: &WindowedCrdt<C>,
+    cursor: &mut WindowId,
+    mut f: impl FnMut(WindowId, C),
+) {
+    while let Some(v) = wcrdt.window_value(*cursor) {
+        f(*cursor, v);
+        *cursor += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crdt::GCounter;
+    use crate::wcrdt::WindowAssigner;
+
+    #[test]
+    fn scalar_aggregator_groups_by_window() {
+        let mut agg = ScalarAggregator;
+        let out = agg.aggregate(&[(1.0, 0), (2.0, 1), (3.0, 0), (5.0, 1)]);
+        assert_eq!(
+            out.windows,
+            vec![(0, 4.0, 2, 3.0), (1, 7.0, 2, 5.0)]
+        );
+    }
+
+    #[test]
+    fn scalar_aggregator_empty() {
+        let mut agg = ScalarAggregator;
+        assert!(agg.aggregate(&[]).windows.is_empty());
+    }
+
+    #[test]
+    fn ctx_collects_outputs() {
+        let mut agg = ScalarAggregator;
+        let mut ctx = Ctx::new(3, 100, &mut agg);
+        ctx.emit(50, vec![1]);
+        ctx.emit(60, vec![2]);
+        let outs = ctx.into_outputs();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].ref_ts, 50);
+    }
+
+    #[test]
+    fn drain_completed_walks_in_order() {
+        let mut w: WindowedCrdt<GCounter> =
+            WindowedCrdt::new(WindowAssigner::tumbling(100), [0, 1]);
+        w.insert_with(0, 10, |c| c.add(0, 1)).unwrap();
+        w.insert_with(0, 110, |c| c.add(0, 2)).unwrap();
+        w.increment_watermark(0, 250);
+        w.increment_watermark(1, 250);
+        let mut cursor = 0;
+        let mut seen = vec![];
+        drain_completed(&w, &mut cursor, |wid, c| seen.push((wid, c.value())));
+        assert_eq!(seen, vec![(0, 1), (1, 2)]);
+        assert_eq!(cursor, 2);
+        // nothing more until the watermark advances
+        drain_completed(&w, &mut cursor, |_, _| panic!("no new windows"));
+    }
+}

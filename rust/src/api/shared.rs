@@ -1,0 +1,214 @@
+//! `SharedState` — the node-level replica of a query's replicated state.
+//!
+//! A query's shared state is one or more [`WindowedCrdt`]s. The engine
+//! only needs four operations on it: join with a gossiped replica,
+//! project a partition's checkpoint slice, compact emitted windows, and
+//! serialize. Implementations are provided for a single `WindowedCrdt`,
+//! for tuples (multi-WCRDT queries like the paper's Query 1 use a pair),
+//! and for `()` (stateless queries like Nexmark Q0).
+
+use crate::codec::{Decode, Encode};
+use crate::crdt::Crdt;
+use crate::util::PartitionId;
+use crate::wcrdt::{WindowId, WindowedCrdt};
+
+/// Node-level replicated state: a join-semilattice that also supports
+/// per-partition projection and window compaction.
+pub trait SharedState: Clone + Send + Encode + Decode + 'static {
+    /// Join with another replica (gossip receive / recovery).
+    fn join(&mut self, other: &Self);
+
+    /// The slice of this state contributed by `partition` (plus its
+    /// progress entries) — what goes into the partition checkpoint.
+    fn project(&self, partition: PartitionId) -> Self;
+
+    /// Drop state for windows strictly below `wid` on every WCRDT.
+    fn compact_below(&mut self, wid: WindowId);
+
+    /// Approximate number of live windows (observability / memory tests).
+    fn live_windows(&self) -> usize;
+
+    /// Minimum global watermark across the contained WCRDTs (`u64::MAX`
+    /// when there are none) — drives compaction.
+    fn watermark_floor(&self) -> crate::util::SimTime;
+
+    /// Delta-based sync (paper §7): a partial state carrying everything
+    /// changed since the previous call. Default = full state (always
+    /// correct, more traffic).
+    fn take_delta(&mut self) -> Self {
+        self.clone()
+    }
+}
+
+impl SharedState for () {
+    fn join(&mut self, _other: &Self) {}
+
+    fn project(&self, _partition: PartitionId) -> Self {}
+
+    fn compact_below(&mut self, _wid: WindowId) {}
+
+    fn live_windows(&self) -> usize {
+        0
+    }
+
+    fn watermark_floor(&self) -> crate::util::SimTime {
+        crate::util::SimTime::MAX
+    }
+}
+
+impl<C: Crdt> SharedState for WindowedCrdt<C> {
+    fn join(&mut self, other: &Self) {
+        self.merge(other);
+    }
+
+    fn project(&self, partition: PartitionId) -> Self {
+        self.project_with(partition, |c| c.project(partition as u64))
+    }
+
+    fn compact_below(&mut self, wid: WindowId) {
+        WindowedCrdt::compact_below(self, wid);
+    }
+
+    fn live_windows(&self) -> usize {
+        WindowedCrdt::live_windows(self)
+    }
+
+    fn watermark_floor(&self) -> crate::util::SimTime {
+        self.global_watermark()
+    }
+
+    fn take_delta(&mut self) -> Self {
+        WindowedCrdt::take_delta(self)
+    }
+}
+
+impl<A: SharedState, B: SharedState> SharedState for (A, B) {
+    fn join(&mut self, other: &Self) {
+        self.0.join(&other.0);
+        self.1.join(&other.1);
+    }
+
+    fn project(&self, partition: PartitionId) -> Self {
+        (self.0.project(partition), self.1.project(partition))
+    }
+
+    fn compact_below(&mut self, wid: WindowId) {
+        self.0.compact_below(wid);
+        self.1.compact_below(wid);
+    }
+
+    fn live_windows(&self) -> usize {
+        self.0.live_windows() + self.1.live_windows()
+    }
+
+    fn watermark_floor(&self) -> crate::util::SimTime {
+        self.0.watermark_floor().min(self.1.watermark_floor())
+    }
+
+    fn take_delta(&mut self) -> Self {
+        (self.0.take_delta(), self.1.take_delta())
+    }
+}
+
+impl<A: SharedState, B: SharedState, C: SharedState> SharedState for (A, B, C) {
+    fn join(&mut self, other: &Self) {
+        self.0.join(&other.0);
+        self.1.join(&other.1);
+        self.2.join(&other.2);
+    }
+
+    fn project(&self, partition: PartitionId) -> Self {
+        (
+            self.0.project(partition),
+            self.1.project(partition),
+            self.2.project(partition),
+        )
+    }
+
+    fn compact_below(&mut self, wid: WindowId) {
+        self.0.compact_below(wid);
+        self.1.compact_below(wid);
+        self.2.compact_below(wid);
+    }
+
+    fn live_windows(&self) -> usize {
+        self.0.live_windows() + self.1.live_windows() + self.2.live_windows()
+    }
+
+    fn watermark_floor(&self) -> crate::util::SimTime {
+        self.0
+            .watermark_floor()
+            .min(self.1.watermark_floor())
+            .min(self.2.watermark_floor())
+    }
+
+    fn take_delta(&mut self) -> Self {
+        (
+            self.0.take_delta(),
+            self.1.take_delta(),
+            self.2.take_delta(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crdt::{GCounter, PrefixAgg};
+    use crate::wcrdt::WindowAssigner;
+
+    fn counter(parts: &[PartitionId]) -> WindowedCrdt<GCounter> {
+        WindowedCrdt::new(WindowAssigner::tumbling(100), parts.iter().copied())
+    }
+
+    #[test]
+    fn unit_shared_state_is_inert() {
+        let mut s = ();
+        s.join(&());
+        assert_eq!(s.project(0), ());
+        assert_eq!(s.live_windows(), 0);
+    }
+
+    #[test]
+    fn wcrdt_projection_keeps_own_contribution() {
+        let mut s = counter(&[0, 1]);
+        s.insert_with(0, 10, |c| c.add(0, 3)).unwrap();
+        s.insert_with(1, 10, |c| c.add(1, 5)).unwrap();
+        s.increment_watermark(0, 50);
+        s.increment_watermark(1, 70);
+        let p = SharedState::project(&s, 0);
+        assert_eq!(p.raw_window(0).unwrap().value(), 3);
+        assert_eq!(p.progress_of(0), 50);
+        assert_eq!(p.progress_of(1), 0);
+    }
+
+    #[test]
+    fn projection_then_join_restores_contribution() {
+        // The checkpoint/recovery identity: joining a projection back
+        // into an empty replica reproduces the partition's contribution.
+        let mut s = counter(&[0, 1]);
+        s.insert_with(0, 10, |c| c.add(0, 3)).unwrap();
+        s.increment_watermark(0, 50);
+        let slice = SharedState::project(&s, 0);
+        let mut fresh = counter(&[0, 1]);
+        fresh.join(&slice);
+        assert_eq!(fresh.raw_window(0).unwrap().value(), 3);
+        assert_eq!(fresh.progress_of(0), 50);
+    }
+
+    #[test]
+    fn tuple_shared_state_composes() {
+        let mut a = (counter(&[0]), {
+            let mut w: WindowedCrdt<PrefixAgg> =
+                WindowedCrdt::new(WindowAssigner::tumbling(100), [0]);
+            w.insert_with(0, 5, |c| c.observe(0, 2.0)).unwrap();
+            w
+        });
+        let b = a.clone();
+        a.join(&b);
+        assert_eq!(a, b); // idempotent
+        assert_eq!(a.live_windows(), 1);
+        a.compact_below(10);
+        assert_eq!(a.live_windows(), 0);
+    }
+}

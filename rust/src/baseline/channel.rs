@@ -1,0 +1,245 @@
+//! Simulated pipeline channels with buffer-flush timeouts.
+//!
+//! Flink's operators exchange records over network channels whose
+//! buffers flush when full or after `execution.buffer-timeout` (100 ms
+//! default) — the dominant term in the baseline's end-to-end latency.
+//! A [`Channel`] models that: the sender accumulates partials and
+//! flushes on timeout/size; the flush is delivered after the network
+//! delay. Barriers are enqueued in-band like Flink's checkpoint
+//! barriers.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::clock::SimClock;
+use crate::util::SimTime;
+
+use super::{Flush, Partial};
+
+/// Flush when this many partials accumulate, even before the timeout.
+const BUFFER_CAPACITY: usize = 512;
+
+#[derive(Debug)]
+struct Pending {
+    buf: Flush,
+    buf_since: Option<SimTime>,
+    inflight: VecDeque<(SimTime, Flush)>,
+}
+
+/// One sender → one receiver channel with buffering and delay.
+#[derive(Debug)]
+pub struct Channel {
+    clock: SimClock,
+    buffer_timeout_ms: SimTime,
+    delay_ms: SimTime,
+    /// heavy-tail spikes: (probability, magnitude sim-ms)
+    tail: (f64, SimTime),
+    rng: Mutex<crate::util::XorShift64>,
+    /// sender task-manager id, stamped on every flush.
+    from: u32,
+    inner: Mutex<Pending>,
+}
+
+impl Channel {
+    pub fn new(clock: SimClock, buffer_timeout_ms: SimTime, delay_ms: SimTime, from: u32) -> Self {
+        Self::with_tail(clock, buffer_timeout_ms, delay_ms, from, 0.0, 0)
+    }
+
+    pub fn with_tail(
+        clock: SimClock,
+        buffer_timeout_ms: SimTime,
+        delay_ms: SimTime,
+        from: u32,
+        tail_prob: f64,
+        tail_ms: SimTime,
+    ) -> Self {
+        Self {
+            clock,
+            buffer_timeout_ms,
+            delay_ms,
+            tail: (tail_prob, tail_ms),
+            rng: Mutex::new(crate::util::XorShift64::new(
+                0x7A11 ^ ((from as u64) << 8) ^ buffer_timeout_ms,
+            )),
+            from,
+            inner: Mutex::new(Pending {
+                buf: Flush {
+                    from,
+                    ..Default::default()
+                },
+                buf_since: None,
+                inflight: VecDeque::new(),
+            }),
+        }
+    }
+
+    /// Effective delay of one flush: base + occasional tail spike. A
+    /// spike on a channel stalls the receiver's min-watermark — the
+    /// single-path fragility the paper's gossip redundancy avoids.
+    fn delay(&self) -> SimTime {
+        let (p, tail) = self.tail;
+        if p > 0.0 && tail > 1 {
+            let mut rng = self.rng.lock().unwrap();
+            if rng.chance(p) {
+                return self.delay_ms + tail / 2 + rng.next_below(tail / 2);
+            }
+        }
+        self.delay_ms
+    }
+
+    /// Append partials + watermark to the send buffer.
+    pub fn push(&self, partials: &[Partial], watermark: SimTime, consumed: u64) {
+        let now = self.clock.now();
+        let delay = self.delay();
+        let mut p = self.inner.lock().unwrap();
+        if p.buf_since.is_none() {
+            p.buf_since = Some(now);
+        }
+        p.buf.partials.extend_from_slice(partials);
+        p.buf.watermark = p.buf.watermark.max(watermark);
+        p.buf.consumed += consumed;
+        if p.buf.partials.len() >= BUFFER_CAPACITY {
+            Self::flush_locked(&mut p, now, delay, self.from);
+        } else {
+            self.maybe_flush_locked(&mut p, now, delay);
+        }
+    }
+
+    /// Enqueue a checkpoint barrier (flushes the buffer first, like
+    /// Flink: barriers never overtake records).
+    pub fn push_barrier(&self, barrier: u64) {
+        let now = self.clock.now();
+        let delay = self.delay();
+        let mut p = self.inner.lock().unwrap();
+        Self::flush_locked(&mut p, now, delay, self.from);
+        let flush = Flush {
+            from: self.from,
+            barrier: Some(barrier),
+            ..Default::default()
+        };
+        p.inflight.push_back((now + delay, flush));
+    }
+
+    fn maybe_flush_locked(&self, p: &mut Pending, now: SimTime, delay: SimTime) {
+        if let Some(since) = p.buf_since {
+            if now.saturating_sub(since) >= self.buffer_timeout_ms {
+                Self::flush_locked(p, now, delay, self.from);
+            }
+        }
+    }
+
+    fn flush_locked(p: &mut Pending, now: SimTime, delay: SimTime, from: u32) {
+        if p.buf.partials.is_empty() && p.buf.watermark == 0 && p.buf.consumed == 0 {
+            p.buf_since = None;
+            return;
+        }
+        let flush = std::mem::replace(
+            &mut p.buf,
+            Flush {
+                from,
+                ..Default::default()
+            },
+        );
+        p.buf_since = None;
+        p.inflight.push_back((now + delay, flush));
+    }
+
+    /// Called by the *sender's* loop to honor the flush timeout even
+    /// when no new records arrive.
+    pub fn tick(&self) {
+        let now = self.clock.now();
+        let delay = self.delay();
+        let mut p = self.inner.lock().unwrap();
+        self.maybe_flush_locked(&mut p, now, delay);
+    }
+
+    /// Receiver side: drain flushes that have arrived by now.
+    pub fn recv(&self) -> Vec<Flush> {
+        let now = self.clock.now();
+        let mut p = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        while let Some((at, _)) = p.inflight.front() {
+            if *at <= now {
+                out.push(p.inflight.pop_front().unwrap().1);
+            } else {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Drop all in-flight and buffered data (job cancellation).
+    pub fn clear(&self) {
+        let mut p = self.inner.lock().unwrap();
+        p.buf = Flush {
+            from: self.from,
+            ..Default::default()
+        };
+        p.buf_since = None;
+        p.inflight.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(clock: &SimClock) -> Channel {
+        Channel::new(clock.clone(), 100, 10, 3)
+    }
+
+    #[test]
+    fn buffers_until_timeout() {
+        let clock = SimClock::manual();
+        let ch = mk(&clock);
+        ch.push(&[Partial::Record(1)], 5, 1);
+        clock.advance(50);
+        ch.tick();
+        assert!(ch.recv().is_empty(), "flushed too early");
+        clock.advance(60); // past the 100ms timeout
+        ch.tick();
+        assert!(ch.recv().is_empty(), "network delay not applied");
+        clock.advance(10);
+        let flushes = ch.recv();
+        assert_eq!(flushes.len(), 1);
+        assert_eq!(flushes[0].partials.len(), 1);
+        assert_eq!(flushes[0].watermark, 5);
+        assert_eq!(flushes[0].from, 3);
+    }
+
+    #[test]
+    fn capacity_flushes_immediately() {
+        let clock = SimClock::manual();
+        let ch = mk(&clock);
+        let batch: Vec<Partial> = (0..600).map(|i| Partial::Record(i)).collect();
+        ch.push(&batch, 1, 600);
+        clock.advance(10); // just the network delay
+        let flushes = ch.recv();
+        assert_eq!(flushes.len(), 1);
+        assert_eq!(flushes[0].partials.len(), 600);
+    }
+
+    #[test]
+    fn barrier_flushes_and_orders() {
+        let clock = SimClock::manual();
+        let ch = mk(&clock);
+        ch.push(&[Partial::Record(1)], 1, 1);
+        ch.push_barrier(7);
+        clock.advance(10);
+        let flushes = ch.recv();
+        assert_eq!(flushes.len(), 2);
+        assert!(flushes[0].barrier.is_none()); // records first
+        assert_eq!(flushes[1].barrier, Some(7));
+    }
+
+    #[test]
+    fn clear_drops_everything() {
+        let clock = SimClock::manual();
+        let ch = mk(&clock);
+        ch.push(&[Partial::Record(1)], 1, 1);
+        ch.push_barrier(1);
+        ch.clear();
+        clock.advance(1000);
+        assert!(ch.recv().is_empty());
+    }
+}

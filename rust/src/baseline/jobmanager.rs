@@ -1,0 +1,109 @@
+//! The JobManager: the centralized coordinator the paper contrasts
+//! Holon Streaming against (§2.3). It owns:
+//!
+//! * **checkpoint rounds** — injects a barrier id every
+//!   `flink_checkpoint_interval_ms`; completion happens at the root
+//!   (aligned) and lands in the shared checkpoint slot;
+//! * **failure detection** — declares a TM dead after
+//!   `flink_heartbeat_timeout_ms` without a heartbeat;
+//! * **global restart** — on any failure the *whole job* is cancelled
+//!   (epoch bump → all TM work threads exit), then: wait for slots
+//!   (the failed container must come back unless spare slots exist),
+//!   pay the restore cost, redeploy from the last completed checkpoint
+//!   and replay. One failed node stops everyone — exactly the
+//!   centralized-coordination cost the paper's Figure 6 shows.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::util::SimTime;
+
+use super::{FlinkCluster, JobState};
+
+pub fn spawn(cluster: &Arc<FlinkCluster>) -> JoinHandle<()> {
+    let c = cluster.clone();
+    std::thread::Builder::new()
+        .name("flink-jobmanager".to_string())
+        .spawn(move || jm_main(c))
+        .expect("spawn jm")
+}
+
+fn jm_main(c: Arc<FlinkCluster>) {
+    let mut last_ckpt: SimTime = 0;
+    let mut restore_until: SimTime = 0;
+    let mut waiting_since: SimTime = 0;
+    // let TMs announce themselves before watching heartbeats
+    c.clock.sleep(c.cfg.flink_heartbeat_interval_ms.min(500));
+    loop {
+        if c.shutdown_requested() {
+            return;
+        }
+        let now = c.clock.now();
+        let state = c.job_state();
+        match state {
+            JobState::Running => {
+                // --- failure detection over heartbeats ------------------
+                let run = c.run_handle().lock().unwrap().clone();
+                let Some(run) = run else {
+                    c.clock.sleep(10);
+                    continue;
+                };
+                let dead = run.active_tms.iter().any(|&tm| {
+                    let hb = c.heartbeats()[tm as usize].load(Ordering::Acquire);
+                    now.saturating_sub(hb) > c.cfg.flink_heartbeat_timeout_ms
+                });
+                if dead {
+                    // cancel the whole job: centralized recovery
+                    c.epoch().fetch_add(1, Ordering::AcqRel);
+                    *c.run_handle().lock().unwrap() = None;
+                    *c.state_handle().write().unwrap() = JobState::WaitingForSlots;
+                    waiting_since = now;
+                    continue;
+                }
+                // --- checkpoint rounds ----------------------------------
+                if now.saturating_sub(last_ckpt) >= c.cfg.flink_checkpoint_interval_ms {
+                    let next = c.barrier_handle().load(Ordering::Acquire) + 1;
+                    let mut pending = run.pending_ckpt.lock().unwrap();
+                    if pending.is_none() {
+                        *pending = Some((next, super::BaselineCheckpoint::default()));
+                        drop(pending);
+                        c.barrier_handle().store(next, Ordering::Release);
+                        last_ckpt = now;
+                    }
+                }
+            }
+            JobState::WaitingForSlots => {
+                let slots_ok = c.cfg.flink_spare_slots || c.all_alive();
+                if slots_ok {
+                    *c.state_handle().write().unwrap() = JobState::Restoring;
+                    restore_until = now + c.cfg.flink_restore_cost_ms;
+                } else if now.saturating_sub(waiting_since) > c.cfg.flink_restart_delay_ms {
+                    // no slots forthcoming: the job is stuck (Table 2 "–").
+                    *c.state_handle().write().unwrap() = JobState::Stalled;
+                }
+            }
+            JobState::Stalled => {
+                // a returning container un-stalls the job
+                if c.cfg.flink_spare_slots || c.all_alive() {
+                    *c.state_handle().write().unwrap() = JobState::Restoring;
+                    restore_until = now + c.cfg.flink_restore_cost_ms;
+                }
+            }
+            JobState::Restoring => {
+                if now >= restore_until {
+                    // TMs re-register on deploy: refresh their heartbeat
+                    // baselines so detection doesn't re-trip instantly.
+                    for hb in c.heartbeats().iter() {
+                        hb.store(now, Ordering::Release);
+                    }
+                    let epoch = c.epoch().load(Ordering::Acquire);
+                    c.deploy(epoch);
+                    *c.state_handle().write().unwrap() = JobState::Running;
+                    last_ckpt = now;
+                }
+            }
+        }
+        c.clock.sleep(20);
+    }
+}

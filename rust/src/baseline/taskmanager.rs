@@ -1,0 +1,434 @@
+//! Task-manager threads: sources + chained pre-aggregators, the Q4
+//! keyed-shuffle aggregators, and the root global aggregator (scheduled
+//! on the first active TM's slot).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::codec::{Decode, Writer};
+use crate::engine::node::encode_output;
+use crate::nexmark::Event;
+use crate::util::{NodeId, SimTime};
+
+use super::{FlinkCluster, FlinkJob, Flush, Partial, RunState};
+
+/// Per-window pre-aggregation state for Q7.
+#[derive(Default)]
+struct MaxAgg {
+    windows: BTreeMap<u64, (f64, u64)>, // window -> (max, auction)
+}
+
+/// Per-window keyed aggregation state for Q4 (after the shuffle).
+#[derive(Default)]
+struct CatAgg {
+    windows: BTreeMap<u64, BTreeMap<u64, (u64, f64, f64)>>, // w -> cat -> (count, sum, max)
+}
+
+/// Root combine state.
+#[derive(Default)]
+struct RootState {
+    /// per input slot: latest watermark seen
+    watermarks: Vec<SimTime>,
+    /// barrier alignment: flushes deferred on already-barriered inputs
+    aligned: Vec<bool>,
+    deferred: Vec<Vec<Flush>>,
+    current_barrier: Option<u64>,
+    /// combine buffers
+    maxes: BTreeMap<u64, (f64, u64)>,
+    cats: BTreeMap<u64, BTreeMap<u64, (u64, f64, f64)>>,
+}
+
+/// One TM work thread for one job incarnation.
+pub fn spawn(cluster: &Arc<FlinkCluster>, tm: NodeId, run: Arc<RunState>) -> JoinHandle<()> {
+    let c = cluster.clone();
+    std::thread::Builder::new()
+        .name(format!("flink-tm-{tm}-e{}", run.epoch))
+        .spawn(move || tm_main(c, tm, run))
+        .expect("spawn tm")
+}
+
+fn tm_main(c: Arc<FlinkCluster>, tm: NodeId, run: Arc<RunState>) {
+    let Some(slot) = run.slot_of(tm) else { return };
+    let n = run.active_tms.len();
+    let my_parts = run.partitions_of_slot(slot, c.cfg.partitions);
+    let is_root = slot == 0;
+    let mut pre_max = MaxAgg::default();
+    let mut pre_max_fwd = 0u64; // next window to forward
+    let mut cat_agg = CatAgg::default();
+    let mut cat_wms: Vec<SimTime> = vec![0; n]; // keyed-agg input watermarks
+    let mut cat_fwd = 0u64;
+    let mut src_wm: SimTime = 0;
+    // persistent last event-ts per owned partition (watermark basis)
+    let mut part_last_ts: BTreeMap<u32, SimTime> = BTreeMap::new();
+    // Flink emits source watermarks on the auto-watermark cadence, not
+    // per record — a real latency contributor in the baseline.
+    let mut last_wm_emit: SimTime = 0;
+    let mut pending_wm: SimTime = 0;
+    let mut preagg_wm: SimTime = 0;
+    let mut last_preagg_wm_emit: SimTime = 0;
+    let mut last_barrier_seen = 0u64;
+    let mut root = RootState {
+        watermarks: vec![0; n],
+        aligned: vec![false; n],
+        deferred: (0..n).map(|_| Vec::new()).collect(),
+        ..Default::default()
+    };
+    // service-cost model (see HolonConfig::flink_event_cost_us)
+    let mut budget_events: f64 = 0.0;
+    let mut last_budget_at: SimTime = c.clock.now();
+
+    loop {
+        if c.shutdown_requested()
+            || !c.alive_flag(tm).load(Ordering::Acquire)
+            || c.epoch().load(Ordering::Acquire) != run.epoch
+        {
+            return;
+        }
+        let now = c.clock.now();
+        let mut did_work = false;
+
+        // Heartbeats come from the worker itself (as in Flink, where the
+        // TM process running the tasks is what heartbeats): a killed
+        // work thread stops heartbeating immediately, so the JM always
+        // detects the death even if the container restarts quickly.
+        c.heartbeats()[tm as usize].store(now, Ordering::Release);
+
+        // --- sources + chained pre-aggregator --------------------------
+        let barrier = c.barrier_handle().load(Ordering::Acquire);
+        let new_barrier = barrier > last_barrier_seen;
+
+        if c.cfg.flink_event_cost_us > 0.0 {
+            let dt = now.saturating_sub(last_budget_at);
+            let cap = 4.0 * c.cfg.batch_size as f64 * my_parts.len().max(1) as f64;
+            budget_events =
+                (budget_events + dt as f64 * 1000.0 / c.cfg.flink_event_cost_us).min(cap);
+        } else {
+            budget_events = f64::MAX;
+        }
+        last_budget_at = now;
+        let mut batch_partials: Vec<Partial> = Vec::new();
+        let mut consumed = 0u64;
+        for &p in &my_parts {
+            let allowed = c.cfg.batch_size.min(budget_events as usize);
+            if allowed == 0 {
+                break;
+            }
+            let from = {
+                let offs = run.offsets.lock().unwrap();
+                offs[&p]
+            };
+            let (recs, next) = c.input.read(p, from, allowed);
+            budget_events -= recs.len() as f64;
+            if !recs.is_empty() {
+                did_work = true;
+                consumed += recs.len() as u64;
+                for rec in &recs {
+                    match c.job {
+                        FlinkJob::PassThrough => {
+                            batch_partials.push(Partial::Record(rec.insert_ts));
+                        }
+                        FlinkJob::MaxBid => {
+                            if let Ok(Event::Bid { auction, price, .. }) =
+                                Event::from_bytes(&rec.payload)
+                            {
+                                let w = rec.event_ts / c.cfg.window_ms;
+                                let e = pre_max.windows.entry(w).or_insert((f64::MIN, 0));
+                                if price > e.0 {
+                                    *e = (price, auction);
+                                }
+                            }
+                        }
+                        FlinkJob::AvgByCategory => {
+                            if let Ok(Event::Bid {
+                                price, category, ..
+                            }) = Event::from_bytes(&rec.payload)
+                            {
+                                let w = rec.event_ts / c.cfg.window_ms;
+                                let cents = (price * 100.0).round();
+                                batch_partials.push(Partial::Cat(w, category, 1, cents, cents));
+                            }
+                        }
+                    }
+                }
+                let mut offs = run.offsets.lock().unwrap();
+                offs.insert(p, next);
+                part_last_ts.insert(p, recs.last().unwrap().event_ts);
+            }
+        }
+        if consumed > 0 {
+            c.metrics.processed.bump(now, consumed);
+        }
+        // source watermark: min over owned partitions' last event times,
+        // emitted on the auto-watermark cadence (Flink behaviour).
+        if part_last_ts.len() == my_parts.len() {
+            pending_wm = part_last_ts.values().copied().min().unwrap_or(0);
+        }
+        if now.saturating_sub(last_wm_emit) >= c.cfg.flink_watermark_interval_ms {
+            src_wm = src_wm.max(pending_wm);
+            last_wm_emit = now;
+        }
+
+        // The pre-aggregator re-emits its watermark downstream on its own
+        // auto-watermark cadence as well (watermarks are generated per
+        // operator in Flink, not per record) — the second cadence hop in
+        // the end-to-end latency.
+        if now.saturating_sub(last_preagg_wm_emit) >= c.cfg.flink_watermark_interval_ms {
+            preagg_wm = src_wm;
+            last_preagg_wm_emit = now;
+        }
+        match c.job {
+            FlinkJob::PassThrough => {
+                run.to_root[slot].push(&batch_partials, preagg_wm, consumed);
+            }
+            FlinkJob::MaxBid => {
+                // forward finalized pre-agg windows (end <= watermark)
+                let mut fwd: Vec<Partial> = Vec::new();
+                while (pre_max_fwd + 1) * c.cfg.window_ms <= preagg_wm {
+                    let w = pre_max_fwd;
+                    if let Some((mx, auc)) = pre_max.windows.remove(&w) {
+                        fwd.push(Partial::Max(w, mx, auc));
+                    }
+                    pre_max_fwd += 1;
+                }
+                run.to_root[slot].push(&fwd, preagg_wm, consumed);
+            }
+            FlinkJob::AvgByCategory => {
+                // keyed shuffle: route each bid partial to its category
+                // owner TM (one extra network hop vs MaxBid).
+                let mut routed: Vec<Vec<Partial>> = vec![Vec::new(); n];
+                for p in batch_partials {
+                    if let Partial::Cat(_, cat, ..) = p {
+                        routed[(cat % n as u64) as usize].push(p);
+                    }
+                }
+                for (recv, ps) in routed.into_iter().enumerate() {
+                    run.keyed[recv][slot].push(&ps, src_wm, if recv == 0 { consumed } else { 0 });
+                }
+            }
+        }
+
+        // --- Q4 keyed aggregator (runs on every TM) ---------------------
+        if c.job == FlinkJob::AvgByCategory {
+            for sender in 0..n {
+                for flush in run.keyed[slot][sender].recv() {
+                    did_work = did_work || !flush.partials.is_empty();
+                    // shuffled records pay the per-event service cost
+                    // again at the keyed operator (deserialize + state
+                    // access) — the hop that caps Q4's throughput.
+                    budget_events -= flush.partials.len() as f64;
+                    for p in flush.partials {
+                        if let Partial::Cat(w, cat, cnt, sum, mx) = p {
+                            let e = cat_agg
+                                .windows
+                                .entry(w)
+                                .or_default()
+                                .entry(cat)
+                                .or_insert((0, 0.0, f64::MIN));
+                            e.0 += cnt;
+                            e.1 += sum;
+                            if mx > e.2 {
+                                e.2 = mx;
+                            }
+                        }
+                    }
+                    cat_wms[sender] = cat_wms[sender].max(flush.watermark);
+                    // barriers pass through the keyed agg to the root
+                    // once per round (alignment simplified to min-wm).
+                }
+            }
+            let keyed_wm = cat_wms.iter().copied().min().unwrap_or(0);
+            let mut fwd: Vec<Partial> = Vec::new();
+            while (cat_fwd + 1) * c.cfg.window_ms <= keyed_wm {
+                let w = cat_fwd;
+                if let Some(cats) = cat_agg.windows.remove(&w) {
+                    for (cat, (cnt, sum, mx)) in cats {
+                        fwd.push(Partial::Cat(w, cat, cnt, sum, mx));
+                    }
+                }
+                cat_fwd += 1;
+            }
+            run.to_root[slot].push(&fwd, keyed_wm, 0);
+        }
+
+        // --- barrier injection at the source ---------------------------
+        if new_barrier {
+            last_barrier_seen = barrier;
+            // snapshot source offsets into the pending checkpoint
+            let mut pending = run.pending_ckpt.lock().unwrap();
+            if let Some((id, cp)) = pending.as_mut() {
+                if *id == barrier {
+                    let offs = run.offsets.lock().unwrap();
+                    for &p in &my_parts {
+                        cp.offsets.insert(p, offs[&p]);
+                    }
+                }
+            }
+            drop(pending);
+            run.to_root[slot].push_barrier(barrier);
+        }
+        run.to_root[slot].tick();
+        if c.job == FlinkJob::AvgByCategory {
+            for recv in 0..n {
+                run.keyed[recv][slot].tick();
+            }
+        }
+
+        // --- root global aggregator (slot 0 only) -----------------------
+        if is_root {
+            did_work |= run_root(&c, &run, &mut root);
+        }
+
+        if !did_work {
+            c.clock.sleep(c.cfg.poll_interval_ms.max(1));
+        }
+    }
+}
+
+/// Drain root inputs with barrier alignment, combine, emit completed
+/// windows. Returns whether any work was done.
+fn run_root(c: &Arc<FlinkCluster>, run: &Arc<RunState>, root: &mut RootState) -> bool {
+    let n = run.active_tms.len();
+    let mut did_work = false;
+    for i in 0..n {
+        // Aligned checkpointing: once input i delivered barrier B, its
+        // further flushes are deferred until all inputs reach B.
+        let flushes = run.to_root[i].recv();
+        for flush in flushes {
+            if root.aligned[i] {
+                root.deferred[i].push(flush);
+                continue;
+            }
+            did_work |= apply_root_flush(c, root, i, flush);
+        }
+    }
+    // complete alignment?
+    if root.current_barrier.is_some() && root.aligned.iter().all(|&a| a) {
+        let barrier = root.current_barrier.take().unwrap();
+        // finalize the checkpoint: root state + source offsets
+        let mut pending = run.pending_ckpt.lock().unwrap();
+        if let Some((id, mut cp)) = pending.take() {
+            if id == barrier {
+                cp.id = barrier;
+                cp.next_window = run.next_window.load(Ordering::Acquire);
+                *c.checkpoint_handle().lock().unwrap() = cp;
+            } else {
+                *pending = Some((id, cp));
+            }
+        }
+        drop(pending);
+        for i in 0..n {
+            root.aligned[i] = false;
+            let deferred = std::mem::take(&mut root.deferred[i]);
+            for flush in deferred {
+                apply_root_flush(c, root, i, flush);
+            }
+        }
+        did_work = true;
+    }
+
+    // emit completed windows (watermark = min over inputs)
+    let wm = root.watermarks.iter().copied().min().unwrap_or(0);
+    let now = c.clock.now();
+    loop {
+        let w = run.next_window.load(Ordering::Acquire);
+        let end = (w + 1) * c.cfg.window_ms;
+        if end > wm {
+            break;
+        }
+        let payload = match c.job {
+            FlinkJob::PassThrough => Vec::new(), // records emitted eagerly
+            FlinkJob::MaxBid => {
+                let (mx, auc) = root.maxes.remove(&w).unwrap_or((0.0, 0));
+                let mut wr = Writer::new();
+                wr.put_u64(w);
+                wr.put_f64(mx.max(0.0));
+                wr.put_u64(auc);
+                wr.into_bytes()
+            }
+            FlinkJob::AvgByCategory => {
+                let cats = root.cats.remove(&w).unwrap_or_default();
+                let mut wr = Writer::new();
+                wr.put_u64(w);
+                wr.put_u32(cats.len() as u32);
+                for (cat, (cnt, sum, _mx)) in cats {
+                    wr.put_u64(cat);
+                    wr.put_f64(sum / 100.0 / cnt.max(1) as f64);
+                    wr.put_u64(cnt);
+                }
+                wr.into_bytes()
+            }
+        };
+        if c.job != FlinkJob::PassThrough {
+            c.output.append(0, end, encode_output(w, end, &payload));
+            // metric dedup across restarts: only first emission counts
+            let recorded = c.metric_window.load(Ordering::Acquire);
+            if w >= recorded {
+                c.metric_window.store(w + 1, Ordering::Release);
+                let latency = now.saturating_sub(end);
+                c.metrics.latency.record(latency);
+                c.metrics.latency_series.record(now, latency as f64);
+                c.metrics.outputs.fetch_add(1, Ordering::Relaxed);
+            } else {
+                c.metrics.duplicates.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        run.next_window.store(w + 1, Ordering::Release);
+        did_work = true;
+    }
+    did_work
+}
+
+/// Fold one flush into the root state. Returns whether records arrived.
+fn apply_root_flush(c: &Arc<FlinkCluster>, root: &mut RootState, i: usize, flush: Flush) -> bool {
+    if let Some(b) = flush.barrier {
+        match root.current_barrier {
+            None => {
+                root.current_barrier = Some(b);
+                root.aligned[i] = true;
+            }
+            Some(cur) if b == cur => {
+                root.aligned[i] = true;
+            }
+            Some(_) => { /* stale barrier from before a restart: ignore */ }
+        }
+        return true;
+    }
+    let had = !flush.partials.is_empty();
+    for p in flush.partials {
+        match p {
+            Partial::Max(w, mx, auc) => {
+                let e = root.maxes.entry(w).or_insert((f64::MIN, 0));
+                if mx > e.0 {
+                    *e = (mx, auc);
+                }
+            }
+            Partial::Cat(w, cat, cnt, sum, mx) => {
+                let e = root
+                    .cats
+                    .entry(w)
+                    .or_default()
+                    .entry(cat)
+                    .or_insert((0, 0.0, f64::MIN));
+                e.0 += cnt;
+                e.1 += sum;
+                if mx > e.2 {
+                    e.2 = mx;
+                }
+            }
+            Partial::Record(ref_ts) => {
+                // Q0: emit immediately, sequenced by arrival.
+                let now = c.clock.now();
+                let seq = c.metric_window.fetch_add(1, Ordering::AcqRel);
+                c.output.append(0, ref_ts, encode_output(seq, ref_ts, &[]));
+                let latency = now.saturating_sub(ref_ts);
+                c.metrics.latency.record(latency);
+                c.metrics.latency_series.record(now, latency as f64);
+                c.metrics.outputs.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    root.watermarks[i] = root.watermarks[i].max(flush.watermark);
+    had
+}

@@ -1,0 +1,136 @@
+//! Minimal benchmark harness (no criterion in the vendored crate set).
+//!
+//! `cargo bench` drives `rust/benches/*.rs` with `harness = false`; each
+//! bench builds its scenario, runs it, and prints the table/figure rows
+//! through these helpers so all outputs share one format that
+//! EXPERIMENTS.md quotes directly.
+
+use std::time::Instant;
+
+/// Wall-clock timing statistics over repeated runs of a closure.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: u32,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Stats {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured ones.
+pub fn bench(name: &str, warmup: u32, iters: u32, mut f: impl FnMut()) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut total = 0f64;
+    let mut min = f64::MAX;
+    let mut max = 0f64;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_nanos() as f64;
+        total += dt;
+        min = min.min(dt);
+        max = max.max(dt);
+    }
+    let s = Stats {
+        name: name.to_string(),
+        iters,
+        mean_ns: total / iters as f64,
+        min_ns: min,
+        max_ns: max,
+    };
+    println!(
+        "bench {:<40} mean {:>12.2} us   min {:>12.2} us   max {:>12.2} us   ({} iters)",
+        s.name,
+        s.mean_ns / 1e3,
+        s.min_ns / 1e3,
+        s.max_ns / 1e3,
+        iters
+    );
+    s
+}
+
+/// Print a section header for one paper table/figure.
+pub fn section(title: &str) {
+    println!();
+    println!("=== {title} ===");
+}
+
+/// Print a table row of (label, columns).
+pub fn row(label: &str, cols: &[(&str, String)]) {
+    let cells: Vec<String> = cols.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    println!("{:<28} {}", label, cells.join("  "));
+}
+
+/// Format seconds with 2 decimals from sim-ms.
+pub fn secs(sim_ms: f64) -> String {
+    format!("{:.2}", sim_ms / 1000.0)
+}
+
+/// Format a ratio like "5.2x".
+pub fn ratio(a: f64, b: f64) -> String {
+    if b == 0.0 {
+        "inf".to_string()
+    } else {
+        format!("{:.1}x", a / b)
+    }
+}
+
+/// Render an ASCII sparkline of a series (for time-series figures in
+/// the bench output).
+pub fn sparkline(values: &[f64]) -> String {
+    const TICKS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let max = values.iter().copied().fold(f64::MIN, f64::max);
+    let min = values.iter().copied().fold(f64::MAX, f64::min);
+    let span = (max - min).max(1e-12);
+    values
+        .iter()
+        .map(|&v| {
+            let idx = (((v - min) / span) * 7.0).round() as usize;
+            TICKS[idx.min(7)]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_and_counts() {
+        let mut n = 0u64;
+        let s = bench("noop", 2, 5, || n += 1);
+        assert_eq!(n, 7); // warmup + iters
+        assert_eq!(s.iters, 5);
+        assert!(s.min_ns <= s.mean_ns && s.mean_ns <= s.max_ns);
+    }
+
+    #[test]
+    fn sparkline_renders_all_buckets() {
+        let s = sparkline(&[0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(s.chars().count(), 8);
+        assert!(s.starts_with('▁') && s.ends_with('█'));
+    }
+
+    #[test]
+    fn ratio_formats() {
+        assert_eq!(ratio(10.0, 2.0), "5.0x");
+        assert_eq!(ratio(1.0, 0.0), "inf");
+    }
+
+    #[test]
+    fn secs_formats() {
+        assert_eq!(secs(1234.0), "1.23");
+    }
+}

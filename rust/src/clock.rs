@@ -1,0 +1,151 @@
+//! Scaled simulation clock.
+//!
+//! All paper constants (5 s checkpoint interval, 4 s heartbeats, 10 s
+//! restart delay, ...) are expressed in *sim-time* milliseconds. The
+//! clock maps sim-time onto wall time with a configurable `scale`:
+//! `scale = 0.02` means one paper-second takes 20 ms of wall time, so a
+//! 200-sim-second failure experiment runs in 4 wall-seconds. Ratios
+//! between the compared systems are preserved because both run against
+//! the same clock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::util::SimTime;
+
+/// Shared, monotonically increasing simulation clock.
+#[derive(Debug, Clone)]
+pub struct SimClock {
+    inner: Arc<ClockInner>,
+}
+
+#[derive(Debug)]
+struct ClockInner {
+    start: Instant,
+    /// sim-milliseconds per wall-millisecond (e.g. 50.0 when one
+    /// paper-second runs in 20 ms of wall time).
+    sim_per_wall: f64,
+    /// Frozen time for manual mode (tests): if `u64::MAX`, clock is live.
+    manual: AtomicU64,
+}
+
+impl SimClock {
+    /// A live clock where one sim-second takes `wall_ms_per_sim_sec`
+    /// milliseconds of wall time.
+    pub fn scaled(wall_ms_per_sim_sec: f64) -> Self {
+        assert!(wall_ms_per_sim_sec > 0.0);
+        SimClock {
+            inner: Arc::new(ClockInner {
+                start: Instant::now(),
+                sim_per_wall: 1000.0 / wall_ms_per_sim_sec,
+                manual: AtomicU64::new(u64::MAX),
+            }),
+        }
+    }
+
+    /// Real time: 1 sim-ms == 1 wall-ms.
+    pub fn realtime() -> Self {
+        Self::scaled(1000.0)
+    }
+
+    /// A manually advanced clock for deterministic unit tests.
+    pub fn manual() -> Self {
+        SimClock {
+            inner: Arc::new(ClockInner {
+                start: Instant::now(),
+                sim_per_wall: 0.0,
+                manual: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Current sim-time in milliseconds.
+    pub fn now(&self) -> SimTime {
+        let manual = self.inner.manual.load(Ordering::Acquire);
+        if manual != u64::MAX {
+            return manual;
+        }
+        let wall_ms = self.inner.start.elapsed().as_secs_f64() * 1000.0;
+        (wall_ms * self.inner.sim_per_wall) as SimTime
+    }
+
+    /// Advance a manual clock (no-op safeguard: panics on live clocks).
+    pub fn advance(&self, sim_ms: SimTime) {
+        let m = self.inner.manual.load(Ordering::Acquire);
+        assert_ne!(m, u64::MAX, "advance() on a live clock");
+        self.inner.manual.store(m + sim_ms, Ordering::Release);
+    }
+
+    /// Sleep for `sim_ms` of simulation time (wall sleep on live clocks;
+    /// on manual clocks this advances the clock instead).
+    pub fn sleep(&self, sim_ms: SimTime) {
+        if self.inner.manual.load(Ordering::Acquire) != u64::MAX {
+            self.advance(sim_ms);
+            return;
+        }
+        // wall-ms = sim-ms / (sim-ms per wall-ms)
+        let wall_ms = sim_ms as f64 / self.inner.sim_per_wall;
+        std::thread::sleep(Duration::from_secs_f64(wall_ms / 1000.0));
+    }
+
+    /// Wall-clock duration corresponding to `sim_ms` (for bench harnesses).
+    pub fn wall_for(&self, sim_ms: SimTime) -> Duration {
+        if self.inner.sim_per_wall == 0.0 {
+            return Duration::ZERO;
+        }
+        Duration::from_secs_f64(sim_ms as f64 / self.inner.sim_per_wall / 1000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_clock_advances() {
+        let c = SimClock::manual();
+        assert_eq!(c.now(), 0);
+        c.advance(500);
+        assert_eq!(c.now(), 500);
+        c.sleep(100); // sleep == advance on manual clocks
+        assert_eq!(c.now(), 600);
+    }
+
+    #[test]
+    fn scaled_clock_runs_fast() {
+        // 1 sim-second per 10 wall-ms => 100x speedup.
+        let c = SimClock::scaled(10.0);
+        let t0 = c.now();
+        std::thread::sleep(Duration::from_millis(30));
+        let dt = c.now() - t0;
+        // ~3 sim-seconds elapsed; allow slack for scheduler noise.
+        assert!(dt > 1500, "dt={dt}");
+    }
+
+    #[test]
+    fn clones_share_time() {
+        let a = SimClock::manual();
+        let b = a.clone();
+        a.advance(42);
+        assert_eq!(b.now(), 42);
+    }
+
+    #[test]
+    fn live_sleep_is_scaled() {
+        // 1 sim-s per 5 wall-ms: sleeping 1000 sim-ms must take ~5 wall
+        // ms, not 5 seconds (regression test for a unit bug).
+        let c = SimClock::scaled(5.0);
+        let t0 = Instant::now();
+        c.sleep(1000);
+        let wall = t0.elapsed();
+        assert!(wall < Duration::from_millis(200), "slept {wall:?}");
+    }
+
+    #[test]
+    fn wall_for_converts() {
+        let c = SimClock::scaled(20.0); // 1 sim-s = 20 wall-ms
+        let d = c.wall_for(2000);
+        assert!((d.as_millis() as i64 - 40).abs() <= 1, "{d:?}");
+    }
+}

@@ -1,0 +1,384 @@
+//! System configuration — cluster shape, intervals, time scale.
+//!
+//! All intervals are in *sim-milliseconds* (paper-time); defaults follow
+//! the paper's §5.1 experimental setup. Parsed from a simple
+//! `key = value` file (`# comments` allowed) plus `--key=value` CLI
+//! overrides — there is no serde/clap in the vendored crate set.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Full configuration for a Holon (and baseline) deployment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HolonConfig {
+    // -- cluster shape ---------------------------------------------------
+    /// Number of Holon execution nodes.
+    pub nodes: u32,
+    /// Number of logical stream partitions.
+    pub partitions: u32,
+    /// Events per second per partition produced by the workload.
+    pub events_per_sec_per_partition: u64,
+    /// RNG seed for workload + jitter.
+    pub seed: u64,
+
+    // -- time ------------------------------------------------------------
+    /// Wall-milliseconds per sim-second (scale knob; 1000 = real time).
+    pub wall_ms_per_sim_sec: f64,
+    /// Total experiment duration in sim-ms.
+    pub duration_ms: u64,
+
+    // -- Holon engine ----------------------------------------------------
+    /// Tumbling window size (sim-ms). Paper uses 1 s windows for Q7.
+    pub window_ms: u64,
+    /// Max events pulled per run-loop batch (Algorithm 2 RUN_BATCH).
+    pub batch_size: usize,
+    /// Gossip (WCRDT sync) interval per node, sim-ms.
+    pub gossip_interval_ms: u64,
+    /// Gossip fan-out: peers sampled per gossip round (0 = broadcast to
+    /// all). State-based gossip spreads transitively, so a small fan-out
+    /// converges in O(log n) rounds with O(n·fanout) traffic.
+    pub gossip_fanout: u32,
+    /// Delta-based WCRDT synchronization (paper §7): gossip only the
+    /// windows touched since the last round, with a periodic full-state
+    /// anti-entropy round. Cuts steady-state gossip volume sharply.
+    pub gossip_delta: bool,
+    /// Checkpoint interval per partition, sim-ms.
+    pub checkpoint_interval_ms: u64,
+    /// Heartbeat broadcast interval, sim-ms.
+    pub heartbeat_interval_ms: u64,
+    /// Declare a node dead after this long without a heartbeat, sim-ms.
+    pub failure_timeout_ms: u64,
+    /// Executor idle poll interval when no work is due, sim-ms.
+    pub poll_interval_ms: u64,
+
+    // -- network ---------------------------------------------------------
+    /// Base one-way network delay, sim-ms.
+    pub net_delay_ms: u64,
+    /// Uniform network jitter, sim-ms.
+    pub net_jitter_ms: u64,
+    /// Message drop probability.
+    pub net_drop_prob: f64,
+    /// Probability of a heavy-tail delay spike per message/flush (cloud
+    /// networks have tails; redundant gossip absorbs them, single-path
+    /// channel watermarks do not).
+    pub net_tail_prob: f64,
+    /// Extra delay of a tail spike, sim-ms (uniform in [tail/2, tail]).
+    pub net_tail_ms: u64,
+    /// Modeled per-event service cost of a Holon node, microseconds of
+    /// sim-time (calibrated from the paper's measured 2.05M ev/s on 10
+    /// nodes ≈ 4.9 µs/event; §5.3).
+    pub holon_event_cost_us: f64,
+    /// Modeled per-event service cost of a baseline task slot (paper:
+    /// 1.09M ev/s on 10 nodes ≈ 9 µs/event for Q7; shuffled events pay
+    /// it at each hop).
+    pub flink_event_cost_us: f64,
+
+    // -- baseline (Flink model; paper §5.1 configuration) -----------------
+    /// Checkpoint interval (paper: 5 s).
+    pub flink_checkpoint_interval_ms: u64,
+    /// Heartbeat interval (paper: 4 s).
+    pub flink_heartbeat_interval_ms: u64,
+    /// Heartbeat timeout (paper: 6 s).
+    pub flink_heartbeat_timeout_ms: u64,
+    /// Time for a failed task-manager container to come back (the 10 s
+    /// "restarted 10 seconds later" of §5.2 scenarios).
+    pub flink_restart_delay_ms: u64,
+    /// Job restore cost: state re-load + task redeploy, sim-ms.
+    pub flink_restore_cost_ms: u64,
+    /// Network buffer flush timeout per pipeline hop (execution.buffer-timeout).
+    pub flink_buffer_timeout_ms: u64,
+    /// Source auto-watermark emission interval
+    /// (pipeline.auto-watermark-interval, Flink default 200 ms).
+    pub flink_watermark_interval_ms: u64,
+    /// Whether spare task slots are available (Table 2's third row).
+    pub flink_spare_slots: bool,
+
+    // -- runtime ---------------------------------------------------------
+    /// Use the AOT XLA kernels on the hot path when artifacts exist.
+    pub use_xla: bool,
+    /// Directory with *.hlo.txt artifacts.
+    pub artifacts_dir: String,
+}
+
+impl Default for HolonConfig {
+    fn default() -> Self {
+        Self {
+            nodes: 5,
+            partitions: 10,
+            events_per_sec_per_partition: 1000,
+            seed: 42,
+            wall_ms_per_sim_sec: 20.0,
+            duration_ms: 60_000,
+            window_ms: 1000,
+            batch_size: 256,
+            gossip_interval_ms: 50,
+            gossip_fanout: 0,
+            gossip_delta: false,
+            checkpoint_interval_ms: 1000,
+            heartbeat_interval_ms: 150,
+            failure_timeout_ms: 600,
+            poll_interval_ms: 5,
+            net_delay_ms: 5,
+            net_jitter_ms: 5,
+            net_drop_prob: 0.0,
+            net_tail_prob: 0.02,
+            net_tail_ms: 200,
+            holon_event_cost_us: 4.9,
+            flink_event_cost_us: 9.0,
+            flink_checkpoint_interval_ms: 5000,
+            flink_heartbeat_interval_ms: 4000,
+            flink_heartbeat_timeout_ms: 6000,
+            flink_restart_delay_ms: 10_000,
+            flink_restore_cost_ms: 1500,
+            flink_buffer_timeout_ms: 100,
+            flink_watermark_interval_ms: 200,
+            flink_spare_slots: false,
+            use_xla: false,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+/// Configuration errors.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("unknown config key: {0}")]
+    UnknownKey(String),
+    #[error("invalid value for {key}: {value}")]
+    InvalidValue { key: String, value: String },
+    #[error("malformed line {0}: expected `key = value`")]
+    Malformed(usize),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl HolonConfig {
+    /// Apply one `key = value` override.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), ConfigError> {
+        macro_rules! parse {
+            () => {
+                value.parse().map_err(|_| ConfigError::InvalidValue {
+                    key: key.to_string(),
+                    value: value.to_string(),
+                })?
+            };
+        }
+        match key {
+            "nodes" => self.nodes = parse!(),
+            "partitions" => self.partitions = parse!(),
+            "events_per_sec_per_partition" => self.events_per_sec_per_partition = parse!(),
+            "seed" => self.seed = parse!(),
+            "wall_ms_per_sim_sec" => self.wall_ms_per_sim_sec = parse!(),
+            "duration_ms" => self.duration_ms = parse!(),
+            "window_ms" => self.window_ms = parse!(),
+            "batch_size" => self.batch_size = parse!(),
+            "gossip_interval_ms" => self.gossip_interval_ms = parse!(),
+            "gossip_fanout" => self.gossip_fanout = parse!(),
+            "gossip_delta" => self.gossip_delta = parse!(),
+            "checkpoint_interval_ms" => self.checkpoint_interval_ms = parse!(),
+            "heartbeat_interval_ms" => self.heartbeat_interval_ms = parse!(),
+            "failure_timeout_ms" => self.failure_timeout_ms = parse!(),
+            "poll_interval_ms" => self.poll_interval_ms = parse!(),
+            "net_delay_ms" => self.net_delay_ms = parse!(),
+            "net_jitter_ms" => self.net_jitter_ms = parse!(),
+            "net_drop_prob" => self.net_drop_prob = parse!(),
+            "net_tail_prob" => self.net_tail_prob = parse!(),
+            "net_tail_ms" => self.net_tail_ms = parse!(),
+            "holon_event_cost_us" => self.holon_event_cost_us = parse!(),
+            "flink_event_cost_us" => self.flink_event_cost_us = parse!(),
+            "flink_checkpoint_interval_ms" => self.flink_checkpoint_interval_ms = parse!(),
+            "flink_heartbeat_interval_ms" => self.flink_heartbeat_interval_ms = parse!(),
+            "flink_heartbeat_timeout_ms" => self.flink_heartbeat_timeout_ms = parse!(),
+            "flink_restart_delay_ms" => self.flink_restart_delay_ms = parse!(),
+            "flink_restore_cost_ms" => self.flink_restore_cost_ms = parse!(),
+            "flink_buffer_timeout_ms" => self.flink_buffer_timeout_ms = parse!(),
+            "flink_watermark_interval_ms" => self.flink_watermark_interval_ms = parse!(),
+            "flink_spare_slots" => self.flink_spare_slots = parse!(),
+            "use_xla" => self.use_xla = parse!(),
+            "artifacts_dir" => self.artifacts_dir = value.to_string(),
+            _ => return Err(ConfigError::UnknownKey(key.to_string())),
+        }
+        Ok(())
+    }
+
+    /// Parse a config file of `key = value` lines.
+    pub fn from_file(path: &Path) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)?;
+        let mut cfg = Self::default();
+        cfg.apply_text(&text)?;
+        Ok(cfg)
+    }
+
+    /// Apply `key = value` lines from a string.
+    pub fn apply_text(&mut self, text: &str) -> Result<(), ConfigError> {
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                return Err(ConfigError::Malformed(i + 1));
+            };
+            self.set(k.trim(), v.trim())?;
+        }
+        Ok(())
+    }
+
+    /// Apply `--key=value` CLI arguments; returns non-option args.
+    pub fn apply_args<'a>(
+        &mut self,
+        args: impl Iterator<Item = &'a str>,
+    ) -> Result<Vec<&'a str>, ConfigError> {
+        let mut rest = Vec::new();
+        for a in args {
+            if let Some(kv) = a.strip_prefix("--") {
+                if let Some((k, v)) = kv.split_once('=') {
+                    self.set(&k.replace('-', "_"), v)?;
+                    continue;
+                }
+            }
+            rest.push(a);
+        }
+        Ok(rest)
+    }
+
+    /// Dump as `key = value` lines (introspection / `holon inspect`).
+    pub fn dump(&self) -> String {
+        let mut m = BTreeMap::new();
+        m.insert("nodes", self.nodes.to_string());
+        m.insert("partitions", self.partitions.to_string());
+        m.insert(
+            "events_per_sec_per_partition",
+            self.events_per_sec_per_partition.to_string(),
+        );
+        m.insert("seed", self.seed.to_string());
+        m.insert("wall_ms_per_sim_sec", self.wall_ms_per_sim_sec.to_string());
+        m.insert("duration_ms", self.duration_ms.to_string());
+        m.insert("window_ms", self.window_ms.to_string());
+        m.insert("batch_size", self.batch_size.to_string());
+        m.insert("gossip_interval_ms", self.gossip_interval_ms.to_string());
+        m.insert("gossip_fanout", self.gossip_fanout.to_string());
+        m.insert("gossip_delta", self.gossip_delta.to_string());
+        m.insert(
+            "checkpoint_interval_ms",
+            self.checkpoint_interval_ms.to_string(),
+        );
+        m.insert(
+            "heartbeat_interval_ms",
+            self.heartbeat_interval_ms.to_string(),
+        );
+        m.insert("failure_timeout_ms", self.failure_timeout_ms.to_string());
+        m.insert("poll_interval_ms", self.poll_interval_ms.to_string());
+        m.insert("net_delay_ms", self.net_delay_ms.to_string());
+        m.insert("net_jitter_ms", self.net_jitter_ms.to_string());
+        m.insert("net_drop_prob", self.net_drop_prob.to_string());
+        m.insert("net_tail_prob", self.net_tail_prob.to_string());
+        m.insert("net_tail_ms", self.net_tail_ms.to_string());
+        m.insert("holon_event_cost_us", self.holon_event_cost_us.to_string());
+        m.insert("flink_event_cost_us", self.flink_event_cost_us.to_string());
+        m.insert(
+            "flink_checkpoint_interval_ms",
+            self.flink_checkpoint_interval_ms.to_string(),
+        );
+        m.insert(
+            "flink_heartbeat_interval_ms",
+            self.flink_heartbeat_interval_ms.to_string(),
+        );
+        m.insert(
+            "flink_heartbeat_timeout_ms",
+            self.flink_heartbeat_timeout_ms.to_string(),
+        );
+        m.insert(
+            "flink_restart_delay_ms",
+            self.flink_restart_delay_ms.to_string(),
+        );
+        m.insert(
+            "flink_restore_cost_ms",
+            self.flink_restore_cost_ms.to_string(),
+        );
+        m.insert(
+            "flink_buffer_timeout_ms",
+            self.flink_buffer_timeout_ms.to_string(),
+        );
+        m.insert(
+            "flink_watermark_interval_ms",
+            self.flink_watermark_interval_ms.to_string(),
+        );
+        m.insert("flink_spare_slots", self.flink_spare_slots.to_string());
+        m.insert("use_xla", self.use_xla.to_string());
+        m.insert("artifacts_dir", self.artifacts_dir.clone());
+        m.iter()
+            .map(|(k, v)| format!("{k} = {v}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_follow_paper_section_5_1() {
+        let c = HolonConfig::default();
+        assert_eq!(c.flink_checkpoint_interval_ms, 5000);
+        assert_eq!(c.flink_heartbeat_interval_ms, 4000);
+        assert_eq!(c.flink_heartbeat_timeout_ms, 6000);
+    }
+
+    #[test]
+    fn set_and_apply_text() {
+        let mut c = HolonConfig::default();
+        c.apply_text("# comment\n\nnodes = 10\nwindow_ms=500\nflink_spare_slots = true\n")
+            .unwrap();
+        assert_eq!(c.nodes, 10);
+        assert_eq!(c.window_ms, 500);
+        assert!(c.flink_spare_slots);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = HolonConfig::default();
+        assert!(matches!(
+            c.set("bogus", "1"),
+            Err(ConfigError::UnknownKey(_))
+        ));
+    }
+
+    #[test]
+    fn invalid_value_rejected() {
+        let mut c = HolonConfig::default();
+        assert!(matches!(
+            c.set("nodes", "abc"),
+            Err(ConfigError::InvalidValue { .. })
+        ));
+    }
+
+    #[test]
+    fn malformed_line_reports_number() {
+        let mut c = HolonConfig::default();
+        let err = c.apply_text("nodes = 3\nnot a kv line\n").unwrap_err();
+        assert!(matches!(err, ConfigError::Malformed(2)));
+    }
+
+    #[test]
+    fn cli_args_override_and_pass_through() {
+        let mut c = HolonConfig::default();
+        let rest = c
+            .apply_args(["--nodes=7", "run", "--net-delay-ms=9"].into_iter())
+            .unwrap();
+        assert_eq!(c.nodes, 7);
+        assert_eq!(c.net_delay_ms, 9);
+        assert_eq!(rest, vec!["run"]);
+    }
+
+    #[test]
+    fn dump_roundtrips() {
+        let mut c = HolonConfig::default();
+        c.nodes = 17;
+        c.net_drop_prob = 0.25;
+        let mut c2 = HolonConfig::default();
+        c2.apply_text(&c.dump()).unwrap();
+        assert_eq!(c, c2);
+    }
+}

@@ -1,0 +1,270 @@
+//! PrefixAgg — per-contributor monotone aggregates (sum/count/min/max).
+//!
+//! The workhorse behind keyed global aggregations like Nexmark Q4
+//! (average price per category). Each contributor (partition) publishes
+//! a *deterministic* aggregate of its input prefix: `(count, sum, min,
+//! max)`. Because a partition's aggregate only ever extends its prefix,
+//! two replicas of the same contributor are totally ordered by `count`,
+//! and the join keeps the one with the larger count — the same rule the
+//! paper uses for whole partition states ("largest nxtIdx wins", §4.3).
+
+use std::collections::BTreeMap;
+
+use super::Crdt;
+use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
+
+/// One contributor's running aggregate over its input prefix.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AggCell {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Default for AggCell {
+    fn default() -> Self {
+        Self {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl AggCell {
+    pub fn observe(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Fold a pre-aggregated batch in (count, sum, max) — the fast path
+    /// fed by the XLA window-aggregation kernel.
+    pub fn observe_batch(&mut self, count: u64, sum: f64, max: f64) {
+        if count == 0 {
+            return;
+        }
+        self.count += count;
+        self.sum += sum;
+        self.max = self.max.max(max);
+        // min unavailable from the 3-output kernel; keep it untouched
+        // (the min is not used by any paper query).
+    }
+}
+
+/// Per-contributor prefix aggregates; join keeps the longer prefix.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PrefixAgg {
+    cells: BTreeMap<u64, AggCell>,
+}
+
+impl PrefixAgg {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe(&mut self, contributor: u64, v: f64) {
+        self.cells.entry(contributor).or_default().observe(v);
+    }
+
+    pub fn observe_batch(&mut self, contributor: u64, count: u64, sum: f64, max: f64) {
+        self.cells
+            .entry(contributor)
+            .or_default()
+            .observe_batch(count, sum, max);
+    }
+
+    /// Global count across contributors.
+    pub fn count(&self) -> u64 {
+        self.cells.values().map(|c| c.count).sum()
+    }
+
+    /// Global sum across contributors.
+    pub fn sum(&self) -> f64 {
+        self.cells.values().map(|c| c.sum).sum()
+    }
+
+    /// Global average; `None` when empty.
+    pub fn avg(&self) -> Option<f64> {
+        let n = self.count();
+        if n == 0 {
+            None
+        } else {
+            Some(self.sum() / n as f64)
+        }
+    }
+
+    /// Global max; `None` when empty.
+    pub fn max(&self) -> Option<f64> {
+        let m = self
+            .cells
+            .values()
+            .map(|c| c.max)
+            .fold(f64::NEG_INFINITY, f64::max);
+        if m == f64::NEG_INFINITY {
+            None
+        } else {
+            Some(m)
+        }
+    }
+
+    /// Global min; `None` when empty.
+    pub fn min(&self) -> Option<f64> {
+        let m = self
+            .cells
+            .values()
+            .map(|c| c.min)
+            .fold(f64::INFINITY, f64::min);
+        if m == f64::INFINITY {
+            None
+        } else {
+            Some(m)
+        }
+    }
+
+    pub fn project(&self, contributor: u64) -> Self {
+        let mut p = Self::new();
+        if let Some(c) = self.cells.get(&contributor) {
+            p.cells.insert(contributor, *c);
+        }
+        p
+    }
+}
+
+impl Crdt for PrefixAgg {
+    fn project(&self, contributor: u64) -> Self {
+        PrefixAgg::project(self, contributor)
+    }
+
+    fn merge(&mut self, other: &Self) {
+        for (&k, cell) in &other.cells {
+            match self.cells.get_mut(&k) {
+                None => {
+                    self.cells.insert(k, *cell);
+                }
+                Some(mine) => {
+                    // Longer prefix wins; ties are identical by determinism.
+                    if cell.count > mine.count {
+                        *mine = *cell;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Encode for PrefixAgg {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u32(self.cells.len() as u32);
+        for (&k, c) in &self.cells {
+            w.put_u64(k);
+            w.put_u64(c.count);
+            w.put_f64(c.sum);
+            w.put_f64(c.min);
+            w.put_f64(c.max);
+        }
+    }
+}
+
+impl Decode for PrefixAgg {
+    fn decode(r: &mut Reader) -> DecodeResult<Self> {
+        let n = r.get_u32()? as usize;
+        let mut cells = BTreeMap::new();
+        for _ in 0..n {
+            let k = r.get_u64()?;
+            let cell = AggCell {
+                count: r.get_u64()?,
+                sum: r.get_f64()?,
+                min: r.get_f64()?,
+                max: r.get_f64()?,
+            };
+            cells.insert(k, cell);
+        }
+        Ok(Self { cells })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crdt::lawcheck::{check_codec_roundtrip, check_laws};
+
+    fn agg(contributor: u64, vals: &[f64]) -> PrefixAgg {
+        let mut a = PrefixAgg::new();
+        for &v in vals {
+            a.observe(contributor, v);
+        }
+        a
+    }
+
+    #[test]
+    fn laws_hold_for_prefix_replicas() {
+        // Samples must respect the prefix discipline: replicas of the
+        // same contributor are prefixes of one another.
+        let p1_short = agg(1, &[1.0, 2.0]);
+        let p1_long = agg(1, &[1.0, 2.0, 3.0]);
+        let p2 = agg(2, &[10.0]);
+        check_laws(&[PrefixAgg::new(), p1_short.clone(), p1_long.clone(), p2.clone()]);
+        check_codec_roundtrip(&[p1_short, p1_long, p2]);
+    }
+
+    #[test]
+    fn longer_prefix_wins() {
+        let short = agg(1, &[1.0, 2.0]);
+        let long = agg(1, &[1.0, 2.0, 3.0]);
+        let m = short.clone().merged(&long);
+        assert_eq!(m.count(), 3);
+        assert_eq!(m.sum(), 6.0);
+        assert_eq!(m, long.clone().merged(&short));
+    }
+
+    #[test]
+    fn aggregates_across_contributors() {
+        let mut a = agg(1, &[2.0, 4.0]);
+        a.merge(&agg(2, &[6.0]));
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.avg(), Some(4.0));
+        assert_eq!(a.max(), Some(6.0));
+        assert_eq!(a.min(), Some(2.0));
+    }
+
+    #[test]
+    fn empty_aggregate_is_none() {
+        let a = PrefixAgg::new();
+        assert_eq!(a.avg(), None);
+        assert_eq!(a.max(), None);
+        assert_eq!(a.min(), None);
+    }
+
+    #[test]
+    fn observe_batch_matches_individual() {
+        let mut a = PrefixAgg::new();
+        a.observe(1, 2.0);
+        a.observe(1, 8.0);
+        let mut b = PrefixAgg::new();
+        b.observe_batch(1, 2, 10.0, 8.0);
+        assert_eq!(a.count(), b.count());
+        assert_eq!(a.sum(), b.sum());
+        assert_eq!(a.max(), b.max());
+    }
+
+    #[test]
+    fn observe_batch_empty_is_noop() {
+        let mut a = PrefixAgg::new();
+        a.observe_batch(1, 0, 0.0, f64::NEG_INFINITY);
+        assert_eq!(a.count(), 0);
+        assert_eq!(a.max(), None);
+    }
+
+    #[test]
+    fn project_isolates() {
+        let mut a = agg(1, &[1.0]);
+        a.merge(&agg(2, &[5.0]));
+        let p = a.project(2);
+        assert_eq!(p.count(), 1);
+        assert_eq!(p.sum(), 5.0);
+    }
+}

@@ -1,0 +1,230 @@
+//! Counter CRDTs: GCounter (grow-only) and PNCounter.
+
+use std::collections::BTreeMap;
+
+use super::Crdt;
+use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
+
+/// Grow-only counter (the paper's Listing 1/2 `GCounter`).
+///
+/// Per-contributor partial counts; the value is their sum, the join is
+/// the pointwise max. In Holon, contributors are partition ids: a
+/// partition's count is a deterministic function of its input prefix, so
+/// replicas of the same contribution are totally ordered and max-join is
+/// exact (no double counting on replay/steal).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct GCounter {
+    counts: BTreeMap<u64, u64>,
+}
+
+impl GCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `n` on behalf of `contributor`.
+    pub fn add(&mut self, contributor: u64, n: u64) {
+        *self.counts.entry(contributor).or_insert(0) += n;
+    }
+
+    /// Overwrite a contributor's partial count to `n` if larger
+    /// (checkpoint-restore path).
+    pub fn raise_to(&mut self, contributor: u64, n: u64) {
+        let e = self.counts.entry(contributor).or_insert(0);
+        *e = (*e).max(n);
+    }
+
+    /// Total across all contributors.
+    pub fn value(&self) -> u64 {
+        self.counts.values().sum()
+    }
+
+    /// This contributor's partial count.
+    pub fn contribution(&self, contributor: u64) -> u64 {
+        self.counts.get(&contributor).copied().unwrap_or(0)
+    }
+
+    /// Project the sub-state contributed by `contributor` (checkpointing).
+    pub fn project(&self, contributor: u64) -> Self {
+        let mut g = GCounter::new();
+        if let Some(&n) = self.counts.get(&contributor) {
+            g.counts.insert(contributor, n);
+        }
+        g
+    }
+}
+
+impl Crdt for GCounter {
+    fn project(&self, contributor: u64) -> Self {
+        GCounter::project(self, contributor)
+    }
+
+    fn merge(&mut self, other: &Self) {
+        for (&k, &v) in &other.counts {
+            let e = self.counts.entry(k).or_insert(0);
+            *e = (*e).max(v);
+        }
+    }
+}
+
+impl Encode for GCounter {
+    fn encode(&self, w: &mut Writer) {
+        self.counts.encode(w);
+    }
+}
+
+impl Decode for GCounter {
+    fn decode(r: &mut Reader) -> DecodeResult<Self> {
+        Ok(GCounter {
+            counts: BTreeMap::decode(r)?,
+        })
+    }
+}
+
+/// Positive-negative counter: two GCounters (increments, decrements).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PNCounter {
+    pos: GCounter,
+    neg: GCounter,
+}
+
+impl PNCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, contributor: u64, n: u64) {
+        self.pos.add(contributor, n);
+    }
+
+    pub fn sub(&mut self, contributor: u64, n: u64) {
+        self.neg.add(contributor, n);
+    }
+
+    pub fn value(&self) -> i64 {
+        self.pos.value() as i64 - self.neg.value() as i64
+    }
+
+    pub fn project(&self, contributor: u64) -> Self {
+        PNCounter {
+            pos: self.pos.project(contributor),
+            neg: self.neg.project(contributor),
+        }
+    }
+}
+
+impl Crdt for PNCounter {
+    fn project(&self, contributor: u64) -> Self {
+        PNCounter::project(self, contributor)
+    }
+
+    fn merge(&mut self, other: &Self) {
+        self.pos.merge(&other.pos);
+        self.neg.merge(&other.neg);
+    }
+}
+
+impl Encode for PNCounter {
+    fn encode(&self, w: &mut Writer) {
+        self.pos.encode(w);
+        self.neg.encode(w);
+    }
+}
+
+impl Decode for PNCounter {
+    fn decode(r: &mut Reader) -> DecodeResult<Self> {
+        Ok(PNCounter {
+            pos: GCounter::decode(r)?,
+            neg: GCounter::decode(r)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crdt::lawcheck::{check_codec_roundtrip, check_laws};
+
+    fn samples() -> Vec<GCounter> {
+        let mut a = GCounter::new();
+        a.add(1, 5);
+        a.add(2, 3);
+        let mut b = GCounter::new();
+        b.add(1, 7);
+        let mut c = GCounter::new();
+        c.add(3, 1);
+        c.add(2, 10);
+        vec![GCounter::new(), a, b, c]
+    }
+
+    #[test]
+    fn gcounter_laws() {
+        check_laws(&samples());
+    }
+
+    #[test]
+    fn gcounter_codec() {
+        check_codec_roundtrip(&samples());
+    }
+
+    #[test]
+    fn gcounter_value_sums_contributors() {
+        let mut g = GCounter::new();
+        g.add(1, 2);
+        g.add(2, 3);
+        g.add(1, 1);
+        assert_eq!(g.value(), 6);
+        assert_eq!(g.contribution(1), 3);
+    }
+
+    #[test]
+    fn gcounter_merge_takes_max_per_contributor() {
+        let mut a = GCounter::new();
+        a.add(1, 5);
+        let mut b = GCounter::new();
+        b.add(1, 3);
+        b.add(2, 4);
+        a.merge(&b);
+        assert_eq!(a.value(), 9); // max(5,3) + 4
+    }
+
+    #[test]
+    fn gcounter_replay_is_idempotent() {
+        // A replica that re-processed the same prefix merges to no-op.
+        let mut a = GCounter::new();
+        a.add(1, 10);
+        let replay = a.project(1);
+        let before = a.clone();
+        a.merge(&replay);
+        assert_eq!(a, before);
+    }
+
+    #[test]
+    fn pncounter_laws() {
+        let mut a = PNCounter::new();
+        a.add(1, 5);
+        a.sub(1, 2);
+        let mut b = PNCounter::new();
+        b.sub(2, 1);
+        check_laws(&[PNCounter::new(), a.clone(), b]);
+        assert_eq!(a.value(), 3);
+    }
+
+    #[test]
+    fn pncounter_codec() {
+        let mut a = PNCounter::new();
+        a.add(1, 5);
+        a.sub(2, 9);
+        check_codec_roundtrip(&[a]);
+    }
+
+    #[test]
+    fn project_isolates_contributor() {
+        let mut g = GCounter::new();
+        g.add(1, 5);
+        g.add(2, 7);
+        let p = g.project(2);
+        assert_eq!(p.value(), 7);
+        assert_eq!(p.contribution(1), 0);
+    }
+}

@@ -1,0 +1,147 @@
+//! MapCrdt — a keyed composition of CRDTs (pointwise join).
+//!
+//! Keyed global aggregations (Nexmark Q4: average price *per category*)
+//! are maps from key to an inner CRDT; the join is pointwise. Absent
+//! keys join as the inner bottom element.
+
+use std::collections::BTreeMap;
+
+use super::Crdt;
+use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
+
+/// Map from key to inner CRDT; join is pointwise.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MapCrdt<K: Ord + Clone, C: Crdt> {
+    entries: BTreeMap<K, C>,
+}
+
+impl<K: Ord + Clone, C: Crdt> Default for MapCrdt<K, C> {
+    fn default() -> Self {
+        Self {
+            entries: BTreeMap::new(),
+        }
+    }
+}
+
+impl<K: Ord + Clone, C: Crdt> MapCrdt<K, C> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mutable access to the inner CRDT at `key` (created at bottom).
+    pub fn entry(&mut self, key: K) -> &mut C {
+        self.entries.entry(key).or_default()
+    }
+
+    pub fn get(&self, key: &K) -> Option<&C> {
+        self.entries.get(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&K, &C)> {
+        self.entries.iter()
+    }
+
+    /// Apply `project` pointwise (checkpoint slices for map CRDTs).
+    pub fn project_with(&self, f: impl Fn(&C) -> C) -> Self {
+        Self {
+            entries: self.entries.iter().map(|(k, v)| (k.clone(), f(v))).collect(),
+        }
+    }
+}
+
+impl<K, C> Crdt for MapCrdt<K, C>
+where
+    K: Ord + Clone + Send + Encode + Decode + 'static,
+    C: Crdt,
+{
+    fn project(&self, contributor: u64) -> Self {
+        self.project_with(|c| c.project(contributor))
+    }
+
+    fn merge(&mut self, other: &Self) {
+        for (k, v) in &other.entries {
+            self.entries.entry(k.clone()).or_default().merge(v);
+        }
+    }
+}
+
+impl<K: Ord + Clone + Encode, C: Crdt> Encode for MapCrdt<K, C> {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u32(self.entries.len() as u32);
+        for (k, v) in &self.entries {
+            k.encode(w);
+            v.encode(w);
+        }
+    }
+}
+
+impl<K: Ord + Clone + Decode, C: Crdt> Decode for MapCrdt<K, C> {
+    fn decode(r: &mut Reader) -> DecodeResult<Self> {
+        let n = r.get_u32()? as usize;
+        let mut entries = BTreeMap::new();
+        for _ in 0..n {
+            let k = K::decode(r)?;
+            let v = C::decode(r)?;
+            entries.insert(k, v);
+        }
+        Ok(Self { entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crdt::lawcheck::{check_codec_roundtrip, check_laws};
+    use crate::crdt::GCounter;
+
+    fn sample(pairs: &[(u64, u64, u64)]) -> MapCrdt<u64, GCounter> {
+        let mut m: MapCrdt<u64, GCounter> = MapCrdt::new();
+        for &(k, c, n) in pairs {
+            m.entry(k).add(c, n);
+        }
+        m
+    }
+
+    #[test]
+    fn laws_hold_pointwise() {
+        let samples = vec![
+            MapCrdt::new(),
+            sample(&[(1, 0, 5)]),
+            sample(&[(1, 1, 3), (2, 0, 7)]),
+            sample(&[(2, 0, 2), (3, 2, 9)]),
+        ];
+        check_laws(&samples);
+        check_codec_roundtrip(&samples);
+    }
+
+    #[test]
+    fn merge_joins_per_key() {
+        let mut a = sample(&[(1, 0, 5)]);
+        let b = sample(&[(1, 1, 3), (2, 0, 7)]);
+        a.merge(&b);
+        assert_eq!(a.get(&1).unwrap().value(), 8);
+        assert_eq!(a.get(&2).unwrap().value(), 7);
+    }
+
+    #[test]
+    fn absent_key_is_bottom() {
+        let m: MapCrdt<u64, GCounter> = MapCrdt::new();
+        assert!(m.get(&99).is_none());
+    }
+
+    #[test]
+    fn project_with_slices_pointwise() {
+        let m = sample(&[(1, 0, 5), (1, 1, 2), (2, 1, 3)]);
+        let p = m.project_with(|c| c.project(1));
+        assert_eq!(p.get(&1).unwrap().value(), 2);
+        assert_eq!(p.get(&2).unwrap().value(), 3);
+    }
+}

@@ -1,0 +1,112 @@
+//! State-based CRDTs (join-semilattices).
+//!
+//! The paper wraps Akka/Pekko Distributed Data CRDTs; we implement our
+//! own. Every type here is a *state-based* CRDT: replicas synchronize by
+//! exchanging full state and joining with [`Crdt::merge`], which must be
+//! commutative, associative and idempotent (verified by the property
+//! tests in `rust/tests/properties.rs` and unit tests per module).
+//!
+//! Contributor tagging: the Holon execution model keys contributions by
+//! *partition*. Counters and registers therefore take a `contributor`
+//! argument on update; a partition's contribution is deterministic given
+//! its input prefix, which is what makes double-processing after work
+//! stealing idempotent (paper §4.3).
+
+mod agg;
+mod counter;
+mod map;
+mod register;
+mod set;
+mod topk;
+
+pub use agg::PrefixAgg;
+pub use counter::{GCounter, PNCounter};
+pub use map::MapCrdt;
+pub use register::{LwwRegister, MaxRegister, MinRegister};
+pub use set::{GSet, ORSet, TwoPSet};
+pub use topk::BoundedTopK;
+
+use crate::codec::{Decode, Encode};
+
+/// A state-based CRDT: a join-semilattice with a bottom element
+/// (`Default::default()`) and a join ([`merge`](Crdt::merge)).
+///
+/// Laws (checked by tests):
+/// * commutativity: `a ⊔ b == b ⊔ a`
+/// * associativity: `(a ⊔ b) ⊔ c == a ⊔ (b ⊔ c)`
+/// * idempotence:   `a ⊔ a == a`
+/// * identity:      `a ⊔ ⊥ == a`
+pub trait Crdt: Clone + Default + Send + Encode + Decode + 'static {
+    /// Join this replica with another (least upper bound).
+    fn merge(&mut self, other: &Self);
+
+    /// Project the sub-state contributed by `contributor` (a partition
+    /// id) — used to build minimal checkpoint slices. The default
+    /// (a full clone) is always *correct* (merge is idempotent), just
+    /// larger; contributor-tagged types override it.
+    fn project(&self, _contributor: u64) -> Self {
+        self.clone()
+    }
+
+    /// `self ⊑ other` — lattice order; default derives it from merge on
+    /// `Eq` types via `other == self ⊔ other` where possible. Types
+    /// override this with a cheaper direct check.
+    fn merged(mut self, other: &Self) -> Self
+    where
+        Self: Sized,
+    {
+        self.merge(other);
+        self
+    }
+}
+
+/// Join an iterator of CRDT states into one (fold over ⊔ from ⊥).
+pub fn join_all<C: Crdt, I: IntoIterator<Item = C>>(iter: I) -> C {
+    let mut acc = C::default();
+    for x in iter {
+        acc.merge(&x);
+    }
+    acc
+}
+
+#[cfg(test)]
+pub(crate) mod lawcheck {
+    //! Reusable lattice-law checker used by each CRDT's unit tests.
+    use super::Crdt;
+
+    pub fn check_laws<C: Crdt + PartialEq + std::fmt::Debug>(samples: &[C]) {
+        for a in samples {
+            // idempotence
+            assert_eq!(a.clone().merged(a), a.clone(), "idempotence");
+            // identity
+            assert_eq!(C::default().merged(a), a.clone(), "left identity");
+            assert_eq!(a.clone().merged(&C::default()), a.clone(), "right identity");
+            for b in samples {
+                // commutativity
+                assert_eq!(
+                    a.clone().merged(b),
+                    b.clone().merged(a),
+                    "commutativity"
+                );
+                for c in samples {
+                    // associativity
+                    assert_eq!(
+                        a.clone().merged(b).merged(c),
+                        a.clone().merged(&b.clone().merged(c)),
+                        "associativity"
+                    );
+                }
+            }
+        }
+    }
+
+    pub fn check_codec_roundtrip<C>(samples: &[C])
+    where
+        C: Crdt + PartialEq + std::fmt::Debug,
+    {
+        for s in samples {
+            let b = s.to_bytes();
+            assert_eq!(&C::from_bytes(&b).unwrap(), s);
+        }
+    }
+}

@@ -1,0 +1,256 @@
+//! Register CRDTs: last-writer-wins, max and min registers.
+
+use super::Crdt;
+use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
+
+/// Last-writer-wins register. Ties on timestamp break by contributor id
+/// (higher wins) so the join stays commutative and deterministic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LwwRegister<T: Clone> {
+    entry: Option<(u64, u64, T)>, // (timestamp, contributor, value)
+}
+
+impl<T: Clone> Default for LwwRegister<T> {
+    fn default() -> Self {
+        Self { entry: None }
+    }
+}
+
+impl<T: Clone> LwwRegister<T> {
+    pub fn new() -> Self {
+        Self { entry: None }
+    }
+
+    pub fn set(&mut self, ts: u64, contributor: u64, value: T) {
+        let newer = match &self.entry {
+            None => true,
+            Some((t, c, _)) => (ts, contributor) > (*t, *c),
+        };
+        if newer {
+            self.entry = Some((ts, contributor, value));
+        }
+    }
+
+    pub fn get(&self) -> Option<&T> {
+        self.entry.as_ref().map(|(_, _, v)| v)
+    }
+
+    pub fn timestamp(&self) -> Option<u64> {
+        self.entry.as_ref().map(|(t, _, _)| *t)
+    }
+}
+
+impl<T: Clone + Send + Encode + Decode + 'static> Crdt for LwwRegister<T> {
+    fn merge(&mut self, other: &Self) {
+        if let Some((ts, c, v)) = &other.entry {
+            self.set(*ts, *c, v.clone());
+        }
+    }
+}
+
+impl<T: Clone + Encode> Encode for LwwRegister<T> {
+    fn encode(&self, w: &mut Writer) {
+        match &self.entry {
+            None => w.put_u8(0),
+            Some((t, c, v)) => {
+                w.put_u8(1);
+                w.put_u64(*t);
+                w.put_u64(*c);
+                v.encode(w);
+            }
+        }
+    }
+}
+
+impl<T: Clone + Decode> Decode for LwwRegister<T> {
+    fn decode(r: &mut Reader) -> DecodeResult<Self> {
+        match r.get_u8()? {
+            0 => Ok(Self { entry: None }),
+            _ => {
+                let t = r.get_u64()?;
+                let c = r.get_u64()?;
+                let v = T::decode(r)?;
+                Ok(Self {
+                    entry: Some((t, c, v)),
+                })
+            }
+        }
+    }
+}
+
+/// Max register: keeps the largest value ever written; join = max.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MaxRegister<T: Ord + Clone> {
+    value: Option<T>,
+}
+
+impl<T: Ord + Clone> Default for MaxRegister<T> {
+    fn default() -> Self {
+        Self { value: None }
+    }
+}
+
+impl<T: Ord + Clone> MaxRegister<T> {
+    pub fn new() -> Self {
+        Self { value: None }
+    }
+
+    pub fn put(&mut self, v: T) {
+        match &self.value {
+            Some(cur) if *cur >= v => {}
+            _ => self.value = Some(v),
+        }
+    }
+
+    pub fn get(&self) -> Option<&T> {
+        self.value.as_ref()
+    }
+}
+
+impl<T: Ord + Clone + Send + Encode + Decode + 'static> Crdt for MaxRegister<T> {
+    fn merge(&mut self, other: &Self) {
+        if let Some(v) = &other.value {
+            self.put(v.clone());
+        }
+    }
+}
+
+impl<T: Ord + Clone + Encode> Encode for MaxRegister<T> {
+    fn encode(&self, w: &mut Writer) {
+        self.value.encode(w);
+    }
+}
+
+impl<T: Ord + Clone + Decode> Decode for MaxRegister<T> {
+    fn decode(r: &mut Reader) -> DecodeResult<Self> {
+        Ok(Self {
+            value: Option::decode(r)?,
+        })
+    }
+}
+
+/// Min register: dual of [`MaxRegister`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MinRegister<T: Ord + Clone> {
+    value: Option<T>,
+}
+
+impl<T: Ord + Clone> Default for MinRegister<T> {
+    fn default() -> Self {
+        Self { value: None }
+    }
+}
+
+impl<T: Ord + Clone> MinRegister<T> {
+    pub fn new() -> Self {
+        Self { value: None }
+    }
+
+    pub fn put(&mut self, v: T) {
+        match &self.value {
+            Some(cur) if *cur <= v => {}
+            _ => self.value = Some(v),
+        }
+    }
+
+    pub fn get(&self) -> Option<&T> {
+        self.value.as_ref()
+    }
+}
+
+impl<T: Ord + Clone + Send + Encode + Decode + 'static> Crdt for MinRegister<T> {
+    fn merge(&mut self, other: &Self) {
+        if let Some(v) = &other.value {
+            self.put(v.clone());
+        }
+    }
+}
+
+impl<T: Ord + Clone + Encode> Encode for MinRegister<T> {
+    fn encode(&self, w: &mut Writer) {
+        self.value.encode(w);
+    }
+}
+
+impl<T: Ord + Clone + Decode> Decode for MinRegister<T> {
+    fn decode(r: &mut Reader) -> DecodeResult<Self> {
+        Ok(Self {
+            value: Option::decode(r)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crdt::lawcheck::{check_codec_roundtrip, check_laws};
+
+    #[test]
+    fn lww_laws() {
+        let mut a = LwwRegister::new();
+        a.set(1, 1, 10u64);
+        let mut b = LwwRegister::new();
+        b.set(2, 1, 20);
+        let mut c = LwwRegister::new();
+        c.set(2, 2, 30); // same ts as b, higher contributor
+        check_laws(&[LwwRegister::new(), a, b, c]);
+    }
+
+    #[test]
+    fn lww_ties_break_by_contributor() {
+        let mut a = LwwRegister::new();
+        a.set(5, 1, "a".to_string());
+        let mut b = LwwRegister::new();
+        b.set(5, 2, "b".to_string());
+        let m1 = a.clone().merged(&b);
+        let m2 = b.clone().merged(&a);
+        assert_eq!(m1.get(), Some(&"b".to_string()));
+        assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn lww_old_write_ignored() {
+        let mut a = LwwRegister::new();
+        a.set(10, 1, 1u64);
+        a.set(5, 1, 2);
+        assert_eq!(a.get(), Some(&1));
+    }
+
+    #[test]
+    fn max_register_laws_and_codec() {
+        let mut a = MaxRegister::new();
+        a.put(3u64);
+        let mut b = MaxRegister::new();
+        b.put(9);
+        let samples = vec![MaxRegister::new(), a, b];
+        check_laws(&samples);
+        check_codec_roundtrip(&samples);
+    }
+
+    #[test]
+    fn max_register_keeps_max() {
+        let mut r = MaxRegister::new();
+        r.put(5u64);
+        r.put(3);
+        assert_eq!(r.get(), Some(&5));
+        r.put(8);
+        assert_eq!(r.get(), Some(&8));
+    }
+
+    #[test]
+    fn min_register_keeps_min() {
+        let mut r = MinRegister::new();
+        r.put(5u64);
+        r.put(9);
+        assert_eq!(r.get(), Some(&5));
+        r.put(2);
+        assert_eq!(r.get(), Some(&2));
+    }
+
+    #[test]
+    fn lww_codec() {
+        let mut a = LwwRegister::new();
+        a.set(7, 3, 42u64);
+        check_codec_roundtrip(&[LwwRegister::<u64>::new(), a]);
+    }
+}

@@ -1,0 +1,363 @@
+//! Set CRDTs: GSet, TwoPSet, ORSet.
+
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+
+use super::Crdt;
+use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
+
+/// Grow-only set; join = union.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GSet<T: Ord + Clone> {
+    items: BTreeSet<T>,
+}
+
+impl<T: Ord + Clone> Default for GSet<T> {
+    fn default() -> Self {
+        Self {
+            items: BTreeSet::new(),
+        }
+    }
+}
+
+impl<T: Ord + Clone> GSet<T> {
+    pub fn new() -> Self {
+        Self {
+            items: BTreeSet::new(),
+        }
+    }
+
+    pub fn insert(&mut self, item: T) {
+        self.items.insert(item);
+    }
+
+    pub fn contains(&self, item: &T) -> bool {
+        self.items.contains(item)
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.items.iter()
+    }
+}
+
+impl<T: Ord + Clone + Send + Encode + Decode + 'static> Crdt for GSet<T> {
+    fn merge(&mut self, other: &Self) {
+        for x in &other.items {
+            self.items.insert(x.clone());
+        }
+    }
+}
+
+impl<T: Ord + Clone + Encode> Encode for GSet<T> {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u32(self.items.len() as u32);
+        for x in &self.items {
+            x.encode(w);
+        }
+    }
+}
+
+impl<T: Ord + Clone + Decode> Decode for GSet<T> {
+    fn decode(r: &mut Reader) -> DecodeResult<Self> {
+        let n = r.get_u32()? as usize;
+        let mut items = BTreeSet::new();
+        for _ in 0..n {
+            items.insert(T::decode(r)?);
+        }
+        Ok(GSet { items })
+    }
+}
+
+/// Two-phase set: add once, remove once, never re-add.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TwoPSet<T: Ord + Clone> {
+    added: GSet<T>,
+    removed: GSet<T>,
+}
+
+impl<T: Ord + Clone> Default for TwoPSet<T> {
+    fn default() -> Self {
+        Self {
+            added: GSet::default(),
+            removed: GSet::default(),
+        }
+    }
+}
+
+impl<T: Ord + Clone + Send + Encode + Decode + 'static> TwoPSet<T> {
+    pub fn new() -> Self {
+        Self {
+            added: GSet::new(),
+            removed: GSet::new(),
+        }
+    }
+
+    pub fn insert(&mut self, item: T) {
+        self.added.insert(item);
+    }
+
+    /// Remove wins over add, permanently (2P-set semantics).
+    pub fn remove(&mut self, item: T) {
+        self.removed.insert(item);
+    }
+
+    pub fn contains(&self, item: &T) -> bool {
+        self.added.contains(item) && !self.removed.contains(item)
+    }
+
+    pub fn live_len(&self) -> usize {
+        self.added.iter().filter(|x| !self.removed.contains(x)).count()
+    }
+}
+
+impl<T: Ord + Clone + Send + Encode + Decode + 'static> Crdt for TwoPSet<T> {
+    fn merge(&mut self, other: &Self) {
+        self.added.merge(&other.added);
+        self.removed.merge(&other.removed);
+    }
+}
+
+impl<T: Ord + Clone + Encode> Encode for TwoPSet<T> {
+    fn encode(&self, w: &mut Writer) {
+        self.added.encode(w);
+        self.removed.encode(w);
+    }
+}
+
+impl<T: Ord + Clone + Decode> Decode for TwoPSet<T> {
+    fn decode(r: &mut Reader) -> DecodeResult<Self> {
+        Ok(TwoPSet {
+            added: GSet::decode(r)?,
+            removed: GSet::decode(r)?,
+        })
+    }
+}
+
+/// Observed-remove set with (contributor, seq) unique tags. Re-adding
+/// after removal works (unlike [`TwoPSet`]); removal only affects tags
+/// observed at the removing replica.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ORSet<T: Ord + Clone> {
+    /// live tags per element
+    entries: BTreeMap<T, BTreeSet<(u64, u64)>>,
+    /// tombstoned tags per element
+    tombs: BTreeMap<T, BTreeSet<(u64, u64)>>,
+    /// next sequence number per contributor (local metadata, merged by max)
+    seqs: BTreeMap<u64, u64>,
+}
+
+impl<T: Ord + Clone> Default for ORSet<T> {
+    fn default() -> Self {
+        Self {
+            entries: BTreeMap::new(),
+            tombs: BTreeMap::new(),
+            seqs: BTreeMap::new(),
+        }
+    }
+}
+
+impl<T: Ord + Clone + Send + Encode + Decode + 'static> ORSet<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, contributor: u64, item: T) {
+        let seq = self.seqs.entry(contributor).or_insert(0);
+        *seq += 1;
+        let tag = (contributor, *seq);
+        self.entries.entry(item).or_default().insert(tag);
+    }
+
+    /// Remove all currently observed tags of `item`.
+    pub fn remove(&mut self, item: &T) {
+        if let Some(tags) = self.entries.get(item) {
+            let observed: BTreeSet<_> = tags.clone();
+            self.tombs.entry(item.clone()).or_default().extend(observed);
+        }
+    }
+
+    pub fn contains(&self, item: &T) -> bool {
+        match self.entries.get(item) {
+            None => false,
+            Some(tags) => {
+                let empty = BTreeSet::new();
+                let dead = self.tombs.get(item).unwrap_or(&empty);
+                tags.iter().any(|t| !dead.contains(t))
+            }
+        }
+    }
+
+    pub fn live_elements(&self) -> Vec<&T> {
+        self.entries
+            .keys()
+            .filter(|k| self.contains(k))
+            .collect()
+    }
+}
+
+impl<T: Ord + Clone + Send + Encode + Decode + 'static> Crdt for ORSet<T> {
+    fn merge(&mut self, other: &Self) {
+        for (k, tags) in &other.entries {
+            self.entries.entry(k.clone()).or_default().extend(tags.iter().copied());
+        }
+        for (k, tags) in &other.tombs {
+            self.tombs.entry(k.clone()).or_default().extend(tags.iter().copied());
+        }
+        for (&c, &s) in &other.seqs {
+            let e = self.seqs.entry(c).or_insert(0);
+            *e = (*e).max(s);
+        }
+    }
+}
+
+impl<T: Ord + Clone + Encode> Encode for ORSet<T> {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u32(self.entries.len() as u32);
+        for (k, tags) in &self.entries {
+            k.encode(w);
+            let v: Vec<(u64, u64)> = tags.iter().copied().collect();
+            v.encode(w);
+        }
+        w.put_u32(self.tombs.len() as u32);
+        for (k, tags) in &self.tombs {
+            k.encode(w);
+            let v: Vec<(u64, u64)> = tags.iter().copied().collect();
+            v.encode(w);
+        }
+        self.seqs.encode(w);
+    }
+}
+
+impl<T: Ord + Clone + Decode> Decode for ORSet<T> {
+    fn decode(r: &mut Reader) -> DecodeResult<Self> {
+        let mut entries = BTreeMap::new();
+        let n = r.get_u32()? as usize;
+        for _ in 0..n {
+            let k = T::decode(r)?;
+            let tags: Vec<(u64, u64)> = Vec::decode(r)?;
+            entries.insert(k, tags.into_iter().collect());
+        }
+        let mut tombs = BTreeMap::new();
+        let n = r.get_u32()? as usize;
+        for _ in 0..n {
+            let k = T::decode(r)?;
+            let tags: Vec<(u64, u64)> = Vec::decode(r)?;
+            tombs.insert(k, tags.into_iter().collect());
+        }
+        Ok(ORSet {
+            entries,
+            tombs,
+            seqs: BTreeMap::decode(r)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crdt::lawcheck::{check_codec_roundtrip, check_laws};
+
+    fn gsamples() -> Vec<GSet<u64>> {
+        let mut a = GSet::new();
+        a.insert(1);
+        a.insert(2);
+        let mut b = GSet::new();
+        b.insert(2);
+        b.insert(3);
+        vec![GSet::new(), a, b]
+    }
+
+    #[test]
+    fn gset_laws() {
+        check_laws(&gsamples());
+    }
+
+    #[test]
+    fn gset_codec() {
+        check_codec_roundtrip(&gsamples());
+    }
+
+    #[test]
+    fn gset_merge_is_union() {
+        let mut s = gsamples().remove(1);
+        s.merge(&gsamples()[2]);
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn twopset_remove_wins() {
+        let mut a = TwoPSet::new();
+        a.insert(1u64);
+        let mut b = a.clone();
+        b.remove(1);
+        a.merge(&b);
+        assert!(!a.contains(&1));
+        // re-add cannot resurrect
+        a.insert(1);
+        assert!(!a.contains(&1));
+        assert_eq!(a.live_len(), 0);
+    }
+
+    #[test]
+    fn twopset_laws() {
+        let mut a = TwoPSet::new();
+        a.insert(1u64);
+        let mut b = TwoPSet::new();
+        b.insert(1);
+        b.remove(1);
+        let mut c = TwoPSet::new();
+        c.insert(2);
+        check_laws(&[TwoPSet::new(), a, b, c]);
+    }
+
+    #[test]
+    fn orset_readd_after_remove() {
+        let mut a = ORSet::new();
+        a.insert(1, "x".to_string());
+        a.remove(&"x".to_string());
+        assert!(!a.contains(&"x".to_string()));
+        a.insert(1, "x".to_string());
+        assert!(a.contains(&"x".to_string()));
+    }
+
+    #[test]
+    fn orset_concurrent_add_survives_remove() {
+        // replica A removes its observed tag; replica B concurrently adds.
+        let mut base = ORSet::new();
+        base.insert(1, 7u64);
+        let mut a = base.clone();
+        let mut b = base.clone();
+        a.remove(&7);
+        b.insert(2, 7);
+        a.merge(&b);
+        assert!(a.contains(&7)); // B's unobserved tag survives
+    }
+
+    #[test]
+    fn orset_laws() {
+        let mut a = ORSet::new();
+        a.insert(1, 1u64);
+        let mut b = a.clone();
+        b.remove(&1);
+        let mut c = ORSet::new();
+        c.insert(2, 2);
+        check_laws(&[ORSet::new(), a, b, c]);
+    }
+
+    #[test]
+    fn orset_codec() {
+        let mut a = ORSet::new();
+        a.insert(1, 5u64);
+        a.insert(2, 6);
+        a.remove(&5);
+        check_codec_roundtrip(&[a]);
+    }
+}

@@ -1,0 +1,209 @@
+//! Bounded top-k CRDT — the Q7 ("highest bids") aggregate.
+//!
+//! A bounded join-semilattice: the state is the set of the k largest
+//! entries seen; join = union followed by truncation to the top k.
+//! Truncation commutes with union (it is a lattice homomorphism image of
+//! GSet-union onto the "top-k" quotient), so the laws hold — verified by
+//! the property tests.
+
+use std::collections::BTreeSet;
+
+use super::Crdt;
+use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
+use crate::util::OrdF64;
+
+/// One scored entry: `(price, auction_id, contributor)`. The full tuple
+/// participates in ordering so entries are never ambiguous and the join
+/// is deterministic.
+pub type TopKEntry = (OrdF64, u64, u64);
+
+/// Keep the `k` largest `(score, id, contributor)` entries.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BoundedTopK {
+    k: usize,
+    entries: BTreeSet<TopKEntry>,
+}
+
+impl Default for BoundedTopK {
+    fn default() -> Self {
+        Self::new(1)
+    }
+}
+
+impl BoundedTopK {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1);
+        Self {
+            k,
+            entries: BTreeSet::new(),
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Raise the bound to `k` (monotone; queries call this on lattice-
+    /// bottom states created by `Default` before offering entries —
+    /// every replica applies the same deterministic bound).
+    pub fn set_k(&mut self, k: usize) {
+        self.k = self.k.max(k);
+    }
+
+    /// Offer an entry; keeps it only if it ranks in the top k.
+    pub fn offer(&mut self, score: f64, id: u64, contributor: u64) {
+        self.entries.insert((OrdF64(score), id, contributor));
+        self.truncate();
+    }
+
+    fn truncate(&mut self) {
+        while self.entries.len() > self.k {
+            // BTreeSet iterates ascending; pop the smallest.
+            let min = *self.entries.iter().next().unwrap();
+            self.entries.remove(&min);
+        }
+    }
+
+    /// Entries in descending score order.
+    pub fn top(&self) -> Vec<TopKEntry> {
+        self.entries.iter().rev().copied().collect()
+    }
+
+    /// The single highest score, if any (Q7's output).
+    pub fn max_score(&self) -> Option<f64> {
+        self.entries.iter().next_back().map(|(s, _, _)| s.0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Project entries contributed by `contributor` (checkpoint slice).
+    pub fn project(&self, contributor: u64) -> Self {
+        Self {
+            k: self.k,
+            entries: self
+                .entries
+                .iter()
+                .filter(|(_, _, c)| *c == contributor)
+                .copied()
+                .collect(),
+        }
+    }
+}
+
+impl Crdt for BoundedTopK {
+    fn project(&self, contributor: u64) -> Self {
+        BoundedTopK::project(self, contributor)
+    }
+
+    fn merge(&mut self, other: &Self) {
+        // Replicas of the same logical aggregate always share k; the
+        // defensive max keeps merge total anyway.
+        self.k = self.k.max(other.k);
+        for e in &other.entries {
+            self.entries.insert(*e);
+        }
+        self.truncate();
+    }
+}
+
+impl Encode for BoundedTopK {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u64(self.k as u64);
+        w.put_u32(self.entries.len() as u32);
+        for (s, id, c) in &self.entries {
+            w.put_f64(s.0);
+            w.put_u64(*id);
+            w.put_u64(*c);
+        }
+    }
+}
+
+impl Decode for BoundedTopK {
+    fn decode(r: &mut Reader) -> DecodeResult<Self> {
+        let k = r.get_u64()? as usize;
+        let n = r.get_u32()? as usize;
+        let mut entries = BTreeSet::new();
+        for _ in 0..n {
+            let s = r.get_f64()?;
+            let id = r.get_u64()?;
+            let c = r.get_u64()?;
+            entries.insert((OrdF64(s), id, c));
+        }
+        Ok(Self { k: k.max(1), entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crdt::lawcheck::{check_codec_roundtrip, check_laws};
+
+    fn topk(k: usize, xs: &[(f64, u64)]) -> BoundedTopK {
+        let mut t = BoundedTopK::new(k);
+        for (i, &(s, id)) in xs.iter().enumerate() {
+            t.offer(s, id, i as u64 % 3);
+        }
+        t
+    }
+
+    #[test]
+    fn laws_hold_for_same_k() {
+        let samples = vec![
+            BoundedTopK::new(3),
+            topk(3, &[(1.0, 1), (5.0, 2)]),
+            topk(3, &[(2.0, 3), (4.0, 4), (9.0, 5), (0.5, 6)]),
+            topk(3, &[(9.0, 5), (8.0, 7)]),
+        ];
+        check_laws(&samples);
+        check_codec_roundtrip(&samples);
+    }
+
+    #[test]
+    fn keeps_only_top_k() {
+        let t = topk(2, &[(1.0, 1), (5.0, 2), (3.0, 3)]);
+        assert_eq!(t.len(), 2);
+        let tops = t.top();
+        assert_eq!(tops[0].0 .0, 5.0);
+        assert_eq!(tops[1].0 .0, 3.0);
+    }
+
+    #[test]
+    fn merge_equals_offer_order_independent() {
+        let a = topk(3, &[(1.0, 1), (9.0, 2)]);
+        let b = topk(3, &[(5.0, 3), (7.0, 4)]);
+        let m = a.clone().merged(&b);
+        assert_eq!(m.max_score(), Some(9.0));
+        assert_eq!(m.len(), 3);
+        assert_eq!(m, b.clone().merged(&a));
+    }
+
+    #[test]
+    fn max_score_on_empty_is_none() {
+        assert_eq!(BoundedTopK::new(4).max_score(), None);
+    }
+
+    #[test]
+    fn duplicate_offers_are_idempotent() {
+        let mut t = BoundedTopK::new(2);
+        t.offer(5.0, 1, 0);
+        t.offer(5.0, 1, 0);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn project_filters_contributor() {
+        let mut t = BoundedTopK::new(4);
+        t.offer(1.0, 1, 0);
+        t.offer(2.0, 2, 1);
+        t.offer(3.0, 3, 0);
+        let p = t.project(0);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.max_score(), Some(3.0));
+    }
+}

@@ -1,0 +1,175 @@
+//! Decentralized membership: heartbeats, failure detection, and the
+//! deterministic partition-ownership rule behind work stealing.
+//!
+//! There is no coordinator. Every node independently maintains an
+//! `alive` view from heartbeats on the control bus and computes, for
+//! every partition, a *target owner* with rendezvous hashing over the
+//! alive set. When the views agree the assignment is balanced and
+//! stable; while they disagree (around failures/restarts) two nodes may
+//! process the same partition — which is exactly what the paper's
+//! deterministic programming model makes safe (§4.3: "the execution
+//! allows multiple nodes to process the same partitions").
+//! Rendezvous hashing minimizes partition movement on membership change,
+//! which keeps reconfiguration cheap.
+
+use std::collections::BTreeMap;
+
+use crate::util::{NodeId, PartitionId, SimTime};
+
+/// A node's local view of cluster membership.
+#[derive(Debug)]
+pub struct Membership {
+    myself: NodeId,
+    /// last heartbeat receive-time per node (self refreshed locally).
+    last_seen: BTreeMap<NodeId, SimTime>,
+    /// failure timeout (sim-ms).
+    timeout: SimTime,
+}
+
+impl Membership {
+    pub fn new(myself: NodeId, timeout: SimTime, now: SimTime) -> Self {
+        let mut last_seen = BTreeMap::new();
+        last_seen.insert(myself, now);
+        Self {
+            myself,
+            last_seen,
+            timeout,
+        }
+    }
+
+    /// Record a heartbeat from `node` at local time `now`.
+    pub fn heard_from(&mut self, node: NodeId, now: SimTime) {
+        let e = self.last_seen.entry(node).or_insert(now);
+        *e = (*e).max(now);
+    }
+
+    /// Refresh own liveness (called when broadcasting a heartbeat).
+    pub fn refresh_self(&mut self, now: SimTime) {
+        self.last_seen.insert(self.myself, now);
+    }
+
+    /// Nodes currently considered alive at `now` (always includes self).
+    pub fn alive(&self, now: SimTime) -> Vec<NodeId> {
+        self.last_seen
+            .iter()
+            .filter(|&(&n, &ts)| n == self.myself || now.saturating_sub(ts) <= self.timeout)
+            .map(|(&n, _)| n)
+            .collect()
+    }
+
+    /// Nodes that have timed out (for observability).
+    pub fn dead(&self, now: SimTime) -> Vec<NodeId> {
+        self.last_seen
+            .iter()
+            .filter(|&(&n, &ts)| n != self.myself && now.saturating_sub(ts) > self.timeout)
+            .map(|(&n, _)| n)
+            .collect()
+    }
+
+    pub fn myself(&self) -> NodeId {
+        self.myself
+    }
+}
+
+/// Deterministic weight of (node, partition) for rendezvous hashing —
+/// a strong 64-bit mix so ownership is uniform and stable.
+fn weight(node: NodeId, partition: PartitionId) -> u64 {
+    let mut x = ((node as u64) << 32) ^ (partition as u64) ^ 0x9E37_79B9_7F4A_7C15;
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xC4CE_B9FE_1A85_EC53);
+    x ^= x >> 33;
+    x
+}
+
+/// The target owner of `partition` among `alive` nodes (rendezvous
+/// hashing: highest weight wins). `alive` must be non-empty.
+pub fn target_owner(partition: PartitionId, alive: &[NodeId]) -> NodeId {
+    debug_assert!(!alive.is_empty());
+    *alive
+        .iter()
+        .max_by_key(|&&n| weight(n, partition))
+        .expect("non-empty alive set")
+}
+
+/// Full target assignment for `partitions` over `alive` nodes.
+pub fn assignment(partitions: u32, alive: &[NodeId]) -> BTreeMap<PartitionId, NodeId> {
+    (0..partitions)
+        .map(|p| (p, target_owner(p, alive)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heartbeat_tracking() {
+        let mut m = Membership::new(0, 100, 0);
+        m.heard_from(1, 10);
+        m.heard_from(2, 20);
+        assert_eq!(m.alive(50), vec![0, 1, 2]);
+        // node 1 times out at t > 110
+        assert_eq!(m.alive(120), vec![0, 2]);
+        assert_eq!(m.dead(120), vec![1]);
+        // self never times out
+        assert_eq!(m.alive(10_000), vec![0]);
+    }
+
+    #[test]
+    fn stale_heartbeat_does_not_regress() {
+        let mut m = Membership::new(0, 100, 0);
+        m.heard_from(1, 50);
+        m.heard_from(1, 30); // reordered delivery
+        assert!(m.alive(140).contains(&1));
+    }
+
+    #[test]
+    fn rendezvous_is_deterministic_and_total() {
+        let alive = vec![0, 1, 2, 3, 4];
+        for p in 0..100 {
+            let a = target_owner(p, &alive);
+            let b = target_owner(p, &alive);
+            assert_eq!(a, b);
+            assert!(alive.contains(&a));
+        }
+    }
+
+    #[test]
+    fn rendezvous_balances_reasonably() {
+        let alive = vec![0, 1, 2, 3, 4];
+        let asg = assignment(1000, &alive);
+        let mut counts = BTreeMap::new();
+        for (_, n) in asg {
+            *counts.entry(n).or_insert(0u32) += 1;
+        }
+        for (_, c) in counts {
+            assert!((100..350).contains(&c), "imbalanced: {c}");
+        }
+    }
+
+    #[test]
+    fn failure_moves_only_failed_nodes_partitions() {
+        // The reconfiguration-cost property: removing one node must not
+        // reshuffle partitions owned by surviving nodes.
+        let before = assignment(200, &[0, 1, 2, 3, 4]);
+        let after = assignment(200, &[0, 1, 3, 4]); // node 2 died
+        for (p, owner) in &before {
+            if *owner != 2 {
+                assert_eq!(after[p], *owner, "partition {p} moved needlessly");
+            } else {
+                assert_ne!(after[p], 2);
+            }
+        }
+    }
+
+    #[test]
+    fn restart_restores_original_assignment() {
+        let with5 = assignment(100, &[0, 1, 2, 3, 4]);
+        let with4 = assignment(100, &[0, 1, 3, 4]);
+        let healed = assignment(100, &[0, 1, 2, 3, 4]);
+        assert_eq!(with5, healed);
+        assert_ne!(with5, with4);
+    }
+}

@@ -1,0 +1,238 @@
+//! The Holon Streaming engine (paper §4): decentralized nodes, logged
+//! streams, gossip-synchronized Windowed CRDTs, work-stealing failure
+//! recovery and reconfiguration.
+//!
+//! A [`HolonCluster`] wires the substrates together: an input topic and
+//! an output topic on the [`LogBroker`] (the Kafka substitute), a
+//! broadcast/control [`Bus`], a shared [`CheckpointStore`], and N node
+//! threads each running [`node::node_main`] (Algorithm 2). Failure
+//! injection flips a per-node flag: the thread exits without a final
+//! checkpoint, exactly like a killed container. Restart spawns a fresh
+//! thread with the same id and empty state.
+
+pub mod membership;
+pub mod node;
+pub mod sink;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::api::Processor;
+use crate::clock::SimClock;
+use crate::config::HolonConfig;
+use crate::log::{LogBroker, Topic};
+use crate::metrics::{LatencyHistogram, TimeSeries};
+use crate::net::{Bus, NetConfig};
+use crate::storage::CheckpointStore;
+use crate::util::{NodeId, PartitionId};
+
+/// Cluster-wide observability counters shared by nodes and the sink.
+#[derive(Debug, Clone)]
+pub struct ClusterMetrics {
+    /// Events consumed per time bucket (the paper's throughput metric).
+    pub processed: TimeSeries,
+    /// End-to-end latency histogram over deduplicated outputs.
+    pub latency: LatencyHistogram,
+    /// Mean end-to-end latency per time bucket (Fig. 6/7 series).
+    pub latency_series: TimeSeries,
+    /// Deduplicated outputs delivered.
+    pub outputs: Arc<AtomicU64>,
+    /// Physical duplicates dropped by the sink (§3.3: outputs may be
+    /// duplicated; consumers dedup by (partition, seq)).
+    pub duplicates: Arc<AtomicU64>,
+    /// Partitions stolen from other nodes (recovery/reconfiguration).
+    pub steals: Arc<AtomicU64>,
+    /// Partition recoveries from the checkpoint store.
+    pub recoveries: Arc<AtomicU64>,
+    /// Gossip messages sent.
+    pub gossip_sent: Arc<AtomicU64>,
+}
+
+impl ClusterMetrics {
+    pub fn new(bucket_ms: u64) -> Self {
+        Self {
+            processed: TimeSeries::new(bucket_ms),
+            latency: LatencyHistogram::new(),
+            latency_series: TimeSeries::new(bucket_ms),
+            outputs: Arc::new(AtomicU64::new(0)),
+            duplicates: Arc::new(AtomicU64::new(0)),
+            steals: Arc::new(AtomicU64::new(0)),
+            recoveries: Arc::new(AtomicU64::new(0)),
+            gossip_sent: Arc::new(AtomicU64::new(0)),
+        }
+    }
+}
+
+/// Handle to a running node thread.
+struct NodeHandle {
+    failed: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// A running Holon deployment.
+pub struct HolonCluster<P: Processor> {
+    pub cfg: HolonConfig,
+    pub clock: SimClock,
+    pub broker: LogBroker,
+    pub input: Arc<Topic>,
+    pub output: Arc<Topic>,
+    pub bus: Bus,
+    pub store: CheckpointStore,
+    pub metrics: ClusterMetrics,
+    processor: P,
+    shutdown: Arc<AtomicBool>,
+    nodes: Mutex<BTreeMap<NodeId, NodeHandle>>,
+    sink: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl<P: Processor> HolonCluster<P> {
+    /// Build the substrate and spawn `cfg.nodes` node threads plus the
+    /// deduplicating sink.
+    pub fn start(cfg: HolonConfig, processor: P) -> Arc<Self> {
+        let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
+        Self::start_with_clock(cfg, processor, clock)
+    }
+
+    /// As [`start`](Self::start) but with a caller-provided clock
+    /// (benches share one clock across compared systems).
+    pub fn start_with_clock(cfg: HolonConfig, processor: P, clock: SimClock) -> Arc<Self> {
+        let broker = LogBroker::new(clock.clone());
+        let input = broker.topic("input", cfg.partitions);
+        let output = broker.topic("output", cfg.partitions);
+        let bus = Bus::new(
+            clock.clone(),
+            NetConfig {
+                base_delay_ms: cfg.net_delay_ms,
+                jitter_ms: cfg.net_jitter_ms,
+                drop_prob: cfg.net_drop_prob,
+                tail_prob: cfg.net_tail_prob,
+                tail_ms: cfg.net_tail_ms,
+            },
+            cfg.seed ^ 0xB05,
+        );
+        let metrics = ClusterMetrics::new(500);
+        let cluster = Arc::new(Self {
+            clock,
+            broker,
+            input,
+            output,
+            bus,
+            store: CheckpointStore::new(),
+            metrics,
+            processor,
+            shutdown: Arc::new(AtomicBool::new(false)),
+            nodes: Mutex::new(BTreeMap::new()),
+            sink: Mutex::new(None),
+            cfg,
+        });
+        for id in 0..cluster.cfg.nodes {
+            cluster.spawn_node(id);
+        }
+        let sink = sink::spawn_sink(&cluster);
+        *cluster.sink.lock().unwrap() = Some(sink);
+        cluster
+    }
+
+    fn spawn_node(self: &Arc<Self>, id: NodeId) {
+        let failed = Arc::new(AtomicBool::new(false));
+        self.bus.register(id);
+        let ctx = node::NodeCtx {
+            id,
+            cfg: self.cfg.clone(),
+            clock: self.clock.clone(),
+            input: self.input.clone(),
+            output: self.output.clone(),
+            bus: self.bus.clone(),
+            store: self.store.clone(),
+            processor: self.processor.clone(),
+            shutdown: self.shutdown.clone(),
+            failed: failed.clone(),
+            metrics: self.metrics.clone(),
+        };
+        let join = std::thread::Builder::new()
+            .name(format!("holon-node-{id}"))
+            .spawn(move || node::node_main(ctx))
+            .expect("spawn node");
+        self.nodes.lock().unwrap().insert(
+            id,
+            NodeHandle {
+                failed,
+                join: Some(join),
+            },
+        );
+    }
+
+    /// Kill a node abruptly (no final checkpoint, queued messages lost) —
+    /// the §5.2 failure injection.
+    pub fn fail_node(&self, id: NodeId) {
+        let mut nodes = self.nodes.lock().unwrap();
+        if let Some(h) = nodes.get_mut(&id) {
+            h.failed.store(true, Ordering::Release);
+            if let Some(j) = h.join.take() {
+                drop(nodes); // don't hold the lock while joining
+                let _ = j.join();
+                self.bus.unregister(id);
+                self.nodes.lock().unwrap().remove(&id);
+                return;
+            }
+        }
+    }
+
+    /// Restart a previously failed node with the same id (fresh state;
+    /// it re-learns membership and steals back its share of partitions).
+    pub fn restart_node(self: &Arc<Self>, id: NodeId) {
+        assert!(
+            !self.nodes.lock().unwrap().contains_key(&id),
+            "node {id} is still running"
+        );
+        self.spawn_node(id);
+    }
+
+    /// Ids of currently running nodes.
+    pub fn running_nodes(&self) -> Vec<NodeId> {
+        self.nodes.lock().unwrap().keys().copied().collect()
+    }
+
+    /// All partition ids of this deployment.
+    pub fn partitions(&self) -> Vec<PartitionId> {
+        (0..self.cfg.partitions).collect()
+    }
+
+    /// Stop all node threads and the sink, letting them checkpoint.
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        let handles: Vec<_> = {
+            let mut nodes = self.nodes.lock().unwrap();
+            nodes
+                .iter_mut()
+                .filter_map(|(_, h)| h.join.take())
+                .collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+        if let Some(s) = self.sink.lock().unwrap().take() {
+            let _ = s.join();
+        }
+    }
+
+    /// Whether `stop()` has been requested (used by the sink thread).
+    pub(crate) fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
+    }
+
+    /// Block until the sink has delivered `n` deduplicated outputs or
+    /// `timeout_sim_ms` elapsed. Returns whether the target was reached.
+    pub fn await_outputs(&self, n: u64, timeout_sim_ms: u64) -> bool {
+        let deadline = self.clock.now() + timeout_sim_ms;
+        while self.clock.now() < deadline {
+            if self.metrics.outputs.load(Ordering::Acquire) >= n {
+                return true;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        self.metrics.outputs.load(Ordering::Acquire) >= n
+    }
+}

@@ -1,0 +1,408 @@
+//! The node main loop — Algorithm 2 (execution, checkpointing, work
+//! stealing) plus the control-plane duties of Figure 5's node (heartbeat
+//! broadcasting, failure detection, gossip).
+//!
+//! One OS thread per node. Every iteration:
+//!
+//! 1. drain the control/broadcast bus (heartbeats → membership, gossip →
+//!    CRDT join, claims → ownership view);
+//! 2. broadcast a heartbeat when due;
+//! 3. reconcile ownership against the rendezvous target assignment —
+//!    steal (RECOVER) partitions that now target this node, release
+//!    partitions whose rightful owner has claimed them;
+//! 4. for each owned partition: read a batch from the input log, run
+//!    the processing function, append outputs (tagged `(partition,
+//!    seq)`), advance offsets — the paper's `RUN_BATCH`;
+//! 5. gossip the shared-state replica when due ("state is asynchronously
+//!    shuffled in the background", §2.5);
+//! 6. checkpoint owned partitions when due (`storage.PUT`);
+//! 7. compact windows far below the global watermark.
+//!
+//! A killed node (failure injection) exits before step 4 without a
+//! final checkpoint; its partitions are stolen by survivors after the
+//! heartbeat timeout.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::api::{Ctx, Processor, SharedState};
+use crate::clock::SimClock;
+use crate::codec::{Decode, Encode, Reader, Writer};
+use crate::config::HolonConfig;
+use crate::log::Topic;
+use crate::net::{Bus, MsgKind};
+use crate::storage::{CheckpointStore, PartitionCheckpoint};
+use crate::util::{NodeId, PartitionId, SimTime, XorShift64};
+
+use super::membership::{target_owner, Membership};
+use super::ClusterMetrics;
+
+/// Every Nth gossip round sends full state instead of a delta
+/// (anti-entropy against dropped messages and fan-out gaps).
+const FULL_SYNC_EVERY: u64 = 10;
+
+/// How many windows behind the watermark floor we keep before compacting
+/// (the recovery horizon: a restarted/stealing node must still find the
+/// windows its checkpoint cursor points at).
+const COMPACTION_HORIZON_WINDOWS: u64 = 16;
+
+/// Everything a node thread needs.
+pub struct NodeCtx<P: Processor> {
+    pub id: NodeId,
+    pub cfg: HolonConfig,
+    pub clock: SimClock,
+    pub input: Arc<Topic>,
+    pub output: Arc<Topic>,
+    pub bus: Bus,
+    pub store: CheckpointStore,
+    pub processor: P,
+    pub shutdown: Arc<AtomicBool>,
+    pub failed: Arc<AtomicBool>,
+    pub metrics: ClusterMetrics,
+}
+
+/// Execution state of one owned partition.
+struct PartState<S, L> {
+    nxt_idx: u64,
+    nxt_odx: u64,
+    /// The partition's own contribution accumulator (checkpointed
+    /// verbatim; joined into the node replica after every batch).
+    own: S,
+    local: L,
+    last_ckpt: SimTime,
+}
+
+/// Encode an output record payload: (seq, ref_ts, inner).
+pub fn encode_output(seq: u64, ref_ts: SimTime, inner: &[u8]) -> Vec<u8> {
+    let mut w = Writer::with_capacity(inner.len() + 20);
+    w.put_u64(seq);
+    w.put_u64(ref_ts);
+    w.put_bytes(inner);
+    w.into_bytes()
+}
+
+/// Decode an output record payload; returns (seq, ref_ts, inner).
+pub fn decode_output(bytes: &[u8]) -> Option<(u64, SimTime, Vec<u8>)> {
+    let mut r = Reader::new(bytes);
+    let seq = r.get_u64().ok()?;
+    let ref_ts = r.get_u64().ok()?;
+    let inner = r.get_bytes().ok()?.to_vec();
+    Some((seq, ref_ts, inner))
+}
+
+fn encode_claim(p: PartitionId, ts: SimTime) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u32(p);
+    w.put_u64(ts);
+    w.into_bytes()
+}
+
+fn decode_claim(bytes: &[u8]) -> Option<(PartitionId, SimTime)> {
+    let mut r = Reader::new(bytes);
+    Some((r.get_u32().ok()?, r.get_u64().ok()?))
+}
+
+fn encode_checkpoint_state<S: Encode, L: Encode>(local: &L, own: &S) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_bytes(&local.to_bytes());
+    w.put_bytes(&own.to_bytes());
+    w.into_bytes()
+}
+
+fn decode_checkpoint_state<S: Decode, L: Decode>(bytes: &[u8]) -> Option<(L, S)> {
+    let mut r = Reader::new(bytes);
+    let local = L::from_bytes(r.get_bytes().ok()?).ok()?;
+    let own = S::from_bytes(r.get_bytes().ok()?).ok()?;
+    Some((local, own))
+}
+
+/// Node thread entrypoint.
+pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
+    let NodeCtx {
+        id,
+        cfg,
+        clock,
+        input,
+        output,
+        bus,
+        store,
+        processor,
+        shutdown,
+        failed,
+        metrics,
+    } = ctx;
+
+    let all_parts: Vec<PartitionId> = (0..cfg.partitions).collect();
+    let mut shared = processor.init_shared(&all_parts);
+    let mut membership = Membership::new(id, cfg.failure_timeout_ms, clock.now());
+    let mut claims: BTreeMap<PartitionId, (NodeId, SimTime)> = BTreeMap::new();
+    let mut parts: BTreeMap<PartitionId, PartState<P::Shared, P::Local>> = BTreeMap::new();
+    let mut aggregator = crate::runtime::make_aggregator(&cfg);
+    let mut rng = XorShift64::new(cfg.seed ^ (0xA11CE + id as u64));
+
+    // Stagger periodic work so nodes don't phase-lock.
+    let mut last_hb: SimTime = 0;
+    let mut last_gossip: SimTime = rng.next_below(cfg.gossip_interval_ms.max(1));
+    let mut gossip_round: u64 = rng.next_below(FULL_SYNC_EVERY);
+    // cached rendezvous assignment (invalidated on membership change)
+    let mut last_alive: Vec<NodeId> = Vec::new();
+    let mut targets: BTreeMap<PartitionId, NodeId> = BTreeMap::new();
+    // service-cost model: a node processes at most 1e6/cost events per
+    // sim-second (calibrated from the paper's measured throughput);
+    // the budget accrues with sim-time and is spent per event.
+    let mut budget_events: f64 = 0.0;
+    let mut last_budget_at: SimTime = clock.now();
+
+    // Announce ourselves, then wait one heartbeat round before claiming
+    // anything: peers' announcements arrive during the grace period, so
+    // the first ownership reconciliation sees the real membership
+    // instead of every node transiently claiming every partition.
+    bus.broadcast(id, MsgKind::Heartbeat, Vec::new());
+    membership.refresh_self(clock.now());
+    clock.sleep(cfg.heartbeat_interval_ms.max(2 * (cfg.net_delay_ms + cfg.net_jitter_ms)));
+    {
+        let now = clock.now();
+        for msg in bus.recv(id) {
+            membership.heard_from(msg.from, now);
+        }
+        bus.broadcast(id, MsgKind::Heartbeat, Vec::new());
+        membership.refresh_self(now);
+    }
+
+    loop {
+        if failed.load(Ordering::Acquire) {
+            // Simulated crash: drop everything on the floor.
+            return;
+        }
+        let now = clock.now();
+        if shutdown.load(Ordering::Acquire) {
+            // Graceful stop: final checkpoints.
+            for (&p, st) in parts.iter() {
+                checkpoint_partition(&store, &shared, p, st);
+            }
+            return;
+        }
+
+        // 1. Drain control/broadcast messages.
+        for msg in bus.recv(id) {
+            match msg.kind {
+                MsgKind::Heartbeat => membership.heard_from(msg.from, now),
+                MsgKind::Gossip => {
+                    if let Ok(other) = P::Shared::from_bytes(&msg.payload) {
+                        shared.join(&other);
+                    }
+                    membership.heard_from(msg.from, now);
+                }
+                MsgKind::Claim => {
+                    if let Some((p, ts)) = decode_claim(&msg.payload) {
+                        let e = claims.entry(p).or_insert((msg.from, ts));
+                        if ts >= e.1 {
+                            *e = (msg.from, ts);
+                        }
+                    }
+                    membership.heard_from(msg.from, now);
+                }
+            }
+        }
+
+        // 2. Heartbeat.
+        if now.saturating_sub(last_hb) >= cfg.heartbeat_interval_ms {
+            bus.broadcast(id, MsgKind::Heartbeat, Vec::new());
+            membership.refresh_self(now);
+            last_hb = now;
+        }
+
+        // 3. Reconcile ownership with the rendezvous assignment. The
+        // target map is a pure function of the alive set — recompute it
+        // only when membership changes (O(P·N) hashing per loop was the
+        // top CPU consumer at 100 nodes; see §Perf).
+        let alive = membership.alive(now);
+        if alive != last_alive {
+            targets.clear();
+            for &p in &all_parts {
+                targets.insert(p, target_owner(p, &alive));
+            }
+            last_alive = alive;
+        }
+        for &p in &all_parts {
+            let target = targets[&p];
+            let owned = parts.contains_key(&p);
+            if target == id && !owned {
+                let st = recover_partition::<P>(&store, &processor, &all_parts, &mut shared, p, now, &metrics);
+                parts.insert(p, st);
+                bus.broadcast(id, MsgKind::Claim, encode_claim(p, now));
+                metrics.steals.fetch_add(1, Ordering::Relaxed);
+            } else if target != id && owned {
+                // Release only after the rightful owner has claimed it —
+                // overlap is safe, a gap is merely slow.
+                let claimed = claims
+                    .get(&p)
+                    .map_or(false, |&(n, ts)| n == target && now.saturating_sub(ts) <= 2 * cfg.failure_timeout_ms);
+                if claimed {
+                    let st = parts.remove(&p).unwrap();
+                    checkpoint_partition(&store, &shared, p, &st);
+                }
+            }
+        }
+
+        // 4. RUN_BATCH per owned partition (bounded by the service-cost
+        // budget; excess input queues in the log = backpressure).
+        if cfg.holon_event_cost_us > 0.0 {
+            let dt = now.saturating_sub(last_budget_at);
+            let cap = 4.0 * cfg.batch_size as f64 * parts.len().max(1) as f64;
+            budget_events =
+                (budget_events + dt as f64 * 1000.0 / cfg.holon_event_cost_us).min(cap);
+        } else {
+            budget_events = f64::MAX;
+        }
+        last_budget_at = now;
+        let mut did_work = false;
+        for (&p, st) in parts.iter_mut() {
+            let allowed = cfg.batch_size.min(budget_events as usize);
+            if allowed == 0 {
+                break;
+            }
+            let (recs, nxt_idx) = input.read(p, st.nxt_idx, allowed);
+            budget_events -= recs.len() as f64;
+            // Always invoke the processor: an empty batch still lets it
+            // emit windows completed by freshly merged gossip.
+            let mut pctx = Ctx::new(p, now, aggregator.as_mut());
+            processor.process(&mut pctx, &shared, &mut st.own, &mut st.local, &recs);
+            shared.join(&st.own);
+            let outs = pctx.into_outputs();
+            if !outs.is_empty() {
+                let batch: Vec<(SimTime, Vec<u8>)> = outs
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, o)| {
+                        (
+                            o.ref_ts,
+                            encode_output(st.nxt_odx + i as u64, o.ref_ts, &o.payload),
+                        )
+                    })
+                    .collect();
+                st.nxt_odx += batch.len() as u64;
+                output.append_batch(p, batch);
+            }
+            if !recs.is_empty() {
+                st.nxt_idx = nxt_idx;
+                metrics.processed.bump(now, recs.len() as u64);
+                did_work = true;
+            }
+        }
+
+        // 5. Gossip the shared replica (sampled fan-out when configured;
+        // delta payloads with periodic full anti-entropy when enabled).
+        if now.saturating_sub(last_gossip) >= cfg.gossip_interval_ms {
+            gossip_round += 1;
+            let payload = if cfg.gossip_delta && gossip_round % FULL_SYNC_EVERY != 0 {
+                shared.take_delta().to_bytes()
+            } else {
+                shared.to_bytes()
+            };
+            bus.broadcast_sample(id, MsgKind::Gossip, payload, cfg.gossip_fanout as usize);
+            metrics.gossip_sent.fetch_add(1, Ordering::Relaxed);
+            last_gossip = now;
+
+            // 7. Compaction, piggybacked on the gossip cadence: drop
+            // windows far below the watermark floor.
+            let floor = shared.watermark_floor();
+            if floor != SimTime::MAX && cfg.window_ms > 0 {
+                let horizon = (floor / cfg.window_ms).saturating_sub(COMPACTION_HORIZON_WINDOWS);
+                if horizon > 0 {
+                    shared.compact_below(horizon);
+                    for (_, st) in parts.iter_mut() {
+                        st.own.compact_below(horizon);
+                    }
+                }
+            }
+        }
+
+        // 6. Periodic checkpoints (staggered per partition via last_ckpt).
+        for (&p, st) in parts.iter_mut() {
+            if now.saturating_sub(st.last_ckpt) >= cfg.checkpoint_interval_ms {
+                checkpoint_partition(&store, &shared, p, st);
+                st.last_ckpt = now;
+            }
+        }
+
+        if !did_work {
+            clock.sleep(cfg.poll_interval_ms);
+        }
+    }
+}
+
+fn checkpoint_partition<S: SharedState, L: Encode>(
+    store: &CheckpointStore,
+    _shared: &S,
+    p: PartitionId,
+    st: &PartState<S, L>,
+) {
+    let state = encode_checkpoint_state(&st.local, &st.own);
+    store.put(
+        p,
+        PartitionCheckpoint {
+            nxt_idx: st.nxt_idx,
+            nxt_odx: st.nxt_odx,
+            state,
+        },
+    );
+}
+
+fn recover_partition<P: Processor>(
+    store: &CheckpointStore,
+    processor: &P,
+    all_parts: &[PartitionId],
+    shared: &mut P::Shared,
+    p: PartitionId,
+    now: SimTime,
+    metrics: &ClusterMetrics,
+) -> PartState<P::Shared, P::Local> {
+    if let Some(cp) = store.get(p) {
+        if let Some((local, own)) = decode_checkpoint_state::<P::Shared, P::Local>(&cp.state) {
+            // The recovered contribution re-joins the replica; if newer
+            // state already arrived via gossip the join is a no-op.
+            shared.join(&own);
+            metrics.recoveries.fetch_add(1, Ordering::Relaxed);
+            return PartState {
+                nxt_idx: cp.nxt_idx,
+                nxt_odx: cp.nxt_odx,
+                own,
+                local,
+                last_ckpt: now,
+            };
+        }
+    }
+    // Fresh partition (initial assignment before any checkpoint).
+    PartState {
+        nxt_idx: 0,
+        nxt_odx: 0,
+        own: processor.init_shared(all_parts),
+        local: P::Local::default(),
+        last_ckpt: now,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_codec_roundtrip() {
+        let b = encode_output(7, 123, &[1, 2, 3]);
+        let (seq, ts, inner) = decode_output(&b).unwrap();
+        assert_eq!((seq, ts, inner.as_slice()), (7, 123, &[1u8, 2, 3][..]));
+    }
+
+    #[test]
+    fn claim_codec_roundtrip() {
+        let b = encode_claim(9, 555);
+        assert_eq!(decode_claim(&b), Some((9, 555)));
+    }
+
+    #[test]
+    fn output_decode_rejects_garbage() {
+        assert!(decode_output(&[1, 2]).is_none());
+    }
+}

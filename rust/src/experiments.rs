@@ -1,0 +1,484 @@
+//! Experiment drivers shared by the benches, the examples and the CLI:
+//! run one system (Holon or the Flink-model baseline) on one workload
+//! with a failure schedule, and return the measured series — the raw
+//! material for every table and figure in the paper's §5.
+
+use std::sync::atomic::Ordering;
+
+use crate::baseline::{FlinkCluster, FlinkJob};
+use crate::clock::SimClock;
+use crate::config::HolonConfig;
+use crate::engine::{ClusterMetrics, HolonCluster};
+use crate::metrics::sensitivity;
+use crate::nexmark::producer::{self, Producers};
+use crate::nexmark::queries::{Query1, Q0, Q4, Q7};
+use crate::util::{NodeId, SimTime};
+
+/// The workloads of §5.1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workload {
+    Q0,
+    Q4,
+    Q7,
+    Query1,
+}
+
+/// The compared systems (Table 2 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SystemKind {
+    Holon,
+    Flink,
+    FlinkSpareSlots,
+}
+
+/// One failure-injection action at a sim-time offset.
+#[derive(Debug, Clone)]
+pub enum Action {
+    Fail(NodeId),
+    Restart(NodeId),
+    NetSplit(Vec<Vec<NodeId>>),
+    NetHeal,
+}
+
+/// A scheduled action.
+#[derive(Debug, Clone)]
+pub struct FailureEvent {
+    pub at_ms: SimTime,
+    pub action: Action,
+}
+
+impl FailureEvent {
+    pub fn fail(at_ms: SimTime, node: NodeId) -> Self {
+        Self {
+            at_ms,
+            action: Action::Fail(node),
+        }
+    }
+
+    pub fn restart(at_ms: SimTime, node: NodeId) -> Self {
+        Self {
+            at_ms,
+            action: Action::Restart(node),
+        }
+    }
+}
+
+/// The §5.2 failure scenarios.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// no failures
+    Baseline,
+    /// two nodes failed at the same time, restarted 10 s later
+    ConcurrentFailures,
+    /// two nodes failed 5 s apart, each restarted 10 s after failing
+    SubsequentFailures,
+    /// two nodes failed and never restarted
+    CrashFailures,
+}
+
+impl Scenario {
+    /// The paper's injection schedule, starting at `t0` sim-ms.
+    pub fn schedule(self, t0: SimTime) -> Vec<FailureEvent> {
+        match self {
+            Scenario::Baseline => vec![],
+            Scenario::ConcurrentFailures => vec![
+                FailureEvent::fail(t0, 1),
+                FailureEvent::fail(t0, 2),
+                FailureEvent::restart(t0 + 10_000, 1),
+                FailureEvent::restart(t0 + 10_000, 2),
+            ],
+            Scenario::SubsequentFailures => vec![
+                FailureEvent::fail(t0, 1),
+                FailureEvent::fail(t0 + 5_000, 2),
+                FailureEvent::restart(t0 + 10_000, 1),
+                FailureEvent::restart(t0 + 15_000, 2),
+            ],
+            Scenario::CrashFailures => vec![
+                FailureEvent::fail(t0, 1),
+                FailureEvent::fail(t0, 2),
+            ],
+        }
+    }
+
+    pub fn all() -> [Scenario; 4] {
+        [
+            Scenario::Baseline,
+            Scenario::ConcurrentFailures,
+            Scenario::SubsequentFailures,
+            Scenario::CrashFailures,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::Baseline => "Baseline",
+            Scenario::ConcurrentFailures => "Concurrent Failures",
+            Scenario::SubsequentFailures => "Subsequent Failures",
+            Scenario::CrashFailures => "Crash Failures",
+        }
+    }
+}
+
+/// Measurements of one run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub system: SystemKind,
+    pub workload: Workload,
+    /// mean end-to-end latency over deduplicated outputs, sim-ms
+    pub latency_mean_ms: f64,
+    /// p99 end-to-end latency, sim-ms
+    pub latency_p99_ms: u64,
+    /// per-bucket mean latency (bucket = 500 sim-ms), for Figs 6/7
+    pub latency_series: Vec<Option<f64>>,
+    /// per-bucket consumed events/s, for Fig 6
+    pub throughput_series: Vec<f64>,
+    /// deduplicated outputs delivered
+    pub outputs: u64,
+    /// events produced into the input topic
+    pub produced: u64,
+    /// total events consumed by the system
+    pub consumed: u64,
+    /// peak per-bucket consumption rate (events/s) — §5.3 max throughput
+    pub peak_throughput: f64,
+    /// work-stealing count (Holon only)
+    pub steals: u64,
+    /// true when the system stopped delivering outputs well before the
+    /// end of the run (Table 2's "–": a crashed baseline with no spare
+    /// slots stalls permanently).
+    pub stalled: bool,
+}
+
+/// Buckets excluded from sensitivity comparisons (startup transient:
+/// membership convergence + first windows; failures are injected well
+/// after this warmup).
+const SENSITIVITY_WARMUP_BUCKETS: usize = 20; // 10 sim-seconds
+
+impl RunResult {
+    /// Sensitivity vs a baseline run (paper Figs 7/8): the area between
+    /// the latency curves after the warmup transient, in seconds².
+    pub fn sensitivity_vs(&self, baseline: &RunResult) -> f64 {
+        let skip = SENSITIVITY_WARMUP_BUCKETS.min(self.latency_series.len());
+        let skip_b = SENSITIVITY_WARMUP_BUCKETS.min(baseline.latency_series.len());
+        sensitivity(
+            &self.latency_series[skip..],
+            &baseline.latency_series[skip_b..],
+            500,
+        )
+    }
+}
+
+fn collect(
+    system: SystemKind,
+    workload: Workload,
+    metrics: &ClusterMetrics,
+    produced: u64,
+    duration_ms: SimTime,
+) -> RunResult {
+    // pad both series to the full run duration so a stalled system's
+    // silent tail is visible (bucket width = 500 sim-ms)
+    let buckets = (duration_ms / 500) as usize;
+    let mut lat = metrics.latency_series.means();
+    if lat.len() < buckets {
+        lat.resize(buckets, None);
+    }
+    let mut throughput_series = metrics.processed.rates_per_sec();
+    if throughput_series.len() < buckets {
+        throughput_series.resize(buckets, 0.0);
+    }
+    // stalled: no outputs at all in the last third of the run
+    let tail_start = lat.len().saturating_sub(lat.len() / 3);
+    let stalled = !lat.is_empty() && lat[tail_start..].iter().all(|v| v.is_none());
+    // ignore first + last buckets when finding the peak (partial buckets)
+    let peak = throughput_series
+        .iter()
+        .copied()
+        .take(throughput_series.len().saturating_sub(1))
+        .skip(1)
+        .fold(0.0, f64::max);
+    RunResult {
+        system,
+        workload,
+        latency_mean_ms: metrics.latency.mean(),
+        latency_p99_ms: metrics.latency.p99(),
+        latency_series: lat,
+        throughput_series: throughput_series.clone(),
+        outputs: metrics.outputs.load(Ordering::Acquire),
+        produced,
+        consumed: metrics.processed.counts().iter().sum(),
+        peak_throughput: peak,
+        steals: metrics.steals.load(Ordering::Acquire),
+        stalled,
+    }
+}
+
+/// Drive a failure schedule against callbacks while the workload runs.
+fn drive(
+    clock: &SimClock,
+    duration_ms: SimTime,
+    drain_ms: SimTime,
+    mut schedule: Vec<FailureEvent>,
+    mut apply: impl FnMut(&Action),
+) {
+    schedule.sort_by_key(|e| e.at_ms);
+    let start = clock.now();
+    for ev in schedule {
+        let target = start + ev.at_ms;
+        let now = clock.now();
+        if target > now {
+            std::thread::sleep(clock.wall_for(target - now));
+        }
+        apply(&ev.action);
+    }
+    let end = start + duration_ms + drain_ms;
+    let now = clock.now();
+    if end > now {
+        std::thread::sleep(clock.wall_for(end - now));
+    }
+}
+
+/// Run a Holon cluster on `workload` with a failure schedule.
+pub fn run_holon(
+    cfg: &HolonConfig,
+    workload: Workload,
+    schedule: Vec<FailureEvent>,
+) -> RunResult {
+    let cfg = cfg.clone();
+    match workload {
+        Workload::Q0 => run_holon_with(cfg, workload, Q0, schedule),
+        Workload::Q4 => {
+            let q = Q4::new(cfg.window_ms);
+            run_holon_with(cfg, workload, q, schedule)
+        }
+        Workload::Q7 => {
+            let q = Q7::new(cfg.window_ms);
+            run_holon_with(cfg, workload, q, schedule)
+        }
+        Workload::Query1 => {
+            let q = Query1::new(cfg.window_ms);
+            run_holon_with(cfg, workload, q, schedule)
+        }
+    }
+}
+
+fn run_holon_with<P: crate::api::Processor>(
+    cfg: HolonConfig,
+    workload: Workload,
+    processor: P,
+    schedule: Vec<FailureEvent>,
+) -> RunResult {
+    let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
+    let cluster = HolonCluster::start_with_clock(cfg.clone(), processor, clock.clone());
+    let prod = spawn_producer(&cfg, &cluster.input, &clock);
+    let c2 = cluster.clone();
+    drive(
+        &clock,
+        cfg.duration_ms,
+        drain_ms(&cfg),
+        schedule,
+        move |action| match action {
+            Action::Fail(n) => c2.fail_node(*n),
+            Action::Restart(n) => c2.restart_node(*n),
+            Action::NetSplit(groups) => {
+                let refs: Vec<&[NodeId]> = groups.iter().map(|g| g.as_slice()).collect();
+                c2.bus.set_partition(&refs);
+            }
+            Action::NetHeal => c2.bus.heal_partition(),
+        },
+    );
+    let produced = prod.stop();
+    cluster.stop();
+    collect(SystemKind::Holon, workload, &cluster.metrics, produced, cfg.duration_ms)
+}
+
+/// Run the Flink-model baseline on `workload` with a failure schedule.
+pub fn run_flink(
+    cfg: &HolonConfig,
+    workload: Workload,
+    spare_slots: bool,
+    schedule: Vec<FailureEvent>,
+) -> RunResult {
+    let mut cfg = cfg.clone();
+    cfg.flink_spare_slots = spare_slots;
+    let job = match workload {
+        Workload::Q0 => FlinkJob::PassThrough,
+        Workload::Q4 => FlinkJob::AvgByCategory,
+        Workload::Q7 => FlinkJob::MaxBid,
+        Workload::Query1 => {
+            panic!("Query1 is the paper's running example for the Holon model only")
+        }
+    };
+    let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
+    let cluster = FlinkCluster::start_with_clock(cfg.clone(), job, clock.clone());
+    let prod = spawn_producer(&cfg, &cluster.input, &clock);
+    let c2 = cluster.clone();
+    drive(
+        &clock,
+        cfg.duration_ms,
+        drain_ms(&cfg),
+        schedule,
+        move |action| match action {
+            Action::Fail(n) => c2.fail_node(*n),
+            Action::Restart(n) => c2.restart_node(*n),
+            // the baseline model has no gossip bus; a network split is
+            // equivalent to failing the minority side's TMs
+            Action::NetSplit(groups) => {
+                if let Some(minority) = groups.iter().min_by_key(|g| g.len()) {
+                    for &n in minority {
+                        c2.fail_node(n);
+                    }
+                }
+            }
+            Action::NetHeal => {}
+        },
+    );
+    let produced = prod.stop();
+    cluster.stop();
+    let kind = if spare_slots {
+        SystemKind::FlinkSpareSlots
+    } else {
+        SystemKind::Flink
+    };
+    collect(kind, workload, &cluster.metrics, produced, cfg.duration_ms)
+}
+
+fn spawn_producer(
+    cfg: &HolonConfig,
+    input: &std::sync::Arc<crate::log::Topic>,
+    clock: &SimClock,
+) -> Producers {
+    producer::spawn(
+        input.clone(),
+        clock.clone(),
+        cfg.seed,
+        cfg.events_per_sec_per_partition,
+        cfg.duration_ms,
+    )
+}
+
+/// Post-experiment drain time: enough for final windows + recovery tails.
+fn drain_ms(cfg: &HolonConfig) -> SimTime {
+    (cfg.window_ms * 4).max(4000)
+}
+
+/// The §5.3 max-throughput experiment: ramp the ingestion rate
+/// exponentially and report the peak sustained consumption rate.
+pub fn run_max_throughput(
+    cfg: &HolonConfig,
+    workload: Workload,
+    holon: bool,
+) -> RunResult {
+    let cfg = cfg.clone();
+    let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
+    let base = cfg.events_per_sec_per_partition.max(1);
+    // double the rate every 2 sim-seconds (exponential ramp, capped at
+    // 2^8 = 256x so total volume stays bounded)
+    let rate = move |t: SimTime| base.saturating_mul(1 << (t / 2000).min(8));
+    if holon {
+        let q = Q7::new(cfg.window_ms);
+        let q4 = Q4::new(cfg.window_ms);
+        let clockc = clock.clone();
+        match workload {
+            Workload::Q7 => {
+                let cluster = HolonCluster::start_with_clock(cfg.clone(), q, clockc.clone());
+                let prod = producer::spawn_ramped_pooled(
+                    cluster.input.clone(),
+                    clockc.clone(),
+                    cfg.seed,
+                    rate,
+                    cfg.duration_ms,
+                    65_536,
+                );
+                std::thread::sleep(clock.wall_for(cfg.duration_ms + drain_ms(&cfg)));
+                let produced = prod.stop();
+                cluster.stop();
+                collect(SystemKind::Holon, workload, &cluster.metrics, produced, cfg.duration_ms)
+            }
+            Workload::Q4 => {
+                let cluster = HolonCluster::start_with_clock(cfg.clone(), q4, clockc.clone());
+                let prod = producer::spawn_ramped_pooled(
+                    cluster.input.clone(),
+                    clockc.clone(),
+                    cfg.seed,
+                    rate,
+                    cfg.duration_ms,
+                    65_536,
+                );
+                std::thread::sleep(clock.wall_for(cfg.duration_ms + drain_ms(&cfg)));
+                let produced = prod.stop();
+                cluster.stop();
+                collect(SystemKind::Holon, workload, &cluster.metrics, produced, cfg.duration_ms)
+            }
+            _ => panic!("max-throughput experiment uses Q4/Q7"),
+        }
+    } else {
+        let job = match workload {
+            Workload::Q4 => FlinkJob::AvgByCategory,
+            Workload::Q7 => FlinkJob::MaxBid,
+            _ => panic!("max-throughput experiment uses Q4/Q7"),
+        };
+        let cluster = FlinkCluster::start_with_clock(cfg.clone(), job, clock.clone());
+        let prod = producer::spawn_ramped_pooled(
+            cluster.input.clone(),
+            clock.clone(),
+            cfg.seed,
+            rate,
+            cfg.duration_ms,
+            65_536,
+        );
+        std::thread::sleep(clock.wall_for(cfg.duration_ms + drain_ms(&cfg)));
+        let produced = prod.stop();
+        cluster.stop();
+        collect(SystemKind::Flink, workload, &cluster.metrics, produced, cfg.duration_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> HolonConfig {
+        let mut cfg = HolonConfig::default();
+        cfg.nodes = 3;
+        cfg.partitions = 6;
+        cfg.events_per_sec_per_partition = 500;
+        cfg.wall_ms_per_sim_sec = 10.0;
+        cfg.duration_ms = 4000;
+        cfg
+    }
+
+    #[test]
+    fn holon_q7_run_produces_metrics() {
+        let r = run_holon(&small_cfg(), Workload::Q7, vec![]);
+        assert!(r.outputs > 0);
+        assert!(r.latency_mean_ms > 0.0);
+        assert!(r.consumed > 0);
+        assert!(r.produced > 0);
+    }
+
+    #[test]
+    fn flink_q7_run_produces_metrics() {
+        let r = run_flink(&small_cfg(), Workload::Q7, false, vec![]);
+        assert!(r.outputs > 0);
+        assert!(r.latency_mean_ms > 0.0);
+    }
+
+    #[test]
+    fn scenario_schedules_match_paper() {
+        let s = Scenario::ConcurrentFailures.schedule(30_000);
+        assert_eq!(s.len(), 4);
+        assert_eq!(s[0].at_ms, 30_000);
+        assert_eq!(s[2].at_ms, 40_000); // restarted 10 s later
+        let s = Scenario::SubsequentFailures.schedule(0);
+        assert_eq!(s[1].at_ms, 5000); // second failure 5 s later
+        assert!(Scenario::CrashFailures
+            .schedule(0)
+            .iter()
+            .all(|e| matches!(e.action, Action::Fail(_))));
+    }
+
+    #[test]
+    fn sensitivity_vs_self_is_zero() {
+        let r = run_holon(&small_cfg(), Workload::Q7, vec![]);
+        assert_eq!(r.sensitivity_vs(&r), 0.0);
+    }
+}

@@ -1,0 +1,40 @@
+//! # Holon Streaming
+//!
+//! A from-scratch reproduction of *Holon Streaming: Global Aggregations
+//! with Windowed CRDTs* (Spenger et al., 2025) as a three-layer
+//! Rust + JAX + Pallas stack. See `DESIGN.md` for the system inventory
+//! and `EXPERIMENTS.md` for the paper-vs-measured results.
+//!
+//! The crate is organized bottom-up:
+//!
+//! * substrates: [`codec`], [`clock`], [`log`] (the Kafka substitute),
+//!   [`net`] (simulated network), [`storage`] (checkpoint store),
+//!   [`metrics`], [`config`];
+//! * the paper's abstractions: [`crdt`] (state-based CRDTs), [`wcrdt`]
+//!   (Windowed CRDTs, Algorithm 1), [`api`] (the procedural programming
+//!   model of Table 1);
+//! * the engines: [`engine`] (Holon: decentralized nodes, work stealing,
+//!   Algorithm 2) and [`baseline`] (the centralized Flink-model used as
+//!   the paper's comparison system);
+//! * workloads: [`nexmark`] (generator + queries Q0/Q4/Q7/Query1);
+//! * the AOT hot path: [`runtime`] (PJRT-loaded XLA kernels);
+//! * harness support: [`benchkit`], [`proptest_lite`].
+
+pub mod api;
+pub mod baseline;
+pub mod benchkit;
+pub mod clock;
+pub mod codec;
+pub mod config;
+pub mod crdt;
+pub mod engine;
+pub mod experiments;
+pub mod log;
+pub mod metrics;
+pub mod net;
+pub mod nexmark;
+pub mod proptest_lite;
+pub mod runtime;
+pub mod storage;
+pub mod util;
+pub mod wcrdt;

@@ -1,0 +1,263 @@
+//! Logged streams — the Kafka substitute (DESIGN.md §2).
+//!
+//! The paper's deployment uses Kafka topics for input, output, broadcast
+//! and control streams. The algorithms only require *logged, replayable,
+//! offset-addressed* partitioned streams; this module provides exactly
+//! that, in-process and thread-safe. Records carry their append
+//! timestamp (sim-time), which is how end-to-end latency is measured —
+//! "measured by Kafka insertion timestamps" (§5.1).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::clock::SimClock;
+use crate::util::{PartitionId, SimTime};
+
+/// One record on a logged stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Record {
+    /// Offset within the partition (assigned at append).
+    pub offset: u64,
+    /// Event timestamp (sim-time) assigned by the producer.
+    pub event_ts: SimTime,
+    /// Append timestamp (sim-time) assigned by the broker.
+    pub insert_ts: SimTime,
+    /// Opaque payload bytes.
+    pub payload: Arc<Vec<u8>>,
+}
+
+/// A single append-only partition.
+#[derive(Debug, Default)]
+struct PartitionLog {
+    records: Vec<Record>,
+}
+
+/// A named, partitioned, append-only topic.
+#[derive(Debug)]
+pub struct Topic {
+    name: String,
+    clock: SimClock,
+    partitions: Vec<RwLock<PartitionLog>>,
+}
+
+impl Topic {
+    fn new(name: &str, partitions: u32, clock: SimClock) -> Self {
+        Self {
+            name: name.to_string(),
+            clock,
+            partitions: (0..partitions).map(|_| RwLock::new(PartitionLog::default())).collect(),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn partitions(&self) -> u32 {
+        self.partitions.len() as u32
+    }
+
+    fn log(&self, p: PartitionId) -> &RwLock<PartitionLog> {
+        &self.partitions[p as usize]
+    }
+
+    /// Append one record; returns its offset.
+    pub fn append(&self, p: PartitionId, event_ts: SimTime, payload: Vec<u8>) -> u64 {
+        self.append_shared(p, event_ts, Arc::new(payload))
+    }
+
+    /// Append with a shared payload (zero-copy fan-out path).
+    pub fn append_shared(&self, p: PartitionId, event_ts: SimTime, payload: Arc<Vec<u8>>) -> u64 {
+        let now = self.clock.now();
+        let mut log = self.log(p).write().unwrap();
+        let offset = log.records.len() as u64;
+        log.records.push(Record {
+            offset,
+            event_ts,
+            insert_ts: now,
+            payload,
+        });
+        offset
+    }
+
+    /// Append a batch; returns the offset of the first record.
+    pub fn append_batch(&self, p: PartitionId, batch: Vec<(SimTime, Vec<u8>)>) -> u64 {
+        let now = self.clock.now();
+        let mut log = self.log(p).write().unwrap();
+        let first = log.records.len() as u64;
+        log.records.reserve(batch.len());
+        for (i, (event_ts, payload)) in batch.into_iter().enumerate() {
+            log.records.push(Record {
+                offset: first + i as u64,
+                event_ts,
+                insert_ts: now,
+                payload: Arc::new(payload),
+            });
+        }
+        first
+    }
+
+    /// Read up to `max` records from `offset` (Algorithm 2 line 9's
+    /// `inStream.READ(id, idx)`). Returns the records and the next
+    /// offset to read from.
+    pub fn read(&self, p: PartitionId, offset: u64, max: usize) -> (Vec<Record>, u64) {
+        let log = self.log(p).read().unwrap();
+        let start = (offset as usize).min(log.records.len());
+        let end = (start + max).min(log.records.len());
+        let recs = log.records[start..end].to_vec();
+        let next = end as u64;
+        (recs, next)
+    }
+
+    /// Current end offset (== number of records) of a partition.
+    pub fn end_offset(&self, p: PartitionId) -> u64 {
+        self.log(p).read().unwrap().records.len() as u64
+    }
+
+    /// Total records across partitions.
+    pub fn total_records(&self) -> u64 {
+        (0..self.partitions()).map(|p| self.end_offset(p)).sum()
+    }
+}
+
+/// The broker: a registry of topics, shared by all nodes of a cluster.
+#[derive(Debug, Clone)]
+pub struct LogBroker {
+    inner: Arc<BrokerInner>,
+}
+
+#[derive(Debug)]
+struct BrokerInner {
+    clock: SimClock,
+    topics: Mutex<BTreeMap<String, Arc<Topic>>>,
+}
+
+impl LogBroker {
+    pub fn new(clock: SimClock) -> Self {
+        Self {
+            inner: Arc::new(BrokerInner {
+                clock,
+                topics: Mutex::new(BTreeMap::new()),
+            }),
+        }
+    }
+
+    /// Create (or fetch) a topic with the given partition count.
+    /// Partition counts are immutable once created, like Kafka's.
+    pub fn topic(&self, name: &str, partitions: u32) -> Arc<Topic> {
+        let mut topics = self.inner.topics.lock().unwrap();
+        if let Some(t) = topics.get(name) {
+            assert_eq!(
+                t.partitions(),
+                partitions,
+                "topic {name} exists with different partition count"
+            );
+            return t.clone();
+        }
+        let t = Arc::new(Topic::new(name, partitions, self.inner.clock.clone()));
+        topics.insert(name.to_string(), t.clone());
+        t
+    }
+
+    /// Fetch an existing topic.
+    pub fn get(&self, name: &str) -> Option<Arc<Topic>> {
+        self.inner.topics.lock().unwrap().get(name).cloned()
+    }
+
+    pub fn clock(&self) -> &SimClock {
+        &self.inner.clock
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn broker() -> LogBroker {
+        LogBroker::new(SimClock::manual())
+    }
+
+    #[test]
+    fn append_assigns_sequential_offsets() {
+        let b = broker();
+        let t = b.topic("in", 2);
+        assert_eq!(t.append(0, 1, vec![1]), 0);
+        assert_eq!(t.append(0, 2, vec![2]), 1);
+        assert_eq!(t.append(1, 3, vec![3]), 0); // independent per partition
+    }
+
+    #[test]
+    fn read_returns_slice_and_next_offset() {
+        let b = broker();
+        let t = b.topic("in", 1);
+        for i in 0..5u8 {
+            t.append(0, i as u64, vec![i]);
+        }
+        let (recs, next) = t.read(0, 1, 2);
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].offset, 1);
+        assert_eq!(next, 3);
+        let (recs, next) = t.read(0, 4, 10);
+        assert_eq!(recs.len(), 1);
+        assert_eq!(next, 5);
+        // reading past the end is empty, not an error
+        let (recs, next) = t.read(0, 99, 10);
+        assert!(recs.is_empty());
+        assert_eq!(next, 5);
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        // The exactly-once story depends on re-reading a prefix yielding
+        // the identical records.
+        let b = broker();
+        let t = b.topic("in", 1);
+        for i in 0..10u8 {
+            t.append(0, i as u64, vec![i]);
+        }
+        let (a, _) = t.read(0, 0, 10);
+        let (b2, _) = t.read(0, 0, 10);
+        assert_eq!(a, b2);
+    }
+
+    #[test]
+    fn insert_ts_comes_from_clock() {
+        let clock = SimClock::manual();
+        let b = LogBroker::new(clock.clone());
+        let t = b.topic("in", 1);
+        clock.advance(500);
+        t.append(0, 1, vec![]);
+        let (recs, _) = t.read(0, 0, 1);
+        assert_eq!(recs[0].insert_ts, 500);
+    }
+
+    #[test]
+    fn topics_are_shared_by_name() {
+        let b = broker();
+        let t1 = b.topic("x", 3);
+        let t2 = b.topic("x", 3);
+        t1.append(0, 0, vec![9]);
+        assert_eq!(t2.end_offset(0), 1);
+        assert!(b.get("x").is_some());
+        assert!(b.get("y").is_none());
+    }
+
+    #[test]
+    fn append_batch_is_contiguous() {
+        let b = broker();
+        let t = b.topic("in", 1);
+        t.append(0, 0, vec![0]);
+        let first = t.append_batch(0, vec![(1, vec![1]), (2, vec![2])]);
+        assert_eq!(first, 1);
+        assert_eq!(t.end_offset(0), 3);
+        assert_eq!(t.total_records(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn partition_count_mismatch_panics() {
+        let b = broker();
+        b.topic("x", 2);
+        b.topic("x", 3);
+    }
+}

@@ -1,0 +1,147 @@
+//! `holon` — the CLI launcher.
+//!
+//! Subcommands (config keys are `--key=value` overrides of
+//! [`HolonConfig`](holon::config::HolonConfig); see `holon inspect`):
+//!
+//! ```text
+//! holon run      [q0|q4|q7|query1] [--system=holon|flink|flink-spare] [--scenario=...] [--config=FILE] [--key=value ...]
+//! holon bench    — points at the cargo bench targets for each figure/table
+//! holon generate [--count=N] [--partition=P] — dump Nexmark events as text
+//! holon inspect  [--config=FILE] [--key=value ...] — print the resolved config
+//! ```
+
+use holon::benchkit::{row, secs, section, sparkline};
+use holon::config::HolonConfig;
+use holon::experiments::{run_flink, run_holon, Scenario, SystemKind, Workload};
+use holon::nexmark::NexmarkGen;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let arg_refs: Vec<&str> = args.iter().map(|s| s.as_str()).collect();
+
+    // --config=FILE first, then --key=value overrides
+    let mut cfg = HolonConfig::default();
+    let mut rest: Vec<&str> = Vec::new();
+    for a in &arg_refs {
+        if let Some(path) = a.strip_prefix("--config=") {
+            match HolonConfig::from_file(std::path::Path::new(path)) {
+                Ok(c) => cfg = c,
+                Err(e) => {
+                    eprintln!("error reading {path}: {e}");
+                    std::process::exit(2);
+                }
+            }
+        } else {
+            rest.push(a);
+        }
+    }
+    let rest = match cfg.apply_args(rest.into_iter()) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+
+    match rest.first().copied() {
+        Some("run") => cmd_run(&cfg, &rest[1..]),
+        Some("generate") => cmd_generate(&cfg, &rest[1..]),
+        Some("inspect") => println!("{}", cfg.dump()),
+        Some("bench") => cmd_bench(),
+        _ => {
+            eprintln!("usage: holon <run|generate|inspect|bench> [options]");
+            eprintln!("       holon run q7 --system=holon --scenario=concurrent --nodes=5");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_run(cfg: &HolonConfig, args: &[&str]) {
+    let mut workload = Workload::Q7;
+    let mut system = SystemKind::Holon;
+    let mut scenario = Scenario::Baseline;
+    for a in args {
+        match *a {
+            "q0" => workload = Workload::Q0,
+            "q4" => workload = Workload::Q4,
+            "q7" => workload = Workload::Q7,
+            "query1" => workload = Workload::Query1,
+            "--system=holon" => system = SystemKind::Holon,
+            "--system=flink" => system = SystemKind::Flink,
+            "--system=flink-spare" => system = SystemKind::FlinkSpareSlots,
+            "--scenario=baseline" => scenario = Scenario::Baseline,
+            "--scenario=concurrent" => scenario = Scenario::ConcurrentFailures,
+            "--scenario=subsequent" => scenario = Scenario::SubsequentFailures,
+            "--scenario=crash" => scenario = Scenario::CrashFailures,
+            other => {
+                eprintln!("unknown run option: {other}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    let t0 = cfg.duration_ms / 3;
+    let schedule = scenario.schedule(t0);
+    section(&format!(
+        "{:?} on {:?} | {} nodes, {} partitions, {} ev/s/part, {} s | scenario {:?}",
+        workload,
+        system,
+        cfg.nodes,
+        cfg.partitions,
+        cfg.events_per_sec_per_partition,
+        cfg.duration_ms / 1000,
+        scenario,
+    ));
+    let result = match system {
+        SystemKind::Holon => run_holon(cfg, workload, schedule),
+        SystemKind::Flink => run_flink(cfg, workload, false, schedule),
+        SystemKind::FlinkSpareSlots => run_flink(cfg, workload, true, schedule),
+    };
+    row(
+        "result",
+        &[
+            ("avg_latency_s", secs(result.latency_mean_ms)),
+            ("p99_s", secs(result.latency_p99_ms as f64)),
+            ("outputs", result.outputs.to_string()),
+            ("consumed", result.consumed.to_string()),
+            ("produced", result.produced.to_string()),
+            ("peak_throughput", format!("{:.0}/s", result.peak_throughput)),
+            ("steals", result.steals.to_string()),
+        ],
+    );
+    let lat: Vec<f64> = result
+        .latency_series
+        .iter()
+        .map(|v| v.unwrap_or(0.0))
+        .collect();
+    println!("latency    {}", sparkline(&lat));
+    println!("throughput {}", sparkline(&result.throughput_series));
+}
+
+fn cmd_generate(cfg: &HolonConfig, args: &[&str]) {
+    let mut count = 20u64;
+    let mut partition = 0u32;
+    for a in args {
+        if let Some(v) = a.strip_prefix("--count=") {
+            count = v.parse().unwrap_or(count);
+        } else if let Some(v) = a.strip_prefix("--partition=") {
+            partition = v.parse().unwrap_or(partition);
+        }
+    }
+    let mut gen = NexmarkGen::new(cfg.seed, partition);
+    for i in 0..count {
+        println!("{i:>6}: {:?}", gen.next_event());
+    }
+}
+
+fn cmd_bench() {
+    println!("Each paper table/figure has a dedicated bench target:");
+    println!("  cargo bench --bench fig6_failure_timeseries   # Fig 6");
+    println!("  cargo bench --bench fig7_sensitivity_curves   # Fig 7");
+    println!("  cargo bench --bench fig8_sensitivity_bars     # Fig 8");
+    println!("  cargo bench --bench table2_latency            # Table 2");
+    println!("  cargo bench --bench fig9_scalability          # Fig 9");
+    println!("  cargo bench --bench throughput_max            # §5.3 max throughput");
+    println!("  cargo bench --bench micro_hotpath             # hot-path micro benches");
+    println!("or everything: cargo bench");
+}

@@ -1,0 +1,363 @@
+//! Metrics: latency histograms, throughput time series, and the paper's
+//! derived *sensitivity* metric (§5.1, after Gramoli et al.): the area
+//! between the latency curve under failures and the failure-free
+//! baseline — it captures both amplitude and duration of a disturbance.
+
+use std::sync::{Arc, Mutex};
+
+use crate::util::SimTime;
+
+/// Log-bucketed latency histogram (HDR-style, base-1.07 buckets over
+/// sim-ms). Cheap concurrent recording, percentile queries at the end.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    inner: Arc<Mutex<HistInner>>,
+}
+
+#[derive(Debug)]
+struct HistInner {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    max: u64,
+}
+
+const GROWTH: f64 = 1.07;
+const NBUCKETS: usize = 256;
+
+fn bucket_of(ms: u64) -> usize {
+    if ms <= 1 {
+        return 0;
+    }
+    let b = ((ms as f64).ln() / GROWTH.ln()) as usize;
+    b.min(NBUCKETS - 1)
+}
+
+fn bucket_value(b: usize) -> u64 {
+    GROWTH.powi(b as i32) as u64
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            inner: Arc::new(Mutex::new(HistInner {
+                buckets: vec![0; NBUCKETS],
+                count: 0,
+                sum: 0.0,
+                max: 0,
+            })),
+        }
+    }
+
+    pub fn record(&self, latency_ms: u64) {
+        let mut h = self.inner.lock().unwrap();
+        h.buckets[bucket_of(latency_ms)] += 1;
+        h.count += 1;
+        h.sum += latency_ms as f64;
+        h.max = h.max.max(latency_ms);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.inner.lock().unwrap().count
+    }
+
+    pub fn mean(&self) -> f64 {
+        let h = self.inner.lock().unwrap();
+        if h.count == 0 {
+            0.0
+        } else {
+            h.sum / h.count as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.inner.lock().unwrap().max
+    }
+
+    /// Approximate percentile (bucket upper bound), q in [0, 1].
+    pub fn percentile(&self, q: f64) -> u64 {
+        let h = self.inner.lock().unwrap();
+        if h.count == 0 {
+            return 0;
+        }
+        let target = (q * h.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (b, &n) in h.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return bucket_value(b + 1).min(h.max.max(1));
+            }
+        }
+        h.max
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(0.99)
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(0.50)
+    }
+
+    pub fn reset(&self) {
+        let mut h = self.inner.lock().unwrap();
+        h.buckets.iter_mut().for_each(|b| *b = 0);
+        h.count = 0;
+        h.sum = 0.0;
+        h.max = 0;
+    }
+}
+
+/// A time series of (sim-time bucket, value) samples — the raw material
+/// of the paper's Figures 6 and 7.
+#[derive(Debug, Clone)]
+pub struct TimeSeries {
+    bucket_ms: SimTime,
+    inner: Arc<Mutex<SeriesInner>>,
+}
+
+#[derive(Debug, Default)]
+struct SeriesInner {
+    /// per-bucket (sum, count) — enables both mean latency series and
+    /// event-count (throughput) series.
+    samples: Vec<(f64, u64)>,
+}
+
+impl TimeSeries {
+    pub fn new(bucket_ms: SimTime) -> Self {
+        assert!(bucket_ms > 0);
+        Self {
+            bucket_ms,
+            inner: Arc::new(Mutex::new(SeriesInner::default())),
+        }
+    }
+
+    pub fn bucket_ms(&self) -> SimTime {
+        self.bucket_ms
+    }
+
+    /// Record a measurement at sim-time `t`.
+    pub fn record(&self, t: SimTime, value: f64) {
+        let idx = (t / self.bucket_ms) as usize;
+        let mut s = self.inner.lock().unwrap();
+        if s.samples.len() <= idx {
+            s.samples.resize(idx + 1, (0.0, 0));
+        }
+        s.samples[idx].0 += value;
+        s.samples[idx].1 += 1;
+    }
+
+    /// Record `n` occurrences at time `t` (throughput counting).
+    pub fn bump(&self, t: SimTime, n: u64) {
+        let idx = (t / self.bucket_ms) as usize;
+        let mut s = self.inner.lock().unwrap();
+        if s.samples.len() <= idx {
+            s.samples.resize(idx + 1, (0.0, 0));
+        }
+        s.samples[idx].1 += n;
+    }
+
+    /// Mean value per bucket (None for empty buckets).
+    pub fn means(&self) -> Vec<Option<f64>> {
+        self.inner
+            .lock()
+            .unwrap()
+            .samples
+            .iter()
+            .map(|&(sum, n)| if n == 0 { None } else { Some(sum / n as f64) })
+            .collect()
+    }
+
+    /// Events per second per bucket.
+    pub fn rates_per_sec(&self) -> Vec<f64> {
+        let per_bucket = self.bucket_ms as f64 / 1000.0;
+        self.inner
+            .lock()
+            .unwrap()
+            .samples
+            .iter()
+            .map(|&(_, n)| n as f64 / per_bucket)
+            .collect()
+    }
+
+    pub fn counts(&self) -> Vec<u64> {
+        self.inner.lock().unwrap().samples.iter().map(|&(_, n)| n).collect()
+    }
+}
+
+/// Excess-latency curve of a failure run against its baseline (the
+/// curves of the paper's Figure 7), in ms per bucket.
+///
+/// The baseline is step-interpolated across empty buckets. The failure
+/// curve treats *prolonged* silence as an outage: after a grace period
+/// of [`OUTAGE_GRACE_BUCKETS`] (covering the natural output cadence —
+/// 1 s windows over 500 ms buckets leave every other bucket empty), the
+/// oldest unserved window keeps aging, so the effective latency grows
+/// by the bucket width per silent bucket — a stalled system accumulates
+/// unbounded sensitivity instead of inheriting its pre-failure latency.
+pub const OUTAGE_GRACE_BUCKETS: usize = 2;
+
+pub fn excess_series(
+    with_failures: &[Option<f64>],
+    baseline: &[Option<f64>],
+    bucket_ms: SimTime,
+) -> Vec<f64> {
+    let n = with_failures.len().max(baseline.len());
+    let mut out = Vec::with_capacity(n);
+    let mut last_f = 0.0;
+    let mut last_b = 0.0;
+    let mut silent = 0usize;
+    for i in 0..n {
+        match with_failures.get(i) {
+            Some(Some(v)) => {
+                last_f = *v;
+                silent = 0;
+            }
+            _ => silent += 1,
+        }
+        if let Some(Some(v)) = baseline.get(i) {
+            last_b = *v;
+        }
+        let aging = silent.saturating_sub(OUTAGE_GRACE_BUCKETS) as f64 * bucket_ms as f64;
+        out.push((last_f + aging - last_b).max(0.0));
+    }
+    out
+}
+
+/// Sensitivity: area between a latency curve under failures and the
+/// failure-free baseline, integrated over the experiment (sim-seconds ×
+/// latency-seconds) — see [`excess_series`] for the outage treatment.
+pub fn sensitivity(
+    with_failures: &[Option<f64>],
+    baseline: &[Option<f64>],
+    bucket_ms: SimTime,
+) -> f64 {
+    let dt_s = bucket_ms as f64 / 1000.0;
+    excess_series(with_failures, baseline, bucket_ms)
+        .iter()
+        .map(|ms| ms / 1000.0 * dt_s)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_mean_and_count() {
+        let h = LatencyHistogram::new();
+        for v in [10, 20, 30] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 3);
+        assert!((h.mean() - 20.0).abs() < 1e-9);
+        assert_eq!(h.max(), 30);
+    }
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = LatencyHistogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        let p50 = h.p50();
+        let p99 = h.p99();
+        assert!(p50 <= p99);
+        // log buckets: accept a loose band around the true values
+        assert!((400..700).contains(&p50), "p50={p50}");
+        assert!(p99 >= 900, "p99={p99}");
+    }
+
+    #[test]
+    fn histogram_empty_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.p99(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn histogram_reset() {
+        let h = LatencyHistogram::new();
+        h.record(5);
+        h.reset();
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn series_buckets_by_time() {
+        let s = TimeSeries::new(100);
+        s.record(50, 10.0);
+        s.record(60, 20.0);
+        s.record(250, 5.0);
+        let means = s.means();
+        assert_eq!(means[0], Some(15.0));
+        assert_eq!(means[1], None);
+        assert_eq!(means[2], Some(5.0));
+    }
+
+    #[test]
+    fn series_rates() {
+        let s = TimeSeries::new(500);
+        s.bump(0, 50);
+        s.bump(400, 50);
+        s.bump(700, 10);
+        let rates = s.rates_per_sec();
+        assert_eq!(rates[0], 200.0); // 100 events / 0.5 s
+        assert_eq!(rates[1], 20.0);
+    }
+
+    #[test]
+    fn sensitivity_zero_when_identical() {
+        let a = vec![Some(100.0), Some(100.0)];
+        assert_eq!(sensitivity(&a, &a, 1000), 0.0);
+    }
+
+    #[test]
+    fn sensitivity_measures_excess_area() {
+        // baseline 100ms; failure curve spikes to 1100ms for 2 buckets
+        // of 1s each => excess 1s * 2s = 2.0 s².
+        let base = vec![Some(100.0); 4];
+        let fail = vec![Some(100.0), Some(1100.0), Some(1100.0), Some(100.0)];
+        let s = sensitivity(&fail, &base, 1000);
+        assert!((s - 2.0).abs() < 1e-9, "s={s}");
+    }
+
+    #[test]
+    fn short_gaps_carry_forward_within_grace() {
+        // One silent bucket (within the grace of the output cadence)
+        // carries the last latency forward: excess = 2.0 + 2.0 + 0.
+        let base = vec![Some(100.0); 4];
+        let fail = vec![Some(100.0), Some(2100.0), None, Some(100.0)];
+        let s = sensitivity(&fail, &base, 1000);
+        assert!((s - 4.0).abs() < 1e-9, "s={s}");
+    }
+
+    #[test]
+    fn permanent_stall_grows_without_bound() {
+        let base = vec![Some(100.0); 10];
+        let mut fail = vec![Some(100.0)];
+        fail.extend(std::iter::repeat(None).take(9));
+        let s = sensitivity(&fail, &base, 1000);
+        // after the 2-bucket grace, the outage ages linearly
+        assert!(s > 20.0, "s={s}");
+        // and a longer stall is strictly worse
+        let mut fail2 = vec![Some(100.0)];
+        fail2.extend(std::iter::repeat(None).take(19));
+        let base2 = vec![Some(100.0); 20];
+        assert!(sensitivity(&fail2, &base2, 1000) > 2.0 * s);
+    }
+
+    #[test]
+    fn negative_excess_clamped() {
+        // Faster-than-baseline does not produce negative sensitivity.
+        let base = vec![Some(100.0); 2];
+        let fail = vec![Some(50.0), Some(50.0)];
+        assert_eq!(sensitivity(&fail, &base, 1000), 0.0);
+    }
+}

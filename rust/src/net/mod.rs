@@ -1,0 +1,390 @@
+//! Simulated network: broadcast + control buses between nodes.
+//!
+//! Stands in for the paper's Kafka broadcast/control topics and the GCP
+//! network. Point-to-point and broadcast messages are delivered into
+//! per-node inboxes after a configurable delay, with optional message
+//! loss and *network partitions* (groups that cannot reach each other)
+//! for the CAP-behaviour experiments. Because gossip is periodic
+//! full-state CRDT exchange, dropped messages only delay convergence —
+//! they never break it (that is the point of the paper's design).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::clock::SimClock;
+use crate::util::{NodeId, SimTime, XorShift64};
+
+/// Message kinds on the buses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MsgKind {
+    /// CRDT state gossip (the background "async shuffle" of state).
+    Gossip,
+    /// Node heartbeat (failure detection).
+    Heartbeat,
+    /// Partition-ownership claim (work stealing coordination).
+    Claim,
+}
+
+/// An in-flight or delivered message.
+#[derive(Debug, Clone)]
+pub struct Msg {
+    pub from: NodeId,
+    pub kind: MsgKind,
+    pub sent_at: SimTime,
+    pub payload: Arc<Vec<u8>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Base one-way delay in sim-ms.
+    pub base_delay_ms: u64,
+    /// Extra uniform jitter in sim-ms.
+    pub jitter_ms: u64,
+    /// Probability a message is silently dropped.
+    pub drop_prob: f64,
+    /// Probability of a heavy-tail delay spike.
+    pub tail_prob: f64,
+    /// Spike magnitude, sim-ms (uniform in [tail/2, tail]).
+    pub tail_ms: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            base_delay_ms: 5,
+            jitter_ms: 5,
+            drop_prob: 0.0,
+            tail_prob: 0.0,
+            tail_ms: 0,
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inbox {
+    /// (deliver_at, msg), kept sorted by arrival of push (delays are
+    /// bounded so near-sorted; we scan for due messages).
+    queue: VecDeque<(SimTime, Msg)>,
+}
+
+/// Registry + partition state; per-inbox queues are individually locked
+/// so a 100-node cluster doesn't serialize on one mutex (see §Perf).
+#[derive(Debug)]
+struct BusInner {
+    cfg: NetConfig,
+    rng: Mutex<XorShift64>,
+    inboxes: RwLock<BTreeMap<NodeId, Arc<Mutex<Inbox>>>>,
+    /// group id per node; nodes in different groups are partitioned.
+    /// Empty map = fully connected.
+    groups: RwLock<BTreeMap<NodeId, u32>>,
+    delivered: AtomicU64,
+    dropped: AtomicU64,
+}
+
+/// Shared broadcast/control bus.
+#[derive(Debug, Clone)]
+pub struct Bus {
+    clock: SimClock,
+    inner: Arc<BusInner>,
+}
+
+impl Bus {
+    pub fn new(clock: SimClock, cfg: NetConfig, seed: u64) -> Self {
+        Self {
+            clock,
+            inner: Arc::new(BusInner {
+                cfg,
+                rng: Mutex::new(XorShift64::new(seed)),
+                inboxes: RwLock::new(BTreeMap::new()),
+                groups: RwLock::new(BTreeMap::new()),
+                delivered: AtomicU64::new(0),
+                dropped: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Register a node's inbox (idempotent).
+    pub fn register(&self, node: NodeId) {
+        let mut inboxes = self.inner.inboxes.write().unwrap();
+        inboxes.entry(node).or_default();
+    }
+
+    /// Remove a node's inbox (simulated crash drops queued messages).
+    pub fn unregister(&self, node: NodeId) {
+        self.inner.inboxes.write().unwrap().remove(&node);
+    }
+
+    fn reachable(&self, from: NodeId, to: NodeId) -> bool {
+        let groups = self.inner.groups.read().unwrap();
+        if groups.is_empty() {
+            return true;
+        }
+        let gf = groups.get(&from).copied().unwrap_or(0);
+        let gt = groups.get(&to).copied().unwrap_or(0);
+        gf == gt
+    }
+
+    /// Broadcast to all registered nodes except the sender.
+    pub fn broadcast(&self, from: NodeId, kind: MsgKind, payload: Vec<u8>) {
+        let now = self.clock.now();
+        let payload = Arc::new(payload);
+        let inboxes = self.inner.inboxes.read().unwrap();
+        for (&to, inbox) in inboxes.iter() {
+            if to != from {
+                self.push(inbox, now, from, to, kind, payload.clone());
+            }
+        }
+    }
+
+    /// Gossip-style fan-out: send to up to `fanout` random peers (the
+    /// Pekko-distributed-data pattern). State-based CRDT gossip spreads
+    /// transitively, so O(n·fanout) traffic converges in O(log n)
+    /// rounds instead of O(n²) per round — the difference between 10
+    /// and 100 nodes staying responsive (§Perf, Fig 9).
+    pub fn broadcast_sample(&self, from: NodeId, kind: MsgKind, payload: Vec<u8>, fanout: usize) {
+        let now = self.clock.now();
+        let payload = Arc::new(payload);
+        let inboxes = self.inner.inboxes.read().unwrap();
+        let peers: Vec<NodeId> = inboxes.keys().copied().filter(|&n| n != from).collect();
+        if peers.is_empty() {
+            return;
+        }
+        if fanout == 0 || fanout >= peers.len() {
+            for &to in &peers {
+                self.push(&inboxes[&to], now, from, to, kind, payload.clone());
+            }
+            return;
+        }
+        let mut rng = self.inner.rng.lock().unwrap();
+        let mut chosen = std::collections::BTreeSet::new();
+        while chosen.len() < fanout {
+            chosen.insert(*rng.pick(&peers));
+        }
+        drop(rng);
+        for &to in &chosen {
+            self.push(&inboxes[&to], now, from, to, kind, payload.clone());
+        }
+    }
+
+    /// Point-to-point send.
+    pub fn send(&self, from: NodeId, to: NodeId, kind: MsgKind, payload: Vec<u8>) {
+        let now = self.clock.now();
+        let inboxes = self.inner.inboxes.read().unwrap();
+        match inboxes.get(&to) {
+            Some(inbox) => self.push(inbox, now, from, to, kind, Arc::new(payload)),
+            None => {
+                self.inner.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn push(
+        &self,
+        inbox: &Arc<Mutex<Inbox>>,
+        now: SimTime,
+        from: NodeId,
+        to: NodeId,
+        kind: MsgKind,
+        payload: Arc<Vec<u8>>,
+    ) {
+        if !self.reachable(from, to) {
+            self.inner.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let cfg = &self.inner.cfg;
+        let jitter;
+        {
+            let mut rng = self.inner.rng.lock().unwrap();
+            if cfg.drop_prob > 0.0 && rng.chance(cfg.drop_prob) {
+                self.inner.dropped.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            jitter = if cfg.jitter_ms > 0 {
+                rng.next_below(cfg.jitter_ms + 1)
+            } else {
+                0
+            } + if cfg.tail_prob > 0.0 && cfg.tail_ms > 1 && rng.chance(cfg.tail_prob) {
+                cfg.tail_ms / 2 + rng.next_below(cfg.tail_ms / 2)
+            } else {
+                0
+            };
+        }
+        let deliver_at = now + cfg.base_delay_ms + jitter;
+        inbox.lock().unwrap().queue.push_back((
+            deliver_at,
+            Msg {
+                from,
+                kind,
+                sent_at: now,
+                payload,
+            },
+        ));
+    }
+
+    /// Drain all messages due for `node` at the current sim-time.
+    pub fn recv(&self, node: NodeId) -> Vec<Msg> {
+        let now = self.clock.now();
+        let inbox = {
+            let inboxes = self.inner.inboxes.read().unwrap();
+            match inboxes.get(&node) {
+                Some(i) => i.clone(),
+                None => return Vec::new(),
+            }
+        };
+        let mut inbox = inbox.lock().unwrap();
+        let mut due = Vec::new();
+        let mut rest = VecDeque::with_capacity(inbox.queue.len());
+        while let Some((at, msg)) = inbox.queue.pop_front() {
+            if at <= now {
+                due.push(msg);
+            } else {
+                rest.push_back((at, msg));
+            }
+        }
+        inbox.queue = rest;
+        drop(inbox);
+        self.inner.delivered.fetch_add(due.len() as u64, Ordering::Relaxed);
+        due
+    }
+
+    /// Impose a network partition: nodes listed in different groups
+    /// cannot exchange messages. Nodes not listed join group 0.
+    pub fn set_partition(&self, groups: &[&[NodeId]]) {
+        let mut g = self.inner.groups.write().unwrap();
+        g.clear();
+        for (gid, members) in groups.iter().enumerate() {
+            for &n in *members {
+                g.insert(n, gid as u32 + 1);
+            }
+        }
+    }
+
+    /// Heal all network partitions.
+    pub fn heal_partition(&self) {
+        self.inner.groups.write().unwrap().clear();
+    }
+
+    /// (delivered, dropped) counters — for tests and the bench reports.
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.inner.delivered.load(Ordering::Acquire),
+            self.inner.dropped.load(Ordering::Acquire),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bus(clock: &SimClock) -> Bus {
+        Bus::new(
+            clock.clone(),
+            NetConfig {
+                base_delay_ms: 10,
+                jitter_ms: 0,
+                drop_prob: 0.0,
+                tail_prob: 0.0,
+                tail_ms: 0,
+            },
+            7,
+        )
+    }
+
+    #[test]
+    fn delivery_respects_delay() {
+        let clock = SimClock::manual();
+        let b = bus(&clock);
+        b.register(1);
+        b.register(2);
+        b.send(1, 2, MsgKind::Gossip, vec![42]);
+        assert!(b.recv(2).is_empty()); // not due yet
+        clock.advance(10);
+        let msgs = b.recv(2);
+        assert_eq!(msgs.len(), 1);
+        assert_eq!(*msgs[0].payload, vec![42]);
+        assert_eq!(msgs[0].from, 1);
+    }
+
+    #[test]
+    fn broadcast_reaches_everyone_but_sender() {
+        let clock = SimClock::manual();
+        let b = bus(&clock);
+        for n in 1..=3 {
+            b.register(n);
+        }
+        b.broadcast(1, MsgKind::Heartbeat, vec![]);
+        clock.advance(10);
+        assert!(b.recv(1).is_empty());
+        assert_eq!(b.recv(2).len(), 1);
+        assert_eq!(b.recv(3).len(), 1);
+    }
+
+    #[test]
+    fn partition_blocks_cross_group_traffic() {
+        let clock = SimClock::manual();
+        let b = bus(&clock);
+        for n in 1..=4 {
+            b.register(n);
+        }
+        b.set_partition(&[&[1, 2], &[3, 4]]);
+        b.broadcast(1, MsgKind::Gossip, vec![]);
+        clock.advance(10);
+        assert_eq!(b.recv(2).len(), 1);
+        assert!(b.recv(3).is_empty());
+        assert!(b.recv(4).is_empty());
+        b.heal_partition();
+        b.broadcast(1, MsgKind::Gossip, vec![]);
+        clock.advance(10);
+        assert_eq!(b.recv(3).len(), 1);
+    }
+
+    #[test]
+    fn drop_prob_loses_messages() {
+        let clock = SimClock::manual();
+        let b = Bus::new(
+            clock.clone(),
+            NetConfig {
+                base_delay_ms: 0,
+                jitter_ms: 0,
+                drop_prob: 1.0,
+                tail_prob: 0.0,
+                tail_ms: 0,
+            },
+            9,
+        );
+        b.register(1);
+        b.register(2);
+        b.send(1, 2, MsgKind::Gossip, vec![]);
+        clock.advance(1);
+        assert!(b.recv(2).is_empty());
+        assert_eq!(b.stats().1, 1);
+    }
+
+    #[test]
+    fn unregistered_target_counts_as_drop() {
+        let clock = SimClock::manual();
+        let b = bus(&clock);
+        b.register(1);
+        b.send(1, 99, MsgKind::Claim, vec![]);
+        assert_eq!(b.stats().1, 1);
+    }
+
+    #[test]
+    fn messages_stay_queued_until_due() {
+        let clock = SimClock::manual();
+        let b = bus(&clock);
+        b.register(1);
+        b.register(2);
+        b.send(1, 2, MsgKind::Gossip, vec![1]);
+        clock.advance(5);
+        b.send(1, 2, MsgKind::Gossip, vec![2]);
+        clock.advance(5);
+        // first due (t=10), second not (t=15)
+        let msgs = b.recv(2);
+        assert_eq!(msgs.len(), 1);
+        clock.advance(5);
+        assert_eq!(b.recv(2).len(), 1);
+    }
+}

@@ -1,0 +1,278 @@
+//! Nexmark workload (Tucker et al.) — the paper's benchmark (§5.1).
+//!
+//! Event model: an online auction site emits Person, Auction and Bid
+//! events. Proportions follow the Nexmark generator (≈ 1 person : 3
+//! auctions : 46 bids per 50 events). Auction popularity and bid prices
+//! are skewed (hot auctions, long price tail). Categories follow the
+//! Nexmark default of 10.
+//!
+//! The queries used by the paper:
+//! * **Q0** — passthrough (stateless; measures pipeline overhead);
+//! * **Q4** — average price per category (keyed *global* aggregation);
+//! * **Q7** — highest bid per window (global aggregation);
+//! * **Query 1** (§2.2) — per-partition ratio of local to global bid
+//!   counts (the paper's running example).
+
+pub mod queries;
+pub mod producer;
+
+use crate::codec::{Decode, DecodeError, DecodeResult, Encode, Reader, Writer};
+use crate::util::XorShift64;
+
+/// Number of auction categories (Nexmark default).
+pub const CATEGORIES: u64 = 10;
+
+/// Hot-auction pool size per partition.
+const LIVE_AUCTIONS: u64 = 100;
+
+/// One Nexmark event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A new bidder/seller registers.
+    Person { id: u64, state: u8 },
+    /// A new auction opens.
+    Auction { id: u64, seller: u64, category: u64 },
+    /// A bid on an open auction.
+    Bid {
+        auction: u64,
+        bidder: u64,
+        price: f64,
+        category: u64,
+    },
+}
+
+impl Event {
+    pub fn is_bid(&self) -> bool {
+        matches!(self, Event::Bid { .. })
+    }
+}
+
+impl Encode for Event {
+    fn encode(&self, w: &mut Writer) {
+        match self {
+            Event::Person { id, state } => {
+                w.put_u8(0);
+                w.put_u64(*id);
+                w.put_u8(*state);
+            }
+            Event::Auction {
+                id,
+                seller,
+                category,
+            } => {
+                w.put_u8(1);
+                w.put_u64(*id);
+                w.put_u64(*seller);
+                w.put_u64(*category);
+            }
+            Event::Bid {
+                auction,
+                bidder,
+                price,
+                category,
+            } => {
+                w.put_u8(2);
+                w.put_u64(*auction);
+                w.put_u64(*bidder);
+                w.put_f64(*price);
+                w.put_u64(*category);
+            }
+        }
+    }
+}
+
+impl Decode for Event {
+    fn decode(r: &mut Reader) -> DecodeResult<Self> {
+        match r.get_u8()? {
+            0 => Ok(Event::Person {
+                id: r.get_u64()?,
+                state: r.get_u8()?,
+            }),
+            1 => Ok(Event::Auction {
+                id: r.get_u64()?,
+                seller: r.get_u64()?,
+                category: r.get_u64()?,
+            }),
+            2 => Ok(Event::Bid {
+                auction: r.get_u64()?,
+                bidder: r.get_u64()?,
+                price: r.get_f64()?,
+                category: r.get_u64()?,
+            }),
+            _ => Err(DecodeError("invalid event tag")),
+        }
+    }
+}
+
+/// Deterministic Nexmark event generator for one partition.
+#[derive(Debug, Clone)]
+pub struct NexmarkGen {
+    rng: XorShift64,
+    partition: u64,
+    next_person: u64,
+    next_auction: u64,
+    emitted: u64,
+}
+
+impl NexmarkGen {
+    pub fn new(seed: u64, partition: u32) -> Self {
+        Self {
+            rng: XorShift64::new(seed ^ (0x4E58 + partition as u64)),
+            partition: partition as u64,
+            next_person: 0,
+            next_auction: 0,
+            emitted: 0,
+        }
+    }
+
+    /// Number of events generated so far.
+    pub fn emitted(&self) -> u64 {
+        self.emitted
+    }
+
+    fn auction_id(&self, local: u64) -> u64 {
+        // Partition-scoped id space, interleaved so global aggregations
+        // see ids from all partitions.
+        local * 1024 + self.partition
+    }
+
+    /// Generate the next event (Nexmark proportions: 2% persons, 6%
+    /// auctions, 92% bids).
+    pub fn next_event(&mut self) -> Event {
+        self.emitted += 1;
+        let roll = self.rng.next_below(50);
+        // Bids need an open auction: force the first events to seed one.
+        let roll = if self.next_auction == 0 && roll > 3 { 1 } else { roll };
+        if roll == 0 {
+            let id = self.next_person;
+            self.next_person += 1;
+            Event::Person {
+                id: id * 1024 + self.partition,
+                state: (self.rng.next_below(50)) as u8,
+            }
+        } else if roll <= 3 {
+            let id = self.next_auction;
+            self.next_auction += 1;
+            let auction = self.auction_id(id);
+            Event::Auction {
+                id: auction,
+                seller: self.rng.next_below(self.next_person.max(1)),
+                category: auction % CATEGORIES,
+            }
+        } else {
+            // Bid on a recent auction (hot head via skewed draw).
+            let live = self.next_auction.max(1);
+            let back = self.rng.skewed_below(LIVE_AUCTIONS.min(live));
+            let local = live - 1 - back.min(live - 1);
+            let auction = self.auction_id(local);
+            // Skewed price: long tail, occasional very high bids.
+            let u = self.rng.next_f64();
+            let price = 10.0 + 990.0 * u * u * u;
+            Event::Bid {
+                auction,
+                bidder: self.rng.next_below(self.next_person.max(1)),
+                price: (price * 100.0).round() / 100.0,
+                category: auction % CATEGORIES,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_codec_roundtrip() {
+        let events = vec![
+            Event::Person { id: 7, state: 3 },
+            Event::Auction {
+                id: 9,
+                seller: 1,
+                category: 4,
+            },
+            Event::Bid {
+                auction: 9,
+                bidder: 2,
+                price: 123.45,
+                category: 4,
+            },
+        ];
+        for e in events {
+            let b = e.to_bytes();
+            assert_eq!(Event::from_bytes(&b).unwrap(), e);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_bad_tag() {
+        assert!(Event::from_bytes(&[9]).is_err());
+    }
+
+    #[test]
+    fn generator_is_deterministic() {
+        let mut a = NexmarkGen::new(1, 0);
+        let mut b = NexmarkGen::new(1, 0);
+        for _ in 0..1000 {
+            assert_eq!(a.next_event(), b.next_event());
+        }
+    }
+
+    #[test]
+    fn partitions_generate_distinct_streams() {
+        let mut a = NexmarkGen::new(1, 0);
+        let mut b = NexmarkGen::new(1, 1);
+        let ea: Vec<Event> = (0..100).map(|_| a.next_event()).collect();
+        let eb: Vec<Event> = (0..100).map(|_| b.next_event()).collect();
+        assert_ne!(ea, eb);
+    }
+
+    #[test]
+    fn proportions_are_nexmark_like() {
+        let mut g = NexmarkGen::new(3, 0);
+        let mut bids = 0;
+        let mut auctions = 0;
+        let mut persons = 0;
+        for _ in 0..10_000 {
+            match g.next_event() {
+                Event::Bid { .. } => bids += 1,
+                Event::Auction { .. } => auctions += 1,
+                Event::Person { .. } => persons += 1,
+            }
+        }
+        assert!(bids > 8800, "bids={bids}");
+        assert!((300..900).contains(&auctions), "auctions={auctions}");
+        assert!((100..400).contains(&persons), "persons={persons}");
+    }
+
+    #[test]
+    fn bid_prices_in_range_and_categories_valid() {
+        let mut g = NexmarkGen::new(5, 2);
+        for _ in 0..5000 {
+            if let Event::Bid {
+                price, category, ..
+            } = g.next_event()
+            {
+                assert!((10.0..=1000.0).contains(&price), "price={price}");
+                assert!(category < CATEGORIES);
+            }
+        }
+    }
+
+    #[test]
+    fn bids_reference_existing_auctions() {
+        let mut g = NexmarkGen::new(7, 1);
+        let mut auctions = std::collections::BTreeSet::new();
+        for _ in 0..5000 {
+            match g.next_event() {
+                Event::Auction { id, .. } => {
+                    auctions.insert(id);
+                }
+                Event::Bid { auction, .. } => {
+                    assert!(auctions.contains(&auction), "bid on unknown auction");
+                }
+                _ => {}
+            }
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! A small property-testing helper (no proptest in the vendor set).
+//!
+//! `forall(cases, gen, prop)` runs `prop` on `cases` generated inputs;
+//! on failure it re-runs with progressively simpler inputs from the
+//! generator's shrink ladder (re-generation at smaller "size" budgets —
+//! a cheap stand-in for structural shrinking) and reports the smallest
+//! failing seed so the case is reproducible.
+
+use crate::util::XorShift64;
+
+/// Input generator: builds a case from a PRNG and a size budget.
+pub trait Gen {
+    type Value;
+    fn generate(&self, rng: &mut XorShift64, size: usize) -> Self::Value;
+}
+
+impl<T, F: Fn(&mut XorShift64, usize) -> T> Gen for F {
+    type Value = T;
+    fn generate(&self, rng: &mut XorShift64, size: usize) -> T {
+        self(rng, size)
+    }
+}
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub struct Falsified {
+    pub seed: u64,
+    pub size: usize,
+    pub message: String,
+}
+
+/// Run `prop` on `cases` generated values of max size `max_size`.
+/// Panics with the minimal failing (seed, size) on falsification.
+pub fn forall<G: Gen>(
+    name: &str,
+    cases: u32,
+    max_size: usize,
+    gen: &G,
+    prop: impl Fn(&G::Value) -> Result<(), String>,
+) {
+    let base_seed = 0x5EED ^ (name.len() as u64) << 7;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add((case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        // ramp sizes: early cases small, later cases large
+        let size = 1 + (max_size - 1) * case as usize / cases.max(1) as usize;
+        if let Some(f) = run_one(gen, &prop, seed, size) {
+            // shrink: retry same seed at smaller sizes, keep smallest fail
+            let mut minimal = f;
+            let mut s = size;
+            while s > 1 {
+                s /= 2;
+                if let Some(f2) = run_one(gen, &prop, seed, s) {
+                    minimal = f2;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' falsified (seed={:#x}, size={}): {}",
+                minimal.seed, minimal.size, minimal.message
+            );
+        }
+    }
+}
+
+fn run_one<G: Gen>(
+    gen: &G,
+    prop: &impl Fn(&G::Value) -> Result<(), String>,
+    seed: u64,
+    size: usize,
+) -> Option<Falsified> {
+    let mut rng = XorShift64::new(seed);
+    let value = gen.generate(&mut rng, size);
+    match prop(&value) {
+        Ok(()) => None,
+        Err(message) => Some(Falsified {
+            seed,
+            size,
+            message,
+        }),
+    }
+}
+
+/// Convenience generator: a vector of `n ≤ size` values from `f`.
+pub fn vec_of<T>(
+    f: impl Fn(&mut XorShift64) -> T,
+) -> impl Fn(&mut XorShift64, usize) -> Vec<T> {
+    move |rng, size| {
+        let n = rng.next_below(size as u64 + 1) as usize;
+        (0..n).map(|_| f(rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        forall("sum is commutative", 50, 64, &vec_of(|r| r.next_below(100)), |xs| {
+            let fwd: u64 = xs.iter().sum();
+            let rev: u64 = xs.iter().rev().sum();
+            if fwd == rev {
+                Ok(())
+            } else {
+                Err(format!("{fwd} != {rev}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "falsified")]
+    fn failing_property_is_reported() {
+        forall("all vectors are short", 50, 64, &vec_of(|r| r.next_below(10)), |xs| {
+            if xs.len() < 5 {
+                Ok(())
+            } else {
+                Err(format!("len={}", xs.len()))
+            }
+        });
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let gen = vec_of(|r| r.next_below(1000));
+        let mut r1 = XorShift64::new(7);
+        let mut r2 = XorShift64::new(7);
+        assert_eq!(gen(&mut r1, 32), gen(&mut r2, 32));
+    }
+}

@@ -1,0 +1,330 @@
+//! PJRT runtime — loads the AOT-compiled XLA artifacts and runs them on
+//! the Rust hot path. Python is never involved at runtime: `make
+//! artifacts` lowered the L2 JAX graphs (which call the L1 Pallas
+//! kernels) to HLO *text*; here we parse, compile once per node thread,
+//! and execute per batch.
+//!
+//! Interchange is HLO text, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::path::{Path, PathBuf};
+
+use crate::api::{BatchAggregator, ScalarAggregator, WindowAggregates};
+use crate::config::HolonConfig;
+use crate::wcrdt::WindowId;
+
+/// AOT shapes — must match python/compile/kernels/window_agg.py.
+pub const BATCH: usize = 1024;
+pub const WINDOWS: usize = 32;
+
+/// Historical note (perf iteration 3, EXPERIMENTS.md §Perf): chunks
+/// were originally capped at 128 events so f32 kernel sums of
+/// cent-valued inputs stayed below 2^24 (exact). Sums are now
+/// accumulated in Rust in f64 (exact for integers < 2^53, independent
+/// of batch boundaries), so the kernel runs full [`BATCH`]-size chunks
+/// — 8× fewer PJRT dispatches — and contributes counts and maxes,
+/// which are exact in f32 at any chunk size.
+pub const EXACT_CHUNK: usize = BATCH;
+
+/// Errors from the XLA runtime.
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("artifact not found: {0}")]
+    MissingArtifact(PathBuf),
+    #[error("xla: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+/// A compiled `window_agg` executable bound to a PJRT CPU client.
+///
+/// One instance per node thread (PJRT executables are not shared across
+/// threads here); compilation happens once, execution per batch.
+pub struct XlaWindowAggregator {
+    exe: xla::PjRtLoadedExecutable,
+    /// scratch input buffers, reused across batches (no per-batch alloc)
+    values: Vec<f32>,
+    window_ids: Vec<i32>,
+    /// reusable input literals (filled with copy_raw_from per call)
+    lit_values: xla::Literal,
+    lit_wids: xla::Literal,
+    calls: u64,
+}
+
+impl XlaWindowAggregator {
+    /// Load `window_agg.hlo.txt` from `dir` and compile it.
+    pub fn load(dir: &Path) -> Result<Self, RuntimeError> {
+        let path = dir.join("window_agg.hlo.txt");
+        if !path.exists() {
+            return Err(RuntimeError::MissingArtifact(path));
+        }
+        let client = xla::PjRtClient::cpu()?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("utf8 path"),
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Self {
+            exe,
+            values: vec![0.0; BATCH],
+            window_ids: vec![-1; BATCH],
+            lit_values: xla::Literal::vec1(&vec![0f32; BATCH]),
+            lit_wids: xla::Literal::vec1(&vec![-1i32; BATCH]),
+            calls: 0,
+        })
+    }
+
+    /// Number of kernel invocations so far (observability).
+    pub fn calls(&self) -> u64 {
+        self.calls
+    }
+
+    /// Run one padded batch through the AOT executable. `items` must
+    /// have length ≤ BATCH with window indices in [0, WINDOWS).
+    fn run_chunk(
+        &mut self,
+        items: &[(f64, u64)],
+        out: &mut Vec<(u64, f64, u64, f64)>,
+        base: u64,
+    ) -> Result<(), RuntimeError> {
+        debug_assert!(items.len() <= BATCH);
+        // fill the reused scratch buffers directly (no temp allocation)
+        for (i, &(v, w)) in items.iter().enumerate() {
+            self.values[i] = v as f32;
+            self.window_ids[i] = w as i32;
+        }
+        // pad the tail
+        for i in items.len()..BATCH {
+            self.window_ids[i] = -1;
+        }
+        self.lit_values.copy_raw_from(&self.values)?;
+        self.lit_wids.copy_raw_from(&self.window_ids)?;
+        // exact sums in f64 on the CPU side (see EXACT_CHUNK note): one
+        // cheap pass, deterministic for integer-valued inputs at any
+        // batch split — the kernel contributes counts and maxes.
+        let mut exact_sums = [0f64; WINDOWS];
+        for &(v, w) in items {
+            exact_sums[w as usize] += v;
+        }
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(&[&self.lit_values, &self.lit_wids])?[0][0]
+            .to_literal_sync()?;
+        self.calls += 1;
+        let (_sums, counts, maxes, _avgs) = result.to_tuple4()?;
+        let counts = counts.to_vec::<f32>()?;
+        let maxes = maxes.to_vec::<f32>()?;
+        for w in 0..WINDOWS {
+            let count = counts[w] as u64;
+            if count > 0 {
+                out.push((base + w as u64, exact_sums[w], count, maxes[w] as f64));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl BatchAggregator for XlaWindowAggregator {
+    fn aggregate(&mut self, items: &[(f64, WindowId)]) -> WindowAggregates {
+        if items.is_empty() {
+            return WindowAggregates::default();
+        }
+        // Rebase window ids so the batch fits the fixed [0, WINDOWS)
+        // kernel range; chunk on both batch length and window span.
+        let mut out: Vec<(u64, f64, u64, f64)> = Vec::new();
+        let mut start = 0usize;
+        while start < items.len() {
+            let base = items[start].1;
+            let mut end = start;
+            while end < items.len()
+                && end - start < EXACT_CHUNK
+                && items[end].1 >= base
+                && items[end].1 - base < WINDOWS as u64
+            {
+                end += 1;
+            }
+            if end == start {
+                // Out-of-order window id below base: restart chunk there.
+                start = end + 1;
+                continue;
+            }
+            let rel: Vec<(f64, u64)> = items[start..end]
+                .iter()
+                .map(|&(v, w)| (v, w - base))
+                .collect();
+            if self.run_chunk(&rel, &mut out, base).is_err() {
+                // Fall back to the scalar oracle on any runtime error.
+                return ScalarAggregator.aggregate(items);
+            }
+            start = end;
+        }
+        // Merge duplicate windows across chunks (events of one window
+        // split by chunking).
+        out.sort_by_key(|&(w, ..)| w);
+        let mut merged: Vec<(u64, f64, u64, f64)> = Vec::with_capacity(out.len());
+        for (w, s, c, m) in out {
+            match merged.last_mut() {
+                Some((lw, ls, lc, lm)) if *lw == w => {
+                    *ls += s;
+                    *lc += c;
+                    if m > *lm {
+                        *lm = m;
+                    }
+                }
+                _ => merged.push((w, s, c, m)),
+            }
+        }
+        WindowAggregates {
+            windows: merged.into_iter().map(|(w, s, c, m)| (w, s, c, m)).collect(),
+        }
+    }
+}
+
+/// Build the batch aggregator for a node: XLA-backed when configured and
+/// the artifact exists, scalar otherwise.
+pub fn make_aggregator(cfg: &HolonConfig) -> Box<dyn BatchAggregator> {
+    if cfg.use_xla {
+        match XlaWindowAggregator::load(Path::new(&cfg.artifacts_dir)) {
+            Ok(agg) => return Box::new(agg),
+            Err(e) => {
+                log::warn!("xla aggregator unavailable ({e}); using scalar path");
+            }
+        }
+    }
+    Box::new(ScalarAggregator)
+}
+
+/// A compiled `crdt_merge` executable: element-wise lattice join of two
+/// stacked f32 state matrices (ROWS×COLS = 64×128). Exercised by tests
+/// and the merge micro-bench; the engine's BTreeMap-backed CRDTs use
+/// their own merge, but this is the vectorized path a dense-state
+/// deployment would use (DESIGN.md §Hardware-Adaptation).
+pub struct XlaMergeKernel {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+pub const MERGE_ROWS: usize = 64;
+pub const MERGE_COLS: usize = 128;
+
+impl XlaMergeKernel {
+    pub fn load(dir: &Path) -> Result<Self, RuntimeError> {
+        let path = dir.join("crdt_merge.hlo.txt");
+        if !path.exists() {
+            return Err(RuntimeError::MissingArtifact(path));
+        }
+        let client = xla::PjRtClient::cpu()?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("utf8 path"),
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(Self {
+            exe: client.compile(&comp)?,
+        })
+    }
+
+    /// Join two ROWS×COLS matrices element-wise (max).
+    pub fn merge(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>, RuntimeError> {
+        assert_eq!(a.len(), MERGE_ROWS * MERGE_COLS);
+        assert_eq!(b.len(), MERGE_ROWS * MERGE_COLS);
+        let la = xla::Literal::vec1(a).reshape(&[MERGE_ROWS as i64, MERGE_COLS as i64])?;
+        let lb = xla::Literal::vec1(b).reshape(&[MERGE_ROWS as i64, MERGE_COLS as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::BatchAggregator;
+
+    fn artifacts_dir() -> PathBuf {
+        // tests run from the crate root
+        PathBuf::from("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("window_agg.hlo.txt").exists()
+    }
+
+    #[test]
+    fn xla_matches_scalar_oracle() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut xla_agg = XlaWindowAggregator::load(&artifacts_dir()).unwrap();
+        let mut scalar = ScalarAggregator;
+        let items: Vec<(f64, u64)> = (0..500)
+            .map(|i| ((i % 97) as f64 * 1.5, (i % 7) as u64))
+            .collect();
+        let a = xla_agg.aggregate(&items);
+        let b = scalar.aggregate(&items);
+        assert_eq!(a.windows.len(), b.windows.len());
+        for (x, y) in a.windows.iter().zip(b.windows.iter()) {
+            assert_eq!(x.0, y.0);
+            assert!((x.1 - y.1).abs() < 1e-3, "sum {x:?} vs {y:?}");
+            assert_eq!(x.2, y.2);
+            assert!((x.3 - y.3).abs() < 1e-6, "max {x:?} vs {y:?}");
+        }
+    }
+
+    #[test]
+    fn xla_handles_large_window_span() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut xla_agg = XlaWindowAggregator::load(&artifacts_dir()).unwrap();
+        // window ids spanning more than WINDOWS forces chunking
+        let items: Vec<(f64, u64)> = (0..200).map(|i| (1.0, i as u64)).collect();
+        let a = xla_agg.aggregate(&items);
+        assert_eq!(a.windows.len(), 200);
+        assert!(a.windows.iter().all(|&(_, s, c, m)| s == 1.0 && c == 1 && m == 1.0));
+        assert!(xla_agg.calls() >= (200 / WINDOWS) as u64);
+    }
+
+    #[test]
+    fn xla_handles_oversize_batch() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut xla_agg = XlaWindowAggregator::load(&artifacts_dir()).unwrap();
+        let items: Vec<(f64, u64)> = (0..3000).map(|i| (2.0, (i % 4) as u64)).collect();
+        let a = xla_agg.aggregate(&items);
+        let total: u64 = a.windows.iter().map(|&(_, _, c, _)| c).sum();
+        assert_eq!(total, 3000);
+    }
+
+    #[test]
+    fn merge_kernel_is_elementwise_max() {
+        if !artifacts_dir().join("crdt_merge.hlo.txt").exists() {
+            return;
+        }
+        let k = XlaMergeKernel::load(&artifacts_dir()).unwrap();
+        let a: Vec<f32> = (0..MERGE_ROWS * MERGE_COLS).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..MERGE_ROWS * MERGE_COLS)
+            .map(|i| (MERGE_ROWS * MERGE_COLS - i) as f32)
+            .collect();
+        let m = k.merge(&a, &b).unwrap();
+        for i in 0..a.len() {
+            assert_eq!(m[i], a[i].max(b[i]));
+        }
+    }
+
+    #[test]
+    fn missing_artifacts_fall_back() {
+        let mut cfg = HolonConfig::default();
+        cfg.use_xla = true;
+        cfg.artifacts_dir = "/nonexistent".to_string();
+        let mut agg = make_aggregator(&cfg);
+        let out = agg.aggregate(&[(1.0, 0)]);
+        assert_eq!(out.windows, vec![(0, 1.0, 1, 1.0)]);
+    }
+}

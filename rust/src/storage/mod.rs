@@ -1,0 +1,236 @@
+//! Checkpoint storage — the shared, always-available state store.
+//!
+//! Algorithm 2 periodically `storage.put(p, partitions[p])`s partition
+//! state and recovers with `storage.get(partitionId)`. The paper notes
+//! that "the partition state itself forms a CRDT": the lattice merge of
+//! two checkpoints of the same partition keeps the one with the largest
+//! `nxt_idx` (input offset). We enforce that rule *inside* the store so
+//! a slow node can never regress a checkpoint written by a faster one —
+//! puts are monotone.
+//!
+//! Both an in-memory store and a file-backed store (persistence across
+//! process restarts, used by the durable examples) are provided.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
+use crate::util::PartitionId;
+
+/// A checkpoint of one partition: offsets + opaque processor state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionCheckpoint {
+    /// Next input offset to read (the paper's `nxtIdx`).
+    pub nxt_idx: u64,
+    /// Next output sequence number (the paper's `odx`).
+    pub nxt_odx: u64,
+    /// Encoded processor state (Local/WLocal values + WCRDT slices).
+    pub state: Vec<u8>,
+}
+
+impl PartitionCheckpoint {
+    /// Lattice order: larger input offset = later state (deterministic
+    /// execution makes checkpoints of a partition totally ordered).
+    fn dominates(&self, other: &Self) -> bool {
+        self.nxt_idx >= other.nxt_idx
+    }
+}
+
+impl Encode for PartitionCheckpoint {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u64(self.nxt_idx);
+        w.put_u64(self.nxt_odx);
+        w.put_bytes(&self.state);
+    }
+}
+
+impl Decode for PartitionCheckpoint {
+    fn decode(r: &mut Reader) -> DecodeResult<Self> {
+        Ok(Self {
+            nxt_idx: r.get_u64()?,
+            nxt_odx: r.get_u64()?,
+            state: r.get_bytes()?.to_vec(),
+        })
+    }
+}
+
+/// Shared checkpoint store (in-memory, thread-safe).
+#[derive(Debug, Clone, Default)]
+pub struct CheckpointStore {
+    inner: Arc<Mutex<StoreInner>>,
+}
+
+#[derive(Debug, Default)]
+struct StoreInner {
+    map: BTreeMap<PartitionId, PartitionCheckpoint>,
+    puts: u64,
+    stale_puts: u64,
+}
+
+impl CheckpointStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Monotone put: ignored if an equal-or-newer checkpoint exists.
+    /// Returns whether the checkpoint was accepted.
+    pub fn put(&self, p: PartitionId, cp: PartitionCheckpoint) -> bool {
+        let mut s = self.inner.lock().unwrap();
+        s.puts += 1;
+        match s.map.get(&p) {
+            Some(cur) if cur.dominates(&cp) && cur.nxt_idx != cp.nxt_idx => {
+                s.stale_puts += 1;
+                false
+            }
+            Some(cur) if cur.nxt_idx == cp.nxt_idx => {
+                // Same prefix — determinism says identical; keep current.
+                s.stale_puts += 1;
+                false
+            }
+            _ => {
+                s.map.insert(p, cp);
+                true
+            }
+        }
+    }
+
+    /// Fetch the latest checkpoint of a partition.
+    pub fn get(&self, p: PartitionId) -> Option<PartitionCheckpoint> {
+        self.inner.lock().unwrap().map.get(&p).cloned()
+    }
+
+    /// All partition ids with a checkpoint.
+    pub fn partitions(&self) -> Vec<PartitionId> {
+        self.inner.lock().unwrap().map.keys().copied().collect()
+    }
+
+    /// (total puts, rejected stale puts) — observability for tests.
+    pub fn stats(&self) -> (u64, u64) {
+        let s = self.inner.lock().unwrap();
+        (s.puts, s.stale_puts)
+    }
+
+    /// Persist the whole store to a file (length-prefixed entries).
+    pub fn save_to(&self, path: &PathBuf) -> std::io::Result<()> {
+        let s = self.inner.lock().unwrap();
+        let mut w = Writer::new();
+        w.put_u32(s.map.len() as u32);
+        for (&p, cp) in &s.map {
+            w.put_u32(p);
+            cp.encode(&mut w);
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&w.into_bytes())?;
+        f.sync_all()
+    }
+
+    /// Load a store persisted with [`save_to`](Self::save_to).
+    pub fn load_from(path: &PathBuf) -> std::io::Result<Self> {
+        let bytes = std::fs::read(path)?;
+        let mut r = Reader::new(&bytes);
+        let store = Self::new();
+        let n = r
+            .get_u32()
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))? as usize;
+        for _ in 0..n {
+            let p = r
+                .get_u32()
+                .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+            let cp = PartitionCheckpoint::decode(&mut r)
+                .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+            store.put(p, cp);
+        }
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cp(nxt_idx: u64) -> PartitionCheckpoint {
+        PartitionCheckpoint {
+            nxt_idx,
+            nxt_odx: nxt_idx * 2,
+            state: vec![nxt_idx as u8],
+        }
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let s = CheckpointStore::new();
+        assert!(s.get(0).is_none());
+        assert!(s.put(0, cp(5)));
+        assert_eq!(s.get(0).unwrap().nxt_idx, 5);
+    }
+
+    #[test]
+    fn stale_puts_rejected() {
+        // The CRDT rule: largest nxt_idx wins (paper §4.3).
+        let s = CheckpointStore::new();
+        s.put(0, cp(10));
+        assert!(!s.put(0, cp(5)));
+        assert_eq!(s.get(0).unwrap().nxt_idx, 10);
+        assert!(s.put(0, cp(12)));
+        assert_eq!(s.get(0).unwrap().nxt_idx, 12);
+        assert_eq!(s.stats(), (3, 1));
+    }
+
+    #[test]
+    fn equal_offset_put_is_noop() {
+        let s = CheckpointStore::new();
+        s.put(0, cp(5));
+        assert!(!s.put(0, cp(5)));
+    }
+
+    #[test]
+    fn partitions_lists_keys() {
+        let s = CheckpointStore::new();
+        s.put(3, cp(1));
+        s.put(1, cp(1));
+        assert_eq!(s.partitions(), vec![1, 3]);
+    }
+
+    #[test]
+    fn concurrent_puts_converge_to_max() {
+        let s = CheckpointStore::new();
+        let mut handles = vec![];
+        for i in 0..8u64 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                s.put(0, cp(i));
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.get(0).unwrap().nxt_idx, 7);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("holon-store-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.bin");
+        let s = CheckpointStore::new();
+        s.put(0, cp(5));
+        s.put(7, cp(9));
+        s.save_to(&path).unwrap();
+        let loaded = CheckpointStore::load_from(&path).unwrap();
+        assert_eq!(loaded.get(0), s.get(0));
+        assert_eq!(loaded.get(7), s.get(7));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_codec_roundtrip() {
+        use crate::codec::{Decode, Encode};
+        let c = cp(42);
+        assert_eq!(
+            PartitionCheckpoint::from_bytes(&c.to_bytes()).unwrap(),
+            c
+        );
+    }
+}

@@ -1,0 +1,63 @@
+//! Small shared utilities: deterministic PRNG, id types, ordered floats.
+//!
+//! The vendor set has no `rand` crate, so we carry a tiny xorshift64*
+//! generator — deterministic, seedable, and good enough for workload
+//! generation and the randomized property tests.
+
+pub mod rng;
+
+pub use rng::XorShift64;
+
+/// Identifier of a logical stream partition. Partitions are the unit of
+/// ownership, checkpointing and work stealing (paper §4.3).
+pub type PartitionId = u32;
+
+/// Identifier of a processing node (a simulated container in the paper's
+/// GCP deployment).
+pub type NodeId = u32;
+
+/// Simulation timestamps, in *sim-milliseconds* (paper-time). The clock
+/// module maps these onto wall time via the configured time scale.
+pub type SimTime = u64;
+
+/// An `f64` with a total order, usable as a BTree key (bid prices in the
+/// Q7 top-k CRDT). NaNs are ordered greatest; we never produce them.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OrdF64(pub f64);
+
+impl Eq for OrdF64 {}
+
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+impl From<f64> for OrdF64 {
+    fn from(v: f64) -> Self {
+        OrdF64(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordf64_total_order() {
+        let mut v = vec![OrdF64(3.0), OrdF64(-1.0), OrdF64(2.5)];
+        v.sort();
+        assert_eq!(v, vec![OrdF64(-1.0), OrdF64(2.5), OrdF64(3.0)]);
+    }
+
+    #[test]
+    fn ordf64_handles_negative_zero() {
+        assert!(OrdF64(-0.0) < OrdF64(0.0));
+    }
+}

@@ -1,0 +1,129 @@
+//! xorshift64* PRNG — deterministic, seedable, dependency-free.
+
+/// A small, fast, deterministic PRNG (xorshift64*). Not cryptographic;
+/// used for workload generation, jittered scheduling, and property tests.
+#[derive(Debug, Clone)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    /// Create a generator from a seed. A zero seed is remapped (xorshift
+    /// has a zero fixed point).
+    pub fn new(seed: u64) -> Self {
+        Self {
+            state: if seed == 0 { 0x9E3779B97F4A7C15 } else { seed },
+        }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, bound)`. `bound` must be non-zero.
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        // Modulo bias is negligible for our bounds (<< 2^32).
+        self.next_u64() % bound
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(hi > lo);
+        lo + self.next_below(hi - lo)
+    }
+
+    /// Uniform float in `[0, 1)`.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Bernoulli trial with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Zipf-like skewed index in `[0, n)` — hot head, long tail. Used by
+    /// the Nexmark generator for auction/category popularity.
+    pub fn skewed_below(&mut self, n: u64) -> u64 {
+        if n <= 1 {
+            return 0;
+        }
+        // Square the uniform draw: density concentrated near zero.
+        let u = self.next_f64();
+        ((u * u) * n as f64) as u64
+    }
+
+    /// Pick a uniformly random element of a slice. Panics on empty input.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.next_below(xs.len() as u64) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = XorShift64::new(42);
+        let mut b = XorShift64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = XorShift64::new(1);
+        let mut b = XorShift64::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn zero_seed_is_remapped() {
+        let mut r = XorShift64::new(0);
+        assert_ne!(r.next_u64(), 0);
+    }
+
+    #[test]
+    fn next_below_in_bounds() {
+        let mut r = XorShift64::new(7);
+        for _ in 0..1000 {
+            assert!(r.next_below(10) < 10);
+        }
+    }
+
+    #[test]
+    fn next_f64_unit_interval() {
+        let mut r = XorShift64::new(9);
+        for _ in 0..1000 {
+            let f = r.next_f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn skewed_is_head_heavy() {
+        let mut r = XorShift64::new(11);
+        let n = 100u64;
+        let head = (0..10_000).filter(|_| r.skewed_below(n) < n / 4).count();
+        // With the squared draw, half the mass lands in the first quarter.
+        assert!(head > 4000, "head={head}");
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = XorShift64::new(13);
+        for _ in 0..100 {
+            let v = r.range(5, 8);
+            assert!((5..8).contains(&v));
+        }
+    }
+}

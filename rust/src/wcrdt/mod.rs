@@ -1,0 +1,483 @@
+//! Windowed CRDTs — Algorithm 1, the paper's core abstraction.
+//!
+//! A [`WindowedCrdt`] wraps any state-based [`Crdt`] and slices an
+//! infinite stream into an infinite sequence of finite windows. State:
+//!
+//! * `windows: Map<WindowId, C>` — one CRDT per window;
+//! * `progress: Map<PartitionId, Timestamp>` — each participant's local
+//!   watermark (the lowest timestamp it may still process).
+//!
+//! Reading a window value succeeds only once the *global watermark*
+//! (min over all participants' progress) has passed the window end: at
+//! that point no participant can still insert into the window, every
+//! insert has been merged (reads happen on the reader's replica, which
+//! by then has received all contributions), and the value is final —
+//! **every replica returns the same value for the same window**. This is
+//! the "global determinism" guarantee of §3.3/§4.2, and what a plain
+//! CRDT cannot give on an infinite stream.
+//!
+//! The `progress` map is keyed by *partition* (the unit of ownership and
+//! work stealing); a node's watermark is the min over the partitions it
+//! executes, which is what Algorithm 1 tracks per "node".
+
+mod watermark;
+mod window;
+mod wlocal;
+
+pub use watermark::WatermarkGen;
+pub use window::{WindowAssigner, WindowId};
+pub use wlocal::{Local, WLocal};
+
+use std::collections::BTreeMap;
+
+use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
+use crate::crdt::Crdt;
+use crate::util::{PartitionId, SimTime};
+
+/// Errors from WCRDT operations.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum WcrdtError {
+    /// Insert below the inserting participant's own watermark
+    /// (Algorithm 1 line 5: `if ts < progress[self] then error`).
+    #[error("insert at ts={ts} below own watermark {watermark}")]
+    LateInsert { ts: SimTime, watermark: SimTime },
+}
+
+/// A windowed, replicated, convergent aggregate (Algorithm 1).
+#[derive(Debug, Clone)]
+pub struct WindowedCrdt<C: Crdt> {
+    assigner: WindowAssigner,
+    windows: BTreeMap<WindowId, C>,
+    progress: BTreeMap<PartitionId, SimTime>,
+    /// Windows at or below this id have been compacted away; their
+    /// values were final (and identical on every replica) when dropped.
+    compacted_below: WindowId,
+    /// Windows touched since the last [`take_delta`](Self::take_delta)
+    /// — local metadata (not serialized, not part of equality) backing
+    /// delta-based synchronization (paper §7 future work).
+    dirty: std::collections::BTreeSet<WindowId>,
+}
+
+impl<C: Crdt + PartialEq> PartialEq for WindowedCrdt<C> {
+    fn eq(&self, other: &Self) -> bool {
+        // dirty is sync metadata, not state
+        self.assigner == other.assigner
+            && self.windows == other.windows
+            && self.progress == other.progress
+            && self.compacted_below == other.compacted_below
+    }
+}
+
+impl<C: Crdt> WindowedCrdt<C> {
+    /// Create a replica. `participants` must be the full partition set —
+    /// the global watermark is the min over *all* of them, so a replica
+    /// must know who participates (the paper's deployment fixes the
+    /// partition count up front; reconfiguration moves partitions, it
+    /// does not add them).
+    pub fn new(assigner: WindowAssigner, participants: impl IntoIterator<Item = PartitionId>) -> Self {
+        let progress = participants.into_iter().map(|p| (p, 0)).collect();
+        Self {
+            assigner,
+            windows: BTreeMap::new(),
+            progress,
+            compacted_below: 0,
+            dirty: std::collections::BTreeSet::new(),
+        }
+    }
+
+    pub fn assigner(&self) -> WindowAssigner {
+        self.assigner
+    }
+
+    /// Algorithm 1 `INSERT`: fold an update into the window of `ts` on
+    /// behalf of partition `myself`.
+    pub fn insert_with(
+        &mut self,
+        myself: PartitionId,
+        ts: SimTime,
+        f: impl FnOnce(&mut C),
+    ) -> Result<(), WcrdtError> {
+        let own = self.progress.get(&myself).copied().unwrap_or(0);
+        if ts < own {
+            return Err(WcrdtError::LateInsert { ts, watermark: own });
+        }
+        let wid = self.assigner.window_of(ts);
+        debug_assert!(wid >= self.compacted_below, "insert into compacted window");
+        f(self.windows.entry(wid).or_default());
+        self.dirty.insert(wid);
+        Ok(())
+    }
+
+    /// Batch-path insert directly into window `wid` (the XLA hot path
+    /// inserts one pre-aggregated contribution per window per batch
+    /// instead of one per event). Returns `false` (skips) for windows
+    /// already compacted or strictly below the inserter's own progress
+    /// window — which only happens on stale replays whose contributions
+    /// are already reflected.
+    pub fn insert_window_with(
+        &mut self,
+        myself: PartitionId,
+        wid: WindowId,
+        f: impl FnOnce(&mut C),
+    ) -> bool {
+        if wid < self.compacted_below {
+            return false;
+        }
+        let own = self.progress.get(&myself).copied().unwrap_or(0);
+        if wid < self.assigner.window_of(own) {
+            return false;
+        }
+        f(self.windows.entry(wid).or_default());
+        self.dirty.insert(wid);
+        true
+    }
+
+    /// Algorithm 1 `INCREMENTWATERMARK`: raise `myself`'s local watermark.
+    pub fn increment_watermark(&mut self, myself: PartitionId, ts: SimTime) {
+        let e = self.progress.entry(myself).or_insert(0);
+        if *e < ts {
+            *e = ts;
+        }
+    }
+
+    /// Algorithm 1 `GLOBALWATERMARK`: min over all participants.
+    pub fn global_watermark(&self) -> SimTime {
+        self.progress.values().copied().min().unwrap_or(0)
+    }
+
+    /// Algorithm 1 `WINDOWVALUE` (the *unsafe mode* read): `None` until
+    /// the global watermark passes the window end, then the final value.
+    pub fn window_value(&self, wid: WindowId) -> Option<C> {
+        if wid < self.compacted_below || !self.is_complete(wid) {
+            // Compacted windows are gone: their (final, deterministic)
+            // values were emitted before compaction. Returning None makes
+            // a stale reader stall visibly rather than read bottom.
+            return None;
+        }
+        Some(self.windows.get(&wid).cloned().unwrap_or_default())
+    }
+
+    /// First window id that has not been compacted away. Readers whose
+    /// cursor fell behind a compaction (extremely stale restart) skip
+    /// forward to this id.
+    pub fn first_available(&self) -> WindowId {
+        self.compacted_below
+    }
+
+    /// Whether `wid` is completed (no more updates can arrive anywhere).
+    pub fn is_complete(&self, wid: WindowId) -> bool {
+        self.assigner.window_end(wid) <= self.global_watermark()
+    }
+
+    /// Highest window id that is complete, if any.
+    pub fn completed_up_to(&self) -> Option<WindowId> {
+        let gw = self.global_watermark();
+        // Window w is complete iff window_end(w) <= gw; scan down from
+        // the watermark's own window (ends are monotone in w).
+        let mut w = self.assigner.window_of(gw);
+        loop {
+            if self.assigner.window_end(w) <= gw {
+                return Some(w);
+            }
+            if w == 0 {
+                return None;
+            }
+            w -= 1;
+        }
+    }
+
+    /// Algorithm 1 `MERGE`: join windows pointwise and progress by max.
+    /// Merged windows are marked dirty so deltas propagate transitively
+    /// through sampled gossip.
+    pub fn merge(&mut self, other: &Self) {
+        for (&w, win) in &other.windows {
+            if w < self.compacted_below {
+                continue; // already finalized and dropped here
+            }
+            self.windows.entry(w).or_default().merge(win);
+            self.dirty.insert(w);
+        }
+        for (&p, &ts) in &other.progress {
+            let e = self.progress.entry(p).or_insert(0);
+            if *e < ts {
+                *e = ts;
+            }
+        }
+        self.compacted_below = self.compacted_below.max(other.compacted_below);
+    }
+
+    /// Drop windows strictly below `wid` (metadata compaction). Callers
+    /// only compact windows they have already emitted.
+    pub fn compact_below(&mut self, wid: WindowId) {
+        self.compacted_below = self.compacted_below.max(wid);
+        while let Some((&w, _)) = self.windows.iter().next() {
+            if w < wid {
+                self.windows.remove(&w);
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Delta-based synchronization (paper §7): a partial replica
+    /// carrying only the windows touched since the previous call, plus
+    /// the (small) full progress map. Joining a delta is sound because
+    /// any sub-state of a CRDT is a valid state — deltas just converge
+    /// with less traffic. Clears the dirty set.
+    pub fn take_delta(&mut self) -> Self {
+        let dirty = std::mem::take(&mut self.dirty);
+        let windows = dirty
+            .iter()
+            .filter_map(|w| self.windows.get(w).map(|c| (*w, c.clone())))
+            .collect();
+        Self {
+            assigner: self.assigner,
+            windows,
+            progress: self.progress.clone(),
+            compacted_below: self.compacted_below,
+            dirty: Default::default(),
+        }
+    }
+
+    /// Number of windows currently marked dirty (observability).
+    pub fn dirty_windows(&self) -> usize {
+        self.dirty.len()
+    }
+
+    /// Checkpoint slice: this partition's contributions + its progress
+    /// entry (see DESIGN.md — partition state forms a CRDT).
+    pub fn project_with(&self, myself: PartitionId, f: impl Fn(&C) -> C) -> Self {
+        let windows = self.windows.iter().map(|(&w, c)| (w, f(c))).collect();
+        let mut progress: BTreeMap<PartitionId, SimTime> =
+            self.progress.keys().map(|&p| (p, 0)).collect();
+        if let Some(&ts) = self.progress.get(&myself) {
+            progress.insert(myself, ts);
+        }
+        Self {
+            assigner: self.assigner,
+            windows,
+            progress,
+            compacted_below: self.compacted_below,
+            dirty: Default::default(),
+        }
+    }
+
+    /// Number of live (uncompacted) windows held.
+    pub fn live_windows(&self) -> usize {
+        self.windows.len()
+    }
+
+    /// Direct read access for tests/benches.
+    pub fn raw_window(&self, wid: WindowId) -> Option<&C> {
+        self.windows.get(&wid)
+    }
+
+    pub fn progress_of(&self, p: PartitionId) -> SimTime {
+        self.progress.get(&p).copied().unwrap_or(0)
+    }
+}
+
+impl<C: Crdt> Encode for WindowedCrdt<C> {
+    fn encode(&self, w: &mut Writer) {
+        self.assigner.encode(w);
+        self.windows.encode(w);
+        self.progress.encode(w);
+        w.put_u64(self.compacted_below);
+    }
+}
+
+impl<C: Crdt> Decode for WindowedCrdt<C> {
+    fn decode(r: &mut Reader) -> DecodeResult<Self> {
+        Ok(Self {
+            assigner: WindowAssigner::decode(r)?,
+            windows: BTreeMap::decode(r)?,
+            progress: BTreeMap::decode(r)?,
+            compacted_below: r.get_u64()?,
+            dirty: Default::default(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crdt::GCounter;
+
+    fn wcrdt(parts: &[PartitionId]) -> WindowedCrdt<GCounter> {
+        WindowedCrdt::new(WindowAssigner::tumbling(1000), parts.iter().copied())
+    }
+
+    #[test]
+    fn window_not_readable_until_global_watermark() {
+        let mut w = wcrdt(&[0, 1]);
+        w.insert_with(0, 100, |c| c.add(0, 1)).unwrap();
+        w.increment_watermark(0, 2000);
+        // partition 1 still at 0 => window 0 incomplete
+        assert_eq!(w.window_value(0), None);
+        w.increment_watermark(1, 1000);
+        // now global watermark = 1000 = end of window 0
+        let v = w.window_value(0).unwrap();
+        assert_eq!(v.value(), 1);
+    }
+
+    #[test]
+    fn late_insert_rejected() {
+        let mut w = wcrdt(&[0]);
+        w.increment_watermark(0, 500);
+        let err = w.insert_with(0, 100, |c| c.add(0, 1)).unwrap_err();
+        assert_eq!(
+            err,
+            WcrdtError::LateInsert {
+                ts: 100,
+                watermark: 500
+            }
+        );
+    }
+
+    #[test]
+    fn empty_completed_window_reads_bottom() {
+        let mut w = wcrdt(&[0, 1]);
+        w.increment_watermark(0, 3000);
+        w.increment_watermark(1, 3000);
+        assert_eq!(w.window_value(1).unwrap().value(), 0);
+    }
+
+    #[test]
+    fn merge_converges_replicas() {
+        let mut a = wcrdt(&[0, 1]);
+        let mut b = wcrdt(&[0, 1]);
+        a.insert_with(0, 10, |c| c.add(0, 5)).unwrap();
+        a.increment_watermark(0, 1000);
+        b.insert_with(1, 20, |c| c.add(1, 7)).unwrap();
+        b.increment_watermark(1, 1000);
+
+        // exchange state both ways — in any order
+        let a0 = a.clone();
+        a.merge(&b);
+        b.merge(&a0);
+        assert_eq!(a, b);
+        assert_eq!(a.window_value(0).unwrap().value(), 12);
+    }
+
+    #[test]
+    fn merge_is_idempotent_and_commutative() {
+        let mut a = wcrdt(&[0, 1]);
+        a.insert_with(0, 1, |c| c.add(0, 3)).unwrap();
+        let mut b = wcrdt(&[0, 1]);
+        b.insert_with(1, 1, |c| c.add(1, 4)).unwrap();
+
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+
+        let mut aa = a.clone();
+        aa.merge(&a.clone());
+        assert_eq!(aa, a);
+    }
+
+    #[test]
+    fn deterministic_reads_across_replicas() {
+        // Two replicas receive contributions in different orders; once
+        // the global watermark passes, both read identical values.
+        let mut a = wcrdt(&[0, 1, 2]);
+        let mut b = wcrdt(&[0, 1, 2]);
+        let mut updates = vec![];
+        for p in 0..3u32 {
+            let mut u = wcrdt(&[0, 1, 2]);
+            u.insert_with(p, 50 + p as u64, |c| c.add(p as u64, (p + 1) as u64))
+                .unwrap();
+            u.increment_watermark(p, 1000);
+            updates.push(u);
+        }
+        // a merges 0,1,2; b merges 2,0,1
+        for i in [0, 1, 2] {
+            a.merge(&updates[i]);
+        }
+        for i in [2, 0, 1] {
+            b.merge(&updates[i]);
+        }
+        assert_eq!(a.window_value(0), b.window_value(0));
+        assert_eq!(a.window_value(0).unwrap().value(), 6);
+    }
+
+    #[test]
+    fn compaction_drops_old_windows_only() {
+        let mut w = wcrdt(&[0]);
+        w.insert_with(0, 100, |c| c.add(0, 1)).unwrap();
+        w.insert_with(0, 1100, |c| c.add(0, 2)).unwrap();
+        w.increment_watermark(0, 5000);
+        w.compact_below(1);
+        assert_eq!(w.live_windows(), 1);
+        assert_eq!(w.window_value(1).unwrap().value(), 2);
+        // merging an old replica cannot resurrect window 0
+        let mut old = wcrdt(&[0]);
+        old.insert_with(0, 100, |c| c.add(0, 9)).unwrap();
+        w.merge(&old);
+        assert_eq!(w.live_windows(), 1);
+    }
+
+    #[test]
+    fn project_keeps_own_progress_only() {
+        let mut w = wcrdt(&[0, 1]);
+        w.increment_watermark(0, 500);
+        w.increment_watermark(1, 700);
+        let p = w.project_with(0, |c| c.clone());
+        assert_eq!(p.progress_of(0), 500);
+        assert_eq!(p.progress_of(1), 0);
+    }
+
+    #[test]
+    fn codec_roundtrip() {
+        use crate::codec::{Decode, Encode};
+        let mut w = wcrdt(&[0, 1]);
+        w.insert_with(0, 10, |c| c.add(0, 2)).unwrap();
+        w.increment_watermark(0, 99);
+        let b = w.to_bytes();
+        let back = WindowedCrdt::<GCounter>::from_bytes(&b).unwrap();
+        assert_eq!(back, w);
+    }
+
+    #[test]
+    fn take_delta_carries_only_touched_windows() {
+        let mut w = wcrdt(&[0, 1]);
+        w.insert_with(0, 100, |c| c.add(0, 1)).unwrap();
+        w.insert_with(0, 1100, |c| c.add(0, 2)).unwrap();
+        let _ = w.take_delta(); // drain
+        w.insert_with(0, 1200, |c| c.add(0, 3)).unwrap();
+        w.increment_watermark(0, 1200);
+        let d = w.take_delta();
+        assert_eq!(d.live_windows(), 1); // only window 1 was touched
+        assert_eq!(d.progress_of(0), 1200); // progress always included
+        assert_eq!(w.dirty_windows(), 0);
+    }
+
+    #[test]
+    fn delta_sync_converges_like_full_sync() {
+        let mut a = wcrdt(&[0, 1]);
+        let mut b = wcrdt(&[0, 1]);
+        a.insert_with(0, 100, |c| c.add(0, 5)).unwrap();
+        a.increment_watermark(0, 1500);
+        b.insert_with(1, 200, |c| c.add(1, 7)).unwrap();
+        b.increment_watermark(1, 1500);
+        // exchange deltas instead of full state
+        let da = a.take_delta();
+        let db = b.take_delta();
+        a.merge(&db);
+        b.merge(&da);
+        assert_eq!(a, b);
+        assert_eq!(a.window_value(0).unwrap().value(), 12);
+        // merging a delta marks windows dirty => transitive propagation
+        assert!(a.dirty_windows() > 0);
+    }
+
+    #[test]
+    fn global_watermark_is_min() {
+        let mut w = wcrdt(&[0, 1, 2]);
+        w.increment_watermark(0, 100);
+        w.increment_watermark(1, 50);
+        w.increment_watermark(2, 200);
+        assert_eq!(w.global_watermark(), 50);
+    }
+}

@@ -1,0 +1,95 @@
+//! Watermark generation strategies (paper §3.2: ordered streams advance
+//! the watermark to the last event; out-of-order streams "calculate the
+//! watermark in a different way" — the standard bounded-disorder
+//! generator of Akidau et al. / Begoli et al.).
+
+use crate::codec::{Decode, DecodeError, DecodeResult, Encode, Reader, Writer};
+use crate::util::SimTime;
+
+/// How a partition derives its local watermark from observed event times.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WatermarkGen {
+    /// Events arrive in timestamp order per partition (the paper's
+    /// implementation assumption): watermark = last event time.
+    Ascending,
+    /// Events may arrive up to `max_delay_ms` late: watermark trails the
+    /// maximum observed event time by that bound. Events later than the
+    /// bound are *late* and are dropped by the windowed insert guard
+    /// (their window may already be complete globally).
+    BoundedOutOfOrder { max_delay_ms: SimTime },
+}
+
+impl WatermarkGen {
+    /// The watermark after observing an event at `ts`, given the maximum
+    /// event time seen so far (including `ts`).
+    pub fn watermark(&self, max_seen_ts: SimTime) -> SimTime {
+        match self {
+            WatermarkGen::Ascending => max_seen_ts,
+            WatermarkGen::BoundedOutOfOrder { max_delay_ms } => {
+                max_seen_ts.saturating_sub(*max_delay_ms)
+            }
+        }
+    }
+
+    /// Whether an event at `ts` is too late to be inserted when the
+    /// maximum observed event time is `max_seen_ts`.
+    pub fn is_late(&self, ts: SimTime, max_seen_ts: SimTime) -> bool {
+        ts < self.watermark(max_seen_ts)
+    }
+}
+
+impl Encode for WatermarkGen {
+    fn encode(&self, w: &mut Writer) {
+        match self {
+            WatermarkGen::Ascending => w.put_u8(0),
+            WatermarkGen::BoundedOutOfOrder { max_delay_ms } => {
+                w.put_u8(1);
+                w.put_u64(*max_delay_ms);
+            }
+        }
+    }
+}
+
+impl Decode for WatermarkGen {
+    fn decode(r: &mut Reader) -> DecodeResult<Self> {
+        match r.get_u8()? {
+            0 => Ok(WatermarkGen::Ascending),
+            1 => Ok(WatermarkGen::BoundedOutOfOrder {
+                max_delay_ms: r.get_u64()?,
+            }),
+            _ => Err(DecodeError("invalid watermark gen tag")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascending_tracks_max() {
+        let g = WatermarkGen::Ascending;
+        assert_eq!(g.watermark(500), 500);
+        assert!(!g.is_late(500, 500));
+        assert!(g.is_late(499, 500));
+    }
+
+    #[test]
+    fn bounded_trails_by_delay() {
+        let g = WatermarkGen::BoundedOutOfOrder { max_delay_ms: 200 };
+        assert_eq!(g.watermark(1000), 800);
+        assert!(!g.is_late(800, 1000)); // within the bound
+        assert!(g.is_late(799, 1000)); // beyond the bound
+        assert_eq!(g.watermark(100), 0); // saturating near zero
+    }
+
+    #[test]
+    fn codec_roundtrip() {
+        for g in [
+            WatermarkGen::Ascending,
+            WatermarkGen::BoundedOutOfOrder { max_delay_ms: 42 },
+        ] {
+            assert_eq!(WatermarkGen::from_bytes(&g.to_bytes()).unwrap(), g);
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! Window assignment: tumbling (the paper's implementation) plus a
+//! sliding extension (paper §7 future work — window generalization).
+
+use crate::codec::{Decode, DecodeError, DecodeResult, Encode, Reader, Writer};
+use crate::util::SimTime;
+
+/// Dense window index (window 0 covers `[0, size)` for tumbling).
+pub type WindowId = u64;
+
+/// Assigns timestamps to windows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WindowAssigner {
+    /// Fixed-size, non-overlapping windows of `size` sim-ms.
+    Tumbling { size: SimTime },
+    /// Overlapping windows: length `size`, advanced every `slide`.
+    /// `window_of` returns the *last* window containing the timestamp;
+    /// `windows_of` enumerates all of them.
+    Sliding { size: SimTime, slide: SimTime },
+}
+
+impl WindowAssigner {
+    pub fn tumbling(size: SimTime) -> Self {
+        assert!(size > 0);
+        WindowAssigner::Tumbling { size }
+    }
+
+    pub fn sliding(size: SimTime, slide: SimTime) -> Self {
+        assert!(size > 0 && slide > 0 && slide <= size);
+        WindowAssigner::Sliding { size, slide }
+    }
+
+    /// The tumbling size, or the slide for sliding windows (the pace at
+    /// which new windows open).
+    pub fn size(&self) -> SimTime {
+        match self {
+            WindowAssigner::Tumbling { size } => *size,
+            WindowAssigner::Sliding { slide, .. } => *slide,
+        }
+    }
+
+    /// Primary window of a timestamp.
+    pub fn window_of(&self, ts: SimTime) -> WindowId {
+        match self {
+            WindowAssigner::Tumbling { size } => ts / size,
+            WindowAssigner::Sliding { slide, .. } => ts / slide,
+        }
+    }
+
+    /// All windows containing a timestamp (1 for tumbling).
+    pub fn windows_of(&self, ts: SimTime) -> Vec<WindowId> {
+        match self {
+            WindowAssigner::Tumbling { size } => vec![ts / size],
+            WindowAssigner::Sliding { size, slide } => {
+                let last = ts / slide;
+                let span = (size + slide - 1) / slide; // windows covering ts
+                let first = last.saturating_sub(span - 1);
+                // window w covers [w*slide, w*slide + size)
+                (first..=last)
+                    .filter(|w| w * slide <= ts && ts < w * slide + size)
+                    .collect()
+            }
+        }
+    }
+
+    /// Exclusive end timestamp of a window.
+    pub fn window_end(&self, wid: WindowId) -> SimTime {
+        match self {
+            WindowAssigner::Tumbling { size } => (wid + 1) * size,
+            WindowAssigner::Sliding { size, slide } => wid * slide + size,
+        }
+    }
+
+    /// Inclusive start timestamp of a window.
+    pub fn window_start(&self, wid: WindowId) -> SimTime {
+        match self {
+            WindowAssigner::Tumbling { size } => wid * size,
+            WindowAssigner::Sliding { slide, .. } => wid * slide,
+        }
+    }
+}
+
+impl Encode for WindowAssigner {
+    fn encode(&self, w: &mut Writer) {
+        match self {
+            WindowAssigner::Tumbling { size } => {
+                w.put_u8(0);
+                w.put_u64(*size);
+            }
+            WindowAssigner::Sliding { size, slide } => {
+                w.put_u8(1);
+                w.put_u64(*size);
+                w.put_u64(*slide);
+            }
+        }
+    }
+}
+
+impl Decode for WindowAssigner {
+    fn decode(r: &mut Reader) -> DecodeResult<Self> {
+        match r.get_u8()? {
+            0 => Ok(WindowAssigner::Tumbling {
+                size: r.get_u64()?,
+            }),
+            1 => Ok(WindowAssigner::Sliding {
+                size: r.get_u64()?,
+                slide: r.get_u64()?,
+            }),
+            _ => Err(DecodeError("invalid window assigner tag")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tumbling_assignment() {
+        let a = WindowAssigner::tumbling(1000);
+        assert_eq!(a.window_of(0), 0);
+        assert_eq!(a.window_of(999), 0);
+        assert_eq!(a.window_of(1000), 1);
+        assert_eq!(a.window_end(0), 1000);
+        assert_eq!(a.window_start(3), 3000);
+        assert_eq!(a.windows_of(1500), vec![1]);
+    }
+
+    #[test]
+    fn sliding_assignment_covers() {
+        // size 1000, slide 500 => each ts is in 2 windows.
+        let a = WindowAssigner::sliding(1000, 500);
+        assert_eq!(a.windows_of(0), vec![0]); // window -1 doesn't exist
+        assert_eq!(a.windows_of(700), vec![0, 1]);
+        assert_eq!(a.windows_of(1200), vec![1, 2]);
+        for &w in &a.windows_of(1200) {
+            assert!(a.window_start(w) <= 1200 && 1200 < a.window_end(w));
+        }
+    }
+
+    #[test]
+    fn sliding_window_bounds() {
+        let a = WindowAssigner::sliding(1000, 500);
+        assert_eq!(a.window_start(2), 1000);
+        assert_eq!(a.window_end(2), 2000);
+    }
+
+    #[test]
+    fn codec_roundtrip() {
+        use crate::codec::{Decode, Encode};
+        for a in [WindowAssigner::tumbling(250), WindowAssigner::sliding(1000, 100)] {
+            let b = a.to_bytes();
+            assert_eq!(WindowAssigner::from_bytes(&b).unwrap(), a);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_size_rejected() {
+        WindowAssigner::tumbling(0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Partition-local state: `WLocal` (windowed local values) and `Local`
+//! (plain local values) — Table 1's non-replicated state types.
+//!
+//! Unlike [`WindowedCrdt`](super::WindowedCrdt), these are visible only
+//! to the owning partition; the runtime checkpoints and recovers them
+//! with the partition state, so they share the exactly-once guarantee.
+
+use std::collections::BTreeMap;
+
+use super::window::{WindowAssigner, WindowId};
+use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
+use crate::util::SimTime;
+
+/// A windowed, partition-local value folded with a user `fold` function
+/// applied via [`WLocal::update`]. Completion tracks the partition's own
+/// watermark only (no global coordination — it is local state).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WLocal<T: Clone> {
+    assigner: WindowAssigner,
+    windows: BTreeMap<WindowId, T>,
+    watermark: SimTime,
+    zero: T,
+}
+
+impl<T: Clone> WLocal<T> {
+    pub fn new(assigner: WindowAssigner, zero: T) -> Self {
+        Self {
+            assigner,
+            windows: BTreeMap::new(),
+            watermark: 0,
+            zero,
+        }
+    }
+
+    /// Fold an event at `ts` into its window.
+    pub fn update(&mut self, ts: SimTime, f: impl FnOnce(&mut T)) {
+        let wid = self.assigner.window_of(ts);
+        f(self
+            .windows
+            .entry(wid)
+            .or_insert_with(|| self.zero.clone()));
+    }
+
+    pub fn increment_watermark(&mut self, ts: SimTime) {
+        self.watermark = self.watermark.max(ts);
+    }
+
+    pub fn watermark(&self) -> SimTime {
+        self.watermark
+    }
+
+    /// The window value once the local watermark passed its end.
+    pub fn window_value(&self, wid: WindowId) -> Option<T> {
+        if self.assigner.window_end(wid) > self.watermark {
+            return None;
+        }
+        Some(
+            self.windows
+                .get(&wid)
+                .cloned()
+                .unwrap_or_else(|| self.zero.clone()),
+        )
+    }
+
+    pub fn compact_below(&mut self, wid: WindowId) {
+        self.windows.retain(|&w, _| w >= wid);
+    }
+
+    pub fn live_windows(&self) -> usize {
+        self.windows.len()
+    }
+}
+
+impl<T: Clone + Encode> Encode for WLocal<T> {
+    fn encode(&self, w: &mut Writer) {
+        self.assigner.encode(w);
+        self.windows.encode(w);
+        w.put_u64(self.watermark);
+        self.zero.encode(w);
+    }
+}
+
+impl<T: Clone + Decode> Decode for WLocal<T> {
+    fn decode(r: &mut Reader) -> DecodeResult<Self> {
+        Ok(Self {
+            assigner: WindowAssigner::decode(r)?,
+            windows: BTreeMap::decode(r)?,
+            watermark: r.get_u64()?,
+            zero: T::decode(r)?,
+        })
+    }
+}
+
+/// A plain partition-local value (Table 1 `Local`), checkpointed with
+/// the partition. A thin newtype so query code reads like the paper's
+/// listings.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Local<T>(pub T);
+
+impl<T> Local<T> {
+    pub fn new(v: T) -> Self {
+        Local(v)
+    }
+
+    pub fn get(&self) -> &T {
+        &self.0
+    }
+
+    pub fn set(&mut self, v: T) {
+        self.0 = v;
+    }
+}
+
+impl<T: Encode> Encode for Local<T> {
+    fn encode(&self, w: &mut Writer) {
+        self.0.encode(w);
+    }
+}
+
+impl<T: Decode> Decode for Local<T> {
+    fn decode(r: &mut Reader) -> DecodeResult<Self> {
+        Ok(Local(T::decode(r)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wlocal_folds_per_window() {
+        let mut w = WLocal::new(WindowAssigner::tumbling(100), 0u64);
+        w.update(10, |v| *v += 1);
+        w.update(50, |v| *v += 1);
+        w.update(150, |v| *v += 1);
+        assert_eq!(w.window_value(0), None); // watermark still 0
+        w.increment_watermark(100);
+        assert_eq!(w.window_value(0), Some(2));
+        assert_eq!(w.window_value(1), None);
+        w.increment_watermark(200);
+        assert_eq!(w.window_value(1), Some(1));
+    }
+
+    #[test]
+    fn wlocal_empty_window_is_zero() {
+        let mut w = WLocal::new(WindowAssigner::tumbling(100), 7u64);
+        w.increment_watermark(300);
+        assert_eq!(w.window_value(1), Some(7));
+    }
+
+    #[test]
+    fn wlocal_compaction() {
+        let mut w = WLocal::new(WindowAssigner::tumbling(100), 0u64);
+        w.update(10, |v| *v += 1);
+        w.update(110, |v| *v += 1);
+        w.compact_below(1);
+        assert_eq!(w.live_windows(), 1);
+    }
+
+    #[test]
+    fn wlocal_codec() {
+        use crate::codec::{Decode, Encode};
+        let mut w = WLocal::new(WindowAssigner::tumbling(100), 0u64);
+        w.update(10, |v| *v += 3);
+        w.increment_watermark(42);
+        let back = WLocal::<u64>::from_bytes(&w.to_bytes()).unwrap();
+        assert_eq!(back, w);
+    }
+
+    #[test]
+    fn local_roundtrip() {
+        use crate::codec::{Decode, Encode};
+        let l = Local::new(123u64);
+        assert_eq!(Local::<u64>::from_bytes(&l.to_bytes()).unwrap(), l);
+    }
+}

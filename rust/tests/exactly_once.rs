@@ -1,0 +1,204 @@
+//! Exactly-once semantics (§3.3): each event's effects appear exactly
+//! once in state; outputs may be physically duplicated but dedup by
+//! (partition, seq) makes them exactly-once for a consumer. These tests
+//! inject aggressive failures and verify counts.
+
+use holon::clock::SimClock;
+use holon::codec::Decode;
+use holon::config::HolonConfig;
+use holon::engine::node::decode_output;
+use holon::engine::HolonCluster;
+use holon::nexmark::producer;
+use holon::nexmark::queries::{Query1, RatioOut};
+use holon::nexmark::Event;
+
+fn cfg() -> HolonConfig {
+    let mut cfg = HolonConfig::default();
+    cfg.nodes = 4;
+    cfg.partitions = 8;
+    cfg.events_per_sec_per_partition = 1500;
+    cfg.wall_ms_per_sim_sec = 50.0;
+    cfg.duration_ms = 8000;
+    cfg.window_ms = 1000;
+    cfg.gossip_interval_ms = 50;
+    cfg.checkpoint_interval_ms = 300;
+    cfg.heartbeat_interval_ms = 200;
+    cfg.failure_timeout_ms = 800;
+    cfg
+}
+
+/// Count the bids per window per partition straight off the input log
+/// (ground truth), then compare with Query1 outputs after a failure.
+#[test]
+fn state_counts_every_event_exactly_once_despite_failures() {
+    let cfg = cfg();
+    let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
+    let cluster =
+        HolonCluster::start_with_clock(cfg.clone(), Query1::new(cfg.window_ms), clock.clone());
+    let prod = producer::spawn(
+        cluster.input.clone(),
+        clock.clone(),
+        cfg.seed,
+        cfg.events_per_sec_per_partition,
+        cfg.duration_ms,
+    );
+    // two failures while data is flowing
+    std::thread::sleep(clock.wall_for(2500));
+    cluster.fail_node(0);
+    std::thread::sleep(clock.wall_for(1200));
+    cluster.restart_node(0);
+    std::thread::sleep(clock.wall_for(800));
+    cluster.fail_node(2);
+    std::thread::sleep(clock.wall_for(1200));
+    cluster.restart_node(2);
+    std::thread::sleep(clock.wall_for(cfg.duration_ms - 5700 + 4000));
+    prod.stop();
+    cluster.stop();
+
+    // ground truth: bids per (partition, window) from the input log
+    let mut truth: Vec<std::collections::BTreeMap<u64, u64>> =
+        vec![Default::default(); cfg.partitions as usize];
+    let mut total_truth: std::collections::BTreeMap<u64, u64> = Default::default();
+    for p in 0..cfg.partitions {
+        let (recs, _) = cluster.input.read(p, 0, usize::MAX >> 1);
+        for rec in recs {
+            if let Ok(ev) = Event::from_bytes(&rec.payload) {
+                if ev.is_bid() {
+                    let w = rec.event_ts / cfg.window_ms;
+                    *truth[p as usize].entry(w).or_insert(0) += 1;
+                    *total_truth.entry(w).or_insert(0) += 1;
+                }
+            }
+        }
+    }
+
+    // compare every emitted window against the ground truth
+    let mut compared = 0;
+    for p in 0..cfg.partitions {
+        let (recs, _) = cluster.output.read(p, 0, usize::MAX >> 1);
+        let mut seen = 0u64;
+        for rec in recs {
+            let (seq, _ts, inner) = decode_output(&rec.payload).unwrap();
+            if seq < seen {
+                continue;
+            }
+            seen = seq + 1;
+            let out = RatioOut::from_bytes(&inner).unwrap();
+            let want_local = truth[p as usize].get(&out.window).copied().unwrap_or(0);
+            let want_total = total_truth.get(&out.window).copied().unwrap_or(0);
+            assert_eq!(
+                out.local, want_local,
+                "partition {p} window {} local count",
+                out.window
+            );
+            assert_eq!(
+                out.total, want_total,
+                "partition {p} window {} global count",
+                out.window
+            );
+            compared += 1;
+        }
+    }
+    assert!(compared >= 20, "only {compared} windows compared");
+}
+
+/// Duplicated physical outputs must be byte-identical to the originals
+/// (idempotent emission — the paper's justification for calling
+/// duplicated outputs exactly-once).
+#[test]
+fn physical_duplicates_are_byte_identical() {
+    // Whether a given fail/restart produces physical duplicates depends
+    // on checkpoint timing; try a few injection offsets until it does.
+    let mut total_duplicates = 0;
+    for attempt in 0..4 {
+        let mut cfg = cfg();
+        cfg.seed += attempt;
+        // stale checkpoints make replays (and thus duplicates) likely
+        cfg.checkpoint_interval_ms = 1500;
+        let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
+        let cluster =
+            HolonCluster::start_with_clock(cfg.clone(), Query1::new(cfg.window_ms), clock.clone());
+        let prod = producer::spawn(
+            cluster.input.clone(),
+            clock.clone(),
+            cfg.seed,
+            cfg.events_per_sec_per_partition,
+            cfg.duration_ms,
+        );
+        std::thread::sleep(clock.wall_for(3000 + attempt * 300));
+        cluster.fail_node(1);
+        std::thread::sleep(clock.wall_for(1500));
+        cluster.restart_node(1);
+        std::thread::sleep(clock.wall_for(800));
+        cluster.fail_node(2);
+        std::thread::sleep(clock.wall_for(1500));
+        cluster.restart_node(2);
+        std::thread::sleep(clock.wall_for(cfg.duration_ms + 4000));
+        prod.stop();
+        cluster.stop();
+
+        for p in 0..cfg.partitions {
+            let (recs, _) = cluster.output.read(p, 0, usize::MAX >> 1);
+            let mut first: std::collections::BTreeMap<u64, Vec<u8>> = Default::default();
+            for rec in recs {
+                let (seq, _ts, inner) = decode_output(&rec.payload).unwrap();
+                match first.get(&seq) {
+                    None => {
+                        first.insert(seq, inner);
+                    }
+                    Some(orig) => {
+                        assert_eq!(orig, &inner, "partition {p} seq {seq} duplicate differs");
+                        total_duplicates += 1;
+                    }
+                }
+            }
+        }
+        if total_duplicates > 0 {
+            return; // property exercised and verified
+        }
+    }
+    panic!("no duplicates produced across attempts; failure injection ineffective");
+}
+
+/// The checkpoint store's monotone rule: concurrent checkpointing from
+/// overlapping owners never regresses offsets.
+#[test]
+fn checkpoints_never_regress_under_overlap() {
+    let cfg = cfg();
+    let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
+    let cluster =
+        HolonCluster::start_with_clock(cfg.clone(), Query1::new(cfg.window_ms), clock.clone());
+    let prod = producer::spawn(
+        cluster.input.clone(),
+        clock.clone(),
+        cfg.seed,
+        cfg.events_per_sec_per_partition,
+        cfg.duration_ms,
+    );
+    // watch checkpoint offsets while failing/restarting nodes
+    let mut high: std::collections::BTreeMap<u32, u64> = Default::default();
+    let steps = 40;
+    for step in 0..steps {
+        std::thread::sleep(clock.wall_for(cfg.duration_ms / steps));
+        if step == 10 {
+            cluster.fail_node(3);
+        }
+        if step == 16 {
+            cluster.restart_node(3);
+        }
+        for p in cluster.store.partitions() {
+            let cp = cluster.store.get(p).unwrap();
+            let e = high.entry(p).or_insert(0);
+            assert!(
+                cp.nxt_idx >= *e,
+                "partition {p} checkpoint regressed: {} < {}",
+                cp.nxt_idx,
+                *e
+            );
+            *e = cp.nxt_idx;
+        }
+    }
+    prod.stop();
+    cluster.stop();
+    assert!(!high.is_empty());
+}

@@ -1,0 +1,185 @@
+//! End-to-end integration: Nexmark workloads on a running HolonCluster
+//! (real node threads, logged streams, gossip, checkpoints).
+
+use holon::clock::SimClock;
+use holon::codec::Decode;
+use holon::config::HolonConfig;
+use holon::engine::node::decode_output;
+use holon::engine::HolonCluster;
+use holon::nexmark::queries::{Q4Out, Q7Out, Query1, RatioOut, Q0, Q4, Q7};
+use holon::nexmark::producer;
+
+fn test_config() -> HolonConfig {
+    let mut cfg = HolonConfig::default();
+    cfg.nodes = 3;
+    cfg.partitions = 6;
+    cfg.events_per_sec_per_partition = 2000;
+    cfg.wall_ms_per_sim_sec = 50.0; // 1 sim-s = 50 wall-ms
+    cfg.duration_ms = 6000;
+    cfg.window_ms = 1000;
+    cfg.gossip_interval_ms = 50;
+    cfg.checkpoint_interval_ms = 500;
+    cfg.heartbeat_interval_ms = 200;
+    cfg.failure_timeout_ms = 1000;
+    cfg
+}
+
+/// Collect deduplicated decoded outputs per partition from the output topic.
+fn decoded_outputs<T: Decode>(
+    cluster: &HolonCluster<impl holon::api::Processor>,
+) -> Vec<Vec<T>> {
+    let mut per_part = Vec::new();
+    for p in 0..cluster.cfg.partitions {
+        let (recs, _) = cluster.output.read(p, 0, usize::MAX >> 1);
+        let mut seen = 0u64;
+        let mut outs = Vec::new();
+        for rec in recs {
+            let (seq, _ref_ts, inner) = decode_output(&rec.payload).unwrap();
+            if seq < seen {
+                continue; // duplicate from replay
+            }
+            seen = seq + 1;
+            outs.push(T::from_bytes(&inner).unwrap());
+        }
+        per_part.push(outs);
+    }
+    per_part
+}
+
+#[test]
+fn q7_cluster_end_to_end() {
+    let cfg = test_config();
+    let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
+    let cluster = HolonCluster::start_with_clock(cfg.clone(), Q7::new(cfg.window_ms), clock.clone());
+    let prod = producer::spawn(
+        cluster.input.clone(),
+        clock.clone(),
+        cfg.seed,
+        cfg.events_per_sec_per_partition,
+        cfg.duration_ms,
+    );
+    // run the experiment + drain tail
+    std::thread::sleep(clock.wall_for(cfg.duration_ms + 3000));
+    prod.stop();
+    cluster.stop();
+
+    let outs: Vec<Vec<Q7Out>> = decoded_outputs(&cluster);
+    // every partition must have emitted a prefix of windows 0..n
+    let min_windows = outs.iter().map(|o| o.len()).min().unwrap();
+    assert!(
+        min_windows >= 3,
+        "too few completed windows: {:?}",
+        outs.iter().map(|o| o.len()).collect::<Vec<_>>()
+    );
+    for part in &outs {
+        for (i, o) in part.iter().enumerate() {
+            assert_eq!(o.window, i as u64, "windows must be emitted in order");
+        }
+    }
+    // global determinism: all partitions agree on every common window
+    for w in 0..min_windows {
+        let first = &outs[0][w];
+        for part in &outs[1..] {
+            assert_eq!(&part[w], first, "window {w} disagrees across partitions");
+        }
+        assert!(first.price > 0.0, "window {w} should have bids");
+    }
+    // sink metrics recorded
+    assert!(cluster.metrics.outputs.load(std::sync::atomic::Ordering::Acquire) > 0);
+    assert!(cluster.metrics.latency.count() > 0);
+}
+
+#[test]
+fn q0_passthrough_preserves_volume() {
+    let mut cfg = test_config();
+    cfg.duration_ms = 2000;
+    let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
+    let cluster = HolonCluster::start_with_clock(cfg.clone(), Q0, clock.clone());
+    let prod = producer::spawn(
+        cluster.input.clone(),
+        clock.clone(),
+        cfg.seed,
+        1000,
+        cfg.duration_ms,
+    );
+    std::thread::sleep(clock.wall_for(cfg.duration_ms + 2000));
+    let produced = prod.stop();
+    cluster.stop();
+
+    // Each input event is passed through exactly once (after dedup).
+    let mut total = 0;
+    for p in 0..cfg.partitions {
+        let (recs, _) = cluster.output.read(p, 0, usize::MAX >> 1);
+        let mut seen = 0u64;
+        for rec in recs {
+            let (seq, ..) = decode_output(&rec.payload).unwrap();
+            if seq >= seen {
+                seen = seq + 1;
+                total += 1;
+            }
+        }
+    }
+    assert_eq!(total, produced, "passthrough must preserve event count");
+}
+
+#[test]
+fn q4_categories_converge_across_partitions() {
+    let cfg = test_config();
+    let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
+    let cluster = HolonCluster::start_with_clock(cfg.clone(), Q4::new(cfg.window_ms), clock.clone());
+    let prod = producer::spawn(
+        cluster.input.clone(),
+        clock.clone(),
+        cfg.seed,
+        cfg.events_per_sec_per_partition,
+        cfg.duration_ms,
+    );
+    std::thread::sleep(clock.wall_for(cfg.duration_ms + 3000));
+    prod.stop();
+    cluster.stop();
+
+    let outs: Vec<Vec<Q4Out>> = decoded_outputs(&cluster);
+    let min_windows = outs.iter().map(|o| o.len()).min().unwrap();
+    assert!(min_windows >= 3);
+    for w in 0..min_windows {
+        for part in &outs[1..] {
+            assert_eq!(part[w], outs[0][w], "Q4 window {w} must be deterministic");
+        }
+        // with 6 partitions * 2000 ev/s, every category gets bids
+        assert!(outs[0][w].rows.len() >= 5, "rows: {:?}", outs[0][w].rows);
+    }
+}
+
+#[test]
+fn query1_ratios_sum_to_one() {
+    let cfg = test_config();
+    let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
+    let cluster =
+        HolonCluster::start_with_clock(cfg.clone(), Query1::new(cfg.window_ms), clock.clone());
+    let prod = producer::spawn(
+        cluster.input.clone(),
+        clock.clone(),
+        cfg.seed,
+        cfg.events_per_sec_per_partition,
+        cfg.duration_ms,
+    );
+    std::thread::sleep(clock.wall_for(cfg.duration_ms + 3000));
+    prod.stop();
+    cluster.stop();
+
+    let outs: Vec<Vec<RatioOut>> = decoded_outputs(&cluster);
+    let min_windows = outs.iter().map(|o| o.len()).min().unwrap();
+    assert!(min_windows >= 3);
+    for w in 0..min_windows {
+        // all partitions agree on the global total
+        let total = outs[0][w].total;
+        assert!(total > 0);
+        let mut local_sum = 0;
+        for part in &outs {
+            assert_eq!(part[w].total, total);
+            local_sum += part[w].local;
+        }
+        // locals partition the global count exactly
+        assert_eq!(local_sum, total, "window {w}");
+    }
+}

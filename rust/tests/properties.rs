@@ -1,0 +1,338 @@
+//! Randomized property tests (proptest_lite): CRDT lattice laws over
+//! generated states, WCRDT convergence/determinism invariants, codec
+//! round-trips, and coordinator assignment invariants.
+
+use holon::codec::{Decode, Encode};
+use holon::crdt::{BoundedTopK, Crdt, GCounter, MapCrdt, ORSet, PNCounter, PrefixAgg};
+use holon::engine::membership::{assignment, target_owner};
+use holon::proptest_lite::forall;
+use holon::util::XorShift64;
+use holon::wcrdt::{WindowAssigner, WindowedCrdt};
+
+// ---- generators -------------------------------------------------------
+
+fn gen_gcounter(rng: &mut XorShift64, size: usize) -> GCounter {
+    let mut g = GCounter::new();
+    for _ in 0..rng.next_below(size as u64 + 1) {
+        g.add(rng.next_below(8), rng.next_below(100));
+    }
+    g
+}
+
+fn gen_pncounter(rng: &mut XorShift64, size: usize) -> PNCounter {
+    let mut g = PNCounter::new();
+    for _ in 0..rng.next_below(size as u64 + 1) {
+        if rng.chance(0.5) {
+            g.add(rng.next_below(8), rng.next_below(100));
+        } else {
+            g.sub(rng.next_below(8), rng.next_below(100));
+        }
+    }
+    g
+}
+
+fn gen_topk(rng: &mut XorShift64, size: usize) -> BoundedTopK {
+    let mut t = BoundedTopK::new(4);
+    for _ in 0..rng.next_below(size as u64 + 1) {
+        t.offer(
+            rng.next_f64() * 1000.0,
+            rng.next_below(1000),
+            rng.next_below(8),
+        );
+    }
+    t
+}
+
+fn gen_orset(rng: &mut XorShift64, size: usize) -> ORSet<u64> {
+    let mut s = ORSet::new();
+    for _ in 0..rng.next_below(size as u64 + 1) {
+        let v = rng.next_below(16);
+        if rng.chance(0.7) {
+            s.insert(rng.next_below(4), v);
+        } else {
+            s.remove(&v);
+        }
+    }
+    s
+}
+
+fn gen_map(rng: &mut XorShift64, size: usize) -> MapCrdt<u64, GCounter> {
+    let mut m: MapCrdt<u64, GCounter> = MapCrdt::new();
+    for _ in 0..rng.next_below(size as u64 + 1) {
+        m.entry(rng.next_below(6)).add(rng.next_below(8), rng.next_below(50));
+    }
+    m
+}
+
+// ---- lattice laws over random states ----------------------------------
+
+fn check_laws<C: Crdt + PartialEq + std::fmt::Debug>(a: &C, b: &C, c: &C) -> Result<(), String> {
+    let ab = a.clone().merged(b);
+    let ba = b.clone().merged(a);
+    if ab != ba {
+        return Err(format!("commutativity: {ab:?} != {ba:?}"));
+    }
+    let ab_c = a.clone().merged(b).merged(c);
+    let a_bc = a.clone().merged(&b.clone().merged(c));
+    if ab_c != a_bc {
+        return Err("associativity".to_string());
+    }
+    let aa = a.clone().merged(a);
+    if &aa != a {
+        return Err("idempotence".to_string());
+    }
+    let bottom = C::default().merged(a);
+    if &bottom != a {
+        return Err("identity".to_string());
+    }
+    Ok(())
+}
+
+macro_rules! lattice_law_test {
+    ($name:ident, $gen:ident) => {
+        #[test]
+        fn $name() {
+            forall(
+                stringify!($name),
+                150,
+                48,
+                &|rng: &mut XorShift64, size: usize| {
+                    ($gen(rng, size), $gen(rng, size), $gen(rng, size))
+                },
+                |(a, b, c)| check_laws(a, b, c),
+            );
+        }
+    };
+}
+
+lattice_law_test!(gcounter_lattice_laws, gen_gcounter);
+lattice_law_test!(pncounter_lattice_laws, gen_pncounter);
+lattice_law_test!(topk_lattice_laws, gen_topk);
+lattice_law_test!(orset_lattice_laws, gen_orset);
+lattice_law_test!(mapcrdt_lattice_laws, gen_map);
+
+// ---- codec round-trips over random states ------------------------------
+
+macro_rules! codec_roundtrip_test {
+    ($name:ident, $gen:ident, $ty:ty) => {
+        #[test]
+        fn $name() {
+            forall(
+                stringify!($name),
+                100,
+                48,
+                &|rng: &mut XorShift64, size: usize| $gen(rng, size),
+                |v: &$ty| {
+                    let b = v.to_bytes();
+                    match <$ty>::from_bytes(&b) {
+                        Ok(back) if &back == v => Ok(()),
+                        Ok(back) => Err(format!("roundtrip mismatch: {back:?}")),
+                        Err(e) => Err(format!("decode failed: {e}")),
+                    }
+                },
+            );
+        }
+    };
+}
+
+codec_roundtrip_test!(gcounter_codec_roundtrip, gen_gcounter, GCounter);
+codec_roundtrip_test!(topk_codec_roundtrip, gen_topk, BoundedTopK);
+codec_roundtrip_test!(orset_codec_roundtrip, gen_orset, ORSet<u64>);
+codec_roundtrip_test!(map_codec_roundtrip, gen_map, MapCrdt<u64, GCounter>);
+
+// ---- WCRDT convergence: any merge order, same completed values ---------
+
+#[test]
+fn wcrdt_replicas_converge_in_any_merge_order() {
+    forall(
+        "wcrdt convergence",
+        60,
+        32,
+        &|rng: &mut XorShift64, size: usize| {
+            // per-partition update scripts: (partition, ts, amount)
+            let parts = 2 + rng.next_below(4) as u32;
+            let mut updates = Vec::new();
+            for p in 0..parts {
+                let n = rng.next_below(size as u64 + 1);
+                let mut ts = 0;
+                for _ in 0..n {
+                    ts += rng.next_below(400);
+                    updates.push((p, ts, 1 + rng.next_below(5)));
+                }
+            }
+            (parts, updates, rng.next_u64())
+        },
+        |(parts, updates, shuffle_seed)| {
+            let mk = || -> WindowedCrdt<GCounter> {
+                WindowedCrdt::new(WindowAssigner::tumbling(1000), 0..*parts)
+            };
+            // one "source" replica per partition applies its own updates
+            let mut sources: Vec<WindowedCrdt<GCounter>> = (0..*parts).map(|_| mk()).collect();
+            let mut max_ts = vec![0u64; *parts as usize];
+            for &(p, ts, n) in updates {
+                sources[p as usize]
+                    .insert_with(p, ts, |c| c.add(p as u64, n))
+                    .map_err(|e| e.to_string())?;
+                max_ts[p as usize] = max_ts[p as usize].max(ts);
+            }
+            for p in 0..*parts {
+                sources[p as usize].increment_watermark(p, max_ts[p as usize] + 1000);
+            }
+            // replica A merges in order; replica B in a shuffled order
+            let mut a = mk();
+            for s in &sources {
+                a.merge(s);
+            }
+            let mut b = mk();
+            let mut order: Vec<usize> = (0..sources.len()).collect();
+            let mut rng = XorShift64::new(*shuffle_seed);
+            for i in (1..order.len()).rev() {
+                order.swap(i, rng.next_below(i as u64 + 1) as usize);
+            }
+            for &i in &order {
+                b.merge(&sources[i]);
+            }
+            if a != b {
+                return Err("merge order changed the state".to_string());
+            }
+            // every completed window reads identically
+            let gw = a.global_watermark();
+            let mut w = 0;
+            while (w + 1) * 1000 <= gw {
+                if a.window_value(w) != b.window_value(w) {
+                    return Err(format!("window {w} differs"));
+                }
+                w += 1;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn wcrdt_projection_roundtrip_preserves_contribution() {
+    forall(
+        "wcrdt projection",
+        80,
+        32,
+        &|rng: &mut XorShift64, size: usize| {
+            let mut w: WindowedCrdt<GCounter> =
+                WindowedCrdt::new(WindowAssigner::tumbling(500), [0, 1, 2]);
+            let mut ts = 0;
+            for _ in 0..rng.next_below(size as u64 + 1) {
+                ts += rng.next_below(300);
+                let p = rng.next_below(3) as u32;
+                let _ = w.insert_with(p, ts, |c| c.add(p as u64, 1));
+            }
+            w.increment_watermark(0, ts);
+            w
+        },
+        |w| {
+            use holon::api::SharedState;
+            for p in 0..3u32 {
+                let slice = SharedState::project(w, p);
+                let mut joined = w.clone();
+                joined.merge(&slice);
+                if &joined != w {
+                    return Err(format!("projection of {p} added information"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---- membership / assignment invariants --------------------------------
+
+#[test]
+fn assignment_is_total_and_stable_under_failures() {
+    forall(
+        "rendezvous assignment",
+        100,
+        16,
+        &|rng: &mut XorShift64, size: usize| {
+            let n = 2 + rng.next_below(size as u64 + 2) as u32;
+            let kill = rng.next_below(n as u64) as u32;
+            let partitions = 1 + rng.next_below(200) as u32;
+            (n, kill, partitions)
+        },
+        |&(n, kill, partitions)| {
+            let all: Vec<u32> = (0..n).collect();
+            let survivors: Vec<u32> = (0..n).filter(|&x| x != kill).collect();
+            let before = assignment(partitions, &all);
+            let after = assignment(partitions, &survivors);
+            for p in 0..partitions {
+                if !survivors.contains(&after[&p]) {
+                    return Err(format!("partition {p} assigned to dead node"));
+                }
+                if before[&p] != kill && before[&p] != after[&p] {
+                    return Err(format!("partition {p} moved needlessly"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn target_owner_is_consistent_across_views() {
+    // Two nodes with the same alive view must pick the same owner.
+    forall(
+        "owner consistency",
+        100,
+        12,
+        &|rng: &mut XorShift64, size: usize| {
+            let n = 1 + rng.next_below(size as u64 + 1) as u32;
+            let p = rng.next_below(1000) as u32;
+            (n, p)
+        },
+        |&(n, p)| {
+            let alive: Vec<u32> = (0..n).collect();
+            let a = target_owner(p, &alive);
+            let b = target_owner(p, &alive);
+            if a == b {
+                Ok(())
+            } else {
+                Err("nondeterministic owner".to_string())
+            }
+        },
+    );
+}
+
+// ---- PrefixAgg prefix discipline ----------------------------------------
+
+#[test]
+fn prefix_agg_replay_join_is_lossless() {
+    // A checkpoint at any prefix, replayed forward, must join with the
+    // full state to exactly the full state (the recovery identity).
+    forall(
+        "prefix replay",
+        100,
+        64,
+        &|rng: &mut XorShift64, size: usize| {
+            let n = rng.next_below(size as u64 + 1) as usize;
+            let vals: Vec<f64> = (0..n).map(|_| rng.next_below(10_000) as f64).collect();
+            let cut = if n == 0 { 0 } else { rng.next_below(n as u64 + 1) as usize };
+            (vals, cut)
+        },
+        |(vals, cut)| {
+            let mut full = PrefixAgg::new();
+            for &v in vals {
+                full.observe(1, v);
+            }
+            // replica recovered at `cut`, replays the suffix
+            let mut replica = PrefixAgg::new();
+            for &v in &vals[..*cut] {
+                replica.observe(1, v);
+            }
+            for &v in &vals[*cut..] {
+                replica.observe(1, v);
+            }
+            replica.merge(&full);
+            if replica != full {
+                return Err("replayed replica != full state".to_string());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,9 +1,8 @@
 """Pallas crdt_merge kernel vs oracle + lattice laws."""
 
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+from hypcompat import given, settings, st
 
 from compile.kernels import ref
 from compile.kernels.crdt_merge import COLS, ROW_TILE, ROWS, crdt_merge

@@ -1,11 +1,9 @@
 """Pallas window_aggregate kernel vs pure-jnp oracle (the core L1 signal)."""
 
-import hypothesis
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from hypcompat import HAVE_HYPOTHESIS, given, hypothesis, settings, st
 
 from compile.kernels import ref
 from compile.kernels.window_agg import (
@@ -16,8 +14,9 @@ from compile.kernels.window_agg import (
     window_aggregate,
 )
 
-hypothesis.settings.register_profile("ci", deadline=None, max_examples=50)
-hypothesis.settings.load_profile("ci")
+if HAVE_HYPOTHESIS:
+    hypothesis.settings.register_profile("ci", deadline=None, max_examples=50)
+    hypothesis.settings.load_profile("ci")
 
 
 def run_both(values, window_ids, windows=WINDOWS):

@@ -85,6 +85,17 @@ fn main() {
     bench("scalar_aggregate_1024", 100, 10_000, || {
         std::hint::black_box(scalar.aggregate(&items));
     });
+
+    // Many-window batches (keyed queries like Q4 put window × key
+    // segments in one batch): the case where the old O(items × windows)
+    // linear scan collapsed and the hash-map group-by shines.
+    section("micro: batch aggregation (4096 events, 512 windows)");
+    let wide: Vec<(f64, u64)> = (0..4096)
+        .map(|i| (((i * 37) % 9999) as f64, (i % 512) as u64))
+        .collect();
+    bench("scalar_aggregate_4096_512w", 50, 5_000, || {
+        std::hint::black_box(scalar.aggregate(&wide));
+    });
     match XlaWindowAggregator::load(std::path::Path::new("artifacts")) {
         Ok(mut xla) => {
             bench("xla_aggregate_1024", 20, 500, || {

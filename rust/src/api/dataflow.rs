@@ -1,158 +1,361 @@
-//! The dataflow API (paper §3.1): a Flink-like declarative veneer over
-//! the procedural API. "Programs in the dataflow API are always
-//! deterministic" (§3.3) because they compile to the safe emission
-//! pattern: windows are drained in sequence behind a cursor, so the
-//! nondeterministic completion *timing* never reaches the user code.
+//! Dataflow API v2 (paper §3.1): declarative, composable window
+//! pipelines compiled onto the procedural [`Processor`] model.
 //!
-//! A [`WindowQuery`] is the paper's Figure-2 pipeline: source →
-//! windowed CRDT insert → (completed) window value → map → emit. The
-//! user supplies two closures — how an event folds into the CRDT and
-//! how a completed window value maps to an output — and gets a full
-//! [`Processor`] with exactly-once, work stealing and determinism for
-//! free.
+//! "Programs in the dataflow API are always deterministic" (§3.3)
+//! because every pipeline compiles to the safe emission pattern:
+//! completed windows are drained in sequence behind an [`EmitCursor`],
+//! so the nondeterministic completion *timing* never reaches user code.
+//!
+//! A pipeline is the paper's Figure-2 shape, generalized:
+//!
+//! ```text
+//! source::<E>() → filter/map/flat_map → window → (key_by →) aggregate → emit
+//! ```
+//!
+//! * the **decode stage** turns log [`Record`]s into any event type `E`
+//!   ([`Dataflow::source`] for `E: Decode`, [`Dataflow::from_fn`] for
+//!   custom decoders) — nothing is hardcoded to Nexmark;
+//! * **pre-window combinators** [`filter`](Dataflow::filter),
+//!   [`map`](Dataflow::map), [`filter_map`](Dataflow::filter_map) and
+//!   [`flat_map`](Dataflow::flat_map) reshape the event stream;
+//! * [`tumbling`](Dataflow::tumbling) / [`sliding`](Dataflow::sliding)
+//!   open a windowed scope; [`allowed_lateness`](Windowed::allowed_lateness)
+//!   tolerates bounded disorder (§3.2);
+//! * [`key_by`](Windowed::key_by) routes events into per-key CRDT
+//!   aggregation backed by [`MapCrdt`];
+//! * [`aggregate`](Windowed::aggregate) folds events into any [`Crdt`],
+//!   and [`emit_typed`](WindowAgg::emit_typed) maps each completed
+//!   (globally deterministic) window value to a typed, `Encode`d output;
+//! * stateless pipelines end with [`emit_each`](Dataflow::emit_each)
+//!   (Nexmark Q0/Q2 are two lines);
+//! * [`MultiQuery`] fans one event stream into several pipelines that
+//!   share a single engine job (multiway composition in the sense of
+//!   Gulisano et al.), tagging each output with its branch.
+//!
+//! Q7 ("highest bid per window") in the v2 API:
+//!
+//! ```ignore
+//! let q7 = Dataflow::<Event>::source()
+//!     .tumbling(1000)
+//!     .aggregate(|p, ev, tk: &mut BoundedTopK| {
+//!         if let Event::Bid { auction, price, .. } = ev {
+//!             tk.offer(*price, *auction, p as u64);
+//!         }
+//!     })
+//!     .emit_typed(|w, tk| Some(Q7Out { window: w, price: tk.max_score().unwrap_or(0.0), auction: 0 }));
+//! ```
+//!
+//! Exactly-once, work stealing and whole-system determinism are
+//! inherited from the engine for free — a pipeline *is* a [`Processor`].
 
-use std::marker::PhantomData;
+use std::sync::Arc;
 
-use crate::crdt::Crdt;
+use crate::codec::{Decode, Encode};
+use crate::crdt::{Crdt, MapCrdt};
 use crate::log::Record;
-use crate::nexmark::Event;
 use crate::util::{PartitionId, SimTime};
 use crate::wcrdt::{WatermarkGen, WindowAssigner, WindowId, WindowedCrdt};
 
-use super::{Ctx, Processor};
+use super::{Ctx, EmitCursor, Processor};
 
-/// Emission cursor local state (same layout as queries::Cursor, kept
-/// here so the dataflow API has no dependency on the query module).
-#[derive(Debug, Clone, Default, PartialEq)]
-pub struct DfCursor {
-    pub next: WindowId,
+/// The canonical emission cursor under its historical dataflow name.
+pub use super::EmitCursor as DfCursor;
+
+/// Fused decode + pre-window transform chain in sink style: one record
+/// in, zero or more events pushed into the sink (zero: undecodable or
+/// filtered; >1: `flat_map`). Sink style keeps the per-event hot path
+/// allocation-free — combinators nest closures instead of collecting
+/// intermediate `Vec`s per stage.
+type XForm<E> = Arc<dyn Fn(&Record, &mut dyn FnMut(E)) + Send + Sync>;
+/// Event fold into a per-window CRDT contribution.
+type InsertFn<E, C> = Arc<dyn Fn(PartitionId, &E, &mut C) + Send + Sync>;
+/// Completed-window map to encoded output bytes (`None` suppresses).
+type EmitFn<C> = Arc<dyn Fn(WindowId, &C) -> Option<Vec<u8>> + Send + Sync>;
+
+// ======================================================================
+// Stage 1 — event stream: decode + filter/map/flat_map
+// ======================================================================
+
+/// A typed event stream: the decode stage plus any chain of pre-window
+/// combinators. Entry point of every v2 pipeline.
+pub struct Dataflow<E> {
+    xform: XForm<E>,
 }
 
-impl crate::codec::Encode for DfCursor {
-    fn encode(&self, w: &mut crate::codec::Writer) {
-        w.put_u64(self.next);
-    }
-}
-
-impl crate::codec::Decode for DfCursor {
-    fn decode(r: &mut crate::codec::Reader) -> crate::codec::DecodeResult<Self> {
-        Ok(DfCursor { next: r.get_u64()? })
-    }
-}
-
-/// A declarative windowed global aggregation.
-///
-/// ```ignore
-/// // Q7 in the dataflow API: five lines.
-/// let q7 = WindowQueryBuilder::<BoundedTopK>::tumbling(1000)
-///     .insert(|p, ev, tk| {
-///         if let Event::Bid { auction, price, .. } = ev {
-///             tk.offer(*price, *auction, p as u64);
-///         }
-///     })
-///     .emit(|w, tk| Some(encode(w, tk.max_score())));
-/// ```
-#[derive(Clone)]
-pub struct WindowQuery<C, FIns, FEmit>
-where
-    C: Crdt,
-    FIns: Fn(PartitionId, &Event, &mut C) + Clone + Send + Sync + 'static,
-    FEmit: Fn(WindowId, &C) -> Option<Vec<u8>> + Clone + Send + Sync + 'static,
-{
-    assigner: WindowAssigner,
-    watermark_gen: WatermarkGen,
-    insert: FIns,
-    emit: FEmit,
-    _marker: PhantomData<fn() -> C>,
-}
-
-/// Builder entry point: a tumbling-window query over a CRDT type.
-pub struct WindowQueryBuilder<C: Crdt> {
-    assigner: WindowAssigner,
-    watermark_gen: WatermarkGen,
-    _marker: PhantomData<fn() -> C>,
-}
-
-impl<C: Crdt> WindowQueryBuilder<C> {
-    /// Start building a tumbling-window query.
-    pub fn tumbling(window_ms: SimTime) -> Self {
+impl<E> Clone for Dataflow<E> {
+    fn clone(&self) -> Self {
         Self {
+            xform: Arc::clone(&self.xform),
+        }
+    }
+}
+
+impl<E: Decode + 'static> Dataflow<E> {
+    /// Source stage: decode each record payload as an `E`. Records that
+    /// fail to decode are skipped (they still advance event time).
+    pub fn source() -> Self {
+        Self {
+            xform: Arc::new(|rec: &Record, sink: &mut dyn FnMut(E)| {
+                if let Ok(e) = E::from_bytes(&rec.payload) {
+                    sink(e);
+                }
+            }),
+        }
+    }
+}
+
+impl<E: 'static> Dataflow<E> {
+    /// Source stage with a custom decoder — for event types that do not
+    /// implement [`Decode`] or live in foreign formats. `None` skips the
+    /// record.
+    pub fn from_fn(f: impl Fn(&Record) -> Option<E> + Send + Sync + 'static) -> Self {
+        Self {
+            xform: Arc::new(move |rec, sink| {
+                if let Some(e) = f(rec) {
+                    sink(e);
+                }
+            }),
+        }
+    }
+
+    /// Keep only events matching `pred`. Dropped events still advance
+    /// the partition watermark (they were observed, just not folded).
+    pub fn filter(self, pred: impl Fn(&E) -> bool + Send + Sync + 'static) -> Self {
+        let prev = self.xform;
+        Self {
+            xform: Arc::new(move |rec, sink| {
+                prev(rec, &mut |e| {
+                    if pred(&e) {
+                        sink(e);
+                    }
+                })
+            }),
+        }
+    }
+
+    /// Transform each event.
+    pub fn map<F: 'static>(self, f: impl Fn(E) -> F + Send + Sync + 'static) -> Dataflow<F> {
+        let prev = self.xform;
+        Dataflow {
+            xform: Arc::new(move |rec, sink| prev(rec, &mut |e| sink(f(e)))),
+        }
+    }
+
+    /// Filter and transform in one stage.
+    pub fn filter_map<F: 'static>(
+        self,
+        f: impl Fn(E) -> Option<F> + Send + Sync + 'static,
+    ) -> Dataflow<F> {
+        let prev = self.xform;
+        Dataflow {
+            xform: Arc::new(move |rec, sink| {
+                prev(rec, &mut |e| {
+                    if let Some(x) = f(e) {
+                        sink(x);
+                    }
+                })
+            }),
+        }
+    }
+
+    /// Expand each event into zero or more events.
+    pub fn flat_map<F: 'static, I: IntoIterator<Item = F>>(
+        self,
+        f: impl Fn(E) -> I + Send + Sync + 'static,
+    ) -> Dataflow<F> {
+        let prev = self.xform;
+        Dataflow {
+            xform: Arc::new(move |rec, sink| {
+                prev(rec, &mut |e| {
+                    for x in f(e) {
+                        sink(x);
+                    }
+                })
+            }),
+        }
+    }
+
+    /// Open a tumbling-window scope of `window_ms` sim-ms.
+    pub fn tumbling(self, window_ms: SimTime) -> Windowed<E> {
+        Windowed {
+            xform: self.xform,
             assigner: WindowAssigner::tumbling(window_ms),
             watermark_gen: WatermarkGen::Ascending,
-            _marker: PhantomData,
         }
     }
 
-    /// Start building a sliding-window query (§7 window generalization;
-    /// events fold into every covering window).
-    pub fn sliding(size_ms: SimTime, slide_ms: SimTime) -> Self {
-        Self {
+    /// Open a sliding-window scope (§7 window generalization; events
+    /// fold into every covering window).
+    pub fn sliding(self, size_ms: SimTime, slide_ms: SimTime) -> Windowed<E> {
+        Windowed {
+            xform: self.xform,
             assigner: WindowAssigner::sliding(size_ms, slide_ms),
             watermark_gen: WatermarkGen::Ascending,
-            _marker: PhantomData,
         }
     }
 
-    /// Tolerate events arriving up to `max_delay_ms` late (paper §3.2's
-    /// out-of-order handling): the partition watermark trails the max
-    /// observed event time by the bound; later events are dropped.
+    /// Stateless terminal stage: emit one typed output per surviving
+    /// event, re-using the event's broker insertion time as the latency
+    /// reference (Nexmark Q0/Q2 shape). `None` suppresses the event.
+    pub fn emit_each<O: Encode + 'static>(
+        self,
+        f: impl Fn(&E) -> Option<O> + Send + Sync + 'static,
+    ) -> Passthrough {
+        let xform = self.xform;
+        Passthrough {
+            apply: Arc::new(move |rec, out| {
+                xform(rec, &mut |e| {
+                    if let Some(o) = f(&e) {
+                        out(o.to_bytes());
+                    }
+                })
+            }),
+        }
+    }
+}
+
+// ======================================================================
+// Stage 2 — windowed scope
+// ======================================================================
+
+/// A windowed event stream awaiting its aggregation fold.
+pub struct Windowed<E> {
+    xform: XForm<E>,
+    assigner: WindowAssigner,
+    watermark_gen: WatermarkGen,
+}
+
+impl<E: 'static> Windowed<E> {
+    /// Tolerate events arriving up to `max_delay_ms` late (§3.2): the
+    /// partition watermark trails the maximum observed event time by the
+    /// bound; events later than the bound are dropped.
     pub fn allowed_lateness(mut self, max_delay_ms: SimTime) -> Self {
         self.watermark_gen = WatermarkGen::BoundedOutOfOrder { max_delay_ms };
         self
     }
 
-    /// Provide the event-fold: how one event updates this partition's
-    /// contribution to its window.
-    pub fn insert<FIns>(self, insert: FIns) -> WindowQueryEmit<C, FIns>
-    where
-        FIns: Fn(PartitionId, &Event, &mut C) + Clone + Send + Sync + 'static,
-    {
-        WindowQueryEmit {
+    /// Fold every event of a window into one CRDT contribution — the
+    /// *global* (unkeyed) aggregation of the paper's Figure 2.
+    pub fn aggregate<C: Crdt>(
+        self,
+        insert: impl Fn(PartitionId, &E, &mut C) + Send + Sync + 'static,
+    ) -> WindowAgg<E, C> {
+        WindowAgg {
+            xform: self.xform,
             assigner: self.assigner,
             watermark_gen: self.watermark_gen,
-            insert,
-            _marker: PhantomData,
+            insert: Arc::new(insert),
+        }
+    }
+
+    /// Route events into per-key CRDT aggregation (backed by
+    /// [`MapCrdt`]) — keyed global aggregations like Nexmark Q4/Q5,
+    /// still shuffle-free.
+    pub fn key_by<K>(self, key: impl Fn(&E) -> K + Send + Sync + 'static) -> Keyed<E, K>
+    where
+        K: Ord + Clone + Send + Encode + Decode + 'static,
+    {
+        Keyed {
+            inner: self,
+            key: Arc::new(key),
         }
     }
 }
 
-/// Intermediate builder holding the insert fold.
-pub struct WindowQueryEmit<C: Crdt, FIns> {
-    assigner: WindowAssigner,
-    watermark_gen: WatermarkGen,
-    insert: FIns,
-    _marker: PhantomData<fn() -> C>,
+/// A windowed, keyed event stream awaiting its per-key fold.
+pub struct Keyed<E, K> {
+    inner: Windowed<E>,
+    key: Arc<dyn Fn(&E) -> K + Send + Sync>,
 }
 
-impl<C, FIns> WindowQueryEmit<C, FIns>
+impl<E: 'static, K> Keyed<E, K>
 where
-    C: Crdt,
-    FIns: Fn(PartitionId, &Event, &mut C) + Clone + Send + Sync + 'static,
+    K: Ord + Clone + Send + Encode + Decode + 'static,
 {
-    /// Provide the output map over completed (deterministic) window
-    /// values; `None` suppresses the window's output.
-    pub fn emit<FEmit>(self, emit: FEmit) -> WindowQuery<C, FIns, FEmit>
-    where
-        FEmit: Fn(WindowId, &C) -> Option<Vec<u8>> + Clone + Send + Sync + 'static,
-    {
-        WindowQuery {
+    /// Fold each event into the CRDT of its key (created at lattice
+    /// bottom on first touch). The pipeline's window value is a
+    /// [`MapCrdt`] from key to the inner CRDT.
+    pub fn aggregate<C: Crdt>(
+        self,
+        insert: impl Fn(PartitionId, &E, &mut C) + Send + Sync + 'static,
+    ) -> WindowAgg<E, MapCrdt<K, C>> {
+        let key = self.key;
+        WindowAgg {
+            xform: self.inner.xform,
+            assigner: self.inner.assigner,
+            watermark_gen: self.inner.watermark_gen,
+            insert: Arc::new(move |p, e, m: &mut MapCrdt<K, C>| insert(p, e, m.entry(key(e)))),
+        }
+    }
+}
+
+// ======================================================================
+// Stage 3 — aggregated scope awaiting emission
+// ======================================================================
+
+/// A fully-folded window pipeline awaiting its emission stage.
+pub struct WindowAgg<E, C: Crdt> {
+    xform: XForm<E>,
+    assigner: WindowAssigner,
+    watermark_gen: WatermarkGen,
+    insert: InsertFn<E, C>,
+}
+
+impl<E: 'static, C: Crdt> WindowAgg<E, C> {
+    /// Typed emission: map each completed (deterministic) window value
+    /// to an `Encode`d output; `None` suppresses the window.
+    pub fn emit_typed<O: Encode + 'static>(
+        self,
+        emit: impl Fn(WindowId, &C) -> Option<O> + Send + Sync + 'static,
+    ) -> WindowPipeline<E, C> {
+        self.emit_raw(move |w, c| emit(w, c).map(|o| o.to_bytes()))
+    }
+
+    /// Raw-bytes emission, for outputs assembled with [`crate::codec::Writer`]
+    /// directly.
+    pub fn emit_raw(
+        self,
+        emit: impl Fn(WindowId, &C) -> Option<Vec<u8>> + Send + Sync + 'static,
+    ) -> WindowPipeline<E, C> {
+        WindowPipeline {
+            xform: self.xform,
             assigner: self.assigner,
             watermark_gen: self.watermark_gen,
             insert: self.insert,
-            emit,
-            _marker: PhantomData,
+            emit: Arc::new(emit),
         }
     }
 }
 
-impl<C, FIns, FEmit> Processor for WindowQuery<C, FIns, FEmit>
-where
-    C: Crdt,
-    FIns: Fn(PartitionId, &Event, &mut C) + Clone + Send + Sync + 'static,
-    FEmit: Fn(WindowId, &C) -> Option<Vec<u8>> + Clone + Send + Sync + 'static,
-{
+// ======================================================================
+// Compiled pipelines (Processor impls)
+// ======================================================================
+
+/// A compiled windowed pipeline: decode → transforms → WCRDT fold →
+/// cursor-drained typed emission. Created by [`WindowAgg::emit_typed`].
+pub struct WindowPipeline<E, C: Crdt> {
+    xform: XForm<E>,
+    assigner: WindowAssigner,
+    watermark_gen: WatermarkGen,
+    insert: InsertFn<E, C>,
+    emit: EmitFn<C>,
+}
+
+impl<E, C: Crdt> Clone for WindowPipeline<E, C> {
+    fn clone(&self) -> Self {
+        Self {
+            xform: Arc::clone(&self.xform),
+            assigner: self.assigner,
+            watermark_gen: self.watermark_gen,
+            insert: Arc::clone(&self.insert),
+            emit: Arc::clone(&self.emit),
+        }
+    }
+}
+
+impl<E: 'static, C: Crdt> Processor for WindowPipeline<E, C> {
     type Shared = WindowedCrdt<C>;
-    type Local = DfCursor;
+    type Local = EmitCursor;
 
     fn init_shared(&self, partitions: &[PartitionId]) -> Self::Shared {
         WindowedCrdt::new(self.assigner, partitions.iter().copied())
@@ -163,7 +366,7 @@ where
         ctx: &mut Ctx,
         shared: &Self::Shared,
         own: &mut Self::Shared,
-        local: &mut DfCursor,
+        local: &mut EmitCursor,
         events: &[Record],
     ) {
         let p = ctx.partition;
@@ -172,22 +375,40 @@ where
                 WatermarkGen::Ascending => 0,
                 WatermarkGen::BoundedOutOfOrder { max_delay_ms } => max_delay_ms,
             };
-        let mut saw_event = false;
+        // One reusable buffer for the whole batch: the transform chain
+        // sinks into it, so the common 0/1-event record allocates nothing
+        // after warm-up, and sliding windows fold the decoded events into
+        // every covering window without re-running the chain.
+        let mut evs: Vec<E> = Vec::new();
         for rec in events {
-            if let Ok(ev) = crate::codec::Decode::from_bytes(&rec.payload) {
-                let ev: Event = ev;
-                max_ts = max_ts.max(rec.event_ts);
-                saw_event = true;
-                if self.watermark_gen.is_late(rec.event_ts, max_ts) {
-                    continue; // beyond the allowed lateness: drop
-                }
-                // fold into every covering window (1 for tumbling)
-                for w in self.assigner.windows_of(rec.event_ts) {
-                    own.insert_window_with(p, w, |c| (self.insert)(p, &ev, c));
-                }
+            // Every record advances event time — including ones the
+            // transform chain drops — matching the procedural queries'
+            // watermark behavior (a filtered-out event was still
+            // observed by this partition).
+            max_ts = max_ts.max(rec.event_ts);
+            if self.watermark_gen.is_late(rec.event_ts, max_ts) {
+                // Beyond the allowed lateness: drop. Under `Ascending`
+                // this fires on any timestamp regression, which keeps
+                // the pipeline deterministic under re-batching; ordered
+                // input per partition (the paper's implementation
+                // assumption) never triggers it.
+                continue;
+            }
+            evs.clear();
+            (self.xform)(rec, &mut |e| evs.push(e));
+            if evs.is_empty() {
+                continue;
+            }
+            // fold into every covering window (1 for tumbling)
+            for w in self.assigner.windows_of(rec.event_ts) {
+                own.insert_window_with(p, w, |c| {
+                    for e in &evs {
+                        (self.insert)(p, e, c);
+                    }
+                });
             }
         }
-        if saw_event {
+        if !events.is_empty() {
             own.increment_watermark(p, self.watermark_gen.watermark(max_ts));
         }
 
@@ -205,21 +426,143 @@ where
     }
 }
 
+/// A compiled stateless pipeline: decode → transforms → per-event typed
+/// emission (no windows, no shared state). Created by
+/// [`Dataflow::emit_each`].
+pub struct Passthrough {
+    apply: Arc<dyn Fn(&Record, &mut dyn FnMut(Vec<u8>)) + Send + Sync>,
+}
+
+impl Clone for Passthrough {
+    fn clone(&self) -> Self {
+        Self {
+            apply: Arc::clone(&self.apply),
+        }
+    }
+}
+
+impl Processor for Passthrough {
+    type Shared = ();
+    type Local = ();
+
+    fn init_shared(&self, _partitions: &[PartitionId]) {}
+
+    fn process(
+        &self,
+        ctx: &mut Ctx,
+        _shared: &(),
+        _own: &mut (),
+        _local: &mut (),
+        events: &[Record],
+    ) {
+        for rec in events {
+            // Latency reference = input insertion time.
+            (self.apply)(rec, &mut |payload| ctx.emit(rec.insert_ts, payload));
+        }
+    }
+}
+
+// ======================================================================
+// MultiQuery — fan one stream into several pipelines, one engine job
+// ======================================================================
+
+/// Runs two processors over the same event stream inside one engine job,
+/// sharing gossip, checkpoints and work stealing. Outputs are prefixed
+/// with a branch tag byte (`0` = left, `1` = right); [`MultiQuery::demux`]
+/// splits it back off.
+///
+/// Chain [`and`](MultiQuery::and) for wider fan-outs; each nesting level
+/// prepends its own tag byte, so with `MultiQuery::new(a, b).and(c)` an
+/// output of `a` starts with `[0, 0]`, `b` with `[0, 1]`, `c` with `[1]`.
+#[derive(Clone)]
+pub struct MultiQuery<A, B> {
+    left: A,
+    right: B,
+}
+
+impl<A: Processor, B: Processor> MultiQuery<A, B> {
+    pub fn new(left: A, right: B) -> Self {
+        Self { left, right }
+    }
+
+    /// Widen the fan-out with another pipeline.
+    pub fn and<C2: Processor>(self, next: C2) -> MultiQuery<Self, C2> {
+        MultiQuery::new(self, next)
+    }
+}
+
+/// Split a [`MultiQuery`] output payload into `(branch tag, inner
+/// payload)`. A free function so callers need not name the (usually
+/// opaque `impl Processor`) branch types.
+pub fn demux(payload: &[u8]) -> (u8, &[u8]) {
+    let (tag, rest) = payload
+        .split_first()
+        .expect("MultiQuery output payload carries a tag byte");
+    (*tag, rest)
+}
+
+fn tagged(tag: u8, payload: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(payload.len() + 1);
+    out.push(tag);
+    out.extend_from_slice(&payload);
+    out
+}
+
+impl<A: Processor, B: Processor> Processor for MultiQuery<A, B> {
+    type Shared = (A::Shared, B::Shared);
+    type Local = (A::Local, B::Local);
+
+    fn init_shared(&self, partitions: &[PartitionId]) -> Self::Shared {
+        (
+            self.left.init_shared(partitions),
+            self.right.init_shared(partitions),
+        )
+    }
+
+    fn process(
+        &self,
+        ctx: &mut Ctx,
+        shared: &Self::Shared,
+        own: &mut Self::Shared,
+        local: &mut Self::Local,
+        events: &[Record],
+    ) {
+        let left_outs = {
+            let mut sub = Ctx::new(ctx.partition, ctx.now, &mut *ctx.aggregator);
+            self.left
+                .process(&mut sub, &shared.0, &mut own.0, &mut local.0, events);
+            sub.into_outputs()
+        };
+        for o in left_outs {
+            ctx.emit(o.ref_ts, tagged(0, o.payload));
+        }
+        let right_outs = {
+            let mut sub = Ctx::new(ctx.partition, ctx.now, &mut *ctx.aggregator);
+            self.right
+                .process(&mut sub, &shared.1, &mut own.1, &mut local.1, events);
+            sub.into_outputs()
+        };
+        for o in right_outs {
+            ctx.emit(o.ref_ts, tagged(1, o.payload));
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::api::{ScalarAggregator, SharedState};
-    use crate::codec::{Decode, Encode};
-    use crate::crdt::{BoundedTopK, GCounter};
-    use crate::nexmark::queries::{Q7Out, Q7};
-    use std::sync::Arc;
+    use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
+    use crate::crdt::GCounter;
+    use crate::nexmark::Event;
+    use std::sync::Arc as StdArc;
 
     fn bid(offset: u64, ts: u64, auction: u64, price: f64) -> Record {
         Record {
             offset,
             event_ts: ts,
             insert_ts: ts,
-            payload: Arc::new(
+            payload: StdArc::new(
                 Event::Bid {
                     auction,
                     bidder: 0,
@@ -245,122 +588,160 @@ mod tests {
         ctx.into_outputs()
     }
 
-    /// Q7 expressed in the dataflow API.
-    fn dataflow_q7() -> impl Processor<Shared = WindowedCrdt<BoundedTopK>, Local = DfCursor> {
-        WindowQueryBuilder::<BoundedTopK>::tumbling(1000)
-            .insert(|p, ev, tk: &mut BoundedTopK| {
-                if let Event::Bid { auction, price, .. } = ev {
-                    tk.set_k(1);
-                    tk.offer(*price, *auction, p as u64);
-                }
-            })
-            .emit(|w, tk| {
-                let (price, auction) = tk
-                    .top()
-                    .first()
-                    .map(|&(s, a, _)| (s.0, a))
-                    .unwrap_or((0.0, 0));
-                Some(
-                    Q7Out {
-                        window: w,
-                        price,
-                        auction,
-                    }
-                    .to_bytes(),
-                )
-            })
+    /// Run a processor twice (batch, then idle drain) and return the
+    /// drain outputs — mirrors the engine's poll loop.
+    fn run_and_drain<P: Processor>(q: &P, events: &[Record]) -> Vec<crate::api::Output> {
+        let mut s = q.init_shared(&[0]);
+        let mut o = q.init_shared(&[0]);
+        let mut l = P::Local::default();
+        let mut first = run(q, &mut s, &mut o, &mut l, events);
+        let mut rest = run(q, &mut s, &mut o, &mut l, &[]);
+        first.append(&mut rest);
+        first
     }
 
-    #[test]
-    fn dataflow_q7_matches_procedural_q7() {
-        let df = dataflow_q7();
-        let proc_q7 = Q7::new(1000);
-
-        let events = vec![
-            bid(0, 100, 1, 50.0),
-            bid(1, 600, 2, 90.0),
-            bid(2, 1200, 3, 10.0),
-            bid(3, 2300, 4, 70.0),
-        ];
-
-        // run the dataflow version
-        let mut s1 = df.init_shared(&[0]);
-        let mut o1 = df.init_shared(&[0]);
-        let mut l1 = DfCursor::default();
-        run(&df, &mut s1, &mut o1, &mut l1, &events);
-        let out_df = run(&df, &mut s1, &mut o1, &mut l1, &[]);
-
-        // run the hand-written version
-        let mut s2 = proc_q7.init_shared(&[0]);
-        let mut o2 = proc_q7.init_shared(&[0]);
-        let mut l2 = crate::nexmark::queries::Cursor::default();
-        let mut agg = ScalarAggregator;
-        let mut ctx = Ctx::new(0, 0, &mut agg);
-        proc_q7.process(&mut ctx, &s2, &mut o2, &mut l2, &events);
-        s2.join(&o2);
-        let mut ctx = Ctx::new(0, 0, &mut agg);
-        proc_q7.process(&mut ctx, &s2, &mut o2, &mut l2, &[]);
-        let out_proc = ctx.into_outputs();
-
-        assert_eq!(out_df.len(), out_proc.len());
-        for (a, b) in out_df.iter().zip(out_proc.iter()) {
-            assert_eq!(
-                Q7Out::from_bytes(&a.payload).unwrap(),
-                Q7Out::from_bytes(&b.payload).unwrap()
-            );
-        }
+    fn count_pipeline() -> WindowPipeline<Event, GCounter> {
+        Dataflow::<Event>::source()
+            .filter(|e| e.is_bid())
+            .tumbling(1000)
+            .aggregate(|p, _e, c: &mut GCounter| c.add(p as u64, 1))
+            .emit_typed(|w, c| Some((w, c.value())))
     }
 
     #[test]
     fn dataflow_counts_bids_per_window() {
-        let q = WindowQueryBuilder::<GCounter>::tumbling(1000)
-            .insert(|p, ev, c: &mut GCounter| {
-                if ev.is_bid() {
-                    c.add(p as u64, 1);
-                }
-            })
-            .emit(|w, c| {
-                let mut wr = crate::codec::Writer::new();
-                wr.put_u64(w);
-                wr.put_u64(c.value());
-                Some(wr.into_bytes())
-            });
-        let mut s = q.init_shared(&[0]);
-        let mut o = q.init_shared(&[0]);
-        let mut l = DfCursor::default();
-        run(
-            &q,
-            &mut s,
-            &mut o,
-            &mut l,
+        let outs = run_and_drain(
+            &count_pipeline(),
             &[bid(0, 100, 1, 1.0), bid(1, 200, 2, 1.0), bid(2, 1500, 3, 1.0)],
         );
-        let outs = run(&q, &mut s, &mut o, &mut l, &[]);
         assert_eq!(outs.len(), 1);
-        let mut r = crate::codec::Reader::new(&outs[0].payload);
-        assert_eq!(r.get_u64().unwrap(), 0); // window
-        assert_eq!(r.get_u64().unwrap(), 2); // bids in window 0
+        let (w, n) = <(u64, u64)>::from_bytes(&outs[0].payload).unwrap();
+        assert_eq!((w, n), (0, 2));
+    }
+
+    /// A non-Nexmark event type: the decode stage is generic.
+    #[derive(Debug, Clone, PartialEq)]
+    struct Reading {
+        sensor: u64,
+        celsius: f64,
+    }
+
+    impl Encode for Reading {
+        fn encode(&self, w: &mut Writer) {
+            w.put_u64(self.sensor);
+            w.put_f64(self.celsius);
+        }
+    }
+
+    impl Decode for Reading {
+        fn decode(r: &mut Reader) -> DecodeResult<Self> {
+            Ok(Reading {
+                sensor: r.get_u64()?,
+                celsius: r.get_f64()?,
+            })
+        }
+    }
+
+    #[test]
+    fn generic_event_type_plugs_in() {
+        let q = Dataflow::<Reading>::source()
+            .filter(|r| r.celsius > 30.0)
+            .tumbling(1000)
+            .key_by(|r| r.sensor)
+            .aggregate(|p, _r, c: &mut GCounter| c.add(p as u64, 1))
+            .emit_typed(|w, m| {
+                let rows: Vec<(u64, u64)> = m.iter().map(|(&s, c)| (s, c.value())).collect();
+                Some((w, rows))
+            });
+        let rec = |offset, ts, sensor, celsius| Record {
+            offset,
+            event_ts: ts,
+            insert_ts: ts,
+            payload: StdArc::new(Reading { sensor, celsius }.to_bytes()),
+        };
+        let outs = run_and_drain(
+            &q,
+            &[
+                rec(0, 100, 7, 35.0),
+                rec(1, 200, 7, 10.0), // filtered: too cold
+                rec(2, 300, 8, 31.0),
+                rec(3, 1200, 9, 40.0), // closes window 0
+            ],
+        );
+        assert_eq!(outs.len(), 1);
+        let (w, rows) = <(u64, Vec<(u64, u64)>)>::from_bytes(&outs[0].payload).unwrap();
+        assert_eq!(w, 0);
+        assert_eq!(rows, vec![(7, 1), (8, 1)]);
+    }
+
+    #[test]
+    fn flat_map_expands_events() {
+        // each bid counts twice via flat_map
+        let q = Dataflow::<Event>::source()
+            .filter(|e| e.is_bid())
+            .flat_map(|e| [e.clone(), e])
+            .tumbling(1000)
+            .aggregate(|p, _e, c: &mut GCounter| c.add(p as u64, 1))
+            .emit_typed(|w, c| Some((w, c.value())));
+        let outs = run_and_drain(&q, &[bid(0, 100, 1, 1.0), bid(1, 1500, 2, 1.0)]);
+        assert_eq!(outs.len(), 1);
+        let (_, n) = <(u64, u64)>::from_bytes(&outs[0].payload).unwrap();
+        assert_eq!(n, 2, "one bid in window 0, doubled by flat_map");
+    }
+
+    #[test]
+    fn map_reshapes_events() {
+        let q = Dataflow::<Event>::source()
+            .filter_map(|e| match e {
+                Event::Bid { price, .. } => Some(price),
+                _ => None,
+            })
+            .map(|price| (price * 100.0).round() as u64 * 2) // doubled cents
+            .tumbling(1000)
+            .aggregate(|_p, cents, c: &mut crate::crdt::MaxRegister<u64>| c.put(*cents))
+            .emit_raw(|w, c| {
+                let mut wr = Writer::new();
+                wr.put_u64(w);
+                wr.put_u64(c.get().copied().unwrap_or(0));
+                Some(wr.into_bytes())
+            });
+        let outs = run_and_drain(&q, &[bid(0, 100, 1, 21.0), bid(1, 1500, 2, 1.0)]);
+        assert_eq!(outs.len(), 1);
+        let mut r = Reader::new(&outs[0].payload);
+        r.get_u64().unwrap();
+        assert_eq!(r.get_u64().unwrap(), 4200);
+    }
+
+    #[test]
+    fn emit_each_is_stateless_passthrough() {
+        let q = Dataflow::<Event>::source()
+            .filter(|e| e.is_bid())
+            .emit_each(|e| Some(e.clone()));
+        let mut s = q.init_shared(&[0]);
+        let mut o = q.init_shared(&[0]);
+        let mut l = ();
+        let events = vec![bid(0, 10, 1, 5.0), bid(1, 20, 2, 6.0)];
+        let outs = run(&q, &mut s, &mut o, &mut l, &events);
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].ref_ts, 10, "latency reference is insert time");
+        assert_eq!(
+            Event::from_bytes(&outs[0].payload).unwrap(),
+            Event::from_bytes(&events[0].payload).unwrap()
+        );
     }
 
     #[test]
     fn allowed_lateness_accepts_bounded_disorder() {
         let count_query = |lateness: Option<u64>| {
-            let b = WindowQueryBuilder::<GCounter>::tumbling(1000);
+            let b = Dataflow::<Event>::source()
+                .filter(|e| e.is_bid())
+                .tumbling(1000);
             let b = match lateness {
                 Some(ms) => b.allowed_lateness(ms),
                 None => b,
             };
-            b.insert(|p, ev, c: &mut GCounter| {
-                if ev.is_bid() {
-                    c.add(p as u64, 1);
-                }
-            })
-            .emit(|w, c| {
-                let mut wr = crate::codec::Writer::new();
-                wr.put_u64(w);
-                wr.put_u64(c.value());
-                Some(wr.into_bytes())
-            })
+            b.aggregate(|p, _e, c: &mut GCounter| c.add(p as u64, 1))
+                .emit_typed(|w, c| Some((w, c.value())))
         };
         // out-of-order stream: 100, 700, 400 (300 late), 2600
         let events = vec![
@@ -370,46 +751,109 @@ mod tests {
             bid(3, 2600, 4, 1.0),
         ];
         // with 500 ms allowed lateness, the 400-ts event counts
-        let q = count_query(Some(500));
-        let mut s = q.init_shared(&[0]);
-        let mut o = q.init_shared(&[0]);
-        let mut l = DfCursor::default();
-        run(&q, &mut s, &mut o, &mut l, &events);
-        let outs = run(&q, &mut s, &mut o, &mut l, &[]);
-        // watermark = 2600 - 500 = 2100 => window 0 and 1 complete
+        let outs = run_and_drain(&count_query(Some(500)), &events);
+        // watermark = 2600 - 500 = 2100 => windows 0 and 1 complete
         assert_eq!(outs.len(), 2);
-        let mut r = crate::codec::Reader::new(&outs[0].payload);
-        r.get_u64().unwrap();
-        assert_eq!(r.get_u64().unwrap(), 3, "late-but-bounded event counted");
+        let (_, n) = <(u64, u64)>::from_bytes(&outs[0].payload).unwrap();
+        assert_eq!(n, 3, "late-but-bounded event counted");
+
+        // without lateness (ascending watermark), the 400-ts event is
+        // dropped: the watermark already passed 700
+        let outs = run_and_drain(&count_query(None), &events);
+        assert_eq!(outs.len(), 2);
+        let (_, n) = <(u64, u64)>::from_bytes(&outs[0].payload).unwrap();
+        assert_eq!(n, 2, "event beyond the bound dropped");
     }
 
     #[test]
     fn sliding_window_folds_into_covering_windows() {
-        let q = WindowQueryBuilder::<GCounter>::sliding(2000, 1000)
-            .insert(|p, ev, c: &mut GCounter| {
-                if ev.is_bid() {
-                    c.add(p as u64, 1);
-                }
+        let q = Dataflow::<Event>::source()
+            .filter(|e| e.is_bid())
+            .sliding(2000, 1000)
+            .aggregate(|p, _e, c: &mut GCounter| c.add(p as u64, 1))
+            .emit_typed(|w, c| Some((w, c.value())));
+        // ts=1500 is covered by windows 0 ([0,2000)) and 1 ([1000,3000))
+        let outs = run_and_drain(&q, &[bid(0, 1500, 1, 1.0), bid(1, 3500, 2, 1.0)]);
+        assert_eq!(outs.len(), 2);
+        let (w0, n0) = <(u64, u64)>::from_bytes(&outs[0].payload).unwrap();
+        let (w1, n1) = <(u64, u64)>::from_bytes(&outs[1].payload).unwrap();
+        assert_eq!((w0, n0), (0, 1), "window 0 sees the ts=1500 bid");
+        assert_eq!((w1, n1), (1, 1), "window 1 sees it too");
+    }
+
+    #[test]
+    fn keyed_sliding_counts_per_key() {
+        let q = Dataflow::<Event>::source()
+            .filter(|e| e.is_bid())
+            .sliding(2000, 1000)
+            .key_by(|e| match e {
+                Event::Bid { auction, .. } => *auction,
+                _ => 0,
             })
-            .emit(|w, c| {
-                let mut wr = crate::codec::Writer::new();
-                wr.put_u64(w);
-                wr.put_u64(c.value());
-                Some(wr.into_bytes())
+            .aggregate(|p, _e, c: &mut GCounter| c.add(p as u64, 1))
+            .emit_typed(|w, m| {
+                let rows: Vec<(u64, u64)> = m.iter().map(|(&a, c)| (a, c.value())).collect();
+                Some((w, rows))
             });
+        let outs = run_and_drain(
+            &q,
+            &[
+                bid(0, 500, 7, 1.0),
+                bid(1, 1500, 7, 1.0),  // windows 0 and 1
+                bid(2, 1600, 9, 1.0),  // windows 0 and 1
+                bid(3, 3500, 11, 1.0), // closes windows 0 and 1
+            ],
+        );
+        assert_eq!(outs.len(), 2);
+        let (w, rows) = <(u64, Vec<(u64, u64)>)>::from_bytes(&outs[0].payload).unwrap();
+        assert_eq!(w, 0);
+        assert_eq!(rows, vec![(7, 2), (9, 1)]);
+        let (w, rows) = <(u64, Vec<(u64, u64)>)>::from_bytes(&outs[1].payload).unwrap();
+        assert_eq!(w, 1);
+        assert_eq!(rows, vec![(7, 1), (9, 1)]);
+    }
+
+    #[test]
+    fn multiquery_fans_one_stream_into_two_pipelines() {
+        let counts = count_pipeline();
+        let passthrough = Dataflow::<Event>::source()
+            .filter(|e| e.is_bid())
+            .emit_each(|e| Some(e.clone()));
+        let q = MultiQuery::new(counts, passthrough);
+
         let mut s = q.init_shared(&[0]);
         let mut o = q.init_shared(&[0]);
-        let mut l = DfCursor::default();
-        // ts=1500 is covered by windows 0 ([0,2000)) and 1 ([1000,3000))
-        run(&q, &mut s, &mut o, &mut l, &[bid(0, 1500, 1, 1.0), bid(1, 3500, 2, 1.0)]);
-        let outs = run(&q, &mut s, &mut o, &mut l, &[]);
-        // watermark 3500 completes windows 0 ([0,2000)) and 1 ([1000,3000))
-        assert_eq!(outs.len(), 2);
-        let mut r = crate::codec::Reader::new(&outs[0].payload);
-        r.get_u64().unwrap();
-        assert_eq!(r.get_u64().unwrap(), 1); // window 0 sees the ts=1500 bid
-        let mut r = crate::codec::Reader::new(&outs[1].payload);
-        r.get_u64().unwrap();
-        assert_eq!(r.get_u64().unwrap(), 1); // window 1 sees it too
+        let mut l = <MultiQuery<WindowPipeline<Event, GCounter>, Passthrough> as Processor>::Local::default();
+        let events = vec![bid(0, 100, 1, 1.0), bid(1, 1500, 2, 1.0)];
+        let mut outs = run(&q, &mut s, &mut o, &mut l, &events);
+        outs.extend(run(&q, &mut s, &mut o, &mut l, &[]));
+
+        let mut window_outs = 0;
+        let mut event_outs = 0;
+        for out in &outs {
+            match demux(&out.payload) {
+                (0, inner) => {
+                    let (w, n) = <(u64, u64)>::from_bytes(inner).unwrap();
+                    assert_eq!((w, n), (0, 1));
+                    window_outs += 1;
+                }
+                (1, inner) => {
+                    assert!(Event::from_bytes(inner).unwrap().is_bid());
+                    event_outs += 1;
+                }
+                (tag, _) => panic!("unexpected branch tag {tag}"),
+            }
+        }
+        assert_eq!(window_outs, 1, "one completed window from the left branch");
+        assert_eq!(event_outs, 2, "both bids passed through the right branch");
+    }
+
+    #[test]
+    fn multiquery_local_state_roundtrips_through_codec() {
+        // MultiQuery locals are tuples; the checkpoint path encodes them.
+        let l: (EmitCursor, ()) = (EmitCursor { next: 5 }, ());
+        let b = l.to_bytes();
+        let back = <(EmitCursor, ())>::from_bytes(&b).unwrap();
+        assert_eq!(back.0.next, 5);
     }
 }

@@ -1,21 +1,31 @@
 //! The Holon Streaming programming model (paper §3, Table 1).
 //!
-//! A query is a [`Processor`]: one *processing function* over a
-//! partition's events, combining three kinds of state:
+//! Two API levels share one execution model:
 //!
-//! * `Shared` — replicated [`WindowedCrdt`]s (or tuples of them),
-//!   synchronized in the background by gossip; reads of completed
-//!   windows are globally deterministic;
-//! * `Local` — partition-local state ([`Local`]/[`WLocal`] and friends),
-//!   checkpointed and recovered with the partition;
-//! * the event batch itself.
+//! * the **procedural API** — a query is a [`Processor`]: one
+//!   *processing function* over a partition's events, combining three
+//!   kinds of state:
+//!   * `Shared` — replicated [`WindowedCrdt`]s (or tuples of them),
+//!     synchronized in the background by gossip; reads of completed
+//!     windows are globally deterministic;
+//!   * `Local` — partition-local state ([`Local`]/[`WLocal`],
+//!     [`EmitCursor`] and friends), checkpointed and recovered with the
+//!     partition;
+//!   * the event batch itself.
+//! * the **dataflow API v2** ([`dataflow`], paper §3.1) — a declarative
+//!   [`Dataflow`] pipeline over any decodable event type: decode →
+//!   `filter`/`map`/`flat_map` → window → (`key_by` →) CRDT aggregate →
+//!   typed emit, plus a [`MultiQuery`] composer fanning one stream into
+//!   several pipelines inside a single engine job. Every pipeline
+//!   compiles down to a [`Processor`] using the safe cursor-drain
+//!   emission, so dataflow programs are always deterministic (§3.3).
 //!
 //! The engine guarantees exactly-once effects per partition: events are
 //! consumed in deterministic order, state reflects each event once, and
 //! outputs (which may be physically duplicated) carry `(partition, seq)`
 //! tags for consumer-side deduplication (§3.3).
 
-use crate::codec::{Decode, Encode};
+use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
 use crate::crdt::Crdt;
 use crate::log::Record;
 use crate::util::{PartitionId, SimTime};
@@ -23,8 +33,32 @@ use crate::wcrdt::{WindowId, WindowedCrdt};
 
 pub mod dataflow;
 pub mod shared;
-pub use dataflow::{DfCursor, WindowQuery, WindowQueryBuilder};
+pub use dataflow::{
+    demux, Dataflow, DfCursor, Keyed, MultiQuery, Passthrough, WindowAgg, WindowPipeline, Windowed,
+};
 pub use shared::SharedState;
+
+/// Emission cursor: the next window a partition has yet to emit — the
+/// partition-local half of the Listing-2 safe emission idiom. One
+/// canonical definition shared by the dataflow pipelines (as
+/// [`dataflow::DfCursor`]) and the hand-written Nexmark processors (as
+/// [`crate::nexmark::queries::Cursor`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EmitCursor {
+    pub next: WindowId,
+}
+
+impl Encode for EmitCursor {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u64(self.next);
+    }
+}
+
+impl Decode for EmitCursor {
+    fn decode(r: &mut Reader) -> DecodeResult<Self> {
+        Ok(EmitCursor { next: r.get_u64()? })
+    }
+}
 
 /// One output produced by a processing function.
 #[derive(Debug, Clone, PartialEq)]
@@ -99,20 +133,25 @@ pub struct ScalarAggregator;
 
 impl BatchAggregator for ScalarAggregator {
     fn aggregate(&mut self, items: &[(f64, WindowId)]) -> WindowAggregates {
-        let mut out: Vec<(WindowId, f64, u64, f64)> = Vec::new();
+        // Hash-map group-by: one O(1) probe per item instead of a linear
+        // scan over the windows seen so far (keyed queries like Q4 put
+        // hundreds of (window × key) segments in one batch). Values fold
+        // in item order per window, so float sums match the old scan.
+        let mut acc: std::collections::HashMap<WindowId, (f64, u64, f64)> =
+            std::collections::HashMap::with_capacity(items.len().min(1024));
         for &(v, w) in items {
-            match out.iter_mut().find(|(ow, ..)| *ow == w) {
-                Some((_, sum, count, max)) => {
-                    *sum += v;
-                    *count += 1;
-                    if v > *max {
-                        *max = v;
-                    }
-                }
-                None => out.push((w, v, 1, v)),
+            let e = acc.entry(w).or_insert((0.0, 0, f64::NEG_INFINITY));
+            e.0 += v;
+            e.1 += 1;
+            if v > e.2 {
+                e.2 = v;
             }
         }
-        out.sort_by_key(|&(w, ..)| w);
+        let mut out: Vec<(WindowId, f64, u64, f64)> = acc
+            .into_iter()
+            .map(|(w, (sum, count, max))| (w, sum, count, max))
+            .collect();
+        out.sort_unstable_by_key(|&(w, ..)| w);
         WindowAggregates { windows: out }
     }
 }

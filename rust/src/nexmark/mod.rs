@@ -6,12 +6,18 @@
 //! are skewed (hot auctions, long price tail). Categories follow the
 //! Nexmark default of 10.
 //!
-//! The queries used by the paper:
+//! The queries used by the paper, plus two Nexmark extensions:
 //! * **Q0** — passthrough (stateless; measures pipeline overhead);
+//! * **Q2** — selection of sampled auctions (stateless filter);
 //! * **Q4** — average price per category (keyed *global* aggregation);
+//! * **Q5** — hot items per sliding window (keyed, overlapping windows);
 //! * **Q7** — highest bid per window (global aggregation);
 //! * **Query 1** (§2.2) — per-partition ratio of local to global bid
 //!   counts (the paper's running example).
+//!
+//! Q0/Q2/Q5/Q7 also exist as dataflow-API-v2 pipelines
+//! ([`queries::dataflow_q0`] and friends) with the procedural forms as
+//! their differential-test oracles.
 
 pub mod queries;
 pub mod producer;

@@ -1,13 +1,20 @@
-//! The paper's queries as Holon processors (procedural API, §3).
+//! The paper's queries as Holon processors — each in two forms:
 //!
-//! Each query is a [`Processor`]: one processing function combining
-//! Windowed-CRDT shared state with partition-local state, following the
-//! structure of the paper's Listing 2 (insert → advance watermark →
-//! drain completed windows → emit). All emission uses the *safe pattern*
-//! of the unsafe-mode read: windows are drained in sequence behind a
-//! cursor, so completion timing never affects emitted values.
+//! * the **procedural API** (§3): one processing function combining
+//!   Windowed-CRDT shared state with partition-local state, following
+//!   the structure of the paper's Listing 2 (insert → advance watermark
+//!   → drain completed windows → emit);
+//! * the **dataflow API v2** ([`crate::api::Dataflow`], §3.1):
+//!   [`dataflow_q0`], [`dataflow_q2`], [`dataflow_q5`] and
+//!   [`dataflow_q7`] declare the same queries in a handful of lines.
+//!   The procedural versions serve as differential-test oracles: both
+//!   forms emit byte-identical outputs over the same input.
+//!
+//! All emission uses the *safe pattern* of the unsafe-mode read: windows
+//! are drained in sequence behind a cursor, so completion timing never
+//! affects emitted values.
 
-use crate::api::{Ctx, Processor};
+use crate::api::{Ctx, Dataflow, Processor};
 use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
 use crate::crdt::{BoundedTopK, GCounter, MapCrdt, PrefixAgg};
 use crate::log::Record;
@@ -16,23 +23,9 @@ use crate::wcrdt::{WindowAssigner, WindowId, WindowedCrdt};
 
 use super::{Event, CATEGORIES};
 
-/// Emission cursor: the next window a partition has yet to emit.
-#[derive(Debug, Clone, Default, PartialEq)]
-pub struct Cursor {
-    pub next: WindowId,
-}
-
-impl Encode for Cursor {
-    fn encode(&self, w: &mut Writer) {
-        w.put_u64(self.next);
-    }
-}
-
-impl Decode for Cursor {
-    fn decode(r: &mut Reader) -> DecodeResult<Self> {
-        Ok(Cursor { next: r.get_u64()? })
-    }
-}
+/// Emission cursor: the next window a partition has yet to emit — the
+/// canonical [`crate::api::EmitCursor`] under its historical name.
+pub use crate::api::EmitCursor as Cursor;
 
 // ======================================================================
 // Q0 — passthrough
@@ -59,6 +52,72 @@ impl Processor for Q0 {
         for rec in events {
             // Latency reference = input insertion time (broker-to-broker).
             ctx.emit(rec.insert_ts, rec.payload.to_vec());
+        }
+    }
+}
+
+// ======================================================================
+// Q2 — selection (stateless filter)
+// ======================================================================
+
+/// Output of Q2: one selected bid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Q2Out {
+    pub auction: u64,
+    pub price: f64,
+}
+
+impl Encode for Q2Out {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u64(self.auction);
+        w.put_f64(self.price);
+    }
+}
+
+impl Decode for Q2Out {
+    fn decode(r: &mut Reader) -> DecodeResult<Self> {
+        Ok(Q2Out {
+            auction: r.get_u64()?,
+            price: r.get_f64()?,
+        })
+    }
+}
+
+/// Nexmark Q2: select `(auction, price)` for bids on a sampled set of
+/// auctions (`auction % every == 0`) — a stateless filter; measures
+/// per-event selection overhead.
+#[derive(Debug, Clone)]
+pub struct Q2 {
+    pub every: u64,
+}
+
+impl Q2 {
+    pub fn new(every: u64) -> Self {
+        assert!(every > 0);
+        Self { every }
+    }
+}
+
+impl Processor for Q2 {
+    type Shared = ();
+    type Local = ();
+
+    fn init_shared(&self, _partitions: &[PartitionId]) {}
+
+    fn process(
+        &self,
+        ctx: &mut Ctx,
+        _shared: &(),
+        _own: &mut (),
+        _local: &mut (),
+        events: &[Record],
+    ) {
+        for rec in events {
+            if let Ok(Event::Bid { auction, price, .. }) = Event::from_bytes(&rec.payload) {
+                if auction % self.every == 0 {
+                    ctx.emit(rec.insert_ts, Q2Out { auction, price }.to_bytes());
+                }
+            }
         }
     }
 }
@@ -155,10 +214,16 @@ impl Processor for Q7 {
                 let aggs = ctx.aggregator.aggregate(&items);
                 for (w, _sum, _count, max) in aggs.windows {
                     // Recover the winning auction id for the window max.
+                    // On a price tie the *largest* auction id wins — the
+                    // same tie-break as BoundedTopK's lattice order, and
+                    // (unlike first-in-batch) independent of where the
+                    // engine happens to cut batch boundaries, which is
+                    // not replay-stable.
                     let auction = bids
                         .iter()
-                        .find(|&&(pr, _, bw)| bw == w && pr == max)
+                        .filter(|&&(pr, _, bw)| bw == w && pr == max)
                         .map(|&(_, a, _)| a)
+                        .max()
                         .unwrap_or(0);
                     own.insert_window_with(p, w, |tk| {
                         tk.set_k(k);
@@ -188,22 +253,24 @@ impl Processor for Q7 {
         }
         while let Some(tk) = shared.window_value(local.next) {
             let w = local.next;
-            let (price, auction) = tk
-                .top()
-                .first()
-                .map(|&(s, a, _)| (s.0, a))
-                .unwrap_or((0.0, 0));
-            ctx.emit(
-                wa.window_end(w),
-                Q7Out {
-                    window: w,
-                    price,
-                    auction,
-                }
-                .to_bytes(),
-            );
+            ctx.emit(wa.window_end(w), q7_winner(w, &tk).to_bytes());
             local.next += 1;
         }
+    }
+}
+
+/// The winning bid of a completed Q7 window — shared by the procedural
+/// processor and [`dataflow_q7`] so both emit byte-identical outputs.
+fn q7_winner(w: WindowId, tk: &BoundedTopK) -> Q7Out {
+    let (price, auction) = tk
+        .top()
+        .first()
+        .map(|&(s, a, _)| (s.0, a))
+        .unwrap_or((0.0, 0));
+    Q7Out {
+        window: w,
+        price,
+        auction,
     }
 }
 
@@ -330,6 +397,169 @@ impl Processor for Q4 {
             local.next += 1;
         }
     }
+}
+
+// ======================================================================
+// Q5 — hot items (keyed aggregation over sliding windows)
+// ======================================================================
+
+/// Output of Q5: the hottest auction of one sliding window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Q5Out {
+    pub window: WindowId,
+    pub auction: u64,
+    pub bids: u64,
+}
+
+impl Encode for Q5Out {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u64(self.window);
+        w.put_u64(self.auction);
+        w.put_u64(self.bids);
+    }
+}
+
+impl Decode for Q5Out {
+    fn decode(r: &mut Reader) -> DecodeResult<Self> {
+        Ok(Q5Out {
+            window: r.get_u64()?,
+            auction: r.get_u64()?,
+            bids: r.get_u64()?,
+        })
+    }
+}
+
+/// The hot item of a completed Q5 window: most bids, ties broken by the
+/// larger auction id — shared by the procedural processor and
+/// [`dataflow_q5`] so both emit byte-identical outputs.
+fn q5_hot_item(w: WindowId, m: &MapCrdt<u64, GCounter>) -> Q5Out {
+    let (bids, auction) = m
+        .iter()
+        .map(|(&a, c)| (c.value(), a))
+        .max()
+        .unwrap_or((0, 0));
+    Q5Out {
+        window: w,
+        auction,
+        bids,
+    }
+}
+
+/// Nexmark Q5 ("hot items"): the auction with the most bids per sliding
+/// window — a *keyed* global aggregation over overlapping windows,
+/// computed shuffle-free as a Windowed CRDT of per-auction GCounters
+/// (each bid folds into every covering window).
+#[derive(Debug, Clone)]
+pub struct Q5 {
+    pub size_ms: u64,
+    pub slide_ms: u64,
+}
+
+impl Q5 {
+    pub fn new(size_ms: u64, slide_ms: u64) -> Self {
+        Self { size_ms, slide_ms }
+    }
+
+    fn assigner(&self) -> WindowAssigner {
+        WindowAssigner::sliding(self.size_ms, self.slide_ms)
+    }
+}
+
+impl Processor for Q5 {
+    type Shared = WindowedCrdt<MapCrdt<u64, GCounter>>;
+    type Local = Cursor;
+
+    fn init_shared(&self, partitions: &[PartitionId]) -> Self::Shared {
+        WindowedCrdt::new(self.assigner(), partitions.iter().copied())
+    }
+
+    fn process(
+        &self,
+        ctx: &mut Ctx,
+        shared: &Self::Shared,
+        own: &mut Self::Shared,
+        local: &mut Cursor,
+        events: &[Record],
+    ) {
+        let wa = self.assigner();
+        let p = ctx.partition;
+        let mut last_ts = 0;
+        for rec in events {
+            if let Ok(Event::Bid { auction, .. }) = Event::from_bytes(&rec.payload) {
+                for w in wa.windows_of(rec.event_ts) {
+                    own.insert_window_with(p, w, |m| m.entry(auction).add(p as u64, 1));
+                }
+            }
+            last_ts = rec.event_ts;
+        }
+        if last_ts > 0 {
+            own.increment_watermark(p, last_ts);
+        }
+
+        if local.next < shared.first_available() {
+            local.next = shared.first_available();
+        }
+        while let Some(m) = shared.window_value(local.next) {
+            let w = local.next;
+            ctx.emit(wa.window_end(w), q5_hot_item(w, &m).to_bytes());
+            local.next += 1;
+        }
+    }
+}
+
+// ======================================================================
+// The same queries in the dataflow API v2 (§3.1) — each a handful of
+// declarative lines; the procedural processors above are their
+// differential-test oracles.
+// ======================================================================
+
+/// Q0 (passthrough) in the dataflow API.
+pub fn dataflow_q0() -> impl Processor<Shared = (), Local = ()> {
+    Dataflow::<Event>::source().emit_each(|ev| Some(ev.clone()))
+}
+
+/// Q2 (selection) in the dataflow API.
+pub fn dataflow_q2(every: u64) -> impl Processor<Shared = (), Local = ()> {
+    assert!(every > 0, "Q2 sampling modulus must be positive");
+    Dataflow::<Event>::source()
+        .filter_map(move |ev| match ev {
+            Event::Bid { auction, price, .. } if auction % every == 0 => {
+                Some(Q2Out { auction, price })
+            }
+            _ => None,
+        })
+        .emit_each(|out| Some(out.clone()))
+}
+
+/// Q5 (hot items) in the dataflow API: keyed sliding-window counts.
+pub fn dataflow_q5(
+    size_ms: u64,
+    slide_ms: u64,
+) -> impl Processor<Shared = WindowedCrdt<MapCrdt<u64, GCounter>>, Local = Cursor> {
+    Dataflow::<Event>::source()
+        .filter(|ev| ev.is_bid())
+        .sliding(size_ms, slide_ms)
+        .key_by(|ev| match ev {
+            Event::Bid { auction, .. } => *auction,
+            _ => 0,
+        })
+        .aggregate(|p, _ev, c: &mut GCounter| c.add(p as u64, 1))
+        .emit_typed(|w, m| Some(q5_hot_item(w, m)))
+}
+
+/// Q7 (highest bid per window) in the dataflow API.
+pub fn dataflow_q7(
+    window_ms: u64,
+) -> impl Processor<Shared = WindowedCrdt<BoundedTopK>, Local = Cursor> {
+    Dataflow::<Event>::source()
+        .tumbling(window_ms)
+        .aggregate(|p, ev, tk: &mut BoundedTopK| {
+            if let Event::Bid { auction, price, .. } = ev {
+                tk.set_k(1);
+                tk.offer(*price, *auction, p as u64);
+            }
+        })
+        .emit_typed(|w, tk| Some(q7_winner(w, tk)))
 }
 
 // ======================================================================
@@ -705,5 +935,131 @@ mod tests {
             total: 4,
         };
         assert_eq!(RatioOut::from_bytes(&o.to_bytes()).unwrap(), o);
+        let o = Q2Out {
+            auction: 8,
+            price: 3.25,
+        };
+        assert_eq!(Q2Out::from_bytes(&o.to_bytes()).unwrap(), o);
+        let o = Q5Out {
+            window: 4,
+            auction: 2048,
+            bids: 17,
+        };
+        assert_eq!(Q5Out::from_bytes(&o.to_bytes()).unwrap(), o);
+    }
+
+    #[test]
+    fn q2_selects_sampled_auctions() {
+        let q = Q2::new(2);
+        // auction ids 2 and 3 -> only the even one selected
+        let recs = vec![bid_record(0, 10, 2, 5.0), bid_record(1, 20, 3, 6.0)];
+        let outs = run(&q, &mut (), &mut (), &mut (), 0, 100, &recs);
+        assert_eq!(outs.len(), 1);
+        let o = Q2Out::from_bytes(&outs[0].payload).unwrap();
+        assert_eq!((o.auction, o.price), (2, 5.0));
+        assert_eq!(outs[0].ref_ts, 10, "selection keeps the insert time");
+    }
+
+    #[test]
+    fn q5_hot_item_over_sliding_windows() {
+        let q = Q5::new(2000, 1000);
+        let mut shared = q.init_shared(&[0]);
+        let mut own = q.init_shared(&[0]);
+        let mut local = Cursor::default();
+        // auction 7 gets 2 bids in [0,2000), auction 9 gets 1; the
+        // ts=1500 bids also land in window 1 ([1000,3000)).
+        let recs = vec![
+            bid_record(0, 500, 7, 1.0),
+            bid_record(1, 1500, 7, 1.0),
+            bid_record(2, 1600, 9, 1.0),
+            bid_record(3, 3500, 11, 1.0), // closes windows 0 and 1
+        ];
+        run(&q, &mut shared, &mut own, &mut local, 0, 3600, &recs);
+        let outs = run(&q, &mut shared, &mut own, &mut local, 0, 3700, &[]);
+        assert_eq!(outs.len(), 2);
+        let o0 = Q5Out::from_bytes(&outs[0].payload).unwrap();
+        assert_eq!((o0.window, o0.auction, o0.bids), (0, 7, 2));
+        let o1 = Q5Out::from_bytes(&outs[1].payload).unwrap();
+        // window 1 sees one bid each on 7 and 9: tie breaks to larger id
+        assert_eq!((o1.window, o1.auction, o1.bids), (1, 9, 1));
+    }
+
+    // -- differential tests: dataflow v2 vs procedural oracles ----------
+
+    /// Deterministic Nexmark records with ascending event times.
+    fn gen_records(seed: u64, partition: u32, n: u64) -> Vec<Record> {
+        let mut g = crate::nexmark::NexmarkGen::new(seed, partition);
+        (0..n)
+            .map(|i| {
+                let ev = g.next_event();
+                Record {
+                    offset: i,
+                    event_ts: i * 7,
+                    insert_ts: i * 7 + 1,
+                    payload: Arc::new(ev.to_bytes()),
+                }
+            })
+            .collect()
+    }
+
+    /// Feed `events` through a processor in batches of `batch`, then an
+    /// idle drain — a single-partition mirror of the engine's poll loop.
+    fn run_batched<P: Processor>(q: &P, events: &[Record], batch: usize) -> Vec<crate::api::Output> {
+        let mut shared = q.init_shared(&[0]);
+        let mut own = q.init_shared(&[0]);
+        let mut local = P::Local::default();
+        let mut outs = Vec::new();
+        for chunk in events.chunks(batch) {
+            outs.extend(run(q, &mut shared, &mut own, &mut local, 0, 0, chunk));
+        }
+        outs.extend(run(q, &mut shared, &mut own, &mut local, 0, 0, &[]));
+        outs
+    }
+
+    /// Both forms must emit byte-identical outputs over the same input —
+    /// even when fed with different batch boundaries.
+    ///
+    /// The equality contract assumes per-partition in-order event times
+    /// (the paper's implementation assumption). On disordered input the
+    /// procedural oracles' window guard is batch-boundary-dependent,
+    /// while the dataflow pipeline drops timestamp regressions
+    /// deterministically — deliberately stricter, not equal.
+    fn assert_differential<A: Processor, B: Processor>(
+        oracle: &A,
+        dataflow: &B,
+        events: &[Record],
+    ) {
+        let a = run_batched(oracle, events, 61);
+        let b = run_batched(dataflow, events, 37);
+        assert!(!a.is_empty(), "oracle produced no outputs");
+        assert_eq!(a.len(), b.len(), "output counts differ");
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.ref_ts, y.ref_ts, "output {i}: ref_ts differs");
+            assert_eq!(x.payload, y.payload, "output {i}: payload differs");
+        }
+    }
+
+    #[test]
+    fn dataflow_q0_matches_procedural_q0() {
+        assert_differential(&Q0, &dataflow_q0(), &gen_records(11, 0, 300));
+    }
+
+    #[test]
+    fn dataflow_q2_matches_procedural_q2() {
+        assert_differential(&Q2::new(3), &dataflow_q2(3), &gen_records(13, 0, 300));
+    }
+
+    #[test]
+    fn dataflow_q5_matches_procedural_q5() {
+        assert_differential(
+            &Q5::new(2000, 1000),
+            &dataflow_q5(2000, 1000),
+            &gen_records(17, 0, 500),
+        );
+    }
+
+    #[test]
+    fn dataflow_q7_matches_procedural_q7() {
+        assert_differential(&Q7::new(1000), &dataflow_q7(1000), &gen_records(19, 0, 500));
     }
 }

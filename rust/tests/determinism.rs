@@ -10,7 +10,7 @@ use holon::config::HolonConfig;
 use holon::engine::node::decode_output;
 use holon::engine::HolonCluster;
 use holon::log::Topic;
-use holon::nexmark::queries::{Query1, Q4, Q7};
+use holon::nexmark::queries::{dataflow_q5, dataflow_q7, Query1, Q4, Q5, Q7};
 use holon::nexmark::NexmarkGen;
 use holon::api::Processor;
 
@@ -132,6 +132,34 @@ fn query1_failures_do_not_change_output() {
     let clean = run_once(Query1::new(1000), 29, false);
     let faulty = run_once(Query1::new(1000), 29, true);
     assert_prefix_equal(&clean, &faulty, 3);
+}
+
+#[test]
+fn dataflow_q7_matches_procedural_q7_on_cluster() {
+    // The ISSUE-1 differential claim at full scale: the dataflow-API Q7
+    // emits byte-identical deduplicated outputs to the hand-written
+    // procedural Q7 over the same seeded input, on a real multi-node
+    // cluster (different code paths, same deterministic function).
+    let procedural = run_once(Q7::new(1000), 47, false);
+    let dataflow = run_once(dataflow_q7(1000), 47, false);
+    assert_prefix_equal(&procedural, &dataflow, 3);
+}
+
+#[test]
+fn dataflow_q7_survives_failures_like_procedural() {
+    // Work stealing + replay under the v2 pipeline must not change a
+    // single output byte relative to the undisturbed procedural oracle.
+    let procedural = run_once(Q7::new(1000), 53, false);
+    let dataflow_faulty = run_once(dataflow_q7(1000), 53, true);
+    assert_prefix_equal(&procedural, &dataflow_faulty, 3);
+}
+
+#[test]
+fn dataflow_q5_matches_procedural_q5_on_cluster() {
+    // Sliding windows + keyed aggregation through the v2 builder.
+    let procedural = run_once(Q5::new(2000, 1000), 59, false);
+    let dataflow = run_once(dataflow_q5(2000, 1000), 59, false);
+    assert_prefix_equal(&procedural, &dataflow, 2);
 }
 
 #[test]

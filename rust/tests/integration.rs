@@ -1,13 +1,17 @@
 //! End-to-end integration: Nexmark workloads on a running HolonCluster
 //! (real node threads, logged streams, gossip, checkpoints).
 
+use holon::api::{demux, MultiQuery};
 use holon::clock::SimClock;
 use holon::codec::Decode;
 use holon::config::HolonConfig;
 use holon::engine::node::decode_output;
 use holon::engine::HolonCluster;
-use holon::nexmark::queries::{Q4Out, Q7Out, Query1, RatioOut, Q0, Q4, Q7};
 use holon::nexmark::producer;
+use holon::nexmark::queries::{
+    dataflow_q2, dataflow_q5, dataflow_q7, Q2Out, Q4Out, Q5Out, Q7Out, Query1, RatioOut, Q0, Q4,
+    Q7,
+};
 
 fn test_config() -> HolonConfig {
     let mut cfg = HolonConfig::default();
@@ -148,6 +152,91 @@ fn q4_categories_converge_across_partitions() {
         // with 6 partitions * 2000 ev/s, every category gets bids
         assert!(outs[0][w].rows.len() >= 5, "rows: {:?}", outs[0][w].rows);
     }
+}
+
+#[test]
+fn dataflow_q5_sliding_windows_on_cluster() {
+    // The dataflow API v2 end to end: keyed aggregation over sliding
+    // windows (each bid folds into two covering windows).
+    let cfg = test_config();
+    let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
+    let cluster =
+        HolonCluster::start_with_clock(cfg.clone(), dataflow_q5(2000, 1000), clock.clone());
+    let prod = producer::spawn(
+        cluster.input.clone(),
+        clock.clone(),
+        cfg.seed,
+        cfg.events_per_sec_per_partition,
+        cfg.duration_ms,
+    );
+    std::thread::sleep(clock.wall_for(cfg.duration_ms + 3000));
+    prod.stop();
+    cluster.stop();
+
+    let outs: Vec<Vec<Q5Out>> = decoded_outputs(&cluster);
+    let min_windows = outs.iter().map(|o| o.len()).min().unwrap();
+    assert!(min_windows >= 3, "too few completed sliding windows");
+    for w in 0..min_windows {
+        // global determinism across partitions, same as the procedural API
+        for part in &outs[1..] {
+            assert_eq!(part[w], outs[0][w], "Q5 window {w} disagrees");
+        }
+        assert!(outs[0][w].bids > 0, "hot item of window {w} has bids");
+    }
+}
+
+#[test]
+fn multiquery_shares_one_job_on_cluster() {
+    // One engine job fans the stream into a windowed pipeline (Q7) and a
+    // stateless selection (Q2); outputs demux by branch tag.
+    let mut cfg = test_config();
+    cfg.duration_ms = 4000;
+    let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
+    let q = MultiQuery::new(dataflow_q7(cfg.window_ms), dataflow_q2(3));
+    let cluster = HolonCluster::start_with_clock(cfg.clone(), q, clock.clone());
+    let prod = producer::spawn(
+        cluster.input.clone(),
+        clock.clone(),
+        cfg.seed,
+        cfg.events_per_sec_per_partition,
+        cfg.duration_ms,
+    );
+    std::thread::sleep(clock.wall_for(cfg.duration_ms + 3000));
+    prod.stop();
+    cluster.stop();
+
+    let mut q7_per_part: Vec<Vec<Q7Out>> = Vec::new();
+    let mut q2_total = 0usize;
+    for p in 0..cfg.partitions {
+        let (recs, _) = cluster.output.read(p, 0, usize::MAX >> 1);
+        let mut seen = 0u64;
+        let mut q7_outs = Vec::new();
+        for rec in recs {
+            let (seq, _ref_ts, inner) = decode_output(&rec.payload).unwrap();
+            if seq < seen {
+                continue;
+            }
+            seen = seq + 1;
+            match demux(&inner) {
+                (0, bytes) => q7_outs.push(Q7Out::from_bytes(bytes).unwrap()),
+                (1, bytes) => {
+                    let o = Q2Out::from_bytes(bytes).unwrap();
+                    assert_eq!(o.auction % 3, 0, "Q2 branch must filter auctions");
+                    q2_total += 1;
+                }
+                (tag, _) => panic!("unexpected branch tag {tag}"),
+            }
+        }
+        q7_per_part.push(q7_outs);
+    }
+    let min_windows = q7_per_part.iter().map(|o| o.len()).min().unwrap();
+    assert!(min_windows >= 2, "too few Q7 windows through MultiQuery");
+    for w in 0..min_windows {
+        for part in &q7_per_part[1..] {
+            assert_eq!(part[w], q7_per_part[0][w], "Q7 window {w} disagrees");
+        }
+    }
+    assert!(q2_total > 0, "Q2 branch produced no selections");
 }
 
 #[test]

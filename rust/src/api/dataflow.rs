@@ -766,6 +766,46 @@ mod tests {
     }
 
     #[test]
+    fn lateness_drop_boundary_is_exact() {
+        // With 500 ms allowed lateness and max event time 1600, the
+        // watermark sits at 1100: an event at exactly 1100 is the last
+        // one accepted, 1099 is dropped. The window-0 count distinguishes
+        // every off-by-one.
+        let q = |events: &[Record]| {
+            let p = Dataflow::<Event>::source()
+                .filter(|e| e.is_bid())
+                .tumbling(1000)
+                .allowed_lateness(500)
+                .aggregate(|p, _e, c: &mut GCounter| c.add(p as u64, 1))
+                .emit_typed(|w, c| Some((w, c.value())));
+            run_and_drain(&p, events)
+        };
+        let on_boundary = q(&[
+            bid(0, 600, 1, 1.0),
+            bid(1, 1600, 2, 1.0), // watermark -> 1100
+            bid(2, 1100, 3, 1.0), // exactly at the watermark: accepted
+            bid(3, 2600, 4, 1.0), // watermark -> 2100, closes 0 and 1
+        ]);
+        let w1: Vec<(u64, u64)> = on_boundary
+            .iter()
+            .map(|o| <(u64, u64)>::from_bytes(&o.payload).unwrap())
+            .collect();
+        assert_eq!(w1, vec![(0, 1), (1, 2)], "boundary event must count");
+
+        let past_boundary = q(&[
+            bid(0, 600, 1, 1.0),
+            bid(1, 1600, 2, 1.0),
+            bid(2, 1099, 3, 1.0), // one ms past the bound: dropped
+            bid(3, 2600, 4, 1.0),
+        ]);
+        let w2: Vec<(u64, u64)> = past_boundary
+            .iter()
+            .map(|o| <(u64, u64)>::from_bytes(&o.payload).unwrap())
+            .collect();
+        assert_eq!(w2, vec![(0, 1), (1, 1)], "past-bound event must drop");
+    }
+
+    #[test]
     fn sliding_window_folds_into_covering_windows() {
         let q = Dataflow::<Event>::source()
             .filter(|e| e.is_bid())

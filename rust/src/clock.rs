@@ -89,6 +89,27 @@ impl SimClock {
         std::thread::sleep(Duration::from_secs_f64(wall_ms / 1000.0));
     }
 
+    /// Sleep until the clock reads at least `t` sim-ms (no-op if `t` is
+    /// already past). On manual clocks this jumps straight to `t`. The
+    /// simulation harness uses this to execute fault schedules at their
+    /// planned sim-times without accumulating per-step sleep drift.
+    pub fn sleep_until(&self, t: SimTime) {
+        if self.inner.manual.load(Ordering::Acquire) != u64::MAX {
+            let now = self.now();
+            if t > now {
+                self.advance(t - now);
+            }
+            return;
+        }
+        loop {
+            let now = self.now();
+            if now >= t {
+                return;
+            }
+            self.sleep((t - now).max(1));
+        }
+    }
+
     /// Wall-clock duration corresponding to `sim_ms` (for bench harnesses).
     pub fn wall_for(&self, sim_ms: SimTime) -> Duration {
         if self.inner.sim_per_wall == 0.0 {
@@ -140,6 +161,23 @@ mod tests {
         c.sleep(1000);
         let wall = t0.elapsed();
         assert!(wall < Duration::from_millis(200), "slept {wall:?}");
+    }
+
+    #[test]
+    fn sleep_until_advances_manual_clock() {
+        let c = SimClock::manual();
+        c.advance(100);
+        c.sleep_until(250);
+        assert_eq!(c.now(), 250);
+        c.sleep_until(200); // already past: no-op, never regresses
+        assert_eq!(c.now(), 250);
+    }
+
+    #[test]
+    fn sleep_until_reaches_target_on_live_clock() {
+        let c = SimClock::scaled(5.0); // 1 sim-s = 5 wall-ms
+        c.sleep_until(400);
+        assert!(c.now() >= 400);
     }
 
     #[test]

@@ -225,6 +225,11 @@ impl HolonConfig {
     }
 
     /// Apply `--key=value` CLI arguments; returns non-option args.
+    ///
+    /// Options whose key is not a config key pass through to the caller
+    /// (subcommands own flags like `--system=` or `--seeds=`); only a
+    /// *known* key with an unparsable value is an error. Config files
+    /// stay strict — see [`apply_text`](Self::apply_text).
     pub fn apply_args<'a>(
         &mut self,
         args: impl Iterator<Item = &'a str>,
@@ -233,8 +238,11 @@ impl HolonConfig {
         for a in args {
             if let Some(kv) = a.strip_prefix("--") {
                 if let Some((k, v)) = kv.split_once('=') {
-                    self.set(&k.replace('-', "_"), v)?;
-                    continue;
+                    match self.set(&k.replace('-', "_"), v) {
+                        Ok(()) => continue,
+                        Err(ConfigError::UnknownKey(_)) => {} // subcommand flag
+                        Err(e) => return Err(e),
+                    }
                 }
             }
             rest.push(a);
@@ -370,6 +378,27 @@ mod tests {
         assert_eq!(c.nodes, 7);
         assert_eq!(c.net_delay_ms, 9);
         assert_eq!(rest, vec!["run"]);
+    }
+
+    #[test]
+    fn cli_args_pass_subcommand_flags_through() {
+        // `--system=` / `--seeds=` are subcommand flags, not config keys;
+        // they must reach the subcommand instead of erroring.
+        let mut c = HolonConfig::default();
+        let rest = c
+            .apply_args(["run", "--system=flink", "--nodes=3", "--seeds=20"].into_iter())
+            .unwrap();
+        assert_eq!(c.nodes, 3);
+        assert_eq!(rest, vec!["run", "--system=flink", "--seeds=20"]);
+    }
+
+    #[test]
+    fn cli_args_bad_value_for_known_key_still_errors() {
+        let mut c = HolonConfig::default();
+        assert!(matches!(
+            c.apply_args(["--nodes=lots"].into_iter()),
+            Err(ConfigError::InvalidValue { .. })
+        ));
     }
 
     #[test]

@@ -85,6 +85,10 @@ pub struct HolonCluster<P: Processor> {
     shutdown: Arc<AtomicBool>,
     nodes: Mutex<BTreeMap<NodeId, NodeHandle>>,
     sink: Mutex<Option<JoinHandle<()>>>,
+    /// Encoded shared-state replicas published by nodes on graceful
+    /// shutdown (crashed nodes never publish). The simulation oracles
+    /// decode these to check replica convergence after a run.
+    final_states: Arc<Mutex<BTreeMap<NodeId, Vec<u8>>>>,
 }
 
 impl<P: Processor> HolonCluster<P> {
@@ -125,6 +129,7 @@ impl<P: Processor> HolonCluster<P> {
             shutdown: Arc::new(AtomicBool::new(false)),
             nodes: Mutex::new(BTreeMap::new()),
             sink: Mutex::new(None),
+            final_states: Arc::new(Mutex::new(BTreeMap::new())),
             cfg,
         });
         for id in 0..cluster.cfg.nodes {
@@ -150,6 +155,7 @@ impl<P: Processor> HolonCluster<P> {
             shutdown: self.shutdown.clone(),
             failed: failed.clone(),
             metrics: self.metrics.clone(),
+            state_out: self.final_states.clone(),
         };
         let join = std::thread::Builder::new()
             .name(format!("holon-node-{id}"))
@@ -188,6 +194,25 @@ impl<P: Processor> HolonCluster<P> {
             "node {id} is still running"
         );
         self.spawn_node(id);
+    }
+
+    /// Reconfiguration: add a node with a fresh id to a running cluster.
+    /// It announces itself via heartbeats and the rendezvous assignment
+    /// rebalances partitions onto it — same path as a restart, but the
+    /// id has never held state.
+    pub fn add_node(self: &Arc<Self>, id: NodeId) {
+        assert!(
+            !self.nodes.lock().unwrap().contains_key(&id),
+            "node {id} is already running"
+        );
+        self.spawn_node(id);
+    }
+
+    /// Encoded final shared-state replicas published by nodes that shut
+    /// down gracefully (call after [`stop`](Self::stop); killed nodes do
+    /// not publish). Keyed by node id.
+    pub fn final_replicas(&self) -> BTreeMap<NodeId, Vec<u8>> {
+        self.final_states.lock().unwrap().clone()
     }
 
     /// Ids of currently running nodes.

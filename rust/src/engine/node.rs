@@ -60,6 +60,9 @@ pub struct NodeCtx<P: Processor> {
     pub shutdown: Arc<AtomicBool>,
     pub failed: Arc<AtomicBool>,
     pub metrics: ClusterMetrics,
+    /// Where to publish the encoded shared replica on graceful shutdown
+    /// (the convergence oracle's view; killed nodes never publish).
+    pub state_out: Arc<std::sync::Mutex<BTreeMap<NodeId, Vec<u8>>>>,
 }
 
 /// Execution state of one owned partition.
@@ -131,6 +134,7 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
         shutdown,
         failed,
         metrics,
+        state_out,
     } = ctx;
 
     let all_parts: Vec<PartitionId> = (0..cfg.partitions).collect();
@@ -177,10 +181,12 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
         }
         let now = clock.now();
         if shutdown.load(Ordering::Acquire) {
-            // Graceful stop: final checkpoints.
+            // Graceful stop: final checkpoints + publish the replica for
+            // post-run convergence checks.
             for (&p, st) in parts.iter() {
                 checkpoint_partition(&store, &shared, p, st);
             }
+            state_out.lock().unwrap().insert(id, shared.to_bytes());
             return;
         }
 

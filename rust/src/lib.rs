@@ -18,7 +18,41 @@
 //!   the paper's comparison system);
 //! * workloads: [`nexmark`] (generator + queries Q0/Q4/Q7/Query1);
 //! * the AOT hot path: [`runtime`] (PJRT-loaded XLA kernels);
-//! * harness support: [`benchkit`], [`proptest_lite`].
+//! * harness support: [`benchkit`], [`proptest_lite`], [`sim`].
+//!
+//! ## Testing strategy
+//!
+//! Three layers of tests back the paper's guarantees, in increasing
+//! order of adversarialness:
+//!
+//! * **Scenario tests** (`rust/tests/failure_recovery.rs`,
+//!   `exactly_once.rs`, `determinism.rs`, `integration.rs`) replay the
+//!   paper's §5.2 failure scenarios — concurrent/subsequent failures,
+//!   crashes without restart, network partitions — against a live
+//!   cluster and assert progress, consistency and ground-truth counts
+//!   at hand-picked injection points.
+//! * **Property tests** (`rust/tests/properties.rs`, via
+//!   [`proptest_lite`]) check the algebra the system is built on over
+//!   randomized states: CRDT lattice laws (commutativity,
+//!   associativity, idempotence, identity), merge-vs-sequential-apply
+//!   equivalence, codec round-trips, WCRDT convergence under shuffled
+//!   merge orders, and assignment stability.
+//! * **The simulation harness** ([`sim`], `rust/tests/simulation.rs`)
+//!   generates whole fault *schedules* from a seed — kills, restarts,
+//!   partitions, delay/loss bursts, reconfigurations — executes them
+//!   against the sim clock, and checks the global oracles after every
+//!   run: duplicate-free gap-free delivery, byte-equality with a
+//!   fault-free golden run, and replica convergence. Failures shrink
+//!   to a minimal plan and print a one-line repro.
+//!
+//! To reproduce a failing simulation seed, run the printed line, e.g.
+//!
+//! ```text
+//! HOLON_SIM_SEED=17 HOLON_SIM_PLAN='700:k1;1400:r1' \
+//!     cargo test --release --test simulation replay_from_env -- --nocapture
+//! ```
+//!
+//! and for long soaks: `holon sim --seeds=500 --start-seed=1000`.
 
 pub mod api;
 pub mod baseline;
@@ -35,6 +69,7 @@ pub mod net;
 pub mod nexmark;
 pub mod proptest_lite;
 pub mod runtime;
+pub mod sim;
 pub mod storage;
 pub mod util;
 pub mod wcrdt;

@@ -5,15 +5,23 @@
 //!
 //! ```text
 //! holon run      [q0|q4|q7|query1] [--system=holon|flink|flink-spare] [--scenario=...] [--config=FILE] [--key=value ...]
+//! holon sim      [--seeds=N] [--start-seed=S] [--plan=PLAN] — deterministic fault-schedule soak
 //! holon bench    — points at the cargo bench targets for each figure/table
 //! holon generate [--count=N] [--partition=P] — dump Nexmark events as text
 //! holon inspect  [--config=FILE] [--key=value ...] — print the resolved config
 //! ```
+//!
+//! `holon sim` explores one fault schedule per seed and checks the
+//! determinism / exactly-once / convergence oracles after each run; on
+//! falsification it shrinks the schedule and prints a replayable
+//! `HOLON_SIM_SEED=… HOLON_SIM_PLAN=…` line, then exits non-zero. The
+//! same env vars, when set, replay that exact schedule instead.
 
 use holon::benchkit::{row, secs, section, sparkline};
 use holon::config::HolonConfig;
 use holon::experiments::{run_flink, run_holon, Scenario, SystemKind, Workload};
 use holon::nexmark::NexmarkGen;
+use holon::sim::{run_seed_with, FaultPlan, SimSpec};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -45,15 +53,107 @@ fn main() {
 
     match rest.first().copied() {
         Some("run") => cmd_run(&cfg, &rest[1..]),
+        Some("sim") => cmd_sim(&cfg, &rest[1..]),
         Some("generate") => cmd_generate(&cfg, &rest[1..]),
-        Some("inspect") => println!("{}", cfg.dump()),
-        Some("bench") => cmd_bench(),
+        Some("inspect") => {
+            if let Some(stray) = rest.get(1) {
+                eprintln!("unknown inspect option: {stray}");
+                std::process::exit(2);
+            }
+            println!("{}", cfg.dump());
+        }
+        Some("bench") => {
+            if let Some(stray) = rest.get(1) {
+                eprintln!("unknown bench option: {stray}");
+                std::process::exit(2);
+            }
+            cmd_bench();
+        }
         _ => {
-            eprintln!("usage: holon <run|generate|inspect|bench> [options]");
+            eprintln!("usage: holon <run|sim|generate|inspect|bench> [options]");
             eprintln!("       holon run q7 --system=holon --scenario=concurrent --nodes=5");
+            eprintln!("       holon sim --seeds=100 --start-seed=0");
             std::process::exit(2);
         }
     }
+}
+
+/// Seeded fault-schedule soak: `holon sim --seeds=N [--start-seed=S]`.
+/// `HOLON_SIM_SEED`/`HOLON_SIM_PLAN` (or `--plan=`) replay one exact
+/// schedule instead of generating per-seed ones.
+fn cmd_sim(cfg: &HolonConfig, args: &[&str]) {
+    let mut seeds = 20u64;
+    let mut start_seed = cfg.seed;
+    let mut explicit_plan: Option<String> = None;
+    let parse_or_die = |flag: &str, v: &str| -> u64 {
+        v.parse().unwrap_or_else(|_| {
+            eprintln!("bad value for {flag}: {v}");
+            std::process::exit(2);
+        })
+    };
+    for a in args {
+        if let Some(v) = a.strip_prefix("--seeds=") {
+            seeds = parse_or_die("--seeds", v);
+        } else if let Some(v) = a.strip_prefix("--start-seed=") {
+            start_seed = parse_or_die("--start-seed", v);
+        } else if let Some(v) = a.strip_prefix("--plan=") {
+            explicit_plan = Some(v.to_string());
+        } else {
+            eprintln!("unknown sim option: {a}");
+            std::process::exit(2);
+        }
+    }
+    if let Ok(s) = std::env::var("HOLON_SIM_SEED") {
+        start_seed = s.parse().unwrap_or_else(|_| {
+            eprintln!("bad HOLON_SIM_SEED: {s}");
+            std::process::exit(2);
+        });
+        seeds = 1;
+    }
+    if explicit_plan.is_none() {
+        if let Ok(p) = std::env::var("HOLON_SIM_PLAN") {
+            explicit_plan = Some(p);
+        }
+    }
+
+    section(&format!(
+        "deterministic simulation | seeds {start_seed}..{} | {}",
+        start_seed + seeds,
+        explicit_plan
+            .as_deref()
+            .map(|p| format!("explicit plan `{p}`"))
+            .unwrap_or_else(|| "generated plans".to_string()),
+    ));
+    let mut failures = 0u64;
+    for seed in start_seed..start_seed + seeds {
+        let spec = SimSpec {
+            seed,
+            ..SimSpec::default()
+        };
+        let plan = match &explicit_plan {
+            Some(p) => match FaultPlan::parse(p) {
+                Ok(plan) => plan,
+                Err(e) => {
+                    eprintln!("bad plan: {e}");
+                    std::process::exit(2);
+                }
+            },
+            None => FaultPlan::generate(seed, spec.nodes, spec.fault_window()),
+        };
+        match run_seed_with(&spec, &plan, None) {
+            Ok(()) => println!("seed {seed:>6}  PASS  {plan}"),
+            Err(f) => {
+                failures += 1;
+                println!("seed {seed:>6}  FAIL  {plan}");
+                println!("{f}");
+            }
+        }
+    }
+    if failures > 0 {
+        eprintln!("{failures} seed(s) falsified an oracle");
+        std::process::exit(1);
+    }
+    println!("all {seeds} seed(s) passed the oracle suite");
 }
 
 fn cmd_run(cfg: &HolonConfig, args: &[&str]) {
@@ -126,6 +226,11 @@ fn cmd_generate(cfg: &HolonConfig, args: &[&str]) {
             count = v.parse().unwrap_or(count);
         } else if let Some(v) = a.strip_prefix("--partition=") {
             partition = v.parse().unwrap_or(partition);
+        } else {
+            // config typos land here now that apply_args passes unknown
+            // flags through — reject rather than silently use defaults
+            eprintln!("unknown generate option: {a}");
+            std::process::exit(2);
         }
     }
     let mut gen = NexmarkGen::new(cfg.seed, partition);

@@ -68,6 +68,18 @@ struct Inbox {
     queue: VecDeque<(SimTime, Msg)>,
 }
 
+/// A transient fault condition layered on top of the steady-state
+/// [`NetConfig`] — the knob the simulation harness turns for delay and
+/// loss *bursts* (cloud incidents are episodic, not stationary). Unlike
+/// `NetConfig`, the overlay can change while the bus is live.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FaultOverlay {
+    /// Extra one-way delay added to every message, sim-ms.
+    pub extra_delay_ms: u64,
+    /// Extra independent drop probability applied to every message.
+    pub extra_drop_prob: f64,
+}
+
 /// Registry + partition state; per-inbox queues are individually locked
 /// so a 100-node cluster doesn't serialize on one mutex (see §Perf).
 #[derive(Debug)]
@@ -78,6 +90,8 @@ struct BusInner {
     /// group id per node; nodes in different groups are partitioned.
     /// Empty map = fully connected.
     groups: RwLock<BTreeMap<NodeId, u32>>,
+    /// Transient delay/loss burst injected by the fault harness.
+    faults: RwLock<FaultOverlay>,
     delivered: AtomicU64,
     dropped: AtomicU64,
 }
@@ -98,6 +112,7 @@ impl Bus {
                 rng: Mutex::new(XorShift64::new(seed)),
                 inboxes: RwLock::new(BTreeMap::new()),
                 groups: RwLock::new(BTreeMap::new()),
+                faults: RwLock::new(FaultOverlay::default()),
                 delivered: AtomicU64::new(0),
                 dropped: AtomicU64::new(0),
             }),
@@ -193,10 +208,15 @@ impl Bus {
             return;
         }
         let cfg = &self.inner.cfg;
+        let overlay = *self.inner.faults.read().unwrap();
         let jitter;
         {
             let mut rng = self.inner.rng.lock().unwrap();
             if cfg.drop_prob > 0.0 && rng.chance(cfg.drop_prob) {
+                self.inner.dropped.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            if overlay.extra_drop_prob > 0.0 && rng.chance(overlay.extra_drop_prob) {
                 self.inner.dropped.fetch_add(1, Ordering::Relaxed);
                 return;
             }
@@ -210,7 +230,7 @@ impl Bus {
                 0
             };
         }
-        let deliver_at = now + cfg.base_delay_ms + jitter;
+        let deliver_at = now + cfg.base_delay_ms + overlay.extra_delay_ms + jitter;
         inbox.lock().unwrap().queue.push_back((
             deliver_at,
             Msg {
@@ -233,19 +253,37 @@ impl Bus {
             }
         };
         let mut inbox = inbox.lock().unwrap();
-        let mut due = Vec::new();
+        let mut due: Vec<(SimTime, Msg)> = Vec::new();
         let mut rest = VecDeque::with_capacity(inbox.queue.len());
         while let Some((at, msg)) = inbox.queue.pop_front() {
             if at <= now {
-                due.push(msg);
+                due.push((at, msg));
             } else {
                 rest.push_back((at, msg));
             }
         }
         inbox.queue = rest;
         drop(inbox);
+        // Canonical delivery order: the order messages landed in the
+        // inbox depends on sender thread interleaving; sorting the due
+        // set by (deliver_at, sender, send time) removes that source of
+        // schedule nondeterminism (the stable sort keeps a sender's own
+        // messages in send order). The simulation oracles compare runs
+        // across wildly different interleavings, so delivery order must
+        // be a function of message metadata, not of thread scheduling.
+        due.sort_by_key(|(at, m)| (*at, m.from, m.sent_at));
         self.inner.delivered.fetch_add(due.len() as u64, Ordering::Relaxed);
-        due
+        due.into_iter().map(|(_, m)| m).collect()
+    }
+
+    /// Install a transient delay/loss burst on every subsequent message.
+    pub fn set_fault_overlay(&self, overlay: FaultOverlay) {
+        *self.inner.faults.write().unwrap() = overlay;
+    }
+
+    /// End any delay/loss burst (back to the steady-state `NetConfig`).
+    pub fn clear_fault_overlay(&self) {
+        *self.inner.faults.write().unwrap() = FaultOverlay::default();
     }
 
     /// Impose a network partition: nodes listed in different groups
@@ -369,6 +407,57 @@ mod tests {
         b.register(1);
         b.send(1, 99, MsgKind::Claim, vec![]);
         assert_eq!(b.stats().1, 1);
+    }
+
+    #[test]
+    fn fault_overlay_adds_delay_and_loss() {
+        let clock = SimClock::manual();
+        let b = bus(&clock); // base delay 10
+        b.register(1);
+        b.register(2);
+        b.set_fault_overlay(FaultOverlay {
+            extra_delay_ms: 40,
+            extra_drop_prob: 0.0,
+        });
+        b.send(1, 2, MsgKind::Gossip, vec![7]);
+        clock.advance(10);
+        assert!(b.recv(2).is_empty()); // base delay alone is not enough
+        clock.advance(40);
+        assert_eq!(b.recv(2).len(), 1);
+
+        b.set_fault_overlay(FaultOverlay {
+            extra_delay_ms: 0,
+            extra_drop_prob: 1.0,
+        });
+        b.send(1, 2, MsgKind::Gossip, vec![8]);
+        clock.advance(100);
+        assert!(b.recv(2).is_empty());
+        assert_eq!(b.stats().1, 1);
+
+        // messages queued during a burst keep their (delayed) schedule,
+        // but new messages after clear() are back to normal
+        b.clear_fault_overlay();
+        b.send(1, 2, MsgKind::Gossip, vec![9]);
+        clock.advance(10);
+        assert_eq!(b.recv(2).len(), 1);
+    }
+
+    #[test]
+    fn recv_orders_due_messages_canonically() {
+        let clock = SimClock::manual();
+        let b = bus(&clock);
+        for n in 1..=3 {
+            b.register(n);
+        }
+        // same deliver_at from two senders; recv must order by sender id
+        // regardless of push order
+        b.send(3, 1, MsgKind::Gossip, vec![3]);
+        b.send(2, 1, MsgKind::Gossip, vec![2]);
+        clock.advance(10);
+        let msgs = b.recv(1);
+        assert_eq!(msgs.len(), 2);
+        assert_eq!(msgs[0].from, 2);
+        assert_eq!(msgs[1].from, 3);
     }
 
     #[test]

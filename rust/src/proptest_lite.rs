@@ -63,6 +63,40 @@ pub fn forall<G: Gen>(
     }
 }
 
+/// Generic greedy shrinker: repeatedly ask `candidates` for smaller
+/// variants of the current value and keep the first one that still
+/// fails, until no candidate fails or the re-run `budget` is spent.
+/// Returns the smallest failing value found (possibly the initial one).
+///
+/// This is the structural-shrinking counterpart to `forall`'s size-ladder
+/// re-generation; the simulation harness uses it to minimize failing
+/// fault plans (each probe is a full cluster run, hence the budget).
+pub fn shrink_to_minimal<T: Clone>(
+    initial: T,
+    candidates: impl Fn(&T) -> Vec<T>,
+    mut still_fails: impl FnMut(&T) -> bool,
+    mut budget: usize,
+) -> T {
+    let mut best = initial;
+    loop {
+        let mut improved = false;
+        for cand in candidates(&best) {
+            if budget == 0 {
+                return best;
+            }
+            budget -= 1;
+            if still_fails(&cand) {
+                best = cand;
+                improved = true;
+                break; // restart from the new, smaller value
+            }
+        }
+        if !improved {
+            return best;
+        }
+    }
+}
+
 fn run_one<G: Gen>(
     gen: &G,
     prop: &impl Fn(&G::Value) -> Result<(), String>,
@@ -118,6 +152,48 @@ mod tests {
                 Err(format!("len={}", xs.len()))
             }
         });
+    }
+
+    #[test]
+    fn shrink_to_minimal_drops_irrelevant_elements() {
+        // Property fails iff the vector contains a 7; dropping one
+        // element at a time must shrink to exactly [7].
+        let initial = vec![1u64, 9, 7, 4, 2];
+        let candidates = |v: &Vec<u64>| {
+            (0..v.len())
+                .map(|i| {
+                    let mut c = v.clone();
+                    c.remove(i);
+                    c
+                })
+                .collect::<Vec<_>>()
+        };
+        let min = shrink_to_minimal(initial, candidates, |v| v.contains(&7), 1000);
+        assert_eq!(min, vec![7]);
+    }
+
+    #[test]
+    fn shrink_to_minimal_respects_budget() {
+        let mut probes = 0;
+        let min = shrink_to_minimal(
+            vec![7u64; 16],
+            |v: &Vec<u64>| {
+                (0..v.len())
+                    .map(|i| {
+                        let mut c = v.clone();
+                        c.remove(i);
+                        c
+                    })
+                    .collect()
+            },
+            |v| {
+                probes += 1;
+                v.contains(&7)
+            },
+            3,
+        );
+        assert_eq!(probes, 3);
+        assert_eq!(min.len(), 13); // three successful single-drops
     }
 
     #[test]

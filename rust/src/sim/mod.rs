@@ -1,0 +1,105 @@
+//! Deterministic simulation harness — seeded fault-schedule exploration
+//! with shrinking and convergence/exactly-once oracles.
+//!
+//! The paper's headline guarantees (determinism, convergence,
+//! exactly-once effects, recovery without global restarts) are exactly
+//! the properties hand-written scenario tests sample at a few points.
+//! This module explores them adversarially, FoundationDB-style:
+//!
+//! 1. [`FaultPlan::generate`] draws a random-but-valid fault schedule
+//!    from a seed — node kills/restarts, crashes without restart,
+//!    network partitions and heals, message delay/loss bursts, and
+//!    scale-out reconfigurations, each pinned to a sim-time.
+//! 2. [`run_plan`] executes the schedule against a live
+//!    [`HolonCluster`](crate::engine::HolonCluster) over a pre-seeded,
+//!    byte-identical input log, then harvests outputs and every
+//!    surviving node's final replica.
+//! 3. [`check_run`] applies the oracle suite: duplicate-free and
+//!    gap-free delivery after sink dedup, byte-equality with a
+//!    fault-free golden run of the same seed (determinism /
+//!    exactly-once), and replica convergence on all completed windows.
+//! 4. On falsification, [`shrink_plan`] minimizes the schedule and the
+//!    harness prints a one-line replayable repro:
+//!    `HOLON_SIM_SEED=… HOLON_SIM_PLAN=…`.
+//!
+//! Entry points: `cargo test --test simulation` (CI smoke over a fixed
+//! seed set) and `holon sim --seeds=N` (overnight soaks).
+
+pub mod oracle;
+pub mod plan;
+pub mod runner;
+pub mod shrink;
+
+pub use oracle::{
+    check_convergence, check_determinism, check_exactly_once, check_run, OracleFailure,
+    MIN_WINDOWS,
+};
+pub use plan::{FaultAction, FaultEvent, FaultPlan};
+pub use runner::{collect_outputs, repro_line, run_plan, Mutation, RunArtifacts, SimSpec};
+pub use shrink::shrink_plan;
+
+/// A falsified seed: the original and shrunk plans plus the repro line.
+#[derive(Debug, Clone)]
+pub struct SimFailure {
+    pub seed: u64,
+    pub failure: String,
+    pub original_plan: FaultPlan,
+    pub shrunk_plan: FaultPlan,
+    pub repro: String,
+}
+
+impl std::fmt::Display for SimFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "simulation falsified: {}", self.failure)?;
+        writeln!(f, "  seed:     {}", self.seed)?;
+        writeln!(f, "  plan:     {}", self.original_plan)?;
+        writeln!(f, "  shrunk:   {}", self.shrunk_plan)?;
+        write!(f, "  repro:    {}", self.repro)
+    }
+}
+
+/// Probe budget for shrinking (each probe is a full cluster run).
+const SHRINK_BUDGET: usize = 48;
+
+/// Run one explicit plan (with optional artifact mutation for oracle
+/// self-checks) against its golden run; shrink on falsification.
+pub fn run_seed_with(
+    spec: &SimSpec,
+    plan: &FaultPlan,
+    mutation: Option<Mutation>,
+) -> Result<(), SimFailure> {
+    let golden = run_plan(spec, &FaultPlan::empty(), None);
+    let faulty = run_plan(spec, plan, mutation);
+    match check_run(&faulty, &golden, MIN_WINDOWS) {
+        Ok(()) => Ok(()),
+        Err(first_failure) => {
+            let shrunk = shrink_plan(
+                plan,
+                |cand| {
+                    let arts = run_plan(spec, cand, mutation);
+                    check_run(&arts, &golden, MIN_WINDOWS).is_err()
+                },
+                SHRINK_BUDGET,
+            );
+            Err(SimFailure {
+                seed: spec.seed,
+                failure: first_failure.to_string(),
+                original_plan: plan.clone(),
+                shrunk_plan: shrunk.clone(),
+                repro: repro_line(spec.seed, &shrunk),
+            })
+        }
+    }
+}
+
+/// Explore one seed end-to-end: generate its fault plan, run it, check
+/// the oracles, shrink on failure. The CI smoke test and the `holon
+/// sim` soak both call this per seed.
+pub fn check_seed(seed: u64) -> Result<(), SimFailure> {
+    let spec = SimSpec {
+        seed,
+        ..SimSpec::default()
+    };
+    let plan = FaultPlan::generate(seed, spec.nodes, spec.fault_window());
+    run_seed_with(&spec, &plan, None)
+}

@@ -1,0 +1,326 @@
+//! Post-run oracles — the properties every fault schedule must
+//! preserve (paper §3.3/§4.2/§5.2):
+//!
+//! 1. **Exactly-once delivery**: after `(partition, seq)` dedup the
+//!    output stream is duplicate-free and gap-free, and every physical
+//!    duplicate is byte-identical to its first delivery (idempotent
+//!    replay).
+//! 2. **Determinism**: the deduplicated outputs are byte-identical to a
+//!    fault-free golden run over the same input (prefix-compared, since
+//!    a faulty run may complete fewer windows before the stop).
+//! 3. **Convergence**: once the network heals, every surviving
+//!    replica reads the same value for every globally-completed window.
+//!
+//! Plus a liveness guard: a run that emitted almost nothing cannot
+//! vacuously pass, so a minimum number of compared windows is enforced.
+
+use crate::codec::Decode;
+use crate::crdt::GCounter;
+use crate::util::{NodeId, PartitionId};
+use crate::wcrdt::WindowedCrdt;
+
+use super::runner::RunArtifacts;
+
+/// Minimum windows that must be compared per partition for a run to
+/// count (liveness guard against vacuous passes).
+pub const MIN_WINDOWS: usize = 3;
+
+/// A falsified oracle.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OracleFailure {
+    /// Post-dedup stream delivered a sequence number twice.
+    DuplicateDelivery { partition: PartitionId, seq: u64 },
+    /// Post-dedup stream is missing a sequence number.
+    SequenceGap { partition: PartitionId, missing: u64 },
+    /// A physical replay differed from the first delivery of its seq.
+    DivergentReplay { partition: PartitionId, seq: u64 },
+    /// Output differs from the fault-free golden run.
+    DeterminismViolation { partition: PartitionId, seq: u64 },
+    /// Two surviving replicas disagree on a completed window.
+    ConvergenceViolation { window: u64, a: NodeId, b: NodeId },
+    /// A survivor's published replica failed to decode.
+    CorruptReplica { node: NodeId },
+    /// The run made too little progress for the oracles to mean much.
+    InsufficientProgress { compared_windows: usize },
+}
+
+impl std::fmt::Display for OracleFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OracleFailure::DuplicateDelivery { partition, seq } => {
+                write!(f, "duplicate delivery: partition {partition} seq {seq}")
+            }
+            OracleFailure::SequenceGap { partition, missing } => {
+                write!(f, "sequence gap: partition {partition} missing seq {missing}")
+            }
+            OracleFailure::DivergentReplay { partition, seq } => {
+                write!(f, "replayed output differs: partition {partition} seq {seq}")
+            }
+            OracleFailure::DeterminismViolation { partition, seq } => {
+                write!(f, "output differs from golden run: partition {partition} seq {seq}")
+            }
+            OracleFailure::ConvergenceViolation { window, a, b } => {
+                write!(f, "replicas {a} and {b} disagree on completed window {window}")
+            }
+            OracleFailure::CorruptReplica { node } => {
+                write!(f, "replica of node {node} failed to decode")
+            }
+            OracleFailure::InsufficientProgress { compared_windows } => {
+                write!(f, "only {compared_windows} windows compared (liveness)")
+            }
+        }
+    }
+}
+
+/// Run the full oracle suite on a faulty run against its golden run.
+pub fn check_run(
+    faulty: &RunArtifacts,
+    golden: &RunArtifacts,
+    min_windows: usize,
+) -> Result<(), OracleFailure> {
+    check_exactly_once(faulty)?;
+    check_determinism(faulty, golden, min_windows)?;
+    check_convergence(faulty)?;
+    Ok(())
+}
+
+/// Oracle 1: dedup'd stream is duplicate-free and gap-free, physical
+/// duplicates byte-identical.
+pub fn check_exactly_once(run: &RunArtifacts) -> Result<(), OracleFailure> {
+    for p in 0..run.partitions {
+        let deduped = &run.deduped[p as usize];
+        for (i, (seq, _)) in deduped.iter().enumerate() {
+            let expected = i as u64;
+            if *seq < expected {
+                return Err(OracleFailure::DuplicateDelivery { partition: p, seq: *seq });
+            }
+            if *seq > expected {
+                return Err(OracleFailure::SequenceGap { partition: p, missing: expected });
+            }
+        }
+        // every physical delivery of a seq must match its first delivery
+        for (seq, payload) in &run.raw[p as usize] {
+            match deduped.get(*seq as usize) {
+                Some((s, first)) if s == seq => {
+                    if first != payload {
+                        return Err(OracleFailure::DivergentReplay { partition: p, seq: *seq });
+                    }
+                }
+                // seq outside the deduped range: the dedup stream is
+                // corrupt in a way the loop above already rejects, or
+                // the artifact was mutated — flag as a gap.
+                _ => return Err(OracleFailure::SequenceGap { partition: p, missing: *seq }),
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Oracle 2: byte-identical to the golden run on the common prefix,
+/// with at least `min_windows` outputs compared per partition.
+pub fn check_determinism(
+    faulty: &RunArtifacts,
+    golden: &RunArtifacts,
+    min_windows: usize,
+) -> Result<(), OracleFailure> {
+    let mut least = usize::MAX;
+    for p in 0..faulty.partitions {
+        let a = &faulty.deduped[p as usize];
+        let b = &golden.deduped[p as usize];
+        let common = a.len().min(b.len());
+        least = least.min(common);
+        for i in 0..common {
+            if a[i].1 != b[i].1 {
+                return Err(OracleFailure::DeterminismViolation {
+                    partition: p,
+                    seq: i as u64,
+                });
+            }
+        }
+    }
+    if least < min_windows {
+        return Err(OracleFailure::InsufficientProgress {
+            compared_windows: if least == usize::MAX { 0 } else { least },
+        });
+    }
+    Ok(())
+}
+
+/// Oracle 3: surviving replicas agree on every globally-completed
+/// window. Completion is judged by the *most conservative* survivor
+/// (min global watermark), so every compared window is final on every
+/// replica — the paper's global-determinism read guarantee.
+pub fn check_convergence(run: &RunArtifacts) -> Result<(), OracleFailure> {
+    let mut replicas: Vec<(NodeId, WindowedCrdt<GCounter>)> = Vec::new();
+    for (&node, bytes) in &run.replicas {
+        match WindowedCrdt::<GCounter>::from_bytes(bytes) {
+            Ok(w) => replicas.push((node, w)),
+            Err(_) => return Err(OracleFailure::CorruptReplica { node }),
+        }
+    }
+    if replicas.len() < 2 {
+        return Ok(()); // nothing to cross-check
+    }
+    let gw = replicas
+        .iter()
+        .map(|(_, w)| w.global_watermark())
+        .min()
+        .unwrap_or(0);
+    let first = replicas
+        .iter()
+        .map(|(_, w)| w.first_available())
+        .max()
+        .unwrap_or(0);
+    let assigner = replicas[0].1.assigner();
+    let (ref_node, ref_w) = &replicas[0];
+    let mut wid = first;
+    while assigner.window_end(wid) <= gw {
+        let expected = ref_w.window_value(wid);
+        for (node, w) in &replicas[1..] {
+            if w.window_value(wid) != expected {
+                return Err(OracleFailure::ConvergenceViolation {
+                    window: wid,
+                    a: *ref_node,
+                    b: *node,
+                });
+            }
+        }
+        wid += 1;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::Encode;
+    use crate::wcrdt::WindowAssigner;
+    use std::collections::BTreeMap;
+
+    fn artifacts(parts: u32, outputs_per_part: usize) -> RunArtifacts {
+        let mut raw = Vec::new();
+        let mut deduped = Vec::new();
+        for p in 0..parts {
+            let outs: Vec<(u64, Vec<u8>)> = (0..outputs_per_part as u64)
+                .map(|s| (s, vec![p as u8, s as u8]))
+                .collect();
+            // raw replays the first two outputs (byte-identical)
+            let mut all = outs.clone();
+            all.extend(outs.iter().take(2).cloned());
+            raw.push(all);
+            deduped.push(outs);
+        }
+        RunArtifacts {
+            partitions: parts,
+            raw,
+            deduped,
+            replicas: BTreeMap::new(),
+            steals: 0,
+        }
+    }
+
+    #[test]
+    fn clean_artifacts_pass() {
+        let a = artifacts(4, 5);
+        assert_eq!(check_run(&a, &a.clone(), 3), Ok(()));
+    }
+
+    #[test]
+    fn duplicate_in_dedup_stream_is_caught() {
+        let mut a = artifacts(2, 5);
+        let dup = a.deduped[1][2].clone();
+        a.deduped[1].insert(2, dup);
+        assert!(matches!(
+            check_exactly_once(&a),
+            Err(OracleFailure::DuplicateDelivery { partition: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn gap_is_caught() {
+        let mut a = artifacts(2, 5);
+        a.deduped[0].remove(2);
+        // remove matching raw entries so the gap check fires first
+        a.raw[0].retain(|(s, _)| *s != 2);
+        assert!(matches!(
+            check_exactly_once(&a),
+            Err(OracleFailure::SequenceGap { partition: 0, missing: 2 })
+        ));
+    }
+
+    #[test]
+    fn divergent_replay_is_caught() {
+        let mut a = artifacts(1, 4);
+        a.raw[0].push((1, vec![0xDE, 0xAD]));
+        assert!(matches!(
+            check_exactly_once(&a),
+            Err(OracleFailure::DivergentReplay { partition: 0, seq: 1 })
+        ));
+    }
+
+    #[test]
+    fn golden_mismatch_is_caught() {
+        let golden = artifacts(2, 5);
+        let mut faulty = golden.clone();
+        faulty.deduped[1][3].1 = vec![9, 9, 9];
+        assert!(matches!(
+            check_determinism(&faulty, &golden, 3),
+            Err(OracleFailure::DeterminismViolation { partition: 1, seq: 3 })
+        ));
+    }
+
+    #[test]
+    fn short_run_fails_liveness() {
+        let golden = artifacts(2, 5);
+        let faulty = artifacts(2, 2);
+        assert!(matches!(
+            check_determinism(&faulty, &golden, 3),
+            Err(OracleFailure::InsufficientProgress { compared_windows: 2 })
+        ));
+    }
+
+    fn replica(parts: &[u32], adds: &[(u32, u64, u64)], wm: u64) -> Vec<u8> {
+        let mut w: WindowedCrdt<GCounter> =
+            WindowedCrdt::new(WindowAssigner::tumbling(1000), parts.iter().copied());
+        for &(p, ts, n) in adds {
+            w.insert_with(p, ts, |c| c.add(p as u64, n)).unwrap();
+        }
+        for &p in parts {
+            w.increment_watermark(p, wm);
+        }
+        w.to_bytes()
+    }
+
+    #[test]
+    fn convergent_replicas_pass() {
+        let mut a = artifacts(2, 5);
+        let r = replica(&[0, 1], &[(0, 100, 3), (1, 1200, 4)], 3000);
+        a.replicas.insert(0, r.clone());
+        a.replicas.insert(1, r);
+        assert_eq!(check_convergence(&a), Ok(()));
+    }
+
+    #[test]
+    fn divergent_replicas_are_caught() {
+        let mut a = artifacts(2, 5);
+        a.replicas
+            .insert(0, replica(&[0, 1], &[(0, 100, 3)], 3000));
+        a.replicas
+            .insert(1, replica(&[0, 1], &[(0, 100, 7)], 3000));
+        assert!(matches!(
+            check_convergence(&a),
+            Err(OracleFailure::ConvergenceViolation { window: 0, .. })
+        ));
+    }
+
+    #[test]
+    fn corrupt_replica_is_caught() {
+        let mut a = artifacts(1, 5);
+        a.replicas.insert(3, vec![0xFF]);
+        a.replicas.insert(4, replica(&[0], &[], 1000));
+        assert!(matches!(
+            check_convergence(&a),
+            Err(OracleFailure::CorruptReplica { node: 3 })
+        ));
+    }
+}

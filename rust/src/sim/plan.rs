@@ -1,0 +1,371 @@
+//! Fault plans: seeded, randomly generated failure schedules.
+//!
+//! A [`FaultPlan`] is the *entire* adversarial input of a simulation
+//! run: every kill, restart, network partition, delay/loss burst and
+//! reconfiguration, each pinned to a sim-time. Plans are generated
+//! deterministically from a seed (same seed → same plan), serialize to
+//! a compact one-line string for `HOLON_SIM_PLAN=…` replay, and shrink
+//! structurally (see [`crate::sim::shrink`]).
+
+use std::collections::BTreeSet;
+
+use crate::util::{NodeId, SimTime, XorShift64};
+
+/// One fault injected at a point in sim-time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultAction {
+    /// Kill a node abruptly (no final checkpoint, inbox dropped).
+    Kill(NodeId),
+    /// Restart a previously killed node with the same id, fresh state.
+    Restart(NodeId),
+    /// Network partition: the listed nodes form one group, everyone
+    /// else the other. Replaces any partition currently in effect.
+    Partition(Vec<NodeId>),
+    /// Heal all network partitions.
+    Heal,
+    /// Message-loss burst: extra drop probability (percent) for the
+    /// given duration.
+    Loss { pct: u8, duration_ms: SimTime },
+    /// Delay burst: extra per-message one-way delay for the duration.
+    Delay { extra_ms: SimTime, duration_ms: SimTime },
+    /// Reconfiguration: add a brand-new node to the running cluster.
+    AddNode(NodeId),
+}
+
+/// A [`FaultAction`] scheduled at `at_ms` sim-time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    pub at_ms: SimTime,
+    pub action: FaultAction,
+}
+
+/// A complete fault schedule, sorted by time.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The fault-free plan (golden runs).
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Generate a random-but-valid schedule from `seed`: kills are only
+    /// issued while more than `min_alive` nodes run, restarts pair with
+    /// kills, partitions always schedule their own heal, and bursts are
+    /// bounded — so generated plans never wedge the cluster, they only
+    /// stress it. Fault times fall inside `window` (sim-ms).
+    pub fn generate(seed: u64, nodes: u32, window: (SimTime, SimTime)) -> Self {
+        const MIN_ALIVE: usize = 2;
+        let (lo, hi) = window;
+        let mut rng = XorShift64::new(seed ^ 0x51A7_7ED5);
+        let mut alive: BTreeSet<NodeId> = (0..nodes).collect();
+        let mut pending_restarts: Vec<(SimTime, NodeId)> = Vec::new();
+        let mut next_new_id = nodes;
+        let mut added = 0u32;
+        let mut events: Vec<FaultEvent> = Vec::new();
+
+        let n_events = 3 + rng.next_below(5); // 3..=7 primary faults
+        let span = hi.saturating_sub(lo).max(1);
+        let mut t = lo;
+        for _ in 0..n_events {
+            t += 1 + rng.next_below(span / (n_events + 1) + 1);
+            if t >= hi {
+                break;
+            }
+            // nodes whose scheduled restart has passed are alive again
+            pending_restarts.retain(|&(rt, n)| {
+                if rt <= t {
+                    alive.insert(n);
+                    false
+                } else {
+                    true
+                }
+            });
+            match rng.next_below(100) {
+                0..=39 => {
+                    // kill, usually with a scheduled restart
+                    if alive.len() > MIN_ALIVE {
+                        let victims: Vec<NodeId> = alive.iter().copied().collect();
+                        let victim = *rng.pick(&victims);
+                        alive.remove(&victim);
+                        events.push(FaultEvent {
+                            at_ms: t,
+                            action: FaultAction::Kill(victim),
+                        });
+                        if rng.chance(0.75) {
+                            let rt = t + rng.range(300, 1500);
+                            events.push(FaultEvent {
+                                at_ms: rt,
+                                action: FaultAction::Restart(victim),
+                            });
+                            pending_restarts.push((rt, victim));
+                        }
+                    }
+                }
+                40..=54 => {
+                    // partition the alive set in two, heal shortly after
+                    if alive.len() >= 2 {
+                        let all: Vec<NodeId> = alive.iter().copied().collect();
+                        let cut = 1 + rng.next_below(all.len() as u64 - 1) as usize;
+                        let group: Vec<NodeId> = all[..cut].to_vec();
+                        events.push(FaultEvent {
+                            at_ms: t,
+                            action: FaultAction::Partition(group),
+                        });
+                        events.push(FaultEvent {
+                            at_ms: t + rng.range(300, 1200),
+                            action: FaultAction::Heal,
+                        });
+                    }
+                }
+                55..=69 => {
+                    events.push(FaultEvent {
+                        at_ms: t,
+                        action: FaultAction::Loss {
+                            pct: (20 + rng.next_below(60)) as u8,
+                            duration_ms: rng.range(200, 1000),
+                        },
+                    });
+                }
+                70..=84 => {
+                    events.push(FaultEvent {
+                        at_ms: t,
+                        action: FaultAction::Delay {
+                            extra_ms: rng.range(20, 200),
+                            duration_ms: rng.range(200, 1000),
+                        },
+                    });
+                }
+                _ => {
+                    // reconfiguration: scale out by one node (at most 2)
+                    if added < 2 {
+                        events.push(FaultEvent {
+                            at_ms: t,
+                            action: FaultAction::AddNode(next_new_id),
+                        });
+                        alive.insert(next_new_id);
+                        next_new_id += 1;
+                        added += 1;
+                    }
+                }
+            }
+        }
+        events.sort_by_key(|e| e.at_ms);
+        FaultPlan { events }
+    }
+
+    /// Compact one-line encoding, shell-safe modulo quoting:
+    /// `500:k1;800:p0.2;1400:h;1700:r1;2000:l30x400;2600:d80x600;3000:a4`.
+    pub fn to_plan_string(&self) -> String {
+        self.events
+            .iter()
+            .map(|e| {
+                let a = match &e.action {
+                    FaultAction::Kill(n) => format!("k{n}"),
+                    FaultAction::Restart(n) => format!("r{n}"),
+                    FaultAction::Partition(g) => format!(
+                        "p{}",
+                        g.iter()
+                            .map(|n| n.to_string())
+                            .collect::<Vec<_>>()
+                            .join(".")
+                    ),
+                    FaultAction::Heal => "h".to_string(),
+                    FaultAction::Loss { pct, duration_ms } => format!("l{pct}x{duration_ms}"),
+                    FaultAction::Delay {
+                        extra_ms,
+                        duration_ms,
+                    } => format!("d{extra_ms}x{duration_ms}"),
+                    FaultAction::AddNode(n) => format!("a{n}"),
+                };
+                format!("{}:{}", e.at_ms, a)
+            })
+            .collect::<Vec<_>>()
+            .join(";")
+    }
+
+    /// Parse the [`to_plan_string`](Self::to_plan_string) encoding. The
+    /// empty string is the empty plan.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let mut events = Vec::new();
+        for part in s.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (at, act) = part
+                .split_once(':')
+                .ok_or_else(|| format!("missing ':' in event `{part}`"))?;
+            let at_ms: SimTime = at
+                .parse()
+                .map_err(|_| format!("bad time in event `{part}`"))?;
+            let mut act_chars = act.chars();
+            let Some(tag) = act_chars.next() else {
+                return Err(format!("missing action in event `{part}`"));
+            };
+            let rest = act_chars.as_str();
+            let parse_node = |r: &str| -> Result<NodeId, String> {
+                r.parse().map_err(|_| format!("bad node in `{part}`"))
+            };
+            let parse_pair = |r: &str| -> Result<(u64, u64), String> {
+                let (a, b) = r
+                    .split_once('x')
+                    .ok_or_else(|| format!("missing 'x' in `{part}`"))?;
+                Ok((
+                    a.parse().map_err(|_| format!("bad value in `{part}`"))?,
+                    b.parse().map_err(|_| format!("bad value in `{part}`"))?,
+                ))
+            };
+            let action = match tag {
+                'k' => FaultAction::Kill(parse_node(rest)?),
+                'r' => FaultAction::Restart(parse_node(rest)?),
+                'a' => FaultAction::AddNode(parse_node(rest)?),
+                'h' if rest.is_empty() => FaultAction::Heal,
+                'p' => {
+                    let group = rest
+                        .split('.')
+                        .filter(|x| !x.is_empty())
+                        .map(|x| x.parse().map_err(|_| format!("bad group in `{part}`")))
+                        .collect::<Result<Vec<NodeId>, String>>()?;
+                    if group.is_empty() {
+                        return Err(format!("empty partition group in `{part}`"));
+                    }
+                    FaultAction::Partition(group)
+                }
+                'l' => {
+                    let (pct, dur) = parse_pair(rest)?;
+                    FaultAction::Loss {
+                        pct: pct.min(100) as u8,
+                        duration_ms: dur,
+                    }
+                }
+                'd' => {
+                    let (extra, dur) = parse_pair(rest)?;
+                    FaultAction::Delay {
+                        extra_ms: extra,
+                        duration_ms: dur,
+                    }
+                }
+                _ => return Err(format!("unknown action tag in `{part}`")),
+            };
+            events.push(FaultEvent { at_ms, action });
+        }
+        events.sort_by_key(|e| e.at_ms);
+        Ok(FaultPlan { events })
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.events.is_empty() {
+            write!(f, "(no faults)")
+        } else {
+            write!(f, "{}", self.to_plan_string())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = FaultPlan::generate(99, 4, (300, 3000));
+        let b = FaultPlan::generate(99, 4, (300, 3000));
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn different_seeds_give_different_plans() {
+        let plans: Vec<FaultPlan> = (0..16)
+            .map(|s| FaultPlan::generate(s, 4, (300, 3000)))
+            .collect();
+        let distinct = plans
+            .iter()
+            .map(|p| p.to_plan_string())
+            .collect::<std::collections::BTreeSet<_>>();
+        assert!(distinct.len() > 8, "only {} distinct plans", distinct.len());
+    }
+
+    #[test]
+    fn generated_plans_keep_two_nodes_alive() {
+        for seed in 0..200 {
+            let plan = FaultPlan::generate(seed, 4, (300, 3000));
+            let mut alive: BTreeSet<NodeId> = (0..4).collect();
+            for e in &plan.events {
+                match &e.action {
+                    FaultAction::Kill(n) => {
+                        alive.remove(n);
+                    }
+                    FaultAction::Restart(n) | FaultAction::AddNode(n) => {
+                        alive.insert(*n);
+                    }
+                    _ => {}
+                }
+                assert!(alive.len() >= 2, "seed {seed}: plan {plan} drains cluster");
+            }
+        }
+    }
+
+    #[test]
+    fn generated_events_are_sorted() {
+        for seed in 0..50 {
+            let plan = FaultPlan::generate(seed, 5, (300, 3000));
+            for w in plan.events.windows(2) {
+                assert!(w[0].at_ms <= w[1].at_ms);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_string_roundtrips() {
+        for seed in 0..100 {
+            let plan = FaultPlan::generate(seed, 4, (300, 3000));
+            let s = plan.to_plan_string();
+            let back = FaultPlan::parse(&s).unwrap();
+            assert_eq!(back, plan, "roundtrip failed for `{s}`");
+        }
+    }
+
+    #[test]
+    fn empty_plan_roundtrips() {
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::empty());
+        assert_eq!(FaultPlan::empty().to_plan_string(), "");
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("nope").is_err());
+        assert!(FaultPlan::parse("100:z9").is_err());
+        assert!(FaultPlan::parse("100:l5").is_err()); // missing duration
+        assert!(FaultPlan::parse("x:k1").is_err());
+        assert!(FaultPlan::parse("100:p").is_err()); // empty group
+        assert!(FaultPlan::parse("100:").is_err()); // missing action
+        assert!(FaultPlan::parse("100:к1").is_err()); // multi-byte tag, no panic
+    }
+
+    #[test]
+    fn parse_handcrafted_plan() {
+        let p = FaultPlan::parse("500:k1;800:p0.2;1400:h;1700:r1;2000:l30x400").unwrap();
+        assert_eq!(p.events.len(), 5);
+        assert_eq!(p.events[0].action, FaultAction::Kill(1));
+        assert_eq!(p.events[1].action, FaultAction::Partition(vec![0, 2]));
+        assert_eq!(p.events[2].action, FaultAction::Heal);
+        assert_eq!(p.events[3].action, FaultAction::Restart(1));
+        assert_eq!(
+            p.events[4].action,
+            FaultAction::Loss {
+                pct: 30,
+                duration_ms: 400
+            }
+        );
+    }
+}

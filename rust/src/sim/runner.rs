@@ -1,0 +1,417 @@
+//! Execute a [`FaultPlan`] against a live [`HolonCluster`] and collect
+//! everything the oracles need.
+//!
+//! The run is FoundationDB-style: the *input* is pre-seeded into the
+//! log (byte-identical across runs of the same seed, fault-free or
+//! not), the fault schedule executes at planned sim-times against the
+//! shared [`SimClock`], and afterwards the harness force-heals the
+//! network, drains, stops the cluster gracefully, and harvests the raw
+//! output log, the deduplicated output stream, and every surviving
+//! node's final replica.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::clock::SimClock;
+use crate::codec::{Decode, Encode};
+use crate::config::HolonConfig;
+use crate::crdt::GCounter;
+use crate::engine::node::decode_output;
+use crate::engine::HolonCluster;
+use crate::log::Topic;
+use crate::net::FaultOverlay;
+use crate::nexmark::queries::Query1;
+use crate::nexmark::NexmarkGen;
+use crate::util::{NodeId, SimTime};
+use crate::wcrdt::WindowedCrdt;
+
+use super::plan::{FaultAction, FaultPlan};
+
+/// Shape of a simulation run. Tuned so one run takes well under a
+/// wall-second while still exercising kills mid-processing: the modeled
+/// per-event cost is inflated (vs. the calibrated 4.9 µs) so consuming
+/// the pre-seeded log spans a few sim-seconds instead of finishing
+/// before the first fault lands.
+#[derive(Debug, Clone)]
+pub struct SimSpec {
+    pub seed: u64,
+    pub nodes: u32,
+    pub partitions: u32,
+    pub events_per_sec_per_partition: u64,
+    pub duration_ms: SimTime,
+    pub window_ms: u64,
+    pub wall_ms_per_sim_sec: f64,
+    /// Post-plan settling time before the graceful stop (heal + gossip
+    /// convergence + emission of the remaining completed windows).
+    pub drain_ms: SimTime,
+}
+
+impl Default for SimSpec {
+    fn default() -> Self {
+        Self {
+            seed: 1,
+            nodes: 4,
+            partitions: 8,
+            events_per_sec_per_partition: 1000,
+            duration_ms: 6000,
+            window_ms: 1000,
+            wall_ms_per_sim_sec: 50.0,
+            drain_ms: 4000,
+        }
+    }
+}
+
+impl SimSpec {
+    /// The engine configuration of a run.
+    pub fn config(&self) -> HolonConfig {
+        HolonConfig {
+            nodes: self.nodes,
+            partitions: self.partitions,
+            events_per_sec_per_partition: self.events_per_sec_per_partition,
+            seed: self.seed,
+            wall_ms_per_sim_sec: self.wall_ms_per_sim_sec,
+            duration_ms: self.duration_ms,
+            window_ms: self.window_ms,
+            batch_size: 256,
+            gossip_interval_ms: 50,
+            checkpoint_interval_ms: 400,
+            heartbeat_interval_ms: 150,
+            failure_timeout_ms: 600,
+            // ~5 events per sim-ms per node: the 48k-event input takes a
+            // few sim-seconds to consume, so faults land mid-processing.
+            holon_event_cost_us: 200.0,
+            ..HolonConfig::default()
+        }
+    }
+
+    /// The sim-time window fault events are generated inside.
+    pub fn fault_window(&self) -> (SimTime, SimTime) {
+        (300, self.duration_ms / 2)
+    }
+}
+
+/// A deliberately injected defect, used to *verify the oracles* (the
+/// mutation check of the harness itself): each variant corrupts the
+/// collected artifacts the way a real engine/sink bug would, and the
+/// corresponding oracle must catch it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mutation {
+    /// A replayed output leaks past dedup (broken sink dedup).
+    DuplicateDelivery,
+    /// One output is lost (gap in the per-partition sequence).
+    DropDelivery,
+    /// One output payload is corrupted (broken determinism).
+    CorruptPayload,
+    /// One surviving replica diverges (broken convergence).
+    SkewReplica,
+}
+
+/// Everything harvested from one run.
+#[derive(Debug, Clone)]
+pub struct RunArtifacts {
+    pub partitions: u32,
+    /// Per partition: every physical output record `(seq, inner)`, in
+    /// append order — duplicates included.
+    pub raw: Vec<Vec<(u64, Vec<u8>)>>,
+    /// Per partition: first delivery per sequence number, seq-ordered.
+    pub deduped: Vec<Vec<(u64, Vec<u8>)>>,
+    /// Encoded final shared replicas of gracefully stopped nodes.
+    pub replicas: BTreeMap<NodeId, Vec<u8>>,
+    /// Work-stealing count (plan effectiveness signal, not an oracle).
+    pub steals: u64,
+}
+
+/// Pre-seed a byte-identical input log: event timestamps are a pure
+/// function of the index, so every run of the same seed — fault-free or
+/// faulty — processes the exact same stream.
+fn seed_input(input: &Topic, cfg: &HolonConfig) {
+    for p in 0..cfg.partitions {
+        let mut gen = NexmarkGen::new(cfg.seed, p);
+        let n = cfg.events_per_sec_per_partition * cfg.duration_ms / 1000;
+        let batch: Vec<(u64, Vec<u8>)> = (0..n)
+            .map(|i| {
+                let ts = i * 1000 / cfg.events_per_sec_per_partition;
+                (ts, gen.next_event().to_bytes())
+            })
+            .collect();
+        input.append_batch(p, batch);
+    }
+}
+
+/// Run `plan` against a fresh cluster; optionally corrupt the artifacts
+/// with `mutation` before returning (oracle self-checks only).
+pub fn run_plan(spec: &SimSpec, plan: &FaultPlan, mutation: Option<Mutation>) -> RunArtifacts {
+    let cfg = spec.config();
+    let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
+    let cluster =
+        HolonCluster::start_with_clock(cfg.clone(), Query1::new(cfg.window_ms), clock.clone());
+    seed_input(&cluster.input, &cfg);
+
+    // Expand bursts into primitive (time, step) pairs. Bursts carry an
+    // id so overlapping bursts compose instead of stomping each other.
+    enum Step {
+        Kill(NodeId),
+        Start(NodeId),
+        Partition(Vec<NodeId>),
+        Heal,
+        BurstStart(usize, FaultOverlay),
+        BurstEnd(usize),
+    }
+    let mut steps: Vec<(SimTime, Step)> = Vec::new();
+    let mut burst_id = 0usize;
+    let mut burst = |steps: &mut Vec<(SimTime, Step)>, at: SimTime, dur: SimTime, o: FaultOverlay| {
+        steps.push((at, Step::BurstStart(burst_id, o)));
+        steps.push((at + dur, Step::BurstEnd(burst_id)));
+        burst_id += 1;
+    };
+    for e in &plan.events {
+        match &e.action {
+            FaultAction::Kill(n) => steps.push((e.at_ms, Step::Kill(*n))),
+            FaultAction::Restart(n) | FaultAction::AddNode(n) => {
+                steps.push((e.at_ms, Step::Start(*n)))
+            }
+            FaultAction::Partition(g) => steps.push((e.at_ms, Step::Partition(g.clone()))),
+            FaultAction::Heal => steps.push((e.at_ms, Step::Heal)),
+            FaultAction::Loss { pct, duration_ms } => burst(
+                &mut steps,
+                e.at_ms,
+                *duration_ms,
+                FaultOverlay {
+                    extra_delay_ms: 0,
+                    extra_drop_prob: f64::from(*pct) / 100.0,
+                },
+            ),
+            FaultAction::Delay {
+                extra_ms,
+                duration_ms,
+            } => burst(
+                &mut steps,
+                e.at_ms,
+                *duration_ms,
+                FaultOverlay {
+                    extra_delay_ms: *extra_ms,
+                    extra_drop_prob: 0.0,
+                },
+            ),
+        }
+    }
+    steps.sort_by_key(|(t, _)| *t);
+
+    // Active bursts compose: delays add, losses combine independently.
+    let compose = |active: &Vec<(usize, FaultOverlay)>| -> FaultOverlay {
+        let mut delay = 0;
+        let mut keep = 1.0;
+        for (_, o) in active {
+            delay += o.extra_delay_ms;
+            keep *= 1.0 - o.extra_drop_prob;
+        }
+        FaultOverlay {
+            extra_delay_ms: delay,
+            extra_drop_prob: 1.0 - keep,
+        }
+    };
+    // The in-effect cut (the plan's listed group), re-applied whenever
+    // membership changes so nodes restarted/added during the cut join
+    // the "everyone else" side instead of landing in no group at all.
+    let apply_cut = |cut: &Option<Vec<NodeId>>, alive: &BTreeSet<NodeId>| match cut {
+        None => cluster.bus.heal_partition(),
+        Some(group) => {
+            let a: Vec<NodeId> = group.iter().copied().filter(|n| alive.contains(n)).collect();
+            let b: Vec<NodeId> = alive.iter().copied().filter(|n| !a.contains(n)).collect();
+            if a.is_empty() || b.is_empty() {
+                // one side is gone: no cross-cut left to enforce
+                cluster.bus.heal_partition();
+            } else {
+                cluster.bus.set_partition(&[a.as_slice(), b.as_slice()]);
+            }
+        }
+    };
+
+    // Execute. The alive set mirrors the cluster so shrunk or
+    // hand-written plans (e.g. a Restart whose Kill was dropped) stay
+    // executable: impossible steps are skipped, not fatal.
+    let mut alive: BTreeSet<NodeId> = (0..cfg.nodes).collect();
+    let mut cut: Option<Vec<NodeId>> = None;
+    let mut bursts: Vec<(usize, FaultOverlay)> = Vec::new();
+    let mut last_t = 0;
+    for (t, step) in steps {
+        clock.sleep_until(t);
+        last_t = last_t.max(t);
+        match step {
+            Step::Kill(n) => {
+                if alive.len() > 1 && alive.remove(&n) {
+                    cluster.fail_node(n);
+                    if cut.is_some() {
+                        apply_cut(&cut, &alive);
+                    }
+                }
+            }
+            Step::Start(n) => {
+                if alive.insert(n) {
+                    if n >= cfg.nodes {
+                        cluster.add_node(n); // reconfiguration: fresh id
+                    } else {
+                        cluster.restart_node(n);
+                    }
+                    if cut.is_some() {
+                        apply_cut(&cut, &alive);
+                    }
+                }
+            }
+            Step::Partition(group) => {
+                cut = Some(group);
+                apply_cut(&cut, &alive);
+            }
+            Step::Heal => {
+                cut = None;
+                cluster.bus.heal_partition();
+            }
+            Step::BurstStart(id, o) => {
+                bursts.push((id, o));
+                cluster.bus.set_fault_overlay(compose(&bursts));
+            }
+            Step::BurstEnd(id) => {
+                bursts.retain(|(i, _)| *i != id);
+                cluster.bus.set_fault_overlay(compose(&bursts));
+            }
+        }
+    }
+
+    // End of schedule: restore the network, drain, stop gracefully.
+    clock.sleep_until(spec.duration_ms.max(last_t));
+    cluster.bus.heal_partition();
+    cluster.bus.clear_fault_overlay();
+    clock.sleep_until(spec.duration_ms.max(last_t) + spec.drain_ms);
+    cluster.stop();
+
+    // Harvest.
+    let (raw, deduped) = collect_outputs(&cluster.output, cfg.partitions);
+    let mut artifacts = RunArtifacts {
+        partitions: cfg.partitions,
+        raw,
+        deduped,
+        replicas: cluster.final_replicas(),
+        steals: cluster
+            .metrics
+            .steals
+            .load(std::sync::atomic::Ordering::Acquire),
+    };
+    if let Some(m) = mutation {
+        apply_mutation(&mut artifacts, m);
+    }
+    artifacts
+}
+
+/// Harvest an output topic into per-partition `(seq, inner)` streams:
+/// every physical record in append order, and the first delivery per
+/// sequence number in seq order. Shared by [`run_plan`] and scenario
+/// tests that assert [`super::oracle::check_exactly_once`] on a
+/// hand-driven cluster.
+#[allow(clippy::type_complexity)]
+pub fn collect_outputs(
+    output: &Topic,
+    partitions: u32,
+) -> (Vec<Vec<(u64, Vec<u8>)>>, Vec<Vec<(u64, Vec<u8>)>>) {
+    let mut raw = Vec::with_capacity(partitions as usize);
+    let mut deduped = Vec::with_capacity(partitions as usize);
+    for p in 0..partitions {
+        let (recs, _) = output.read(p, 0, usize::MAX >> 1);
+        let mut all = Vec::with_capacity(recs.len());
+        let mut first: BTreeMap<u64, Vec<u8>> = BTreeMap::new();
+        for rec in recs {
+            if let Some((seq, _ts, inner)) = decode_output(&rec.payload) {
+                first.entry(seq).or_insert_with(|| inner.clone());
+                all.push((seq, inner));
+            }
+        }
+        raw.push(all);
+        deduped.push(first.into_iter().collect::<Vec<_>>());
+    }
+    (raw, deduped)
+}
+
+/// Corrupt the artifacts the way the named defect would (dev-only).
+fn apply_mutation(a: &mut RunArtifacts, m: Mutation) {
+    match m {
+        Mutation::DuplicateDelivery => {
+            // a replayed output slips past dedup on the busiest partition
+            if let Some(part) = a.deduped.iter_mut().max_by_key(|p| p.len()) {
+                if let Some(mid) = part.get(part.len() / 2).cloned() {
+                    part.insert(part.len() / 2, mid);
+                }
+            }
+        }
+        Mutation::DropDelivery => {
+            if let Some(part) = a.deduped.iter_mut().max_by_key(|p| p.len()) {
+                if part.len() > 1 {
+                    part.remove(part.len() / 2);
+                }
+            }
+        }
+        Mutation::CorruptPayload => {
+            if let Some(part) = a.deduped.iter_mut().max_by_key(|p| p.len()) {
+                if let Some((_, payload)) = part.last_mut() {
+                    if let Some(b) = payload.last_mut() {
+                        *b ^= 0xFF;
+                    } else {
+                        payload.push(0xFF);
+                    }
+                }
+            }
+        }
+        Mutation::SkewReplica => {
+            // Decodable-but-divergent: graft a phantom contribution into
+            // the replica's oldest live window *without* touching its
+            // progress map, so the convergence oracle's window-value
+            // comparison (not just the decode guard) must catch it.
+            if let Some(bytes) = a.replicas.values_mut().next() {
+                match WindowedCrdt::<GCounter>::from_bytes(bytes) {
+                    Ok(mut w) => {
+                        let assigner = w.assigner();
+                        let ts = assigner.window_start(w.first_available());
+                        let mut skew: WindowedCrdt<GCounter> =
+                            WindowedCrdt::new(assigner, std::iter::empty());
+                        let _ = skew.insert_with(0, ts, |c| c.add(u64::MAX, 1));
+                        w.merge(&skew);
+                        *bytes = w.to_bytes();
+                    }
+                    Err(_) => {
+                        bytes.clear();
+                        bytes.push(0xFF);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The one-line replayable repro printed on oracle failure.
+pub fn repro_line(seed: u64, plan: &FaultPlan) -> String {
+    format!(
+        "HOLON_SIM_SEED={seed} HOLON_SIM_PLAN='{}' cargo test --release --test simulation replay_from_env -- --nocapture",
+        plan.to_plan_string()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_config_is_consistent() {
+        let spec = SimSpec::default();
+        let cfg = spec.config();
+        assert_eq!(cfg.nodes, spec.nodes);
+        assert_eq!(cfg.partitions, spec.partitions);
+        assert!(cfg.holon_event_cost_us > 0.0);
+        let (lo, hi) = spec.fault_window();
+        assert!(lo < hi && hi <= spec.duration_ms);
+    }
+
+    #[test]
+    fn repro_line_mentions_seed_and_plan() {
+        let plan = FaultPlan::parse("500:k1;900:r1").unwrap();
+        let line = repro_line(42, &plan);
+        assert!(line.contains("HOLON_SIM_SEED=42"));
+        assert!(line.contains("500:k1;900:r1"));
+    }
+}

@@ -1,0 +1,143 @@
+//! Fault-plan shrinking: given a plan that falsifies an oracle, find a
+//! (locally) minimal plan that still falsifies one, so the repro the
+//! harness prints is short enough to reason about.
+//!
+//! Built on [`crate::proptest_lite::shrink_to_minimal`]. Candidates are
+//! ordered cheapest-win-first: bisection (drop half the events), then
+//! single-event removal, then weakening (halve burst magnitudes and
+//! durations). Every probe is a full cluster run, so the probe budget
+//! is explicit.
+
+use crate::proptest_lite::shrink_to_minimal;
+
+use super::plan::{FaultAction, FaultPlan};
+
+/// Smaller variants of `plan`, most aggressive first.
+pub fn candidates(plan: &FaultPlan) -> Vec<FaultPlan> {
+    let n = plan.events.len();
+    let mut out = Vec::new();
+    // bisect
+    if n >= 2 {
+        out.push(FaultPlan {
+            events: plan.events[..n / 2].to_vec(),
+        });
+        out.push(FaultPlan {
+            events: plan.events[n / 2..].to_vec(),
+        });
+    }
+    // drop one event at a time
+    for i in 0..n {
+        let mut events = plan.events.clone();
+        events.remove(i);
+        out.push(FaultPlan { events });
+    }
+    // weaken bursts in place
+    for (i, e) in plan.events.iter().enumerate() {
+        let weakened = match &e.action {
+            FaultAction::Loss { pct, duration_ms } if *pct > 10 || *duration_ms > 100 => {
+                Some(FaultAction::Loss {
+                    pct: (*pct / 2).max(5),
+                    duration_ms: (*duration_ms / 2).max(50),
+                })
+            }
+            FaultAction::Delay {
+                extra_ms,
+                duration_ms,
+            } if *extra_ms > 10 || *duration_ms > 100 => Some(FaultAction::Delay {
+                extra_ms: (*extra_ms / 2).max(5),
+                duration_ms: (*duration_ms / 2).max(50),
+            }),
+            _ => None,
+        };
+        if let Some(action) = weakened {
+            let mut events = plan.events.clone();
+            events[i].action = action;
+            out.push(FaultPlan { events });
+        }
+    }
+    out
+}
+
+/// Minimize a falsifying plan. `still_fails` must re-run the candidate
+/// end-to-end and report whether *any* oracle still falsifies; at most
+/// `budget` probes are spent.
+pub fn shrink_plan(
+    plan: &FaultPlan,
+    still_fails: impl FnMut(&FaultPlan) -> bool,
+    budget: usize,
+) -> FaultPlan {
+    shrink_to_minimal(plan.clone(), candidates, still_fails, budget)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::plan::FaultEvent;
+
+    fn plan_of(s: &str) -> FaultPlan {
+        FaultPlan::parse(s).unwrap()
+    }
+
+    #[test]
+    fn shrinks_to_the_single_triggering_event() {
+        // Pretend the failure needs exactly the kill of node 2.
+        let plan = plan_of("400:k1;700:k2;900:r1;1200:r2;1500:l40x600;2000:d90x400");
+        let fails = |p: &FaultPlan| {
+            p.events
+                .iter()
+                .any(|e| matches!(e.action, FaultAction::Kill(2)))
+        };
+        let min = shrink_plan(&plan, fails, 500);
+        assert_eq!(min.events.len(), 1);
+        assert!(matches!(min.events[0].action, FaultAction::Kill(2)));
+    }
+
+    #[test]
+    fn shrinks_burst_magnitude_when_events_cannot_be_dropped() {
+        // Failure triggered by the presence of any Loss burst.
+        let plan = plan_of("1500:l80x800");
+        let fails = |p: &FaultPlan| {
+            p.events
+                .iter()
+                .any(|e| matches!(e.action, FaultAction::Loss { .. }))
+        };
+        let min = shrink_plan(&plan, fails, 500);
+        assert_eq!(min.events.len(), 1);
+        match min.events[0].action {
+            FaultAction::Loss { pct, duration_ms } => {
+                assert!(pct <= 10, "pct {pct} not weakened");
+                assert!(duration_ms <= 100, "duration {duration_ms} not weakened");
+            }
+            ref other => panic!("unexpected action {other:?}"),
+        }
+    }
+
+    #[test]
+    fn plan_independent_failure_shrinks_to_empty() {
+        let plan = plan_of("400:k1;900:r1;1500:l40x600");
+        let min = shrink_plan(&plan, |_| true, 500);
+        assert!(min.is_empty());
+    }
+
+    #[test]
+    fn candidates_never_grow_the_plan() {
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent {
+                    at_ms: 100,
+                    action: FaultAction::Kill(0),
+                },
+                FaultEvent {
+                    at_ms: 300,
+                    action: FaultAction::Loss {
+                        pct: 50,
+                        duration_ms: 400,
+                    },
+                },
+            ],
+        };
+        for c in candidates(&plan) {
+            assert!(c.events.len() <= plan.events.len());
+        }
+    }
+}

@@ -473,6 +473,80 @@ mod tests {
     }
 
     #[test]
+    fn increment_watermark_rejects_regression() {
+        // A stale replay may call increment with an older timestamp;
+        // progress must be monotone (max-merge, never assignment).
+        let mut w = wcrdt(&[0]);
+        w.increment_watermark(0, 700);
+        w.increment_watermark(0, 300);
+        assert_eq!(w.progress_of(0), 700);
+        // merging an older replica cannot regress progress either
+        let mut old = wcrdt(&[0]);
+        old.increment_watermark(0, 100);
+        w.merge(&old);
+        assert_eq!(w.progress_of(0), 700);
+        assert_eq!(w.global_watermark(), 700);
+    }
+
+    #[test]
+    fn window_closes_exactly_at_boundary_watermark() {
+        // Window 0 covers [0, 1000); it completes exactly when the
+        // global watermark *equals* 1000 — not at 999, and an event at
+        // ts=1000 belongs to window 1, never to the just-closed window.
+        let mut w = wcrdt(&[0, 1]);
+        w.insert_with(0, 999, |c| c.add(0, 1)).unwrap();
+        w.increment_watermark(0, 999);
+        w.increment_watermark(1, 999);
+        assert!(!w.is_complete(0));
+        assert_eq!(w.window_value(0), None);
+
+        w.insert_with(0, 1000, |c| c.add(0, 5)).unwrap(); // next window
+        w.increment_watermark(0, 1000);
+        w.increment_watermark(1, 1000);
+        assert!(w.is_complete(0));
+        assert_eq!(w.window_value(0).unwrap().value(), 1); // 1000-event excluded
+        assert!(!w.is_complete(1));
+        assert_eq!(w.completed_up_to(), Some(0));
+    }
+
+    #[test]
+    fn fire_order_is_sequential_at_shared_boundaries() {
+        // When one watermark jump completes several windows at once
+        // (restart catch-up), the drain fires them strictly in order
+        // with no skips — including empty windows in the middle.
+        use crate::api::drain_completed;
+        let mut w = wcrdt(&[0]);
+        w.insert_with(0, 100, |c| c.add(0, 1)).unwrap();
+        w.insert_with(0, 2100, |c| c.add(0, 3)).unwrap(); // window 1 empty
+        w.increment_watermark(0, 3000); // completes windows 0,1,2 at once
+        let mut cursor = 0;
+        let mut fired = Vec::new();
+        drain_completed(&w, &mut cursor, |wid, c: GCounter| fired.push((wid, c.value())));
+        assert_eq!(fired, vec![(0, 1), (1, 0), (2, 3)]);
+        assert_eq!(cursor, 3);
+        // watermark exactly on the next boundary: window 3 now complete
+        w.increment_watermark(0, 4000);
+        drain_completed(&w, &mut cursor, |wid, c: GCounter| fired.push((wid, c.value())));
+        assert_eq!(fired.last(), Some(&(3, 0)));
+    }
+
+    #[test]
+    fn late_insert_boundary_is_exact() {
+        // Inserting exactly *at* the own watermark is allowed (Algorithm
+        // 1 rejects strictly-below only); one tick below errors.
+        let mut w = wcrdt(&[0]);
+        w.increment_watermark(0, 500);
+        assert!(w.insert_with(0, 500, |c| c.add(0, 1)).is_ok());
+        assert_eq!(
+            w.insert_with(0, 499, |c| c.add(0, 1)),
+            Err(WcrdtError::LateInsert {
+                ts: 499,
+                watermark: 500
+            })
+        );
+    }
+
+    #[test]
     fn global_watermark_is_min() {
         let mut w = wcrdt(&[0, 1, 2]);
         w.increment_watermark(0, 100);

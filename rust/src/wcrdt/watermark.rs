@@ -84,6 +84,48 @@ mod tests {
     }
 
     #[test]
+    fn boundary_is_exact_not_fuzzy() {
+        // An event exactly `max_delay_ms` behind the max is the last
+        // acceptable one; one millisecond more is late. Off-by-ones here
+        // silently drop (or double-count) boundary events.
+        let g = WatermarkGen::BoundedOutOfOrder { max_delay_ms: 200 };
+        let max_seen = 10_000;
+        assert!(!g.is_late(max_seen - 200, max_seen));
+        assert!(g.is_late(max_seen - 201, max_seen));
+        // zero-lateness degenerates to Ascending behavior
+        let g0 = WatermarkGen::BoundedOutOfOrder { max_delay_ms: 0 };
+        assert_eq!(g0.watermark(500), WatermarkGen::Ascending.watermark(500));
+        assert!(g0.is_late(499, 500));
+        assert!(!g0.is_late(500, 500));
+    }
+
+    #[test]
+    fn watermark_never_regresses_as_max_advances() {
+        // The generator is fed a monotone max; the derived watermark
+        // must be monotone too (for both strategies).
+        for g in [
+            WatermarkGen::Ascending,
+            WatermarkGen::BoundedOutOfOrder { max_delay_ms: 137 },
+        ] {
+            let mut last = 0;
+            for max_seen in [0, 1, 137, 138, 500, 500, 9999] {
+                let wm = g.watermark(max_seen);
+                assert!(wm >= last, "{g:?}: watermark regressed {last} -> {wm}");
+                last = wm;
+            }
+        }
+    }
+
+    #[test]
+    fn saturation_below_delay_never_marks_late() {
+        // While max_seen < max_delay the watermark pins to 0 — nothing
+        // can be late yet, even ts = 0.
+        let g = WatermarkGen::BoundedOutOfOrder { max_delay_ms: 1000 };
+        assert_eq!(g.watermark(999), 0);
+        assert!(!g.is_late(0, 999));
+    }
+
+    #[test]
     fn codec_roundtrip() {
         for g in [
             WatermarkGen::Ascending,

@@ -11,6 +11,7 @@ use holon::engine::HolonCluster;
 use holon::nexmark::producer;
 use holon::nexmark::queries::{Query1, RatioOut};
 use holon::nexmark::Event;
+use holon::sim::{check_exactly_once, collect_outputs, RunArtifacts};
 
 fn cfg() -> HolonConfig {
     let mut cfg = HolonConfig::default();
@@ -27,34 +28,14 @@ fn cfg() -> HolonConfig {
     cfg
 }
 
-/// Count the bids per window per partition straight off the input log
-/// (ground truth), then compare with Query1 outputs after a failure.
-#[test]
-fn state_counts_every_event_exactly_once_despite_failures() {
-    let cfg = cfg();
-    let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
-    let cluster =
-        HolonCluster::start_with_clock(cfg.clone(), Query1::new(cfg.window_ms), clock.clone());
-    let prod = producer::spawn(
-        cluster.input.clone(),
-        clock.clone(),
-        cfg.seed,
-        cfg.events_per_sec_per_partition,
-        cfg.duration_ms,
-    );
-    // two failures while data is flowing
-    std::thread::sleep(clock.wall_for(2500));
-    cluster.fail_node(0);
-    std::thread::sleep(clock.wall_for(1200));
-    cluster.restart_node(0);
-    std::thread::sleep(clock.wall_for(800));
-    cluster.fail_node(2);
-    std::thread::sleep(clock.wall_for(1200));
-    cluster.restart_node(2);
-    std::thread::sleep(clock.wall_for(cfg.duration_ms - 5700 + 4000));
-    prod.stop();
-    cluster.stop();
-
+/// Assert every emitted window matches bid counts recomputed straight
+/// off the input log (ground truth), requiring at least `min_windows`
+/// comparisons so the check cannot pass vacuously.
+fn assert_ratio_outputs_match_ground_truth(
+    cluster: &HolonCluster<Query1>,
+    cfg: &HolonConfig,
+    min_windows: u64,
+) {
     // ground truth: bids per (partition, window) from the input log
     let mut truth: Vec<std::collections::BTreeMap<u64, u64>> =
         vec![Default::default(); cfg.partitions as usize];
@@ -99,7 +80,94 @@ fn state_counts_every_event_exactly_once_despite_failures() {
             compared += 1;
         }
     }
-    assert!(compared >= 20, "only {compared} windows compared");
+    assert!(compared >= min_windows, "only {compared} windows compared");
+}
+
+/// Assert the sink dedup invariant directly on the output log: after
+/// first-delivery-per-seq dedup the sequence numbers are contiguous
+/// from 0, and every physical replay is byte-identical to the first
+/// delivery of its sequence number — the same oracle the simulation
+/// harness applies after every fault schedule.
+fn assert_dedup_invariant(cluster: &HolonCluster<Query1>, cfg: &HolonConfig) {
+    let (raw, deduped) = collect_outputs(&cluster.output, cfg.partitions);
+    let artifacts = RunArtifacts {
+        partitions: cfg.partitions,
+        raw,
+        deduped,
+        replicas: Default::default(),
+        steals: 0,
+    };
+    if let Err(f) = check_exactly_once(&artifacts) {
+        panic!("dedup invariant violated: {f}");
+    }
+}
+
+/// Count the bids per window per partition straight off the input log
+/// (ground truth), then compare with Query1 outputs after a failure.
+#[test]
+fn state_counts_every_event_exactly_once_despite_failures() {
+    let cfg = cfg();
+    let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
+    let cluster =
+        HolonCluster::start_with_clock(cfg.clone(), Query1::new(cfg.window_ms), clock.clone());
+    let prod = producer::spawn(
+        cluster.input.clone(),
+        clock.clone(),
+        cfg.seed,
+        cfg.events_per_sec_per_partition,
+        cfg.duration_ms,
+    );
+    // two failures while data is flowing
+    std::thread::sleep(clock.wall_for(2500));
+    cluster.fail_node(0);
+    std::thread::sleep(clock.wall_for(1200));
+    cluster.restart_node(0);
+    std::thread::sleep(clock.wall_for(800));
+    cluster.fail_node(2);
+    std::thread::sleep(clock.wall_for(1200));
+    cluster.restart_node(2);
+    std::thread::sleep(clock.wall_for(cfg.duration_ms - 5700 + 4000));
+    prod.stop();
+    cluster.stop();
+
+    assert_ratio_outputs_match_ground_truth(&cluster, &cfg, 20);
+}
+
+/// Double restart: the node is killed *again* mid-recovery — after it
+/// has stolen its partitions back but before its first post-restart
+/// checkpoint — so the second recovery replays from the stale
+/// pre-restart checkpoints. The sink dedup invariant (contiguous seqs,
+/// byte-identical replays) and the ground-truth counts must survive.
+#[test]
+fn double_restart_mid_recovery_keeps_dedup_invariant() {
+    let cfg = cfg();
+    let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
+    let cluster =
+        HolonCluster::start_with_clock(cfg.clone(), Query1::new(cfg.window_ms), clock.clone());
+    let prod = producer::spawn(
+        cluster.input.clone(),
+        clock.clone(),
+        cfg.seed,
+        cfg.events_per_sec_per_partition,
+        cfg.duration_ms,
+    );
+    std::thread::sleep(clock.wall_for(2500));
+    cluster.fail_node(1);
+    std::thread::sleep(clock.wall_for(900));
+    cluster.restart_node(1);
+    // the restarted node claims its partitions after one heartbeat round
+    // (200 sim-ms) and would first checkpoint 300 sim-ms after recovery;
+    // killing at +350 lands between the two
+    std::thread::sleep(clock.wall_for(350));
+    cluster.fail_node(1);
+    std::thread::sleep(clock.wall_for(1000));
+    cluster.restart_node(1);
+    std::thread::sleep(clock.wall_for(cfg.duration_ms - 4750 + 4000));
+    prod.stop();
+    cluster.stop();
+
+    assert_dedup_invariant(&cluster, &cfg);
+    assert_ratio_outputs_match_ground_truth(&cluster, &cfg, 20);
 }
 
 /// Duplicated physical outputs must be byte-identical to the originals

@@ -3,7 +3,10 @@
 //! round-trips, and coordinator assignment invariants.
 
 use holon::codec::{Decode, Encode};
-use holon::crdt::{BoundedTopK, Crdt, GCounter, MapCrdt, ORSet, PNCounter, PrefixAgg};
+use holon::crdt::{
+    BoundedTopK, Crdt, GCounter, GSet, LwwRegister, MapCrdt, MaxRegister, MinRegister, ORSet,
+    PNCounter, PrefixAgg, TwoPSet,
+};
 use holon::engine::membership::{assignment, target_owner};
 use holon::proptest_lite::forall;
 use holon::util::XorShift64;
@@ -64,6 +67,56 @@ fn gen_map(rng: &mut XorShift64, size: usize) -> MapCrdt<u64, GCounter> {
     m
 }
 
+fn gen_lww(rng: &mut XorShift64, size: usize) -> LwwRegister<u64> {
+    // Discipline: a (ts, contributor) pair always carries the same value
+    // — execution guarantees this (a contributor's writes are
+    // deterministic), and without it ties would not commute.
+    let mut r = LwwRegister::new();
+    for _ in 0..rng.next_below(size as u64 + 1) {
+        let ts = rng.next_below(100);
+        let c = rng.next_below(8);
+        r.set(ts, c, ts * 1000 + c);
+    }
+    r
+}
+
+fn gen_maxreg(rng: &mut XorShift64, size: usize) -> MaxRegister<u64> {
+    let mut r = MaxRegister::new();
+    for _ in 0..rng.next_below(size as u64 + 1) {
+        r.put(rng.next_below(10_000));
+    }
+    r
+}
+
+fn gen_minreg(rng: &mut XorShift64, size: usize) -> MinRegister<u64> {
+    let mut r = MinRegister::new();
+    for _ in 0..rng.next_below(size as u64 + 1) {
+        r.put(rng.next_below(10_000));
+    }
+    r
+}
+
+fn gen_gset(rng: &mut XorShift64, size: usize) -> GSet<u64> {
+    let mut s = GSet::new();
+    for _ in 0..rng.next_below(size as u64 + 1) {
+        s.insert(rng.next_below(32));
+    }
+    s
+}
+
+fn gen_2pset(rng: &mut XorShift64, size: usize) -> TwoPSet<u64> {
+    let mut s = TwoPSet::new();
+    for _ in 0..rng.next_below(size as u64 + 1) {
+        let v = rng.next_below(24);
+        if rng.chance(0.7) {
+            s.insert(v);
+        } else {
+            s.remove(v);
+        }
+    }
+    s
+}
+
 // ---- lattice laws over random states ----------------------------------
 
 fn check_laws<C: Crdt + PartialEq + std::fmt::Debug>(a: &C, b: &C, c: &C) -> Result<(), String> {
@@ -110,6 +163,224 @@ lattice_law_test!(pncounter_lattice_laws, gen_pncounter);
 lattice_law_test!(topk_lattice_laws, gen_topk);
 lattice_law_test!(orset_lattice_laws, gen_orset);
 lattice_law_test!(mapcrdt_lattice_laws, gen_map);
+lattice_law_test!(lww_register_lattice_laws, gen_lww);
+lattice_law_test!(max_register_lattice_laws, gen_maxreg);
+lattice_law_test!(min_register_lattice_laws, gen_minreg);
+lattice_law_test!(gset_lattice_laws, gen_gset);
+lattice_law_test!(twopset_lattice_laws, gen_2pset);
+
+#[test]
+fn prefix_agg_lattice_laws_under_prefix_discipline() {
+    // PrefixAgg's join is only a lattice over *prefix-disciplined*
+    // replicas (two states of the same contributor must be prefixes of
+    // one common op sequence — which execution guarantees); a,b,c are
+    // therefore three random cuts of shared per-contributor sequences.
+    forall(
+        "prefix agg lattice laws",
+        150,
+        32,
+        &|rng: &mut XorShift64, size: usize| {
+            let contributors = 1 + rng.next_below(4);
+            let seqs: Vec<Vec<f64>> = (0..contributors)
+                .map(|_| {
+                    (0..rng.next_below(size as u64 + 1))
+                        .map(|_| rng.next_below(10_000) as f64)
+                        .collect()
+                })
+                .collect();
+            let cut = |rng: &mut XorShift64| -> PrefixAgg {
+                let mut a = PrefixAgg::new();
+                for (c, seq) in seqs.iter().enumerate() {
+                    let n = rng.next_below(seq.len() as u64 + 1) as usize;
+                    for &v in &seq[..n] {
+                        a.observe(c as u64, v);
+                    }
+                }
+                a
+            };
+            let a = cut(rng);
+            let b = cut(rng);
+            let c = cut(rng);
+            (a, b, c)
+        },
+        |(a, b, c)| check_laws(a, b, c),
+    );
+}
+
+// ---- merge-vs-sequential-apply equivalence ------------------------------
+//
+// The operational core of the paper's idempotent-replay argument: ops
+// split across replicas (each contributor's ops staying on one replica,
+// as partition ownership guarantees) and then merged must equal the
+// same ops applied sequentially to a single replica.
+
+fn split_vs_sequential<C, Op>(
+    ops: &[(u64, Op)],
+    apply: impl Fn(&mut C, u64, &Op),
+) -> Result<(), String>
+where
+    C: Crdt + PartialEq + std::fmt::Debug,
+{
+    let mut seq = C::default();
+    let mut even = C::default();
+    let mut odd = C::default();
+    for (contributor, op) in ops {
+        apply(&mut seq, *contributor, op);
+        if contributor % 2 == 0 {
+            apply(&mut even, *contributor, op);
+        } else {
+            apply(&mut odd, *contributor, op);
+        }
+    }
+    let ab = even.clone().merged(&odd);
+    let ba = odd.merged(&even);
+    if ab != ba {
+        return Err(format!("merge not commutative: {ab:?} != {ba:?}"));
+    }
+    if ab != seq {
+        return Err(format!(
+            "split+merge != sequential apply: {ab:?} != {seq:?}"
+        ));
+    }
+    Ok(())
+}
+
+macro_rules! split_equivalence_test {
+    ($name:ident, $gen_ops:expr, $apply:expr) => {
+        #[test]
+        fn $name() {
+            forall(
+                stringify!($name),
+                120,
+                48,
+                &|rng: &mut XorShift64, size: usize| {
+                    let n = rng.next_below(size as u64 + 1);
+                    (0..n).map(|_| $gen_ops(rng)).collect::<Vec<_>>()
+                },
+                |ops| split_vs_sequential(ops, $apply),
+            );
+        }
+    };
+}
+
+split_equivalence_test!(
+    gcounter_split_equivalence,
+    |rng: &mut XorShift64| (rng.next_below(6), rng.next_below(100)),
+    |c: &mut GCounter, contributor, n: &u64| c.add(contributor, *n)
+);
+
+split_equivalence_test!(
+    pncounter_split_equivalence,
+    |rng: &mut XorShift64| {
+        (
+            rng.next_below(6),
+            (rng.next_below(100), rng.chance(0.5)),
+        )
+    },
+    |c: &mut PNCounter, contributor, op: &(u64, bool)| {
+        if op.1 {
+            c.add(contributor, op.0)
+        } else {
+            c.sub(contributor, op.0)
+        }
+    }
+);
+
+split_equivalence_test!(
+    prefix_agg_split_equivalence,
+    |rng: &mut XorShift64| (rng.next_below(6), rng.next_below(10_000) as f64),
+    |a: &mut PrefixAgg, contributor, v: &f64| a.observe(contributor, *v)
+);
+
+split_equivalence_test!(
+    topk_split_equivalence,
+    |rng: &mut XorShift64| {
+        (
+            rng.next_below(6),
+            (rng.next_f64() * 1000.0, rng.next_below(1000)),
+        )
+    },
+    |t: &mut BoundedTopK, contributor, op: &(f64, u64)| {
+        t.set_k(4);
+        t.offer(op.0, op.1, contributor)
+    }
+);
+
+split_equivalence_test!(
+    map_split_equivalence,
+    |rng: &mut XorShift64| {
+        (
+            rng.next_below(6),
+            (rng.next_below(5), rng.next_below(50)),
+        )
+    },
+    |m: &mut MapCrdt<u64, GCounter>, contributor, op: &(u64, u64)| {
+        m.entry(op.0).add(contributor, op.1)
+    }
+);
+
+split_equivalence_test!(
+    gset_split_equivalence,
+    |rng: &mut XorShift64| {
+        let c = rng.next_below(6);
+        (c, c * 1000 + rng.next_below(20))
+    },
+    |s: &mut GSet<u64>, _contributor, v: &u64| s.insert(*v)
+);
+
+split_equivalence_test!(
+    twopset_split_equivalence,
+    |rng: &mut XorShift64| {
+        let c = rng.next_below(6);
+        (c, (c * 1000 + rng.next_below(20), rng.chance(0.7)))
+    },
+    |s: &mut TwoPSet<u64>, _contributor, op: &(u64, bool)| {
+        if op.1 {
+            s.insert(op.0)
+        } else {
+            s.remove(op.0)
+        }
+    }
+);
+
+split_equivalence_test!(
+    orset_split_equivalence,
+    // values are namespaced per contributor so a remove only ever
+    // observes dots its own replica added — the case where OR-set
+    // split/merge and sequential application coincide
+    |rng: &mut XorShift64| {
+        let c = rng.next_below(6);
+        (c, (c * 1000 + rng.next_below(12), rng.chance(0.7)))
+    },
+    |s: &mut ORSet<u64>, contributor, op: &(u64, bool)| {
+        if op.1 {
+            s.insert(contributor, op.0)
+        } else {
+            s.remove(&op.0)
+        }
+    }
+);
+
+split_equivalence_test!(
+    lww_register_split_equivalence,
+    |rng: &mut XorShift64| {
+        let c = rng.next_below(6);
+        (c, (rng.next_below(100), rng.next_below(1000)))
+    },
+    |r: &mut LwwRegister<u64>, contributor, op: &(u64, u64)| r.set(op.0, contributor, op.1)
+);
+
+split_equivalence_test!(
+    max_register_split_equivalence,
+    |rng: &mut XorShift64| (rng.next_below(6), rng.next_below(10_000)),
+    |r: &mut MaxRegister<u64>, _contributor, v: &u64| r.put(*v)
+);
+
+split_equivalence_test!(
+    min_register_split_equivalence,
+    |rng: &mut XorShift64| (rng.next_below(6), rng.next_below(10_000)),
+    |r: &mut MinRegister<u64>, _contributor, v: &u64| r.put(*v)
+);
 
 // ---- codec round-trips over random states ------------------------------
 

@@ -1,0 +1,106 @@
+"""Tests for the BENCH_*.json schema validator used by CI bench-smoke."""
+
+import copy
+import importlib.util
+import pathlib
+
+_spec = importlib.util.spec_from_file_location(
+    "validate_bench",
+    pathlib.Path(__file__).resolve().parents[1] / "tools" / "validate_bench.py",
+)
+validate_bench = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(validate_bench)
+validate = validate_bench.validate
+
+
+def scenario(**overrides):
+    base = {
+        "name": "throughput_max_q7_holon",
+        "system": "holon",
+        "workload": "q7",
+        "events_per_sec_peak": 120000.0,
+        "events_per_sec_mean": 80000.0,
+        "events_produced": 800000,
+        "events_consumed": 790000,
+        "outputs": 120,
+        "latency_mean_ms": 350.5,
+        "latency_p50_ms": 300,
+        "latency_p99_ms": 900,
+        "gossip_msgs": 4200,
+        "gossip_bytes_encoded": 262144,
+        "gossip_bytes_wire": 1048576,
+        "gossip_bytes_per_sec": 52428.8,
+        "payload_clones": 0,
+        "records_read": 912000,
+        "payload_clones_per_event": 0.0,
+        "dedup_duplicates": 3,
+        "seq_gaps": 0,
+        "stalled": False,
+    }
+    base.update(overrides)
+    return base
+
+
+def doc(**overrides):
+    d = {
+        "schema": "holon-bench/v1",
+        "pr": "PR3",
+        "quick": True,
+        "scenarios": [scenario()],
+    }
+    d.update(overrides)
+    return d
+
+
+def test_valid_document_passes():
+    assert validate(doc()) == []
+
+
+def test_wrong_schema_tag_fails():
+    assert any("schema" in e for e in validate(doc(schema="nope/v0")))
+
+
+def test_missing_field_fails():
+    d = doc()
+    del d["scenarios"][0]["payload_clones"]
+    assert any("payload_clones" in e for e in validate(d))
+
+
+def test_unknown_field_fails():
+    d = doc()
+    d["scenarios"][0]["surprise"] = 1
+    assert any("unknown fields" in e for e in validate(d))
+
+
+def test_wrong_type_fails():
+    d = doc()
+    d["scenarios"][0]["outputs"] = "many"
+    assert any("outputs" in e for e in validate(d))
+
+
+def test_bool_is_not_an_int():
+    d = doc()
+    d["scenarios"][0]["seq_gaps"] = True
+    assert any("seq_gaps" in e for e in validate(d))
+
+
+def test_empty_scenarios_fail():
+    assert any("non-empty" in e for e in validate(doc(scenarios=[])))
+
+
+def test_duplicate_scenario_names_fail():
+    d = doc()
+    d["scenarios"].append(copy.deepcopy(d["scenarios"][0]))
+    assert any("duplicate" in e for e in validate(d))
+
+
+def test_negative_counter_fails():
+    d = doc()
+    d["scenarios"][0]["gossip_msgs"] = -1
+    assert any("negative" in e for e in validate(d))
+
+
+def test_unknown_system_fails():
+    d = doc()
+    d["scenarios"][0]["system"] = "spark"
+    assert any("system" in e for e in validate(d))

@@ -1,0 +1,115 @@
+#!/usr/bin/env python3
+"""Validate a BENCH_*.json perf-trajectory report (schema holon-bench/v1).
+
+Usage: python python/tools/validate_bench.py BENCH_PR3.json
+
+Exit code 0 when the document is schema-valid, 1 otherwise (errors on
+stderr). Stdlib-only so the CI bench-smoke job needs no extra deps.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+SCHEMA = "holon-bench/v1"
+
+# field -> allowed JSON types per scenario entry
+SCENARIO_FIELDS = {
+    "name": (str,),
+    "system": (str,),
+    "workload": (str,),
+    "events_per_sec_peak": (int, float),
+    "events_per_sec_mean": (int, float),
+    "events_produced": (int,),
+    "events_consumed": (int,),
+    "outputs": (int,),
+    "latency_mean_ms": (int, float),
+    "latency_p50_ms": (int,),
+    "latency_p99_ms": (int,),
+    "gossip_msgs": (int,),
+    "gossip_bytes_encoded": (int,),
+    "gossip_bytes_wire": (int,),
+    "gossip_bytes_per_sec": (int, float),
+    "payload_clones": (int,),
+    "records_read": (int,),
+    "payload_clones_per_event": (int, float),
+    "dedup_duplicates": (int,),
+    "seq_gaps": (int,),
+    "stalled": (bool,),
+}
+
+SYSTEMS = {"holon", "flink", "flink_spare"}
+
+
+def validate(doc: object) -> list[str]:
+    """Return a list of schema violations (empty == valid)."""
+    errors: list[str] = []
+    if not isinstance(doc, dict):
+        return ["document root must be a JSON object"]
+    if doc.get("schema") != SCHEMA:
+        errors.append(f"schema must be {SCHEMA!r}, got {doc.get('schema')!r}")
+    if not isinstance(doc.get("pr"), str) or not doc.get("pr"):
+        errors.append("pr must be a non-empty string")
+    if not isinstance(doc.get("quick"), bool):
+        errors.append("quick must be a boolean")
+    scenarios = doc.get("scenarios")
+    if not isinstance(scenarios, list) or not scenarios:
+        return errors + ["scenarios must be a non-empty array"]
+    names = set()
+    for i, sc in enumerate(scenarios):
+        where = f"scenarios[{i}]"
+        if not isinstance(sc, dict):
+            errors.append(f"{where} must be an object")
+            continue
+        for field, types in SCENARIO_FIELDS.items():
+            if field not in sc:
+                errors.append(f"{where} missing field {field!r}")
+            elif not isinstance(sc[field], types) or (
+                # bool is an int subclass in python; reject it for int fields
+                isinstance(sc[field], bool) and bool not in types
+            ):
+                errors.append(
+                    f"{where}.{field} has type {type(sc[field]).__name__}, "
+                    f"want one of {[t.__name__ for t in types]}"
+                )
+        extra = set(sc) - set(SCENARIO_FIELDS)
+        if extra:
+            errors.append(f"{where} has unknown fields {sorted(extra)}")
+        name = sc.get("name")
+        if isinstance(name, str):
+            if name in names:
+                errors.append(f"{where} duplicate scenario name {name!r}")
+            names.add(name)
+        if isinstance(sc.get("system"), str) and sc["system"] not in SYSTEMS:
+            errors.append(f"{where}.system {sc['system']!r} not in {sorted(SYSTEMS)}")
+        # negative counters are always a bug
+        for field in SCENARIO_FIELDS:
+            v = sc.get(field)
+            if isinstance(v, (int, float)) and not isinstance(v, bool) and v < 0:
+                errors.append(f"{where}.{field} is negative ({v})")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) != 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    try:
+        with open(argv[1], encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error reading {argv[1]}: {e}", file=sys.stderr)
+        return 1
+    errors = validate(doc)
+    if errors:
+        for e in errors:
+            print(f"schema violation: {e}", file=sys.stderr)
+        return 1
+    n = len(doc["scenarios"])
+    print(f"{argv[1]}: valid {SCHEMA} report with {n} scenario(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -76,6 +76,35 @@ fn main() {
         let (recs, _) = topic.read(0, 0, 256);
         std::hint::black_box(recs);
     });
+    // the zero-copy RUN_BATCH path vs the copying read above: same
+    // records, no Vec<Record> materialization, no payload Arc bumps
+    bench("log_read_slice_256", 10, 5_000, || {
+        let (n, _) = topic.read_slice(0, 0, 256, |recs| {
+            let mut sum = 0u64;
+            for r in recs {
+                sum += r.payload.len() as u64;
+            }
+            sum
+        });
+        std::hint::black_box(n);
+    });
+
+    section("micro: checkpoint encode (nested single-pass vs two-pass)");
+    let ckpt_local = (0u64..64).collect::<Vec<u64>>();
+    bench("ckpt_encode_two_pass", 100, 10_000, || {
+        // the pre-overhaul shape: encode to an intermediate Vec, then
+        // length-prefix copy it into the outer writer
+        let mut outer = holon::codec::Writer::new();
+        outer.put_bytes(&ckpt_local.to_bytes());
+        outer.put_bytes(&w.to_bytes());
+        std::hint::black_box(outer.into_bytes());
+    });
+    bench("ckpt_encode_nested", 100, 10_000, || {
+        let mut outer = holon::codec::Writer::new();
+        outer.put_nested(|o| ckpt_local.encode(o));
+        outer.put_nested(|o| w.encode(o));
+        std::hint::black_box(outer.into_bytes());
+    });
 
     section("micro: batch aggregation (1024 events, 4 windows)");
     let items: Vec<(f64, u64)> = (0..1024)

@@ -38,6 +38,18 @@ pub trait SharedState: Clone + Send + Encode + Decode + 'static {
     fn take_delta(&mut self) -> Self {
         self.clone()
     }
+
+    /// Windows touched since the last [`take_delta`](Self::take_delta) /
+    /// [`mark_clean`](Self::mark_clean) across the contained WCRDTs —
+    /// the engine skips re-encoding a partition checkpoint when its
+    /// contribution accumulator reports 0 here.
+    fn dirty_windows(&self) -> usize;
+
+    /// Drop the dirty markers without building a delta (the observer has
+    /// seen the full state — a full-sync gossip round or a checkpoint
+    /// encode). Bounds dirty-set growth on replicas that never call
+    /// `take_delta`.
+    fn mark_clean(&mut self);
 }
 
 impl SharedState for () {
@@ -54,6 +66,12 @@ impl SharedState for () {
     fn watermark_floor(&self) -> crate::util::SimTime {
         crate::util::SimTime::MAX
     }
+
+    fn dirty_windows(&self) -> usize {
+        0
+    }
+
+    fn mark_clean(&mut self) {}
 }
 
 impl<C: Crdt> SharedState for WindowedCrdt<C> {
@@ -79,6 +97,14 @@ impl<C: Crdt> SharedState for WindowedCrdt<C> {
 
     fn take_delta(&mut self) -> Self {
         WindowedCrdt::take_delta(self)
+    }
+
+    fn dirty_windows(&self) -> usize {
+        WindowedCrdt::dirty_windows(self)
+    }
+
+    fn mark_clean(&mut self) {
+        WindowedCrdt::mark_clean(self);
     }
 }
 
@@ -107,6 +133,15 @@ impl<A: SharedState, B: SharedState> SharedState for (A, B) {
 
     fn take_delta(&mut self) -> Self {
         (self.0.take_delta(), self.1.take_delta())
+    }
+
+    fn dirty_windows(&self) -> usize {
+        self.0.dirty_windows() + self.1.dirty_windows()
+    }
+
+    fn mark_clean(&mut self) {
+        self.0.mark_clean();
+        self.1.mark_clean();
     }
 }
 
@@ -148,6 +183,16 @@ impl<A: SharedState, B: SharedState, C: SharedState> SharedState for (A, B, C) {
             self.1.take_delta(),
             self.2.take_delta(),
         )
+    }
+
+    fn dirty_windows(&self) -> usize {
+        self.0.dirty_windows() + self.1.dirty_windows() + self.2.dirty_windows()
+    }
+
+    fn mark_clean(&mut self) {
+        self.0.mark_clean();
+        self.1.mark_clean();
+        self.2.mark_clean();
     }
 }
 
@@ -194,6 +239,18 @@ mod tests {
         fresh.join(&slice);
         assert_eq!(fresh.raw_window(0).unwrap().value(), 3);
         assert_eq!(fresh.progress_of(0), 50);
+    }
+
+    #[test]
+    fn dirty_tracking_composes_through_tuples() {
+        let mut s = (counter(&[0]), counter(&[0]));
+        assert_eq!(s.dirty_windows(), 0);
+        s.0.insert_with(0, 10, |c| c.add(0, 1)).unwrap();
+        s.1.insert_with(0, 10, |c| c.add(0, 2)).unwrap();
+        s.1.insert_with(0, 1010, |c| c.add(0, 3)).unwrap();
+        assert_eq!(SharedState::dirty_windows(&s), 3);
+        SharedState::mark_clean(&mut s);
+        assert_eq!(SharedState::dirty_windows(&s), 0);
     }
 
     #[test]

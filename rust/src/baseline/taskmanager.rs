@@ -119,12 +119,10 @@ fn tm_main(c: Arc<FlinkCluster>, tm: NodeId, run: Arc<RunState>) {
                 let offs = run.offsets.lock().unwrap();
                 offs[&p]
             };
-            let (recs, next) = c.input.read(p, from, allowed);
-            budget_events -= recs.len() as f64;
-            if !recs.is_empty() {
-                did_work = true;
-                consumed += recs.len() as u64;
-                for rec in &recs {
+            // zero-copy source read (same data-plane path as the Holon
+            // engine's RUN_BATCH, so the systems comparison stays fair)
+            let ((nread, last_ts), next) = c.input.read_slice(p, from, allowed, |recs| {
+                for rec in recs {
                     match c.job {
                         FlinkJob::PassThrough => {
                             batch_partials.push(Partial::Record(rec.insert_ts));
@@ -152,9 +150,15 @@ fn tm_main(c: Arc<FlinkCluster>, tm: NodeId, run: Arc<RunState>) {
                         }
                     }
                 }
+                (recs.len(), recs.last().map(|r| r.event_ts))
+            });
+            budget_events -= nread as f64;
+            if nread > 0 {
+                did_work = true;
+                consumed += nread as u64;
                 let mut offs = run.offsets.lock().unwrap();
                 offs.insert(p, next);
-                part_last_ts.insert(p, recs.last().unwrap().event_ts);
+                part_last_ts.insert(p, last_ts.unwrap());
             }
         }
         if consumed > 0 {

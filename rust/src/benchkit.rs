@@ -3,9 +3,131 @@
 //! `cargo bench` drives `rust/benches/*.rs` with `harness = false`; each
 //! bench builds its scenario, runs it, and prints the table/figure rows
 //! through these helpers so all outputs share one format that
-//! EXPERIMENTS.md quotes directly.
+//! EXPERIMENTS.md quotes directly. [`JsonWriter`] additionally backs the
+//! machine-readable `BENCH_*.json` perf-trajectory reports written by
+//! `holon bench` (schema documented in EXPERIMENTS.md).
 
 use std::time::Instant;
+
+/// Minimal streaming JSON emitter (no serde in the vendored crate set):
+/// just enough structure for the `holon bench` reports. Scope nesting is
+/// tracked so commas are inserted correctly; strings are escaped;
+/// non-finite floats are emitted as `null` (JSON has no NaN).
+#[derive(Debug, Default)]
+pub struct JsonWriter {
+    buf: String,
+    /// per open scope: whether it already has an element
+    stack: Vec<bool>,
+}
+
+impl JsonWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn elem(&mut self) {
+        if let Some(top) = self.stack.last_mut() {
+            if *top {
+                self.buf.push(',');
+            }
+            *top = true;
+        }
+    }
+
+    fn push_escaped(&mut self, s: &str) {
+        self.buf.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => self.buf.push_str("\\\""),
+                '\\' => self.buf.push_str("\\\\"),
+                '\n' => self.buf.push_str("\\n"),
+                '\r' => self.buf.push_str("\\r"),
+                '\t' => self.buf.push_str("\\t"),
+                c if (c as u32) < 0x20 => {
+                    self.buf.push_str(&format!("\\u{:04x}", c as u32));
+                }
+                c => self.buf.push(c),
+            }
+        }
+        self.buf.push('"');
+    }
+
+    fn key(&mut self, k: &str) {
+        self.elem();
+        self.push_escaped(k);
+        self.buf.push(':');
+    }
+
+    /// Open the root object or an object array element.
+    pub fn obj(&mut self) -> &mut Self {
+        self.elem();
+        self.buf.push('{');
+        self.stack.push(false);
+        self
+    }
+
+    /// Open an object-valued field.
+    pub fn obj_field(&mut self, k: &str) -> &mut Self {
+        self.key(k);
+        self.buf.push('{');
+        self.stack.push(false);
+        self
+    }
+
+    pub fn end_obj(&mut self) -> &mut Self {
+        self.stack.pop();
+        self.buf.push('}');
+        self
+    }
+
+    /// Open an array-valued field.
+    pub fn arr_field(&mut self, k: &str) -> &mut Self {
+        self.key(k);
+        self.buf.push('[');
+        self.stack.push(false);
+        self
+    }
+
+    pub fn end_arr(&mut self) -> &mut Self {
+        self.stack.pop();
+        self.buf.push(']');
+        self
+    }
+
+    pub fn str_field(&mut self, k: &str, v: &str) -> &mut Self {
+        self.key(k);
+        self.push_escaped(v);
+        self
+    }
+
+    pub fn u64_field(&mut self, k: &str, v: u64) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(&v.to_string());
+        self
+    }
+
+    pub fn f64_field(&mut self, k: &str, v: f64) -> &mut Self {
+        self.key(k);
+        if v.is_finite() {
+            self.buf.push_str(&format!("{v:.3}"));
+        } else {
+            self.buf.push_str("null");
+        }
+        self
+    }
+
+    pub fn bool_field(&mut self, k: &str, v: bool) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    /// Finish and return the document.
+    pub fn finish(self) -> String {
+        debug_assert!(self.stack.is_empty(), "unbalanced JSON scopes");
+        self.buf
+    }
+}
 
 /// Wall-clock timing statistics over repeated runs of a closure.
 #[derive(Debug, Clone)]
@@ -132,5 +254,35 @@ mod tests {
     #[test]
     fn secs_formats() {
         assert_eq!(secs(1234.0), "1.23");
+    }
+
+    #[test]
+    fn json_writer_nests_and_escapes() {
+        let mut j = JsonWriter::new();
+        j.obj()
+            .str_field("schema", "holon-bench/v1")
+            .bool_field("quick", true)
+            .arr_field("scenarios");
+        j.obj()
+            .str_field("name", "a\"b\\c\nd")
+            .u64_field("outputs", 7)
+            .f64_field("p99", 1.5)
+            .end_obj();
+        j.obj().str_field("name", "second").f64_field("p99", f64::NAN).end_obj();
+        j.end_arr().end_obj();
+        let s = j.finish();
+        assert_eq!(
+            s,
+            "{\"schema\":\"holon-bench/v1\",\"quick\":true,\"scenarios\":[\
+             {\"name\":\"a\\\"b\\\\c\\nd\",\"outputs\":7,\"p99\":1.500},\
+             {\"name\":\"second\",\"p99\":null}]}"
+        );
+    }
+
+    #[test]
+    fn json_writer_empty_containers() {
+        let mut j = JsonWriter::new();
+        j.obj().arr_field("xs").end_arr().obj_field("o").end_obj().end_obj();
+        assert_eq!(j.finish(), "{\"xs\":[],\"o\":{}}");
     }
 }

@@ -98,6 +98,11 @@ pub struct HolonConfig {
     pub use_xla: bool,
     /// Directory with *.hlo.txt artifacts.
     pub artifacts_dir: String,
+
+    // -- bench harness ---------------------------------------------------
+    /// Where `holon bench` writes its machine-readable report (the
+    /// perf-trajectory data point; schema in EXPERIMENTS.md).
+    pub bench_out: String,
 }
 
 impl Default for HolonConfig {
@@ -135,6 +140,7 @@ impl Default for HolonConfig {
             flink_spare_slots: false,
             use_xla: false,
             artifacts_dir: "artifacts".to_string(),
+            bench_out: "BENCH_PR3.json".to_string(),
         }
     }
 }
@@ -196,6 +202,7 @@ impl HolonConfig {
             "flink_spare_slots" => self.flink_spare_slots = parse!(),
             "use_xla" => self.use_xla = parse!(),
             "artifacts_dir" => self.artifacts_dir = value.to_string(),
+            "bench_out" => self.bench_out = value.to_string(),
             _ => return Err(ConfigError::UnknownKey(key.to_string())),
         }
         Ok(())
@@ -315,6 +322,7 @@ impl HolonConfig {
         m.insert("flink_spare_slots", self.flink_spare_slots.to_string());
         m.insert("use_xla", self.use_xla.to_string());
         m.insert("artifacts_dir", self.artifacts_dir.clone());
+        m.insert("bench_out", self.bench_out.clone());
         m.iter()
             .map(|(k, v)| format!("{k} = {v}"))
             .collect::<Vec<_>>()

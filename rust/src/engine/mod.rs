@@ -42,12 +42,20 @@ pub struct ClusterMetrics {
     /// Physical duplicates dropped by the sink (§3.3: outputs may be
     /// duplicated; consumers dedup by (partition, seq)).
     pub duplicates: Arc<AtomicU64>,
+    /// Output sequence numbers skipped over by the sink — every skipped
+    /// seq is an output that was lost on the way to the consumer. Must
+    /// be zero in a correct run (the log is durable and replays are
+    /// deterministic); cluster tests assert it.
+    pub gaps: Arc<AtomicU64>,
     /// Partitions stolen from other nodes (recovery/reconfiguration).
     pub steals: Arc<AtomicU64>,
     /// Partition recoveries from the checkpoint store.
     pub recoveries: Arc<AtomicU64>,
     /// Gossip messages sent.
     pub gossip_sent: Arc<AtomicU64>,
+    /// Total encoded gossip payload bytes (one encode per round; the
+    /// per-recipient wire volume is tracked by [`crate::net::Bus::bytes_sent`]).
+    pub gossip_payload_bytes: Arc<AtomicU64>,
 }
 
 impl ClusterMetrics {
@@ -58,9 +66,11 @@ impl ClusterMetrics {
             latency_series: TimeSeries::new(bucket_ms),
             outputs: Arc::new(AtomicU64::new(0)),
             duplicates: Arc::new(AtomicU64::new(0)),
+            gaps: Arc::new(AtomicU64::new(0)),
             steals: Arc::new(AtomicU64::new(0)),
             recoveries: Arc::new(AtomicU64::new(0)),
             gossip_sent: Arc::new(AtomicU64::new(0)),
+            gossip_payload_bytes: Arc::new(AtomicU64::new(0)),
         }
     }
 }

@@ -10,9 +10,11 @@
 //! 3. reconcile ownership against the rendezvous target assignment —
 //!    steal (RECOVER) partitions that now target this node, release
 //!    partitions whose rightful owner has claimed them;
-//! 4. for each owned partition: read a batch from the input log, run
-//!    the processing function, append outputs (tagged `(partition,
-//!    seq)`), advance offsets — the paper's `RUN_BATCH`;
+//! 4. for each owned partition (in rotated order, so service-budget
+//!    exhaustion never starves the same partitions): run the processing
+//!    function over the input log's record slice in place (zero-copy),
+//!    append outputs (tagged `(partition, seq)`), advance offsets — the
+//!    paper's `RUN_BATCH`;
 //! 5. gossip the shared-state replica when due ("state is asynchronously
 //!    shuffled in the background", §2.5);
 //! 6. checkpoint owned partitions when due (`storage.PUT`);
@@ -74,6 +76,13 @@ struct PartState<S, L> {
     own: S,
     local: L,
     last_ckpt: SimTime,
+    /// `(nxt_idx, nxt_odx)` at the last checkpoint put — together with
+    /// `own.dirty_windows() == 0` this gates the skip-re-encode fast
+    /// path: the store rejects same-`nxt_idx` puts anyway (deterministic
+    /// execution makes them byte-identical), so when nothing moved we
+    /// skip the encode too instead of serializing state just to have the
+    /// put refused.
+    last_put: Option<(u64, u64)>,
 }
 
 /// Encode an output record payload: (seq, ref_ts, inner).
@@ -107,9 +116,12 @@ fn decode_claim(bytes: &[u8]) -> Option<(PartitionId, SimTime)> {
 }
 
 fn encode_checkpoint_state<S: Encode, L: Encode>(local: &L, own: &S) -> Vec<u8> {
+    // Single-pass nested encode: byte-identical to the old
+    // put_bytes(&x.to_bytes()) layout without materializing the two
+    // intermediate vectors per checkpoint.
     let mut w = Writer::new();
-    w.put_bytes(&local.to_bytes());
-    w.put_bytes(&own.to_bytes());
+    w.put_nested(|w| local.encode(w));
+    w.put_nested(|w| own.encode(w));
     w.into_bytes()
 }
 
@@ -157,6 +169,14 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
     // the budget accrues with sim-time and is spent per event.
     let mut budget_events: f64 = 0.0;
     let mut last_budget_at: SimTime = clock.now();
+    // RUN_BATCH fairness: the partition the budgeted pass starts from
+    // rotates each round so budget exhaustion doesn't starve the same
+    // (high-numbered) partitions every iteration.
+    let mut batch_rotation: usize = 0;
+    let mut batch_order: Vec<PartitionId> = Vec::new();
+    // reusable gossip encode target: size hint from the previous round
+    // so each round is one exact allocation into the shared Arc.
+    let mut gossip_size_hint: usize = 0;
 
     // Announce ourselves, then wait one heartbeat round before claiming
     // anything: peers' announcements arrive during the grace period, so
@@ -183,8 +203,8 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
         if shutdown.load(Ordering::Acquire) {
             // Graceful stop: final checkpoints + publish the replica for
             // post-run convergence checks.
-            for (&p, st) in parts.iter() {
-                checkpoint_partition(&store, &shared, p, st);
+            for (&p, st) in parts.iter_mut() {
+                checkpoint_partition(&store, p, st);
             }
             state_out.lock().unwrap().insert(id, shared.to_bytes());
             return;
@@ -246,8 +266,8 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
                     .get(&p)
                     .map_or(false, |&(n, ts)| n == target && now.saturating_sub(ts) <= 2 * cfg.failure_timeout_ms);
                 if claimed {
-                    let st = parts.remove(&p).unwrap();
-                    checkpoint_partition(&store, &shared, p, &st);
+                    let mut st = parts.remove(&p).unwrap();
+                    checkpoint_partition(&store, p, &mut st);
                 }
             }
         }
@@ -264,19 +284,35 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
         }
         last_budget_at = now;
         let mut did_work = false;
-        for (&p, st) in parts.iter_mut() {
+        // Budgeted pass in rotated partition order: under sustained
+        // budget pressure a fixed (BTreeMap) order spends the whole
+        // budget on the lowest-numbered partitions every round; their
+        // starved peers stall the global watermark min. Rotating the
+        // starting partition keeps per-partition progress within one
+        // batch of each other.
+        batch_order.clear();
+        batch_order.extend(parts.keys().copied());
+        let nparts = batch_order.len();
+        for i in 0..nparts {
+            let p = batch_order[(batch_rotation + i) % nparts];
+            let st = parts.get_mut(&p).unwrap();
             let allowed = cfg.batch_size.min(budget_events as usize);
             if allowed == 0 {
                 break;
             }
-            let (recs, nxt_idx) = input.read(p, st.nxt_idx, allowed);
-            budget_events -= recs.len() as f64;
-            // Always invoke the processor: an empty batch still lets it
-            // emit windows completed by freshly merged gossip.
-            let mut pctx = Ctx::new(p, now, aggregator.as_mut());
-            processor.process(&mut pctx, &shared, &mut st.own, &mut st.local, &recs);
+            // Zero-copy RUN_BATCH: the processor runs over the log's
+            // record slice in place — no per-poll Vec<Record>, no
+            // payload Arc bumps. (Always invoke the processor: an empty
+            // batch still lets it emit windows completed by freshly
+            // merged gossip.)
+            let ((outs, consumed), nxt_idx) =
+                input.read_slice(p, st.nxt_idx, allowed, |recs| {
+                    let mut pctx = Ctx::new(p, now, aggregator.as_mut());
+                    processor.process(&mut pctx, &shared, &mut st.own, &mut st.local, recs);
+                    (pctx.into_outputs(), recs.len())
+                });
+            budget_events -= consumed as f64;
             shared.join(&st.own);
-            let outs = pctx.into_outputs();
             if !outs.is_empty() {
                 let batch: Vec<(SimTime, Vec<u8>)> = outs
                     .into_iter()
@@ -291,23 +327,42 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
                 st.nxt_odx += batch.len() as u64;
                 output.append_batch(p, batch);
             }
-            if !recs.is_empty() {
+            if consumed > 0 {
                 st.nxt_idx = nxt_idx;
-                metrics.processed.bump(now, recs.len() as u64);
+                metrics.processed.bump(now, consumed as u64);
                 did_work = true;
             }
         }
+        batch_rotation = batch_rotation.wrapping_add(1);
 
         // 5. Gossip the shared replica (sampled fan-out when configured;
         // delta payloads with periodic full anti-entropy when enabled).
         if now.saturating_sub(last_gossip) >= cfg.gossip_interval_ms {
             gossip_round += 1;
-            let payload = if cfg.gossip_delta && gossip_round % FULL_SYNC_EVERY != 0 {
-                shared.take_delta().to_bytes()
+            let full = !cfg.gossip_delta || gossip_round % FULL_SYNC_EVERY == 0;
+            // Encode once per round into an Arc shared by every
+            // recipient; the previous round's size pre-sizes the buffer
+            // so a round is a single exact allocation (the payload used
+            // to be re-wrapped per broadcast call and, before that,
+            // cloned per recipient).
+            let mut w = Writer::with_capacity(gossip_size_hint);
+            if full {
+                shared.encode(&mut w);
+                if cfg.gossip_fanout == 0 || !cfg.gossip_delta {
+                    // Every peer saw the full state (or deltas are never
+                    // sent): the dirty markers have no remaining reader,
+                    // drop them so the set doesn't grow unboundedly.
+                    shared.mark_clean();
+                }
             } else {
-                shared.to_bytes()
-            };
-            bus.broadcast_sample(id, MsgKind::Gossip, payload, cfg.gossip_fanout as usize);
+                shared.take_delta().encode(&mut w);
+            }
+            gossip_size_hint = w.len();
+            let payload = Arc::new(w.into_bytes());
+            metrics
+                .gossip_payload_bytes
+                .fetch_add(payload.len() as u64, Ordering::Relaxed);
+            bus.broadcast_sample_shared(id, MsgKind::Gossip, payload, cfg.gossip_fanout as usize);
             metrics.gossip_sent.fetch_add(1, Ordering::Relaxed);
             last_gossip = now;
 
@@ -328,7 +383,7 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
         // 6. Periodic checkpoints (staggered per partition via last_ckpt).
         for (&p, st) in parts.iter_mut() {
             if now.saturating_sub(st.last_ckpt) >= cfg.checkpoint_interval_ms {
-                checkpoint_partition(&store, &shared, p, st);
+                checkpoint_partition(&store, p, st);
                 st.last_ckpt = now;
             }
         }
@@ -341,11 +396,21 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
 
 fn checkpoint_partition<S: SharedState, L: Encode>(
     store: &CheckpointStore,
-    _shared: &S,
     p: PartitionId,
-    st: &PartState<S, L>,
+    st: &mut PartState<S, L>,
 ) {
+    // Skip the re-encode when nothing moved since the last put: offsets
+    // unchanged and no window of the contribution accumulator touched.
+    // This is behavior-preserving, not just cheap — the store already
+    // rejects a put whose `nxt_idx` matches the stored checkpoint
+    // (deterministic execution makes such checkpoints byte-identical),
+    // so all the skip removes is serializing state for a refused put.
+    if st.last_put == Some((st.nxt_idx, st.nxt_odx)) && st.own.dirty_windows() == 0 {
+        return;
+    }
     let state = encode_checkpoint_state(&st.local, &st.own);
+    st.own.mark_clean();
+    st.last_put = Some((st.nxt_idx, st.nxt_odx));
     store.put(
         p,
         PartitionCheckpoint {
@@ -377,6 +442,9 @@ fn recover_partition<P: Processor>(
                 own,
                 local,
                 last_ckpt: now,
+                // the store holds exactly this state; skip re-encoding
+                // until the partition actually moves
+                last_put: Some((cp.nxt_idx, cp.nxt_odx)),
             };
         }
     }
@@ -387,6 +455,7 @@ fn recover_partition<P: Processor>(
         own: processor.init_shared(all_parts),
         local: P::Local::default(),
         last_ckpt: now,
+        last_put: None,
     }
 }
 

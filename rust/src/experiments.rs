@@ -119,6 +119,32 @@ impl Scenario {
     }
 }
 
+/// Data-plane counters sampled from the substrate after a run — the
+/// machine-readable core of the `holon bench` perf trajectory. Fields a
+/// substrate lacks (the baseline has no gossip bus) read zero.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DataPlaneStats {
+    /// Gossip rounds sent across all nodes.
+    pub gossip_msgs: u64,
+    /// Encoded gossip payload bytes (one encode per round); the ratio
+    /// `gossip_bytes_wire / gossip_bytes_encoded` is the fan-out the
+    /// shared-`Arc` encode amortizes over.
+    pub gossip_bytes_encoded: u64,
+    /// Logical wire bytes enqueued on the bus (per-recipient volume).
+    pub gossip_bytes_wire: u64,
+    /// Records materialized by the copying `Topic::read` path — the
+    /// allocations-per-event proxy. Pre-overhaul this equaled
+    /// `records_read`; the zero-copy hot path keeps it at ~0.
+    pub payload_clones: u64,
+    /// Records visited by any read path (the clone-counter denominator).
+    pub records_read: u64,
+    /// Output sequence numbers skipped by the sink (lost outputs — must
+    /// be zero in a correct run).
+    pub gaps: u64,
+    /// Physical duplicates dropped by the sink.
+    pub duplicates: u64,
+}
+
 /// Measurements of one run.
 #[derive(Debug, Clone)]
 pub struct RunResult {
@@ -126,6 +152,8 @@ pub struct RunResult {
     pub workload: Workload,
     /// mean end-to-end latency over deduplicated outputs, sim-ms
     pub latency_mean_ms: f64,
+    /// median end-to-end latency, sim-ms
+    pub latency_p50_ms: u64,
     /// p99 end-to-end latency, sim-ms
     pub latency_p99_ms: u64,
     /// per-bucket mean latency (bucket = 500 sim-ms), for Figs 6/7
@@ -146,6 +174,8 @@ pub struct RunResult {
     /// end of the run (Table 2's "–": a crashed baseline with no spare
     /// slots stalls permanently).
     pub stalled: bool,
+    /// hot-path substrate counters (gossip volume, payload clones, …)
+    pub data_plane: DataPlaneStats,
 }
 
 /// Buckets excluded from sensitivity comparisons (startup transient:
@@ -167,12 +197,34 @@ impl RunResult {
     }
 }
 
+/// Sample the data-plane counters shared by both engines; `bus` is
+/// `None` for the baseline (no gossip bus).
+fn data_plane_stats(
+    metrics: &ClusterMetrics,
+    input: &crate::log::Topic,
+    output: &crate::log::Topic,
+    bus: Option<&crate::net::Bus>,
+) -> DataPlaneStats {
+    let (in_clones, in_read) = input.read_stats();
+    let (out_clones, out_read) = output.read_stats();
+    DataPlaneStats {
+        gossip_msgs: metrics.gossip_sent.load(Ordering::Acquire),
+        gossip_bytes_encoded: metrics.gossip_payload_bytes.load(Ordering::Acquire),
+        gossip_bytes_wire: bus.map_or(0, |b| b.bytes_sent()),
+        payload_clones: in_clones + out_clones,
+        records_read: in_read + out_read,
+        gaps: metrics.gaps.load(Ordering::Acquire),
+        duplicates: metrics.duplicates.load(Ordering::Acquire),
+    }
+}
+
 fn collect(
     system: SystemKind,
     workload: Workload,
     metrics: &ClusterMetrics,
     produced: u64,
     duration_ms: SimTime,
+    data_plane: DataPlaneStats,
 ) -> RunResult {
     // pad both series to the full run duration so a stalled system's
     // silent tail is visible (bucket width = 500 sim-ms)
@@ -199,6 +251,7 @@ fn collect(
         system,
         workload,
         latency_mean_ms: metrics.latency.mean(),
+        latency_p50_ms: metrics.latency.p50(),
         latency_p99_ms: metrics.latency.p99(),
         latency_series: lat,
         throughput_series: throughput_series.clone(),
@@ -208,6 +261,7 @@ fn collect(
         peak_throughput: peak,
         steals: metrics.steals.load(Ordering::Acquire),
         stalled,
+        data_plane,
     }
 }
 
@@ -287,7 +341,8 @@ fn run_holon_with<P: crate::api::Processor>(
     );
     let produced = prod.stop();
     cluster.stop();
-    collect(SystemKind::Holon, workload, &cluster.metrics, produced, cfg.duration_ms)
+    let dp = data_plane_stats(&cluster.metrics, &cluster.input, &cluster.output, Some(&cluster.bus));
+    collect(SystemKind::Holon, workload, &cluster.metrics, produced, cfg.duration_ms, dp)
 }
 
 /// Run the Flink-model baseline on `workload` with a failure schedule.
@@ -338,7 +393,8 @@ pub fn run_flink(
     } else {
         SystemKind::Flink
     };
-    collect(kind, workload, &cluster.metrics, produced, cfg.duration_ms)
+    let dp = data_plane_stats(&cluster.metrics, &cluster.input, &cluster.output, None);
+    collect(kind, workload, &cluster.metrics, produced, cfg.duration_ms, dp)
 }
 
 fn spawn_producer(
@@ -391,7 +447,8 @@ pub fn run_max_throughput(
                 std::thread::sleep(clock.wall_for(cfg.duration_ms + drain_ms(&cfg)));
                 let produced = prod.stop();
                 cluster.stop();
-                collect(SystemKind::Holon, workload, &cluster.metrics, produced, cfg.duration_ms)
+                let dp = data_plane_stats(&cluster.metrics, &cluster.input, &cluster.output, Some(&cluster.bus));
+                collect(SystemKind::Holon, workload, &cluster.metrics, produced, cfg.duration_ms, dp)
             }
             Workload::Q4 => {
                 let cluster = HolonCluster::start_with_clock(cfg.clone(), q4, clockc.clone());
@@ -406,7 +463,8 @@ pub fn run_max_throughput(
                 std::thread::sleep(clock.wall_for(cfg.duration_ms + drain_ms(&cfg)));
                 let produced = prod.stop();
                 cluster.stop();
-                collect(SystemKind::Holon, workload, &cluster.metrics, produced, cfg.duration_ms)
+                let dp = data_plane_stats(&cluster.metrics, &cluster.input, &cluster.output, Some(&cluster.bus));
+                collect(SystemKind::Holon, workload, &cluster.metrics, produced, cfg.duration_ms, dp)
             }
             _ => panic!("max-throughput experiment uses Q4/Q7"),
         }
@@ -428,8 +486,119 @@ pub fn run_max_throughput(
         std::thread::sleep(clock.wall_for(cfg.duration_ms + drain_ms(&cfg)));
         let produced = prod.stop();
         cluster.stop();
-        collect(SystemKind::Flink, workload, &cluster.metrics, produced, cfg.duration_ms)
+        let dp = data_plane_stats(&cluster.metrics, &cluster.input, &cluster.output, None);
+        collect(SystemKind::Flink, workload, &cluster.metrics, produced, cfg.duration_ms, dp)
     }
+}
+
+// ---- the `holon bench` perf trajectory ---------------------------------
+
+/// One named scenario of the `holon bench` suite.
+pub struct BenchScenario {
+    pub name: String,
+    pub result: RunResult,
+}
+
+/// Run the perf-trajectory scenario suite headlessly: the §5.3
+/// max-throughput ramp (Holon + baseline, the paper's 2× claim) and the
+/// Table 2 latency rows (failure-free + concurrent failures, the 5×
+/// claim). `quick` shrinks durations/partition counts for the CI smoke
+/// job; the measured *ratios* still carry.
+pub fn bench_scenarios(cfg: &HolonConfig, quick: bool) -> Vec<BenchScenario> {
+    let mut out = Vec::new();
+
+    // §5.3 max throughput: exponentially ramped ingestion, report the
+    // peak sustained consumption rate.
+    let mut tcfg = cfg.clone();
+    tcfg.nodes = 5;
+    tcfg.partitions = if quick { 10 } else { 25 };
+    tcfg.events_per_sec_per_partition = 400;
+    tcfg.wall_ms_per_sim_sec = if quick { 50.0 } else { 200.0 };
+    tcfg.duration_ms = if quick { 8_000 } else { 20_000 };
+    tcfg.batch_size = 2048;
+    for (name, holon) in [("throughput_max_q7_holon", true), ("throughput_max_q7_flink", false)] {
+        out.push(BenchScenario {
+            name: name.to_string(),
+            result: run_max_throughput(&tcfg, Workload::Q7, holon),
+        });
+    }
+
+    // Table 2 latency rows under the paper's failure scenarios.
+    let mut lcfg = cfg.clone();
+    lcfg.nodes = 5;
+    lcfg.partitions = 10;
+    lcfg.wall_ms_per_sim_sec = if quick { 10.0 } else { 20.0 };
+    lcfg.duration_ms = if quick { 20_000 } else { 60_000 };
+    let t0 = lcfg.duration_ms / 3;
+    for (tag, sc) in [
+        ("baseline", Scenario::Baseline),
+        ("concurrent", Scenario::ConcurrentFailures),
+    ] {
+        out.push(BenchScenario {
+            name: format!("table2_latency_q7_{tag}"),
+            result: run_holon(&lcfg, Workload::Q7, sc.schedule(t0)),
+        });
+    }
+    out
+}
+
+/// Render the scenario suite as the machine-readable `BENCH_*.json`
+/// document (schema `holon-bench/v1`, documented in EXPERIMENTS.md).
+/// `payload_clones` vs `records_read` is the before/after comparison
+/// baked into every data point: the pre-overhaul data plane cloned every
+/// record it read, so `records_read` is the clone count the same run
+/// would have produced before the zero-copy paths landed.
+pub fn bench_report_json(pr: &str, quick: bool, scenarios: &[BenchScenario]) -> String {
+    let mut j = crate::benchkit::JsonWriter::new();
+    j.obj()
+        .str_field("schema", "holon-bench/v1")
+        .str_field("pr", pr)
+        .bool_field("quick", quick)
+        .arr_field("scenarios");
+    for s in scenarios {
+        let r = &s.result;
+        // both series are padded to the full run duration (500 ms buckets)
+        let dur_s = r.throughput_series.len() as f64 * 0.5;
+        let per = |n: u64| if r.consumed == 0 { 0.0 } else { n as f64 / r.consumed as f64 };
+        j.obj()
+            .str_field("name", &s.name)
+            .str_field(
+                "system",
+                match r.system {
+                    SystemKind::Holon => "holon",
+                    SystemKind::Flink => "flink",
+                    SystemKind::FlinkSpareSlots => "flink_spare",
+                },
+            )
+            .str_field("workload", &format!("{:?}", r.workload).to_lowercase())
+            .f64_field("events_per_sec_peak", r.peak_throughput)
+            .f64_field(
+                "events_per_sec_mean",
+                if dur_s > 0.0 { r.consumed as f64 / dur_s } else { 0.0 },
+            )
+            .u64_field("events_produced", r.produced)
+            .u64_field("events_consumed", r.consumed)
+            .u64_field("outputs", r.outputs)
+            .f64_field("latency_mean_ms", r.latency_mean_ms)
+            .u64_field("latency_p50_ms", r.latency_p50_ms)
+            .u64_field("latency_p99_ms", r.latency_p99_ms)
+            .u64_field("gossip_msgs", r.data_plane.gossip_msgs)
+            .u64_field("gossip_bytes_encoded", r.data_plane.gossip_bytes_encoded)
+            .u64_field("gossip_bytes_wire", r.data_plane.gossip_bytes_wire)
+            .f64_field(
+                "gossip_bytes_per_sec",
+                if dur_s > 0.0 { r.data_plane.gossip_bytes_wire as f64 / dur_s } else { 0.0 },
+            )
+            .u64_field("payload_clones", r.data_plane.payload_clones)
+            .u64_field("records_read", r.data_plane.records_read)
+            .f64_field("payload_clones_per_event", per(r.data_plane.payload_clones))
+            .u64_field("dedup_duplicates", r.data_plane.duplicates)
+            .u64_field("seq_gaps", r.data_plane.gaps)
+            .bool_field("stalled", r.stalled)
+            .end_obj();
+    }
+    j.end_arr().end_obj();
+    j.finish()
 }
 
 #[cfg(test)]
@@ -451,8 +620,20 @@ mod tests {
         let r = run_holon(&small_cfg(), Workload::Q7, vec![]);
         assert!(r.outputs > 0);
         assert!(r.latency_mean_ms > 0.0);
+        assert!(r.latency_p50_ms <= r.latency_p99_ms);
         assert!(r.consumed > 0);
         assert!(r.produced > 0);
+        // delivery audit: no output sequence was skipped
+        assert_eq!(r.data_plane.gaps, 0);
+        // the hot path (RUN_BATCH + sink) is zero-copy: every record is
+        // visited, none is cloned
+        assert_eq!(r.data_plane.payload_clones, 0);
+        assert!(r.data_plane.records_read >= r.consumed);
+        assert!(r.data_plane.gossip_msgs > 0);
+        assert!(r.data_plane.gossip_bytes_encoded > 0);
+        // broadcast fan-out: wire volume is the encoded volume times the
+        // recipients each shared-Arc payload reached
+        assert!(r.data_plane.gossip_bytes_wire >= r.data_plane.gossip_bytes_encoded);
     }
 
     #[test]
@@ -480,5 +661,56 @@ mod tests {
     fn sensitivity_vs_self_is_zero() {
         let r = run_holon(&small_cfg(), Workload::Q7, vec![]);
         assert_eq!(r.sensitivity_vs(&r), 0.0);
+    }
+
+    #[test]
+    fn bench_report_json_carries_the_schema() {
+        // a real (tiny) run through the JSON emitter: every field of the
+        // holon-bench/v1 schema must be present exactly once per scenario
+        let r = run_holon(&small_cfg(), Workload::Q7, vec![]);
+        let scenarios = vec![BenchScenario {
+            name: "unit_q7".to_string(),
+            result: r,
+        }];
+        let s = bench_report_json("PR3", true, &scenarios);
+        assert!(s.starts_with("{\"schema\":\"holon-bench/v1\""), "{s}");
+        for key in [
+            "\"pr\":\"PR3\"",
+            "\"quick\":true",
+            "\"scenarios\":[",
+            "\"name\":\"unit_q7\"",
+            "\"system\":\"holon\"",
+            "\"workload\":\"q7\"",
+        ] {
+            assert!(s.contains(key), "missing {key} in {s}");
+        }
+        for key in [
+            "events_per_sec_peak",
+            "events_per_sec_mean",
+            "events_produced",
+            "events_consumed",
+            "outputs",
+            "latency_mean_ms",
+            "latency_p50_ms",
+            "latency_p99_ms",
+            "gossip_msgs",
+            "gossip_bytes_encoded",
+            "gossip_bytes_wire",
+            "gossip_bytes_per_sec",
+            "payload_clones",
+            "records_read",
+            "payload_clones_per_event",
+            "dedup_duplicates",
+            "seq_gaps",
+            "stalled",
+        ] {
+            assert_eq!(
+                s.matches(&format!("\"{key}\":")).count(),
+                1,
+                "field {key} must appear exactly once: {s}"
+            );
+        }
+        // the zero-copy data plane: clones stay 0 while records flow
+        assert!(s.contains("\"payload_clones\":0,"), "{s}");
     }
 }

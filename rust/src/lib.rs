@@ -53,6 +53,35 @@
 //! ```
 //!
 //! and for long soaks: `holon sim --seeds=500 --start-seed=1000`.
+//!
+//! ## Benchmarks & the perf trajectory
+//!
+//! The paper's headline claims are throughput/latency numbers, so every
+//! PR records a comparable, machine-readable data point:
+//!
+//! ```text
+//! holon bench [--quick] [--bench-out=FILE]
+//! ```
+//!
+//! runs the §5.3 max-throughput ramp (Holon + the Flink-model baseline)
+//! and the Table 2 latency rows headlessly, prints human-readable rows,
+//! and writes a `holon-bench/v1` JSON report (default `BENCH_PR3.json`;
+//! see EXPERIMENTS.md for the schema and the trajectory log). Each
+//! scenario entry carries events/sec (peak + mean), p50/p99/mean
+//! latency, gossip volume (`gossip_bytes_wire`, per-recipient), and the
+//! allocations-per-event proxy: `payload_clones` (records materialized
+//! by the copying `log::Topic::read` path) against `records_read`
+//! (records visited by any path). The zero-copy hot path — `read_slice`
+//! under RUN_BATCH, `read_with` in the sink — keeps `payload_clones` at
+//! 0; before the overhaul the two counters were equal by construction,
+//! so every report contains its own before/after comparison. The report
+//! is validated in CI (`bench-smoke` job) by
+//! `python/tools/validate_bench.py` and uploaded as an artifact.
+//!
+//! Micro benches for the individual hot-path pieces (zero-copy read vs
+//! copying read, nested vs two-pass checkpoint encode, CRDT merge and
+//! gossip codec costs) live in `cargo bench --bench micro_hotpath`;
+//! `holon bench --targets` lists the per-figure targets.
 
 pub mod api;
 pub mod baseline;

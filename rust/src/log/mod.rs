@@ -8,6 +8,7 @@
 //! "measured by Kafka insertion timestamps" (§5.1).
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::clock::SimClock;
@@ -38,6 +39,15 @@ pub struct Topic {
     name: String,
     clock: SimClock,
     partitions: Vec<RwLock<PartitionLog>>,
+    /// Records materialized (payload `Arc` + metadata cloned into a
+    /// fresh `Vec<Record>`) by the copying [`read`](Self::read) path —
+    /// the allocations-per-event proxy reported by `holon bench`. The
+    /// zero-copy [`read_slice`](Self::read_slice)/[`read_with`](Self::read_with)
+    /// paths never bump it.
+    payload_clones: AtomicU64,
+    /// Records visited by *any* read path — the denominator: on the
+    /// pre-overhaul code every visited record was also a clone.
+    records_read: AtomicU64,
 }
 
 impl Topic {
@@ -46,6 +56,8 @@ impl Topic {
             name: name.to_string(),
             clock,
             partitions: (0..partitions).map(|_| RwLock::new(PartitionLog::default())).collect(),
+            payload_clones: AtomicU64::new(0),
+            records_read: AtomicU64::new(0),
         }
     }
 
@@ -100,13 +112,69 @@ impl Topic {
     /// Read up to `max` records from `offset` (Algorithm 2 line 9's
     /// `inStream.READ(id, idx)`). Returns the records and the next
     /// offset to read from.
+    ///
+    /// This is the *copying* path: it materializes an owned
+    /// `Vec<Record>` per poll (counted in [`read_stats`](Self::read_stats)).
+    /// Hot paths use [`read_slice`](Self::read_slice) /
+    /// [`read_with`](Self::read_with) instead; `read` remains for tests
+    /// and oracles that want owned records after the run.
     pub fn read(&self, p: PartitionId, offset: u64, max: usize) -> (Vec<Record>, u64) {
         let log = self.log(p).read().unwrap();
         let start = (offset as usize).min(log.records.len());
         let end = (start + max).min(log.records.len());
         let recs = log.records[start..end].to_vec();
+        self.payload_clones.fetch_add(recs.len() as u64, Ordering::Relaxed);
+        self.records_read.fetch_add(recs.len() as u64, Ordering::Relaxed);
         let next = end as u64;
         (recs, next)
+    }
+
+    /// Zero-copy batch read: run `f` on the record slice *in place*
+    /// (under the partition's read lock — appends to this partition wait
+    /// until `f` returns) and return `f`'s result plus the next offset.
+    /// This is RUN_BATCH's path: no `Vec<Record>` per poll, no payload
+    /// `Arc` bumps.
+    pub fn read_slice<R>(
+        &self,
+        p: PartitionId,
+        offset: u64,
+        max: usize,
+        f: impl FnOnce(&[Record]) -> R,
+    ) -> (R, u64) {
+        let log = self.log(p).read().unwrap();
+        let start = (offset as usize).min(log.records.len());
+        let end = (start + max).min(log.records.len());
+        self.records_read.fetch_add((end - start) as u64, Ordering::Relaxed);
+        (f(&log.records[start..end]), end as u64)
+    }
+
+    /// Zero-copy per-record visitor: call `f` on each record from
+    /// `offset` (up to `max`) and return the next offset — the sink's
+    /// drain path.
+    pub fn read_with(
+        &self,
+        p: PartitionId,
+        offset: u64,
+        max: usize,
+        mut f: impl FnMut(&Record),
+    ) -> u64 {
+        self.read_slice(p, offset, max, |recs| {
+            for rec in recs {
+                f(rec);
+            }
+        })
+        .1
+    }
+
+    /// (records cloned by the copying `read` path, records visited by
+    /// any read path) since the topic was created. The clone count is
+    /// the `holon bench` allocations-per-event proxy; before the
+    /// zero-copy overhaul the two were equal by construction.
+    pub fn read_stats(&self) -> (u64, u64) {
+        (
+            self.payload_clones.load(Ordering::Relaxed),
+            self.records_read.load(Ordering::Relaxed),
+        )
     }
 
     /// Current end offset (== number of records) of a partition.
@@ -251,6 +319,53 @@ mod tests {
         assert_eq!(first, 1);
         assert_eq!(t.end_offset(0), 3);
         assert_eq!(t.total_records(), 3);
+    }
+
+    #[test]
+    fn read_slice_is_zero_copy_and_tracks_offsets() {
+        let b = broker();
+        let t = b.topic("in", 1);
+        for i in 0..5u8 {
+            t.append(0, i as u64, vec![i]);
+        }
+        let (sum, next) = t.read_slice(0, 1, 3, |recs| {
+            recs.iter().map(|r| r.payload[0] as u64).sum::<u64>()
+        });
+        assert_eq!(sum, 1 + 2 + 3);
+        assert_eq!(next, 4);
+        // past the end: empty slice, offset clamped
+        let (n, next) = t.read_slice(0, 99, 10, |recs| recs.len());
+        assert_eq!((n, next), (0, 5));
+        // the zero-copy path visits records without cloning payloads
+        let (clones, read) = t.read_stats();
+        assert_eq!(clones, 0);
+        assert_eq!(read, 3);
+    }
+
+    #[test]
+    fn read_with_visits_each_record_once() {
+        let b = broker();
+        let t = b.topic("in", 1);
+        for i in 0..4u8 {
+            t.append(0, i as u64, vec![i]);
+        }
+        let mut seen = Vec::new();
+        let next = t.read_with(0, 1, 2, |r| seen.push(r.offset));
+        assert_eq!(seen, vec![1, 2]);
+        assert_eq!(next, 3);
+    }
+
+    #[test]
+    fn copying_read_bumps_clone_counter() {
+        let b = broker();
+        let t = b.topic("in", 1);
+        for i in 0..3u8 {
+            t.append(0, i as u64, vec![i]);
+        }
+        let _ = t.read(0, 0, 10);
+        let (clones, read) = t.read_stats();
+        assert_eq!(clones, 3);
+        assert_eq!(read, 3);
     }
 
     #[test]

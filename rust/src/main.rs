@@ -6,10 +6,16 @@
 //! ```text
 //! holon run      [q0|q4|q7|query1] [--system=holon|flink|flink-spare] [--scenario=...] [--config=FILE] [--key=value ...]
 //! holon sim      [--seeds=N] [--start-seed=S] [--plan=PLAN] — deterministic fault-schedule soak
-//! holon bench    — points at the cargo bench targets for each figure/table
+//! holon bench    [--quick] [--bench-out=FILE] — headless perf-trajectory run, writes BENCH_*.json
+//! holon bench --targets — list the cargo bench targets for each figure/table
 //! holon generate [--count=N] [--partition=P] — dump Nexmark events as text
 //! holon inspect  [--config=FILE] [--key=value ...] — print the resolved config
 //! ```
+//!
+//! `holon bench` runs the throughput_max and table2_latency scenarios
+//! headlessly and writes a machine-readable report (schema
+//! `holon-bench/v1`, see EXPERIMENTS.md) to `bench_out` so every PR
+//! appends a comparable perf data point.
 //!
 //! `holon sim` explores one fault schedule per seed and checks the
 //! determinism / exactly-once / convergence oracles after each run; on
@@ -19,7 +25,9 @@
 
 use holon::benchkit::{row, secs, section, sparkline};
 use holon::config::HolonConfig;
-use holon::experiments::{run_flink, run_holon, Scenario, SystemKind, Workload};
+use holon::experiments::{
+    bench_report_json, bench_scenarios, run_flink, run_holon, Scenario, SystemKind, Workload,
+};
 use holon::nexmark::NexmarkGen;
 use holon::sim::{run_seed_with, FaultPlan, SimSpec};
 
@@ -62,13 +70,7 @@ fn main() {
             }
             println!("{}", cfg.dump());
         }
-        Some("bench") => {
-            if let Some(stray) = rest.get(1) {
-                eprintln!("unknown bench option: {stray}");
-                std::process::exit(2);
-            }
-            cmd_bench();
-        }
+        Some("bench") => cmd_bench(&cfg, &rest[1..]),
         _ => {
             eprintln!("usage: holon <run|sim|generate|inspect|bench> [options]");
             eprintln!("       holon run q7 --system=holon --scenario=concurrent --nodes=5");
@@ -239,14 +241,64 @@ fn cmd_generate(cfg: &HolonConfig, args: &[&str]) {
     }
 }
 
-fn cmd_bench() {
-    println!("Each paper table/figure has a dedicated bench target:");
-    println!("  cargo bench --bench fig6_failure_timeseries   # Fig 6");
-    println!("  cargo bench --bench fig7_sensitivity_curves   # Fig 7");
-    println!("  cargo bench --bench fig8_sensitivity_bars     # Fig 8");
-    println!("  cargo bench --bench table2_latency            # Table 2");
-    println!("  cargo bench --bench fig9_scalability          # Fig 9");
-    println!("  cargo bench --bench throughput_max            # §5.3 max throughput");
-    println!("  cargo bench --bench micro_hotpath             # hot-path micro benches");
-    println!("or everything: cargo bench");
+/// Headless perf-trajectory run: throughput_max + table2_latency
+/// scenarios, human-readable rows on stdout, machine-readable
+/// `holon-bench/v1` JSON written to `cfg.bench_out` (override with
+/// `--bench-out=FILE`; `--quick` is the CI smoke shape).
+fn cmd_bench(cfg: &HolonConfig, args: &[&str]) {
+    let mut quick = false;
+    for a in args {
+        match *a {
+            "--quick" => quick = true,
+            "--targets" => {
+                println!("Each paper table/figure has a dedicated bench target:");
+                println!("  cargo bench --bench fig6_failure_timeseries   # Fig 6");
+                println!("  cargo bench --bench fig7_sensitivity_curves   # Fig 7");
+                println!("  cargo bench --bench fig8_sensitivity_bars     # Fig 8");
+                println!("  cargo bench --bench table2_latency            # Table 2");
+                println!("  cargo bench --bench fig9_scalability          # Fig 9");
+                println!("  cargo bench --bench throughput_max            # §5.3 max throughput");
+                println!("  cargo bench --bench micro_hotpath             # hot-path micro benches");
+                println!("or everything: cargo bench");
+                return;
+            }
+            other => {
+                eprintln!("unknown bench option: {other}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    section(&format!(
+        "holon bench — perf trajectory{}",
+        if quick { " (--quick)" } else { "" }
+    ));
+    let scenarios = bench_scenarios(cfg, quick);
+    for s in &scenarios {
+        let r = &s.result;
+        row(
+            &s.name,
+            &[
+                ("peak_ev_s", format!("{:.0}", r.peak_throughput)),
+                ("p50_ms", r.latency_p50_ms.to_string()),
+                ("p99_ms", r.latency_p99_ms.to_string()),
+                ("outputs", r.outputs.to_string()),
+                ("gossip_B", r.data_plane.gossip_bytes_wire.to_string()),
+                (
+                    "clones/read",
+                    format!(
+                        "{}/{}",
+                        r.data_plane.payload_clones, r.data_plane.records_read
+                    ),
+                ),
+                ("gaps", r.data_plane.gaps.to_string()),
+            ],
+        );
+    }
+    let json = bench_report_json("PR3", quick, &scenarios);
+    if let Err(e) = std::fs::write(&cfg.bench_out, json.as_bytes()) {
+        eprintln!("error writing {}: {e}", cfg.bench_out);
+        std::process::exit(1);
+    }
+    println!("wrote {} ({} scenarios)", cfg.bench_out, scenarios.len());
 }

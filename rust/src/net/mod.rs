@@ -94,6 +94,10 @@ struct BusInner {
     faults: RwLock<FaultOverlay>,
     delivered: AtomicU64,
     dropped: AtomicU64,
+    /// Payload bytes enqueued toward recipients (post-drop) — the bench
+    /// harness's gossip-bytes/sec source. Payloads are `Arc`-shared, so
+    /// this counts logical wire bytes, not allocations.
+    bytes_sent: AtomicU64,
 }
 
 /// Shared broadcast/control bus.
@@ -115,6 +119,7 @@ impl Bus {
                 faults: RwLock::new(FaultOverlay::default()),
                 delivered: AtomicU64::new(0),
                 dropped: AtomicU64::new(0),
+                bytes_sent: AtomicU64::new(0),
             }),
         }
     }
@@ -142,8 +147,15 @@ impl Bus {
 
     /// Broadcast to all registered nodes except the sender.
     pub fn broadcast(&self, from: NodeId, kind: MsgKind, payload: Vec<u8>) {
+        self.broadcast_shared(from, kind, Arc::new(payload));
+    }
+
+    /// As [`broadcast`](Self::broadcast), but the payload is already an
+    /// `Arc` — the caller encoded once for the whole round and every
+    /// recipient shares the same bytes (no per-recipient clone, no
+    /// re-wrap). The gossip hot path.
+    pub fn broadcast_shared(&self, from: NodeId, kind: MsgKind, payload: Arc<Vec<u8>>) {
         let now = self.clock.now();
-        let payload = Arc::new(payload);
         let inboxes = self.inner.inboxes.read().unwrap();
         for (&to, inbox) in inboxes.iter() {
             if to != from {
@@ -158,8 +170,19 @@ impl Bus {
     /// rounds instead of O(n²) per round — the difference between 10
     /// and 100 nodes staying responsive (§Perf, Fig 9).
     pub fn broadcast_sample(&self, from: NodeId, kind: MsgKind, payload: Vec<u8>, fanout: usize) {
+        self.broadcast_sample_shared(from, kind, Arc::new(payload), fanout);
+    }
+
+    /// `Arc`-payload variant of [`broadcast_sample`](Self::broadcast_sample):
+    /// one encode per gossip round, shared across all sampled peers.
+    pub fn broadcast_sample_shared(
+        &self,
+        from: NodeId,
+        kind: MsgKind,
+        payload: Arc<Vec<u8>>,
+        fanout: usize,
+    ) {
         let now = self.clock.now();
-        let payload = Arc::new(payload);
         let inboxes = self.inner.inboxes.read().unwrap();
         let peers: Vec<NodeId> = inboxes.keys().copied().filter(|&n| n != from).collect();
         if peers.is_empty() {
@@ -231,6 +254,7 @@ impl Bus {
             };
         }
         let deliver_at = now + cfg.base_delay_ms + overlay.extra_delay_ms + jitter;
+        self.inner.bytes_sent.fetch_add(payload.len() as u64, Ordering::Relaxed);
         inbox.lock().unwrap().queue.push_back((
             deliver_at,
             Msg {
@@ -309,6 +333,12 @@ impl Bus {
             self.inner.delivered.load(Ordering::Acquire),
             self.inner.dropped.load(Ordering::Acquire),
         )
+    }
+
+    /// Payload bytes enqueued toward recipients so far (logical wire
+    /// volume; dropped messages are excluded).
+    pub fn bytes_sent(&self) -> u64 {
+        self.inner.bytes_sent.load(Ordering::Acquire)
     }
 }
 
@@ -440,6 +470,40 @@ mod tests {
         b.send(1, 2, MsgKind::Gossip, vec![9]);
         clock.advance(10);
         assert_eq!(b.recv(2).len(), 1);
+    }
+
+    #[test]
+    fn shared_broadcast_shares_one_payload_and_counts_bytes() {
+        let clock = SimClock::manual();
+        let b = bus(&clock);
+        for n in 1..=4 {
+            b.register(n);
+        }
+        let payload = Arc::new(vec![1u8, 2, 3]);
+        b.broadcast_shared(1, MsgKind::Gossip, payload.clone());
+        // 3 recipients × 3 bytes of logical wire volume, one allocation
+        assert_eq!(b.bytes_sent(), 9);
+        clock.advance(10);
+        for n in 2..=4 {
+            let msgs = b.recv(n);
+            assert_eq!(msgs.len(), 1);
+            // recipients alias the sender's buffer (no copy)
+            assert!(Arc::ptr_eq(&msgs[0].payload, &payload));
+        }
+    }
+
+    #[test]
+    fn sampled_shared_broadcast_respects_fanout() {
+        let clock = SimClock::manual();
+        let b = bus(&clock);
+        for n in 1..=5 {
+            b.register(n);
+        }
+        b.broadcast_sample_shared(1, MsgKind::Gossip, Arc::new(vec![7, 7]), 2);
+        assert_eq!(b.bytes_sent(), 4); // 2 peers × 2 bytes
+        clock.advance(10);
+        let got: usize = (2..=5).map(|n| b.recv(n).len()).sum();
+        assert_eq!(got, 2);
     }
 
     #[test]

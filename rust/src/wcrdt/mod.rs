@@ -239,9 +239,18 @@ impl<C: Crdt> WindowedCrdt<C> {
         }
     }
 
-    /// Number of windows currently marked dirty (observability).
+    /// Number of windows currently marked dirty (observability, and the
+    /// engine's skip-checkpoint-re-encode gate).
     pub fn dirty_windows(&self) -> usize {
         self.dirty.len()
+    }
+
+    /// Discard the dirty markers without building a delta — used after a
+    /// consumer has observed the full state (a full-sync gossip round, a
+    /// checkpoint encode). Without this, a replica that never calls
+    /// [`take_delta`](Self::take_delta) accumulates dirty ids forever.
+    pub fn mark_clean(&mut self) {
+        self.dirty.clear();
     }
 
     /// Checkpoint slice: this partition's contributions + its progress
@@ -451,6 +460,19 @@ mod tests {
         assert_eq!(d.live_windows(), 1); // only window 1 was touched
         assert_eq!(d.progress_of(0), 1200); // progress always included
         assert_eq!(w.dirty_windows(), 0);
+    }
+
+    #[test]
+    fn mark_clean_resets_dirty_without_losing_state() {
+        let mut w = wcrdt(&[0]);
+        w.insert_with(0, 100, |c| c.add(0, 1)).unwrap();
+        assert_eq!(w.dirty_windows(), 1);
+        let before = w.clone();
+        w.mark_clean();
+        assert_eq!(w.dirty_windows(), 0);
+        assert_eq!(w, before); // dirty is metadata, not state
+        // the next delta after mark_clean is empty-windowed
+        assert_eq!(w.take_delta().live_windows(), 0);
     }
 
     #[test]

@@ -130,6 +130,12 @@ fn state_counts_every_event_exactly_once_despite_failures() {
     prod.stop();
     cluster.stop();
 
+    // delivery audit: replays may duplicate but must never skip a seq
+    assert_eq!(
+        cluster.metrics.gaps.load(std::sync::atomic::Ordering::Acquire),
+        0,
+        "sink observed output sequence gaps"
+    );
     assert_ratio_outputs_match_ground_truth(&cluster, &cfg, 20);
 }
 
@@ -166,6 +172,11 @@ fn double_restart_mid_recovery_keeps_dedup_invariant() {
     prod.stop();
     cluster.stop();
 
+    assert_eq!(
+        cluster.metrics.gaps.load(std::sync::atomic::Ordering::Acquire),
+        0,
+        "sink observed output sequence gaps"
+    );
     assert_dedup_invariant(&cluster, &cfg);
     assert_ratio_outputs_match_ground_truth(&cluster, &cfg, 20);
 }

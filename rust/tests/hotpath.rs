@@ -1,0 +1,112 @@
+//! Hot-path data-plane regression tests: batch-budget fairness under
+//! pressure, zero-copy read accounting, and the sink's delivery audit
+//! (gap counter) at cluster level.
+
+use holon::clock::SimClock;
+use holon::config::HolonConfig;
+use holon::engine::HolonCluster;
+use holon::nexmark::producer;
+use holon::nexmark::queries::Q7;
+use std::sync::atomic::Ordering;
+
+/// Regression (batch-budget starvation): under sustained service-cost
+/// budget pressure, the pre-fix RUN_BATCH spent the whole budget in
+/// fixed BTreeMap order, so the lowest-numbered partitions consumed
+/// everything and the highest-numbered ones starved — stalling the
+/// global watermark min. With the rotating start, per-partition progress
+/// stays within a couple of batches of each other.
+#[test]
+fn low_budget_keeps_partition_progress_fair() {
+    let mut cfg = HolonConfig::default();
+    cfg.nodes = 1;
+    cfg.partitions = 4;
+    cfg.batch_size = 64;
+    cfg.events_per_sec_per_partition = 5_000;
+    // ~10k events/sim-s of budget vs 20k/s of offered load: the node
+    // runs at ~2x overload for the whole test.
+    cfg.holon_event_cost_us = 100.0;
+    cfg.wall_ms_per_sim_sec = 100.0;
+    cfg.duration_ms = 4_000;
+    cfg.checkpoint_interval_ms = 500;
+
+    let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
+    let cluster = HolonCluster::start_with_clock(cfg.clone(), Q7::new(cfg.window_ms), clock.clone());
+    let prod = producer::spawn(
+        cluster.input.clone(),
+        clock.clone(),
+        cfg.seed,
+        cfg.events_per_sec_per_partition,
+        cfg.duration_ms,
+    );
+    std::thread::sleep(clock.wall_for(cfg.duration_ms + 1000));
+    prod.stop();
+    cluster.stop();
+
+    // per-partition consumed offsets from the (graceful-shutdown) checkpoints
+    let idx: Vec<u64> = (0..cfg.partitions)
+        .map(|p| cluster.store.get(p).expect("checkpoint per partition").nxt_idx)
+        .collect();
+    let min = *idx.iter().min().unwrap();
+    let max = *idx.iter().max().unwrap();
+    // overload sanity: the budget really was the constraint (otherwise
+    // the test passes vacuously because everything was consumed)
+    for p in 0..cfg.partitions {
+        assert!(
+            cluster.input.end_offset(p) > idx[p as usize],
+            "partition {p} fully drained — no budget pressure, test is vacuous"
+        );
+    }
+    assert!(
+        min >= cfg.batch_size as u64,
+        "every partition must make progress, got {idx:?}"
+    );
+    // fairness: within a couple of batches (rotation grants each
+    // partition the first slot every `partitions` rounds)
+    assert!(
+        max - min <= 2 * cfg.batch_size as u64,
+        "per-partition progress spread too wide under budget pressure: {idx:?}"
+    );
+}
+
+/// Cluster-level delivery audit + zero-copy accounting: a healthy run
+/// has no output sequence gaps, and the hot path (RUN_BATCH + sink)
+/// never materializes record clones — the copying `read` path is only
+/// used by test oracles after the run.
+#[test]
+fn healthy_run_has_zero_gaps_and_zero_hotpath_clones() {
+    let mut cfg = HolonConfig::default();
+    cfg.nodes = 3;
+    cfg.partitions = 6;
+    cfg.events_per_sec_per_partition = 2_000;
+    cfg.wall_ms_per_sim_sec = 50.0;
+    cfg.duration_ms = 5_000;
+
+    let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
+    let cluster = HolonCluster::start_with_clock(cfg.clone(), Q7::new(cfg.window_ms), clock.clone());
+    let prod = producer::spawn(
+        cluster.input.clone(),
+        clock.clone(),
+        cfg.seed,
+        cfg.events_per_sec_per_partition,
+        cfg.duration_ms,
+    );
+    std::thread::sleep(clock.wall_for(cfg.duration_ms + 2000));
+    let produced = prod.stop();
+    cluster.stop();
+    assert!(produced > 0);
+    assert!(cluster.metrics.outputs.load(Ordering::Acquire) > 0);
+
+    // delivery audit: no sequence numbers skipped by the sink
+    assert_eq!(cluster.metrics.gaps.load(Ordering::Acquire), 0);
+
+    // zero-copy accounting, sampled BEFORE any test-side read() call
+    let (in_clones, in_read) = cluster.input.read_stats();
+    let (out_clones, out_read) = cluster.output.read_stats();
+    assert_eq!(in_clones + out_clones, 0, "hot path must not clone records");
+    assert!(in_read > 0 && out_read > 0, "hot path must visit records");
+
+    // ...and the copying oracle path is still available and counted
+    let (recs, _) = cluster.output.read(0, 0, 16);
+    let (out_clones_after, _) = cluster.output.read_stats();
+    assert_eq!(out_clones_after, recs.len() as u64);
+}

@@ -11,6 +11,7 @@ _spec = importlib.util.spec_from_file_location(
 validate_bench = importlib.util.module_from_spec(_spec)
 _spec.loader.exec_module(validate_bench)
 validate = validate_bench.validate
+check_baseline = validate_bench.check_baseline
 
 
 def scenario(**overrides):
@@ -35,6 +36,10 @@ def scenario(**overrides):
         "payload_clones_per_event": 0.0,
         "dedup_duplicates": 3,
         "seq_gaps": 0,
+        "shard_count": 0,
+        "shard_gossip_bytes": [],
+        "shard_parallel_merges": 0,
+        "shard_serial_merges": 0,
         "stalled": False,
     }
     base.update(overrides)
@@ -104,3 +109,136 @@ def test_unknown_system_fails():
     d = doc()
     d["scenarios"][0]["system"] = "spark"
     assert any("system" in e for e in validate(d))
+
+
+def test_sharded_scenario_passes():
+    d = doc(
+        scenarios=[
+            scenario(
+                name="q4_keyed_sharded",
+                workload="q4",
+                shard_count=4,
+                shard_gossip_bytes=[1024, 0, 2048, 512],
+                shard_parallel_merges=7,
+                shard_serial_merges=100,
+            )
+        ]
+    )
+    assert validate(d) == []
+
+
+def test_shard_bytes_must_be_nonneg_ints():
+    d = doc()
+    d["scenarios"][0]["shard_count"] = 2
+    d["scenarios"][0]["shard_gossip_bytes"] = [10, -1]
+    assert any("shard_gossip_bytes[1]" in e for e in validate(d))
+    d["scenarios"][0]["shard_gossip_bytes"] = [10, "x"]
+    assert any("shard_gossip_bytes[1]" in e for e in validate(d))
+    d["scenarios"][0]["shard_gossip_bytes"] = "not a list"
+    assert any("shard_gossip_bytes" in e for e in validate(d))
+
+
+def test_shard_count_must_match_array_length():
+    d = doc()
+    d["scenarios"][0]["shard_count"] = 3
+    d["scenarios"][0]["shard_gossip_bytes"] = [1, 2]
+    assert any("shard_count" in e for e in validate(d))
+
+
+# ---- the --baseline regression gate -----------------------------------
+
+
+def test_baseline_within_budget_passes():
+    base = doc(scenarios=[scenario(events_per_sec_peak=100000.0)])
+    now = doc(scenarios=[scenario(events_per_sec_peak=95000.0)])
+    assert check_baseline(now, base, 10.0) == []
+
+
+def test_baseline_regression_fails():
+    base = doc(scenarios=[scenario(events_per_sec_peak=100000.0)])
+    now = doc(scenarios=[scenario(events_per_sec_peak=85000.0)])
+    errs = check_baseline(now, base, 10.0)
+    assert any("regressed" in e for e in errs)
+
+
+def test_baseline_improvement_passes():
+    base = doc(scenarios=[scenario(events_per_sec_peak=100000.0)])
+    now = doc(scenarios=[scenario(events_per_sec_peak=200000.0)])
+    assert check_baseline(now, base, 10.0) == []
+
+
+def test_baseline_ignores_unshared_scenarios():
+    base = doc(
+        scenarios=[
+            scenario(events_per_sec_peak=100000.0),
+            scenario(name="retired_scenario", events_per_sec_peak=999999.0),
+        ]
+    )
+    now = doc(
+        scenarios=[
+            scenario(events_per_sec_peak=99000.0),
+            scenario(name="q4_keyed_sharded", events_per_sec_peak=1.0),
+        ]
+    )
+    assert check_baseline(now, base, 10.0) == []
+
+
+def test_baseline_with_no_shared_names_fails():
+    base = doc(scenarios=[scenario(name="old_only")])
+    now = doc(scenarios=[scenario(name="new_only")])
+    errs = check_baseline(now, base, 10.0)
+    assert any("no scenario names shared" in e for e in errs)
+
+
+def test_baseline_custom_budget():
+    base = doc(scenarios=[scenario(events_per_sec_peak=100000.0)])
+    now = doc(scenarios=[scenario(events_per_sec_peak=75000.0)])
+    assert check_baseline(now, base, 30.0) == []
+    assert check_baseline(now, base, 10.0) != []
+
+
+def test_baseline_nonnumeric_peak_fails_loudly():
+    # a hand-edited/corrupted baseline must not neutralize the gate
+    base = doc(scenarios=[scenario(events_per_sec_peak="100000")])
+    now = doc(scenarios=[scenario(events_per_sec_peak=1.0)])
+    errs = check_baseline(now, base, 10.0)
+    assert any("non-numeric" in e for e in errs)
+
+
+def test_baseline_cli_rejects_malformed_baseline(tmp_path):
+    import json
+    import subprocess
+    import sys as _sys
+
+    tool = pathlib.Path(__file__).resolve().parents[1] / "tools" / "validate_bench.py"
+    good = tmp_path / "report.json"
+    good.write_text(json.dumps(doc()))
+
+    def run_against(baseline_doc):
+        bad_base = tmp_path / "base.json"
+        bad_base.write_text(json.dumps(baseline_doc))
+        return subprocess.run(
+            [_sys.executable, str(tool), str(good), "--baseline", str(bad_base)],
+            capture_output=True,
+            text=True,
+        )
+
+    # structurally broken baseline: shape check fails the run
+    proc = run_against({"schema": "holon-bench/v1", "scenarios": []})
+    assert proc.returncode == 1
+    assert "baseline" in proc.stderr
+
+    # baseline with a missing peak: the per-scenario loud failure fires
+    broken = doc()
+    del broken["scenarios"][0]["events_per_sec_peak"]
+    proc = run_against(broken)
+    assert proc.returncode == 1
+    assert "non-numeric" in proc.stderr
+
+    # a baseline from an older schema (extra/missing unrelated fields)
+    # still gates fine — only the fields the gate reads matter
+    old_schema = doc()
+    del old_schema["scenarios"][0]["shard_count"]
+    old_schema["scenarios"][0]["a_retired_field"] = 1
+    proc = run_against(old_schema)
+    assert proc.returncode == 0, proc.stderr

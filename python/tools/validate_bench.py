@@ -1,10 +1,18 @@
 #!/usr/bin/env python3
 """Validate a BENCH_*.json perf-trajectory report (schema holon-bench/v1).
 
-Usage: python python/tools/validate_bench.py BENCH_PR3.json
+Usage:
+    python python/tools/validate_bench.py BENCH_PR4.json
+    python python/tools/validate_bench.py BENCH_PR4.json --baseline BENCH_BASELINE.json
 
-Exit code 0 when the document is schema-valid, 1 otherwise (errors on
-stderr). Stdlib-only so the CI bench-smoke job needs no extra deps.
+Exit code 0 when the document is schema-valid (and, with --baseline, no
+scenario regressed), 1 otherwise (errors on stderr). Stdlib-only so the
+CI bench-smoke job needs no extra deps.
+
+The --baseline gate compares `events_per_sec_peak` per scenario name
+against a previously recorded report (the trajectory row checked in as
+BENCH_BASELINE.json) and fails when any shared scenario's peak drops by
+more than --max-regress percent (default 10).
 """
 
 from __future__ import annotations
@@ -14,7 +22,8 @@ import sys
 
 SCHEMA = "holon-bench/v1"
 
-# field -> allowed JSON types per scenario entry
+# field -> allowed JSON types per scenario entry; `list` means an array
+# of non-negative ints (the per-shard counters)
 SCENARIO_FIELDS = {
     "name": (str,),
     "system": (str,),
@@ -36,10 +45,27 @@ SCENARIO_FIELDS = {
     "payload_clones_per_event": (int, float),
     "dedup_duplicates": (int,),
     "seq_gaps": (int,),
+    "shard_count": (int,),
+    "shard_gossip_bytes": (list,),
+    "shard_parallel_merges": (int,),
+    "shard_serial_merges": (int,),
     "stalled": (bool,),
 }
 
 SYSTEMS = {"holon", "flink", "flink_spare"}
+
+# peak ev/s may drop at most this fraction vs the recorded baseline row
+DEFAULT_MAX_REGRESS_PCT = 10.0
+
+
+def _check_int_array(where: str, field: str, v: object) -> list[str]:
+    errors = []
+    for i, x in enumerate(v):
+        if isinstance(x, bool) or not isinstance(x, int):
+            errors.append(f"{where}.{field}[{i}] must be an int, got {type(x).__name__}")
+        elif x < 0:
+            errors.append(f"{where}.{field}[{i}] is negative ({x})")
+    return errors
 
 
 def validate(doc: object) -> list[str]:
@@ -73,6 +99,8 @@ def validate(doc: object) -> list[str]:
                     f"{where}.{field} has type {type(sc[field]).__name__}, "
                     f"want one of {[t.__name__ for t in types]}"
                 )
+            elif list in types:
+                errors.extend(_check_int_array(where, field, sc[field]))
         extra = set(sc) - set(SCENARIO_FIELDS)
         if extra:
             errors.append(f"{where} has unknown fields {sorted(extra)}")
@@ -88,18 +116,98 @@ def validate(doc: object) -> list[str]:
             v = sc.get(field)
             if isinstance(v, (int, float)) and not isinstance(v, bool) and v < 0:
                 errors.append(f"{where}.{field} is negative ({v})")
+        # shard_count must agree with the per-shard array
+        if isinstance(sc.get("shard_count"), int) and isinstance(
+            sc.get("shard_gossip_bytes"), list
+        ):
+            if sc["shard_count"] != len(sc["shard_gossip_bytes"]):
+                errors.append(
+                    f"{where}.shard_count ({sc['shard_count']}) != "
+                    f"len(shard_gossip_bytes) ({len(sc['shard_gossip_bytes'])})"
+                )
+    return errors
+
+
+def check_baseline(doc: dict, baseline: dict, max_regress_pct: float) -> list[str]:
+    """Regressions of `events_per_sec_peak` vs a recorded baseline report.
+
+    Scenarios are matched by name; names present on only one side are
+    ignored (new scenarios are allowed to appear, retired ones to go).
+    Returns a list of violations (empty == within budget).
+    """
+    errors: list[str] = []
+    current = {
+        sc["name"]: sc
+        for sc in doc.get("scenarios", [])
+        if isinstance(sc, dict) and isinstance(sc.get("name"), str)
+    }
+    recorded = {
+        sc["name"]: sc
+        for sc in baseline.get("scenarios", [])
+        if isinstance(sc, dict) and isinstance(sc.get("name"), str)
+    }
+    floor_frac = 1.0 - max_regress_pct / 100.0
+    for name in sorted(set(current) & set(recorded)):
+        base = recorded[name].get("events_per_sec_peak")
+        now = current[name].get("events_per_sec_peak")
+        if not isinstance(base, (int, float)) or not isinstance(now, (int, float)):
+            # a non-numeric peak on either side must fail loudly — a
+            # silently skipped comparison would leave CI green on an
+            # arbitrary regression
+            errors.append(f"{name}: events_per_sec_peak is non-numeric on one side")
+            continue
+        if base > 0 and now < base * floor_frac:
+            errors.append(
+                f"{name}: events_per_sec_peak regressed {now:.0f} < "
+                f"{floor_frac:.2f} x baseline {base:.0f} "
+                f"(allowed drop {max_regress_pct:.0f}%)"
+            )
+    if not set(current) & set(recorded):
+        errors.append("no scenario names shared with the baseline report")
     return errors
 
 
 def main(argv: list[str]) -> int:
-    if len(argv) != 2:
+    args = argv[1:]
+    baseline_path: str | None = None
+    max_regress = DEFAULT_MAX_REGRESS_PCT
+    paths: list[str] = []
+    i = 0
+    while i < len(args):
+        a = args[i]
+        if a == "--baseline":
+            if i + 1 >= len(args):
+                print("--baseline needs a file argument", file=sys.stderr)
+                return 2
+            baseline_path = args[i + 1]
+            i += 2
+        elif a.startswith("--baseline="):
+            baseline_path = a.split("=", 1)[1]
+            i += 1
+        elif a.startswith("--max-regress="):
+            try:
+                max_regress = float(a.split("=", 1)[1])
+            except ValueError:
+                print(f"bad --max-regress value: {a}", file=sys.stderr)
+                return 2
+            i += 1
+        else:
+            paths.append(a)
+            i += 1
+    if len(paths) != 1:
         print(__doc__, file=sys.stderr)
         return 2
-    try:
-        with open(argv[1], encoding="utf-8") as f:
-            doc = json.load(f)
-    except (OSError, json.JSONDecodeError) as e:
-        print(f"error reading {argv[1]}: {e}", file=sys.stderr)
+
+    def load(path: str) -> object | None:
+        try:
+            with open(path, encoding="utf-8") as f:
+                return json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"error reading {path}: {e}", file=sys.stderr)
+            return None
+
+    doc = load(paths[0])
+    if doc is None:
         return 1
     errors = validate(doc)
     if errors:
@@ -107,7 +215,35 @@ def main(argv: list[str]) -> int:
             print(f"schema violation: {e}", file=sys.stderr)
         return 1
     n = len(doc["scenarios"])
-    print(f"{argv[1]}: valid {SCHEMA} report with {n} scenario(s)")
+    print(f"{paths[0]}: valid {SCHEMA} report with {n} scenario(s)")
+
+    if baseline_path is not None:
+        baseline = load(baseline_path)
+        if baseline is None:
+            return 1
+        # A malformed baseline must not neutralize the gate — but only
+        # the shape the gate actually reads is enforced (object with a
+        # non-empty scenarios array; per-scenario peaks are checked
+        # loudly inside check_baseline). Full schema validation here
+        # would turn every future schema evolution into a spurious CI
+        # failure against the older recorded baseline.
+        if (
+            not isinstance(baseline, dict)
+            or not isinstance(baseline.get("scenarios"), list)
+            or not baseline.get("scenarios")
+        ):
+            print(
+                f"baseline {baseline_path}: must be an object with a "
+                "non-empty scenarios array",
+                file=sys.stderr,
+            )
+            return 1
+        regressions = check_baseline(doc, baseline, max_regress)
+        if regressions:
+            for e in regressions:
+                print(f"perf regression: {e}", file=sys.stderr)
+            return 1
+        print(f"{paths[0]}: within {max_regress:.0f}% of baseline {baseline_path}")
     return 0
 
 

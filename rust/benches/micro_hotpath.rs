@@ -6,12 +6,41 @@
 use holon::api::{BatchAggregator, ScalarAggregator};
 use holon::benchkit::{bench, section};
 use holon::clock::SimClock;
-use holon::codec::{Decode, Encode};
+use holon::codec::{Decode, DecodeResult, Encode, Reader, Writer};
 use holon::crdt::{BoundedTopK, Crdt, GCounter, MapCrdt, PrefixAgg};
 use holon::log::LogBroker;
 use holon::runtime::{XlaMergeKernel, XlaWindowAggregator, MERGE_COLS, MERGE_ROWS};
+use holon::shard::ShardedMapCrdt;
 use holon::util::XorShift64;
 use holon::wcrdt::{WindowAssigner, WindowedCrdt};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Key whose clones are counted — the observable side of the
+/// `MapCrdt::merge` probe-before-clone fix (merge used to clone every
+/// key of `other` per merge, present or not).
+static KEY_CLONES: AtomicU64 = AtomicU64::new(0);
+
+#[derive(Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct CountKey(u64);
+
+impl Clone for CountKey {
+    fn clone(&self) -> Self {
+        KEY_CLONES.fetch_add(1, Ordering::Relaxed);
+        CountKey(self.0)
+    }
+}
+
+impl Encode for CountKey {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u64(self.0);
+    }
+}
+
+impl Decode for CountKey {
+    fn decode(r: &mut Reader) -> DecodeResult<Self> {
+        Ok(CountKey(r.get_u64()?))
+    }
+}
 
 fn main() {
     section("micro: CRDT merge");
@@ -38,6 +67,88 @@ fn main() {
         let mut x = ta.clone();
         x.merge(&tb);
         std::hint::black_box(&x);
+    });
+
+    section("micro: MapCrdt merge key-clone accounting");
+    // steady-state merge (every key already present): the probe-before-
+    // clone fast path must not clone a single key
+    let build_counted = |keys: std::ops::Range<u64>| {
+        let mut m: MapCrdt<CountKey, GCounter> = MapCrdt::new();
+        for k in keys {
+            m.entry(CountKey(k)).add(k % 8, k + 1);
+        }
+        m
+    };
+    let mut warm = build_counted(0..512);
+    let incoming = build_counted(0..512);
+    let before = KEY_CLONES.load(Ordering::Relaxed);
+    warm.merge(&incoming);
+    let clones = KEY_CLONES.load(Ordering::Relaxed) - before;
+    assert_eq!(clones, 0, "existing-key merge must clone zero keys (was 512/merge pre-fix)");
+    println!("steady-state merge of 512 present keys: {clones} key clones (pre-fix: 512)");
+    let fresh = build_counted(512..640);
+    let before = KEY_CLONES.load(Ordering::Relaxed);
+    warm.merge(&fresh);
+    let clones = KEY_CLONES.load(Ordering::Relaxed) - before;
+    assert_eq!(clones, 128, "only genuinely new keys may clone");
+    println!("merge introducing 128 new keys: {clones} key clones");
+
+    let mut ma = MapCrdt::<u64, GCounter>::new();
+    let mut mb = MapCrdt::<u64, GCounter>::new();
+    for k in 0..4096u64 {
+        ma.entry(k).add(k % 8, k + 1);
+        mb.entry(k).add((k + 1) % 8, k + 2);
+    }
+    bench("map_merge_4096_existing_keys", 20, 2_000, || {
+        let mut x = ma.clone();
+        x.merge(&mb);
+        std::hint::black_box(&x);
+    });
+
+    section("micro: sharded keyed state (8 shards, 4096 keys)");
+    let build_sharded = |shards: u32, salt: u64| {
+        let mut m: ShardedMapCrdt<u64, PrefixAgg> = ShardedMapCrdt::with_shards(shards);
+        for k in 0..4096u64 {
+            m.entry(k).observe(k % 8, (k + salt) as f64);
+        }
+        m
+    };
+    let sa = build_sharded(8, 1);
+    let sb = build_sharded(8, 2);
+    bench("sharded_map_merge_8x4096", 20, 2_000, || {
+        let mut x = sa.clone();
+        x.merge(&sb);
+        std::hint::black_box(&x);
+    });
+    // flat baseline with the SAME per-iteration work shape as the
+    // sharded bench above (one clone, merge of two distinct states) so
+    // the pair isolates the sharding layer
+    let build_flat = |salt: u64| {
+        let mut m: MapCrdt<u64, PrefixAgg> = MapCrdt::new();
+        for k in 0..4096u64 {
+            m.entry(k).observe(k % 8, (k + salt) as f64);
+        }
+        m
+    };
+    let fa = build_flat(1);
+    let fb = build_flat(2);
+    bench("flat_map_merge_4096_oracle", 20, 2_000, || {
+        let mut x = fa.clone();
+        x.merge(&fb);
+        std::hint::black_box(&x);
+    });
+    // delta encode: one dirty shard out of 8 vs the full map
+    let mut delta_src = build_sharded(8, 3);
+    let _ = delta_src.take_delta(); // drain construction dirt
+    delta_src.entry(17).observe(0, 1.0);
+    let delta = delta_src.take_delta();
+    println!(
+        "delta payload: {} B (1 dirty shard) vs full state {} B",
+        delta.to_bytes().len(),
+        delta_src.to_bytes().len()
+    );
+    bench("sharded_delta_encode_1_of_8", 50, 5_000, || {
+        std::hint::black_box(delta.to_bytes());
     });
 
     section("micro: WCRDT gossip path (encode + decode + join)");

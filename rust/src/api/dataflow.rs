@@ -23,6 +23,9 @@
 //!   tolerates bounded disorder (§3.2);
 //! * [`key_by`](Windowed::key_by) routes events into per-key CRDT
 //!   aggregation backed by [`MapCrdt`];
+//!   [`key_by_sharded`](Windowed::key_by_sharded) is the same stage over
+//!   shard-partitioned keyed state ([`ShardedMapCrdt`]: per-shard delta
+//!   gossip, parallel shard merge) for large key spaces;
 //! * [`aggregate`](Windowed::aggregate) folds events into any [`Crdt`],
 //!   and [`emit_typed`](WindowAgg::emit_typed) maps each completed
 //!   (globally deterministic) window value to a typed, `Encode`d output;
@@ -53,6 +56,7 @@ use std::sync::Arc;
 use crate::codec::{Decode, Encode};
 use crate::crdt::{Crdt, MapCrdt};
 use crate::log::Record;
+use crate::shard::ShardedMapCrdt;
 use crate::util::{PartitionId, SimTime};
 use crate::wcrdt::{WatermarkGen, WindowAssigner, WindowId, WindowedCrdt};
 
@@ -260,6 +264,29 @@ impl<E: 'static> Windowed<E> {
             key: Arc::new(key),
         }
     }
+
+    /// As [`key_by`](Self::key_by), but the per-key state is partitioned
+    /// across `shards` (rounded up to a power of two) independent inner
+    /// maps by seeded key-hash — [`ShardedMapCrdt`]. Same outputs, byte
+    /// for byte; what changes is the replication machinery: gossip ships
+    /// per-shard deltas, replica joins merge shards in parallel, and
+    /// checkpoints slice per shard. Use for keyed pipelines whose key
+    /// space (and therefore map state) is large enough that whole-map
+    /// gossip or single-core merges are the bottleneck.
+    pub fn key_by_sharded<K>(
+        self,
+        shards: u32,
+        key: impl Fn(&E) -> K + Send + Sync + 'static,
+    ) -> KeyedSharded<E, K>
+    where
+        K: Ord + Clone + Send + Sync + Encode + Decode + 'static,
+    {
+        KeyedSharded {
+            inner: self,
+            key: Arc::new(key),
+            shards,
+        }
+    }
 }
 
 /// A windowed, keyed event stream awaiting its per-key fold.
@@ -285,6 +312,41 @@ where
             assigner: self.inner.assigner,
             watermark_gen: self.inner.watermark_gen,
             insert: Arc::new(move |p, e, m: &mut MapCrdt<K, C>| insert(p, e, m.entry(key(e)))),
+        }
+    }
+}
+
+/// A windowed, keyed event stream whose per-key state is shard-
+/// partitioned. Created by [`Windowed::key_by_sharded`].
+pub struct KeyedSharded<E, K> {
+    inner: Windowed<E>,
+    key: Arc<dyn Fn(&E) -> K + Send + Sync>,
+    shards: u32,
+}
+
+impl<E: 'static, K> KeyedSharded<E, K>
+where
+    K: Ord + Clone + Send + Sync + Encode + Decode + 'static,
+{
+    /// Fold each event into the CRDT of its key. The pipeline's window
+    /// value is a [`ShardedMapCrdt`]; window values created at lattice
+    /// bottom adopt the configured shard count on first insert (a
+    /// decoded or gossip-merged window keeps the layout it arrived
+    /// with — layouts are fixed per deployment).
+    pub fn aggregate<C: Crdt + Sync>(
+        self,
+        insert: impl Fn(PartitionId, &E, &mut C) + Send + Sync + 'static,
+    ) -> WindowAgg<E, ShardedMapCrdt<K, C>> {
+        let key = self.key;
+        let shards = self.shards;
+        WindowAgg {
+            xform: self.inner.xform,
+            assigner: self.inner.assigner,
+            watermark_gen: self.inner.watermark_gen,
+            insert: Arc::new(move |p, e, m: &mut ShardedMapCrdt<K, C>| {
+                m.ensure_shards(shards);
+                insert(p, e, m.entry(key(e)))
+            }),
         }
     }
 }
@@ -851,6 +913,49 @@ mod tests {
         let (w, rows) = <(u64, Vec<(u64, u64)>)>::from_bytes(&outs[1].payload).unwrap();
         assert_eq!(w, 1);
         assert_eq!(rows, vec![(7, 1), (9, 1)]);
+    }
+
+    #[test]
+    fn keyed_sharded_emits_byte_identical_to_keyed() {
+        // the sharded keyed stage must not change one output byte — for
+        // any shard count, including the degenerate single shard
+        let keyed = Dataflow::<Event>::source()
+            .filter(|e| e.is_bid())
+            .tumbling(1000)
+            .key_by(|e| match e {
+                Event::Bid { auction, .. } => *auction,
+                _ => 0,
+            })
+            .aggregate(|p, _e, c: &mut GCounter| c.add(p as u64, 1))
+            .emit_typed(|w, m| {
+                let rows: Vec<(u64, u64)> = m.iter().map(|(&a, c)| (a, c.value())).collect();
+                Some((w, rows))
+            });
+        let events: Vec<Record> = (0..64u64)
+            .map(|i| bid(i, i * 40, i % 7, 1.0))
+            .collect();
+        let expect = run_and_drain(&keyed, &events);
+        assert!(!expect.is_empty());
+        for shards in [1u32, 4, 16] {
+            let sharded = Dataflow::<Event>::source()
+                .filter(|e| e.is_bid())
+                .tumbling(1000)
+                .key_by_sharded(shards, |e| match e {
+                    Event::Bid { auction, .. } => *auction,
+                    _ => 0,
+                })
+                .aggregate(|p, _e, c: &mut GCounter| c.add(p as u64, 1))
+                .emit_typed(|w, m| {
+                    let rows: Vec<(u64, u64)> = m.iter().map(|(&a, c)| (a, c.value())).collect();
+                    Some((w, rows))
+                });
+            let got = run_and_drain(&sharded, &events);
+            assert_eq!(got.len(), expect.len(), "{shards} shards: output count");
+            for (i, (a, b)) in expect.iter().zip(&got).enumerate() {
+                assert_eq!(a.payload, b.payload, "{shards} shards: output {i}");
+                assert_eq!(a.ref_ts, b.ref_ts);
+            }
+        }
     }
 
     #[test]

@@ -34,7 +34,8 @@ use crate::wcrdt::{WindowId, WindowedCrdt};
 pub mod dataflow;
 pub mod shared;
 pub use dataflow::{
-    demux, Dataflow, DfCursor, Keyed, MultiQuery, Passthrough, WindowAgg, WindowPipeline, Windowed,
+    demux, Dataflow, DfCursor, Keyed, KeyedSharded, MultiQuery, Passthrough, WindowAgg,
+    WindowPipeline, Windowed,
 };
 pub use shared::SharedState;
 
@@ -187,6 +188,14 @@ pub trait Processor: Clone + Send + Sync + 'static {
     ///
     /// Called with an empty batch at idle so window emission keeps
     /// progressing as gossip completes windows.
+    ///
+    /// Contract: an empty batch must leave `own` untouched (reads and
+    /// emission only). The engine drains `own` into the node replica
+    /// only after batches that consumed events; state written to `own`
+    /// during an empty invocation would sit undrained — and therefore
+    /// invisible to gossip — until the partition next consumes input
+    /// (debug builds assert this). Every in-repo processor guards its
+    /// inserts and watermark bumps on a non-empty batch.
     fn process(
         &self,
         ctx: &mut Ctx,

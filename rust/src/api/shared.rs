@@ -50,6 +50,15 @@ pub trait SharedState: Clone + Send + Encode + Decode + 'static {
     /// encode). Bounds dirty-set growth on replicas that never call
     /// `take_delta`.
     fn mark_clean(&mut self);
+
+    /// Drain this state's delta into `dst` by reference — semantically
+    /// `dst.join(&self.take_delta())` without materializing the delta.
+    /// The engine's per-batch own→replica join runs through this (the
+    /// hot path must not clone per batch); the default is only for
+    /// exotic implementations.
+    fn join_delta_into(&mut self, dst: &mut Self) {
+        dst.join(&self.take_delta());
+    }
 }
 
 impl SharedState for () {
@@ -72,6 +81,8 @@ impl SharedState for () {
     }
 
     fn mark_clean(&mut self) {}
+
+    fn join_delta_into(&mut self, _dst: &mut Self) {}
 }
 
 impl<C: Crdt> SharedState for WindowedCrdt<C> {
@@ -105,6 +116,10 @@ impl<C: Crdt> SharedState for WindowedCrdt<C> {
 
     fn mark_clean(&mut self) {
         WindowedCrdt::mark_clean(self);
+    }
+
+    fn join_delta_into(&mut self, dst: &mut Self) {
+        WindowedCrdt::join_delta_into(self, dst);
     }
 }
 
@@ -142,6 +157,11 @@ impl<A: SharedState, B: SharedState> SharedState for (A, B) {
     fn mark_clean(&mut self) {
         self.0.mark_clean();
         self.1.mark_clean();
+    }
+
+    fn join_delta_into(&mut self, dst: &mut Self) {
+        self.0.join_delta_into(&mut dst.0);
+        self.1.join_delta_into(&mut dst.1);
     }
 }
 
@@ -193,6 +213,12 @@ impl<A: SharedState, B: SharedState, C: SharedState> SharedState for (A, B, C) {
         self.0.mark_clean();
         self.1.mark_clean();
         self.2.mark_clean();
+    }
+
+    fn join_delta_into(&mut self, dst: &mut Self) {
+        self.0.join_delta_into(&mut dst.0);
+        self.1.join_delta_into(&mut dst.1);
+        self.2.join_delta_into(&mut dst.2);
     }
 }
 

@@ -106,6 +106,14 @@ impl JsonWriter {
         self
     }
 
+    /// Append a bare u64 element inside an open array scope (numeric
+    /// arrays like the per-shard gossip-byte counters).
+    pub fn u64_elem(&mut self, v: u64) -> &mut Self {
+        self.elem();
+        self.buf.push_str(&v.to_string());
+        self
+    }
+
     pub fn f64_field(&mut self, k: &str, v: f64) -> &mut Self {
         self.key(k);
         if v.is_finite() {
@@ -284,5 +292,16 @@ mod tests {
         let mut j = JsonWriter::new();
         j.obj().arr_field("xs").end_arr().obj_field("o").end_obj().end_obj();
         assert_eq!(j.finish(), "{\"xs\":[],\"o\":{}}");
+    }
+
+    #[test]
+    fn json_writer_numeric_arrays() {
+        let mut j = JsonWriter::new();
+        j.obj().arr_field("bytes");
+        for v in [0u64, 17, 4096] {
+            j.u64_elem(v);
+        }
+        j.end_arr().u64_field("n", 3).end_obj();
+        assert_eq!(j.finish(), "{\"bytes\":[0,17,4096],\"n\":3}");
     }
 }

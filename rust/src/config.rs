@@ -8,6 +8,11 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
+/// Sentinel value of [`HolonConfig::gossip_fanout`]: resolve the
+/// fan-out from the cluster size as ⌈log₂ nodes⌉ (parsed and dumped as
+/// `auto` in config files).
+pub const AUTO_GOSSIP_FANOUT: u32 = u32::MAX;
+
 /// Full configuration for a Holon (and baseline) deployment.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HolonConfig {
@@ -34,9 +39,22 @@ pub struct HolonConfig {
     pub batch_size: usize,
     /// Gossip (WCRDT sync) interval per node, sim-ms.
     pub gossip_interval_ms: u64,
-    /// Gossip fan-out: peers sampled per gossip round (0 = broadcast to
-    /// all). State-based gossip spreads transitively, so a small fan-out
-    /// converges in O(log n) rounds with O(n·fanout) traffic.
+    /// Gossip fan-out: peers sampled per gossip round. `0` = broadcast
+    /// to all (O(n²) traffic per round); the default is the `auto`
+    /// sentinel ([`AUTO_GOSSIP_FANOUT`]), resolved per deployment to
+    /// ⌈log₂ nodes⌉ by [`HolonConfig::effective_gossip_fanout`].
+    ///
+    /// Tradeoff (measured by the `bench-smoke` gossip-byte counters;
+    /// see EXPERIMENTS.md §Gossip fan-out): full broadcast converges in
+    /// one round but its per-round wire volume grows quadratically with
+    /// the cluster, which is what capped fig9 scalability runs; a
+    /// ⌈log₂ n⌉ sample keeps per-round traffic at O(n·log n) while
+    /// transitive state-based gossip still converges in O(log n)
+    /// rounds — a few gossip intervals of extra propagation latency
+    /// (bounded staleness, never divergence) for an order-of-magnitude
+    /// wire-volume cut at 100 nodes. Delta-mode full-sync rounds ignore
+    /// the fan-out and always broadcast to all (anti-entropy must reach
+    /// every peer before dirty markers drop).
     pub gossip_fanout: u32,
     /// Delta-based WCRDT synchronization (paper §7): gossip only the
     /// windows touched since the last round, with a periodic full-state
@@ -44,6 +62,16 @@ pub struct HolonConfig {
     pub gossip_delta: bool,
     /// Checkpoint interval per partition, sim-ms.
     pub checkpoint_interval_ms: u64,
+    /// Shard count for keyed aggregation state (rounded up to a power
+    /// of two). `0` = unsharded flat maps. With `N > 0`, keyed CLI
+    /// workloads (`holon run q4`) run over
+    /// [`ShardedMapCrdt`](crate::shard::ShardedMapCrdt): per-shard
+    /// delta gossip, parallel shard merges, per-shard checkpoint
+    /// slices. Outputs are byte-identical either way.
+    pub shard_count: u32,
+    /// Worker cap for the parallel shard-merge pool (`0` = the host's
+    /// available parallelism). Applied process-wide at cluster start.
+    pub shard_merge_threads: u32,
     /// Heartbeat broadcast interval, sim-ms.
     pub heartbeat_interval_ms: u64,
     /// Declare a node dead after this long without a heartbeat, sim-ms.
@@ -117,9 +145,11 @@ impl Default for HolonConfig {
             window_ms: 1000,
             batch_size: 256,
             gossip_interval_ms: 50,
-            gossip_fanout: 0,
+            gossip_fanout: AUTO_GOSSIP_FANOUT,
             gossip_delta: false,
             checkpoint_interval_ms: 1000,
+            shard_count: 0,
+            shard_merge_threads: 0,
             heartbeat_interval_ms: 150,
             failure_timeout_ms: 600,
             poll_interval_ms: 5,
@@ -140,7 +170,7 @@ impl Default for HolonConfig {
             flink_spare_slots: false,
             use_xla: false,
             artifacts_dir: "artifacts".to_string(),
-            bench_out: "BENCH_PR3.json".to_string(),
+            bench_out: "BENCH_PR4.json".to_string(),
         }
     }
 }
@@ -179,9 +209,17 @@ impl HolonConfig {
             "window_ms" => self.window_ms = parse!(),
             "batch_size" => self.batch_size = parse!(),
             "gossip_interval_ms" => self.gossip_interval_ms = parse!(),
-            "gossip_fanout" => self.gossip_fanout = parse!(),
+            "gossip_fanout" => {
+                self.gossip_fanout = if value == "auto" {
+                    AUTO_GOSSIP_FANOUT
+                } else {
+                    parse!()
+                }
+            }
             "gossip_delta" => self.gossip_delta = parse!(),
             "checkpoint_interval_ms" => self.checkpoint_interval_ms = parse!(),
+            "shard_count" => self.shard_count = parse!(),
+            "shard_merge_threads" => self.shard_merge_threads = parse!(),
             "heartbeat_interval_ms" => self.heartbeat_interval_ms = parse!(),
             "failure_timeout_ms" => self.failure_timeout_ms = parse!(),
             "poll_interval_ms" => self.poll_interval_ms = parse!(),
@@ -206,6 +244,18 @@ impl HolonConfig {
             _ => return Err(ConfigError::UnknownKey(key.to_string())),
         }
         Ok(())
+    }
+
+    /// The gossip fan-out the engine actually uses: the configured
+    /// value, with the `auto` sentinel resolved to ⌈log₂ nodes⌉ (`0` =
+    /// broadcast to all; see the [`gossip_fanout`](Self::gossip_fanout)
+    /// doc for the measured tradeoff).
+    pub fn effective_gossip_fanout(&self) -> usize {
+        if self.gossip_fanout == AUTO_GOSSIP_FANOUT {
+            ceil_log2(self.nodes)
+        } else {
+            self.gossip_fanout as usize
+        }
     }
 
     /// Parse a config file of `key = value` lines.
@@ -272,8 +322,20 @@ impl HolonConfig {
         m.insert("window_ms", self.window_ms.to_string());
         m.insert("batch_size", self.batch_size.to_string());
         m.insert("gossip_interval_ms", self.gossip_interval_ms.to_string());
-        m.insert("gossip_fanout", self.gossip_fanout.to_string());
+        m.insert(
+            "gossip_fanout",
+            if self.gossip_fanout == AUTO_GOSSIP_FANOUT {
+                "auto".to_string()
+            } else {
+                self.gossip_fanout.to_string()
+            },
+        );
         m.insert("gossip_delta", self.gossip_delta.to_string());
+        m.insert("shard_count", self.shard_count.to_string());
+        m.insert(
+            "shard_merge_threads",
+            self.shard_merge_threads.to_string(),
+        );
         m.insert(
             "checkpoint_interval_ms",
             self.checkpoint_interval_ms.to_string(),
@@ -327,6 +389,15 @@ impl HolonConfig {
             .map(|(k, v)| format!("{k} = {v}"))
             .collect::<Vec<_>>()
             .join("\n")
+    }
+}
+
+/// ⌈log₂ n⌉, with n ≤ 1 → 0 (no peers to sample).
+fn ceil_log2(n: u32) -> usize {
+    if n <= 1 {
+        0
+    } else {
+        (32 - (n - 1).leading_zeros()) as usize
     }
 }
 
@@ -417,5 +488,49 @@ mod tests {
         let mut c2 = HolonConfig::default();
         c2.apply_text(&c.dump()).unwrap();
         assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn dump_roundtrips_explicit_fanout_and_shards() {
+        let mut c = HolonConfig::default();
+        c.gossip_fanout = 3;
+        c.shard_count = 16;
+        c.shard_merge_threads = 2;
+        let mut c2 = HolonConfig::default();
+        c2.apply_text(&c.dump()).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn gossip_fanout_auto_parses_dumps_and_resolves() {
+        let mut c = HolonConfig::default();
+        assert_eq!(c.gossip_fanout, AUTO_GOSSIP_FANOUT, "auto is the default");
+        assert!(c.dump().contains("gossip_fanout = auto"));
+        // auto resolves to ⌈log₂ nodes⌉
+        for (nodes, want) in [(1u32, 0usize), (2, 1), (4, 2), (5, 3), (8, 3), (9, 4), (100, 7)] {
+            c.nodes = nodes;
+            assert_eq!(c.effective_gossip_fanout(), want, "nodes = {nodes}");
+        }
+        // explicit values pass through untouched, including broadcast-all
+        c.set("gossip_fanout", "0").unwrap();
+        assert_eq!(c.effective_gossip_fanout(), 0);
+        c.set("gossip_fanout", "4").unwrap();
+        assert_eq!(c.effective_gossip_fanout(), 4);
+        c.set("gossip_fanout", "auto").unwrap();
+        assert_eq!(c.gossip_fanout, AUTO_GOSSIP_FANOUT);
+        // bad values still error
+        assert!(matches!(
+            c.set("gossip_fanout", "lots"),
+            Err(ConfigError::InvalidValue { .. })
+        ));
+    }
+
+    #[test]
+    fn shard_knobs_parse() {
+        let mut c = HolonConfig::default();
+        assert_eq!(c.shard_count, 0, "sharding is opt-in");
+        c.apply_text("shard_count = 8\nshard_merge_threads = 4\n").unwrap();
+        assert_eq!(c.shard_count, 8);
+        assert_eq!(c.shard_merge_threads, 4);
     }
 }

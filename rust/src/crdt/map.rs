@@ -68,7 +68,18 @@ where
 
     fn merge(&mut self, other: &Self) {
         for (k, v) in &other.entries {
-            self.entries.entry(k.clone()).or_default().merge(v);
+            // Probe with the borrowed key first: the steady-state merge
+            // (gossip between warmed-up replicas) touches only existing
+            // keys, and the old `entry(k.clone())` paid a key clone per
+            // key per merge just to discover that.
+            match self.entries.get_mut(k) {
+                Some(mine) => mine.merge(v),
+                None => {
+                    let mut fresh = C::default();
+                    fresh.merge(v);
+                    self.entries.insert(k.clone(), fresh);
+                }
+            }
         }
     }
 }
@@ -143,5 +154,63 @@ mod tests {
         let p = m.project_with(|c| c.project(1));
         assert_eq!(p.get(&1).unwrap().value(), 2);
         assert_eq!(p.get(&2).unwrap().value(), 3);
+    }
+
+    /// A key whose `Clone` is observable — the merge hot-path regression
+    /// guard (merge used to clone every key of `other` even when the key
+    /// already existed; see `benches/micro_hotpath.rs` for the timing
+    /// side of the same fix).
+    mod key_clone_accounting {
+        use super::*;
+        use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
+        use std::sync::atomic::{AtomicU64, Ordering};
+
+        static KEY_CLONES: AtomicU64 = AtomicU64::new(0);
+
+        #[derive(Debug, PartialEq, Eq, PartialOrd, Ord)]
+        struct CountingKey(u64);
+
+        impl Clone for CountingKey {
+            fn clone(&self) -> Self {
+                KEY_CLONES.fetch_add(1, Ordering::Relaxed);
+                CountingKey(self.0)
+            }
+        }
+
+        impl Encode for CountingKey {
+            fn encode(&self, w: &mut Writer) {
+                w.put_u64(self.0);
+            }
+        }
+
+        impl Decode for CountingKey {
+            fn decode(r: &mut Reader) -> DecodeResult<Self> {
+                Ok(CountingKey(r.get_u64()?))
+            }
+        }
+
+        #[test]
+        fn merge_clones_only_absent_keys() {
+            let build = |keys: &[u64]| {
+                let mut m: MapCrdt<CountingKey, GCounter> = MapCrdt::new();
+                for &k in keys {
+                    m.entry(CountingKey(k)).add(0, k + 1);
+                }
+                m
+            };
+            let mut a = build(&[1, 2, 3, 4]);
+            let b = build(&[1, 2, 3, 4]);
+            let before = KEY_CLONES.load(Ordering::Relaxed);
+            a.merge(&b); // all keys present: zero clones
+            assert_eq!(KEY_CLONES.load(Ordering::Relaxed) - before, 0);
+
+            let c = build(&[3, 4, 5, 6]);
+            let before = KEY_CLONES.load(Ordering::Relaxed);
+            a.merge(&c); // exactly the two absent keys clone
+            assert_eq!(KEY_CLONES.load(Ordering::Relaxed) - before, 2);
+            assert_eq!(a.len(), 6);
+            // same contributor, same count: the join is the max, not a sum
+            assert_eq!(a.get(&CountingKey(3)).unwrap().value(), 4);
+        }
     }
 }

@@ -58,6 +58,35 @@ pub trait Crdt: Clone + Default + Send + Encode + Decode + 'static {
         self.merge(other);
         self
     }
+
+    /// Delta hook for composed sync: a partial state carrying everything
+    /// changed since the previous call, clearing any internal dirty
+    /// markers. The default — a full clone, clearing nothing — is always
+    /// correct (any CRDT state is its own valid delta); types with
+    /// internal dirty tracking ([`crate::shard::ShardedMapCrdt`])
+    /// override it so a containing
+    /// [`WindowedCrdt`](crate::wcrdt::WindowedCrdt) delta ships only the
+    /// changed sub-state.
+    fn take_delta(&mut self) -> Self {
+        self.clone()
+    }
+
+    /// Drop internal dirty markers without building a delta (a full-state
+    /// observer has seen everything). No-op by default.
+    fn mark_clean(&mut self) {}
+
+    /// Drain this value's delta into `dst` by reference — semantically
+    /// `dst.merge(&self.take_delta())` without materializing the delta.
+    /// The default merges the full state (for types without dirty
+    /// tracking the delta *is* the full state, and merging by reference
+    /// costs no clone); [`crate::shard::ShardedMapCrdt`] overrides it to
+    /// merge only its dirty shards. The engine's per-batch
+    /// own-contribution→replica join runs through this, so it must stay
+    /// allocation-free on the default path.
+    fn join_delta_into(&mut self, dst: &mut Self) {
+        dst.merge(self);
+        self.mark_clean();
+    }
 }
 
 /// Join an iterator of CRDT states into one (fold over ⊔ from ⊥).

@@ -56,6 +56,16 @@ pub struct ClusterMetrics {
     /// Total encoded gossip payload bytes (one encode per round; the
     /// per-recipient wire volume is tracked by [`crate::net::Bus::bytes_sent`]).
     pub gossip_payload_bytes: Arc<AtomicU64>,
+    /// Encoded gossip payload bytes attributed per shard (index = shard
+    /// id) for queries over sharded keyed state — empty for unsharded
+    /// queries. The per-shard view is what shows delta gossip shipping
+    /// only the dirty shards.
+    pub shard_gossip_bytes: Arc<Mutex<Vec<u64>>>,
+    /// Sharded-state merges executed on the parallel shard pool.
+    pub shard_parallel_merges: Arc<AtomicU64>,
+    /// Sharded-state merges executed inline (below the parallel
+    /// threshold, or layout-mismatch rehashes).
+    pub shard_serial_merges: Arc<AtomicU64>,
 }
 
 impl ClusterMetrics {
@@ -71,6 +81,24 @@ impl ClusterMetrics {
             recoveries: Arc::new(AtomicU64::new(0)),
             gossip_sent: Arc::new(AtomicU64::new(0)),
             gossip_payload_bytes: Arc::new(AtomicU64::new(0)),
+            shard_gossip_bytes: Arc::new(Mutex::new(Vec::new())),
+            shard_parallel_merges: Arc::new(AtomicU64::new(0)),
+            shard_serial_merges: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Fold a node's per-shard encoded gossip byte counts (index =
+    /// shard id) into the cluster-wide counters.
+    pub fn add_shard_gossip_bytes(&self, per_shard: &[u64]) {
+        if per_shard.is_empty() {
+            return;
+        }
+        let mut v = self.shard_gossip_bytes.lock().unwrap();
+        if v.len() < per_shard.len() {
+            v.resize(per_shard.len(), 0);
+        }
+        for (slot, b) in v.iter_mut().zip(per_shard) {
+            *slot += b;
         }
     }
 }
@@ -112,6 +140,11 @@ impl<P: Processor> HolonCluster<P> {
     /// As [`start`](Self::start) but with a caller-provided clock
     /// (benches share one clock across compared systems).
     pub fn start_with_clock(cfg: HolonConfig, processor: P, clock: SimClock) -> Arc<Self> {
+        if cfg.shard_merge_threads > 0 {
+            // explicit cap only — the process-wide default (auto) is
+            // left alone so concurrent test clusters don't fight over it
+            crate::shard::exec::set_max_threads(cfg.shard_merge_threads as usize);
+        }
         let broker = LogBroker::new(clock.clone());
         let input = broker.topic("input", cfg.partitions);
         let output = broker.topic("output", cfg.partitions);

@@ -44,6 +44,40 @@ use super::ClusterMetrics;
 /// (anti-entropy against dropped messages and fan-out gaps).
 const FULL_SYNC_EVERY: u64 = 10;
 
+/// What one gossip round does: payload shape and effective fan-out.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct GossipPlan {
+    /// Encode full state (and drop the dirty markers) vs a delta.
+    full: bool,
+    /// Peers to sample (0 = broadcast to all).
+    fanout: usize,
+}
+
+/// Decide the round's shape. The delta-mode full-sync interaction is
+/// load-bearing: a full-sync round *must* reach every peer before the
+/// dirty markers drop, because the markers are the only record of what
+/// un-sampled peers have not seen. The pre-fix code kept the configured
+/// fan-out on full-sync rounds and compensated by never calling
+/// `mark_clean()` when `gossip_fanout > 0` — which left full-state
+/// rounds unable to bound the dirty set (it regrew between delta
+/// drains forever) and, worse, left sampled-out peers reliant on
+/// transitive deltas alone with no true anti-entropy round at all.
+/// Forcing fanout = all on delta-mode full-sync rounds makes
+/// `mark_clean()` unconditionally sound there.
+fn gossip_plan(delta_enabled: bool, fanout: usize, round: u64) -> GossipPlan {
+    if !delta_enabled {
+        // full state every round; sampling is fine (transitive
+        // convergence), and the markers have no reader — mark_clean
+        // merely bounds their growth.
+        return GossipPlan { full: true, fanout };
+    }
+    if round % FULL_SYNC_EVERY == 0 {
+        GossipPlan { full: true, fanout: 0 } // anti-entropy: everyone
+    } else {
+        GossipPlan { full: false, fanout }
+    }
+}
+
 /// How many windows behind the watermark floor we keep before compacting
 /// (the recovery horizon: a restarted/stealing node must still find the
 /// windows its checkpoint cursor points at).
@@ -312,7 +346,28 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
                     (pctx.into_outputs(), recs.len())
                 });
             budget_events -= consumed as f64;
-            shared.join(&st.own);
+            // Drain only what this batch touched (own's dirty windows,
+            // and within them only the changed sub-state) into the
+            // replica, by reference — no delta materialization on the
+            // hot path. Joining the whole accumulator re-marked every
+            // live window and shard dirty in `shared` each iteration,
+            // which made delta gossip re-ship the entire keyed state
+            // every round — defeating per-shard deltas on the engine
+            // path. An empty batch cannot mutate `own` (no inserts, no
+            // watermark bump), so skip the drain entirely; recovery
+            // joins the full accumulator already.
+            if consumed > 0 {
+                st.own.join_delta_into(&mut shared);
+            } else {
+                // contract (documented on Processor::process): an empty
+                // batch must not mutate `own` — anything it wrote here
+                // would sit undrained until the next consuming batch
+                debug_assert_eq!(
+                    st.own.dirty_windows(),
+                    0,
+                    "processor mutated `own` on an empty batch"
+                );
+            }
             if !outs.is_empty() {
                 let batch: Vec<(SimTime, Vec<u8>)> = outs
                     .into_iter()
@@ -339,30 +394,38 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
         // delta payloads with periodic full anti-entropy when enabled).
         if now.saturating_sub(last_gossip) >= cfg.gossip_interval_ms {
             gossip_round += 1;
-            let full = !cfg.gossip_delta || gossip_round % FULL_SYNC_EVERY == 0;
+            let plan = gossip_plan(
+                cfg.gossip_delta,
+                cfg.effective_gossip_fanout(),
+                gossip_round,
+            );
+            // Discard per-shard byte samples accumulated by checkpoint
+            // encodes on this thread, so the drain below attributes
+            // gossip bytes only.
+            let _ = crate::shard::take_shard_encoded_bytes();
             // Encode once per round into an Arc shared by every
             // recipient; the previous round's size pre-sizes the buffer
             // so a round is a single exact allocation (the payload used
             // to be re-wrapped per broadcast call and, before that,
             // cloned per recipient).
             let mut w = Writer::with_capacity(gossip_size_hint);
-            if full {
+            if plan.full {
                 shared.encode(&mut w);
-                if cfg.gossip_fanout == 0 || !cfg.gossip_delta {
-                    // Every peer saw the full state (or deltas are never
-                    // sent): the dirty markers have no remaining reader,
-                    // drop them so the set doesn't grow unboundedly.
-                    shared.mark_clean();
-                }
+                // Every peer is about to see the full state (delta-mode
+                // full-sync forces fanout = all; non-delta mode has no
+                // delta reader at all): the dirty markers can drop
+                // without losing any peer's missing windows.
+                shared.mark_clean();
             } else {
                 shared.take_delta().encode(&mut w);
             }
             gossip_size_hint = w.len();
+            metrics.add_shard_gossip_bytes(&crate::shard::take_shard_encoded_bytes());
             let payload = Arc::new(w.into_bytes());
             metrics
                 .gossip_payload_bytes
                 .fetch_add(payload.len() as u64, Ordering::Relaxed);
-            bus.broadcast_sample_shared(id, MsgKind::Gossip, payload, cfg.gossip_fanout as usize);
+            bus.broadcast_sample_shared(id, MsgKind::Gossip, payload, plan.fanout);
             metrics.gossip_sent.fetch_add(1, Ordering::Relaxed);
             last_gossip = now;
 
@@ -386,6 +449,15 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
                 checkpoint_partition(&store, p, st);
                 st.last_ckpt = now;
             }
+        }
+
+        // Attribute this thread's sharded-state merges (gossip joins,
+        // post-batch own-joins) to the cluster counters. Thread-local
+        // drain: `Crdt::merge` has no metrics handle.
+        let (par, ser) = crate::shard::exec::take_merge_stats();
+        if par + ser > 0 {
+            metrics.shard_parallel_merges.fetch_add(par, Ordering::Relaxed);
+            metrics.shard_serial_merges.fetch_add(ser, Ordering::Relaxed);
         }
 
         if !did_work {
@@ -479,5 +551,39 @@ mod tests {
     #[test]
     fn output_decode_rejects_garbage() {
         assert!(decode_output(&[1, 2]).is_none());
+    }
+
+    /// Regression for the delta-mode full-sync/fanout interaction
+    /// (ROADMAP item): before the fix, a delta-mode full-sync round
+    /// kept the configured fan-out, so the full state reached only a
+    /// sample of peers and `mark_clean()` had to be skipped — failing
+    /// this assertion — leaving the dirty set to regrow between delta
+    /// drains forever and the un-sampled peers without any true
+    /// anti-entropy round.
+    #[test]
+    fn delta_full_sync_rounds_broadcast_to_all() {
+        for round in [0, FULL_SYNC_EVERY, 7 * FULL_SYNC_EVERY] {
+            let plan = gossip_plan(true, 3, round);
+            assert!(plan.full, "round {round} is a full-sync round");
+            assert_eq!(plan.fanout, 0, "full sync must reach every peer");
+        }
+    }
+
+    #[test]
+    fn delta_rounds_keep_the_sampled_fanout() {
+        for round in [1, FULL_SYNC_EVERY + 1, FULL_SYNC_EVERY - 1] {
+            let plan = gossip_plan(true, 3, round);
+            assert_eq!(plan, GossipPlan { full: false, fanout: 3 });
+        }
+    }
+
+    #[test]
+    fn non_delta_rounds_are_full_and_sampled() {
+        // full state every round; sampling is safe (transitive
+        // convergence) and cheap
+        for round in 0..3 {
+            assert_eq!(gossip_plan(false, 4, round), GossipPlan { full: true, fanout: 4 });
+            assert_eq!(gossip_plan(false, 0, round), GossipPlan { full: true, fanout: 0 });
+        }
     }
 }

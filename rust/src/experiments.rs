@@ -122,7 +122,7 @@ impl Scenario {
 /// Data-plane counters sampled from the substrate after a run — the
 /// machine-readable core of the `holon bench` perf trajectory. Fields a
 /// substrate lacks (the baseline has no gossip bus) read zero.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct DataPlaneStats {
     /// Gossip rounds sent across all nodes.
     pub gossip_msgs: u64,
@@ -143,6 +143,15 @@ pub struct DataPlaneStats {
     pub gaps: u64,
     /// Physical duplicates dropped by the sink.
     pub duplicates: u64,
+    /// Encoded gossip bytes per shard (index = shard id) for sharded
+    /// keyed state; empty for unsharded queries. Deltas skip clean
+    /// shards, so the distribution shows how much of the map each
+    /// round actually re-shipped.
+    pub shard_gossip_bytes: Vec<u64>,
+    /// Sharded-state merges that ran on the parallel shard pool.
+    pub shard_parallel_merges: u64,
+    /// Sharded-state merges that ran inline.
+    pub shard_serial_merges: u64,
 }
 
 /// Measurements of one run.
@@ -215,6 +224,9 @@ fn data_plane_stats(
         records_read: in_read + out_read,
         gaps: metrics.gaps.load(Ordering::Acquire),
         duplicates: metrics.duplicates.load(Ordering::Acquire),
+        shard_gossip_bytes: metrics.shard_gossip_bytes.lock().unwrap().clone(),
+        shard_parallel_merges: metrics.shard_parallel_merges.load(Ordering::Acquire),
+        shard_serial_merges: metrics.shard_serial_merges.load(Ordering::Acquire),
     }
 }
 
@@ -300,8 +312,18 @@ pub fn run_holon(
     match workload {
         Workload::Q0 => run_holon_with(cfg, workload, Q0, schedule),
         Workload::Q4 => {
-            let q = Q4::new(cfg.window_ms);
-            run_holon_with(cfg, workload, q, schedule)
+            if cfg.shard_count > 0 {
+                // `--shard-count=N`: the same keyed query over sharded
+                // state (byte-identical outputs; see determinism tests)
+                let q = crate::nexmark::queries::dataflow_q4_sharded(
+                    cfg.window_ms,
+                    cfg.shard_count,
+                );
+                run_holon_with(cfg, workload, q, schedule)
+            } else {
+                let q = Q4::new(cfg.window_ms);
+                run_holon_with(cfg, workload, q, schedule)
+            }
         }
         Workload::Q7 => {
             let q = Q7::new(cfg.window_ms);
@@ -416,6 +438,15 @@ fn drain_ms(cfg: &HolonConfig) -> SimTime {
     (cfg.window_ms * 4).max(4000)
 }
 
+/// The §5.3 exponential ingestion ramp — the ONE rate curve every
+/// compared system sees (doubles every 2 sim-seconds, capped at 2^8 =
+/// 256× so total volume stays bounded). Holon/baseline and
+/// sharded/unsharded rows are only comparable because they share this.
+fn throughput_ramp(base_events_per_sec: u64) -> impl Fn(SimTime) -> u64 {
+    let base = base_events_per_sec.max(1);
+    move |t: SimTime| base.saturating_mul(1 << (t / 2000).min(8))
+}
+
 /// The §5.3 max-throughput experiment: ramp the ingestion rate
 /// exponentially and report the peak sustained consumption rate.
 pub fn run_max_throughput(
@@ -423,63 +454,26 @@ pub fn run_max_throughput(
     workload: Workload,
     holon: bool,
 ) -> RunResult {
-    let cfg = cfg.clone();
-    let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
-    let base = cfg.events_per_sec_per_partition.max(1);
-    // double the rate every 2 sim-seconds (exponential ramp, capped at
-    // 2^8 = 256x so total volume stays bounded)
-    let rate = move |t: SimTime| base.saturating_mul(1 << (t / 2000).min(8));
     if holon {
-        let q = Q7::new(cfg.window_ms);
-        let q4 = Q4::new(cfg.window_ms);
-        let clockc = clock.clone();
         match workload {
-            Workload::Q7 => {
-                let cluster = HolonCluster::start_with_clock(cfg.clone(), q, clockc.clone());
-                let prod = producer::spawn_ramped_pooled(
-                    cluster.input.clone(),
-                    clockc.clone(),
-                    cfg.seed,
-                    rate,
-                    cfg.duration_ms,
-                    65_536,
-                );
-                std::thread::sleep(clock.wall_for(cfg.duration_ms + drain_ms(&cfg)));
-                let produced = prod.stop();
-                cluster.stop();
-                let dp = data_plane_stats(&cluster.metrics, &cluster.input, &cluster.output, Some(&cluster.bus));
-                collect(SystemKind::Holon, workload, &cluster.metrics, produced, cfg.duration_ms, dp)
-            }
-            Workload::Q4 => {
-                let cluster = HolonCluster::start_with_clock(cfg.clone(), q4, clockc.clone());
-                let prod = producer::spawn_ramped_pooled(
-                    cluster.input.clone(),
-                    clockc.clone(),
-                    cfg.seed,
-                    rate,
-                    cfg.duration_ms,
-                    65_536,
-                );
-                std::thread::sleep(clock.wall_for(cfg.duration_ms + drain_ms(&cfg)));
-                let produced = prod.stop();
-                cluster.stop();
-                let dp = data_plane_stats(&cluster.metrics, &cluster.input, &cluster.output, Some(&cluster.bus));
-                collect(SystemKind::Holon, workload, &cluster.metrics, produced, cfg.duration_ms, dp)
-            }
+            Workload::Q7 => run_max_throughput_with(cfg, workload, Q7::new(cfg.window_ms)),
+            Workload::Q4 => run_max_throughput_with(cfg, workload, Q4::new(cfg.window_ms)),
             _ => panic!("max-throughput experiment uses Q4/Q7"),
         }
     } else {
+        let cfg = cfg.clone();
         let job = match workload {
             Workload::Q4 => FlinkJob::AvgByCategory,
             Workload::Q7 => FlinkJob::MaxBid,
             _ => panic!("max-throughput experiment uses Q4/Q7"),
         };
+        let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
         let cluster = FlinkCluster::start_with_clock(cfg.clone(), job, clock.clone());
         let prod = producer::spawn_ramped_pooled(
             cluster.input.clone(),
             clock.clone(),
             cfg.seed,
-            rate,
+            throughput_ramp(cfg.events_per_sec_per_partition),
             cfg.duration_ms,
             65_536,
         );
@@ -491,6 +485,33 @@ pub fn run_max_throughput(
     }
 }
 
+/// The Holon side of the §5.3 ramp over an arbitrary processor — how
+/// the bench suite compares sharded and unsharded variants of the same
+/// keyed workload (`workload` only labels the report row).
+pub fn run_max_throughput_with<P: crate::api::Processor>(
+    cfg: &HolonConfig,
+    workload: Workload,
+    processor: P,
+) -> RunResult {
+    let cfg = cfg.clone();
+    let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
+    let rate = throughput_ramp(cfg.events_per_sec_per_partition);
+    let cluster = HolonCluster::start_with_clock(cfg.clone(), processor, clock.clone());
+    let prod = producer::spawn_ramped_pooled(
+        cluster.input.clone(),
+        clock.clone(),
+        cfg.seed,
+        rate,
+        cfg.duration_ms,
+        65_536,
+    );
+    std::thread::sleep(clock.wall_for(cfg.duration_ms + drain_ms(&cfg)));
+    let produced = prod.stop();
+    cluster.stop();
+    let dp = data_plane_stats(&cluster.metrics, &cluster.input, &cluster.output, Some(&cluster.bus));
+    collect(SystemKind::Holon, workload, &cluster.metrics, produced, cfg.duration_ms, dp)
+}
+
 // ---- the `holon bench` perf trajectory ---------------------------------
 
 /// One named scenario of the `holon bench` suite.
@@ -500,10 +521,13 @@ pub struct BenchScenario {
 }
 
 /// Run the perf-trajectory scenario suite headlessly: the §5.3
-/// max-throughput ramp (Holon + baseline, the paper's 2× claim) and the
-/// Table 2 latency rows (failure-free + concurrent failures, the 5×
-/// claim). `quick` shrinks durations/partition counts for the CI smoke
-/// job; the measured *ratios* still carry.
+/// max-throughput ramp (Holon + baseline, the paper's 2× claim), the
+/// keyed-throughput ramp over flat vs sharded keyed state
+/// (`q4_keyed_unsharded` / `q4_keyed_sharded`, delta gossip on — the
+/// shard subsystem's scaling rows), and the Table 2 latency rows
+/// (failure-free + concurrent failures, the 5× claim). `quick` shrinks
+/// durations/partition counts for the CI smoke job; the measured
+/// *ratios* still carry.
 pub fn bench_scenarios(cfg: &HolonConfig, quick: bool) -> Vec<BenchScenario> {
     let mut out = Vec::new();
 
@@ -522,6 +546,32 @@ pub fn bench_scenarios(cfg: &HolonConfig, quick: bool) -> Vec<BenchScenario> {
             result: run_max_throughput(&tcfg, Workload::Q7, holon),
         });
     }
+
+    // Keyed-throughput ramp: Q4 over flat vs sharded keyed state — the
+    // shard subsystem's scaling claim. Same workload, same ramp; the
+    // sharded row additionally carries per-shard gossip-byte counters
+    // and the parallel-merge counts.
+    let mut kcfg = tcfg.clone();
+    kcfg.gossip_delta = true; // per-shard deltas are the point
+    let shards = if cfg.shard_count > 0 { cfg.shard_count } else { 8 };
+    out.push(BenchScenario {
+        name: "q4_keyed_unsharded".to_string(),
+        // same dataflow pipeline as the sharded row, flat MapCrdt state:
+        // the delta between the two rows isolates the sharding layer
+        result: run_max_throughput_with(
+            &kcfg,
+            Workload::Q4,
+            crate::nexmark::queries::dataflow_q4(kcfg.window_ms),
+        ),
+    });
+    out.push(BenchScenario {
+        name: "q4_keyed_sharded".to_string(),
+        result: run_max_throughput_with(
+            &kcfg,
+            Workload::Q4,
+            crate::nexmark::queries::dataflow_q4_sharded(kcfg.window_ms, shards),
+        ),
+    });
 
     // Table 2 latency rows under the paper's failure scenarios.
     let mut lcfg = cfg.clone();
@@ -594,6 +644,14 @@ pub fn bench_report_json(pr: &str, quick: bool, scenarios: &[BenchScenario]) -> 
             .f64_field("payload_clones_per_event", per(r.data_plane.payload_clones))
             .u64_field("dedup_duplicates", r.data_plane.duplicates)
             .u64_field("seq_gaps", r.data_plane.gaps)
+            .u64_field("shard_count", r.data_plane.shard_gossip_bytes.len() as u64)
+            .arr_field("shard_gossip_bytes");
+        for b in &r.data_plane.shard_gossip_bytes {
+            j.u64_elem(*b);
+        }
+        j.end_arr()
+            .u64_field("shard_parallel_merges", r.data_plane.shard_parallel_merges)
+            .u64_field("shard_serial_merges", r.data_plane.shard_serial_merges)
             .bool_field("stalled", r.stalled)
             .end_obj();
     }
@@ -702,6 +760,10 @@ mod tests {
             "payload_clones_per_event",
             "dedup_duplicates",
             "seq_gaps",
+            "shard_count",
+            "shard_gossip_bytes",
+            "shard_parallel_merges",
+            "shard_serial_merges",
             "stalled",
         ] {
             assert_eq!(
@@ -712,5 +774,34 @@ mod tests {
         }
         // the zero-copy data plane: clones stay 0 while records flow
         assert!(s.contains("\"payload_clones\":0,"), "{s}");
+        // unsharded Q7: the shard counters are present and empty/zero
+        assert!(s.contains("\"shard_count\":0,"), "{s}");
+        assert!(s.contains("\"shard_gossip_bytes\":[],"), "{s}");
+    }
+
+    #[test]
+    fn sharded_q4_run_reports_shard_counters() {
+        let mut cfg = small_cfg();
+        cfg.shard_count = 8;
+        cfg.gossip_delta = true;
+        let r = run_holon(&cfg, Workload::Q4, vec![]);
+        assert!(r.outputs > 0, "sharded keyed run must deliver outputs");
+        assert_eq!(r.data_plane.gaps, 0);
+        // per-shard gossip bytes were attributed, one slot per
+        // configured shard (encode sizes the counters to the layout, so
+        // shard_count in the report is stable across runs)
+        let per = &r.data_plane.shard_gossip_bytes;
+        assert_eq!(per.len(), 8, "per-shard counters: {per:?}");
+        assert!(per.iter().sum::<u64>() > 0);
+        // replica joins over sharded state were counted (inline or
+        // parallel depending on host parallelism and state size)
+        assert!(r.data_plane.shard_parallel_merges + r.data_plane.shard_serial_merges > 0);
+        // and the JSON row carries them
+        let s = bench_report_json("PR4", true, &[BenchScenario {
+            name: "q4_keyed_sharded".to_string(),
+            result: r,
+        }]);
+        assert!(s.contains("\"name\":\"q4_keyed_sharded\""), "{s}");
+        assert!(!s.contains("\"shard_gossip_bytes\":[],"), "{s}");
     }
 }

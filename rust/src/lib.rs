@@ -11,8 +11,11 @@
 //!   [`net`] (simulated network), [`storage`] (checkpoint store),
 //!   [`metrics`], [`config`];
 //! * the paper's abstractions: [`crdt`] (state-based CRDTs), [`wcrdt`]
-//!   (Windowed CRDTs, Algorithm 1), [`api`] (the procedural programming
-//!   model of Table 1);
+//!   (Windowed CRDTs, Algorithm 1), [`shard`] (sharded keyed state: a
+//!   key-partitioned `MapCrdt` with per-shard delta gossip and a
+//!   parallel merge pool — the layer that lets keyed aggregations like
+//!   Q4/Q5 scale past one core and one whole-map gossip payload per
+//!   replica), [`api`] (the procedural programming model of Table 1);
 //! * the engines: [`engine`] (Holon: decentralized nodes, work stealing,
 //!   Algorithm 2) and [`baseline`] (the centralized Flink-model used as
 //!   the paper's comparison system);
@@ -65,7 +68,7 @@
 //!
 //! runs the §5.3 max-throughput ramp (Holon + the Flink-model baseline)
 //! and the Table 2 latency rows headlessly, prints human-readable rows,
-//! and writes a `holon-bench/v1` JSON report (default `BENCH_PR3.json`;
+//! and writes a `holon-bench/v1` JSON report (default `BENCH_PR4.json`;
 //! see EXPERIMENTS.md for the schema and the trajectory log). Each
 //! scenario entry carries events/sec (peak + mean), p50/p99/mean
 //! latency, gossip volume (`gossip_bytes_wire`, per-recipient), and the
@@ -82,6 +85,22 @@
 //! copying read, nested vs two-pass checkpoint encode, CRDT merge and
 //! gossip codec costs) live in `cargo bench --bench micro_hotpath`;
 //! `holon bench --targets` lists the per-figure targets.
+//!
+//! ## Sharded keyed state
+//!
+//! Keyed aggregation state ([`crate::crdt::MapCrdt`] per window per
+//! replica) is the scaling bottleneck the [`shard`] subsystem removes:
+//! [`shard::ShardedMapCrdt`] partitions keys across a power-of-two
+//! shard count by seeded key-hash, gossips per-shard deltas
+//! (shard-tagged payloads; clean shards never ship), merges shards in
+//! parallel on receive, and checkpoints per-shard slices. Pipelines opt
+//! in via [`api::dataflow::Windowed::key_by_sharded`] (or
+//! `--shard-count=N` on `holon run q4`); `holon bench` measures the
+//! effect in the `q4_keyed_sharded` scenario, whose report rows carry
+//! per-shard gossip-byte counters and the parallel-merge counts.
+//! Sharding never changes a single output byte — `tests/determinism.rs`
+//! pins sharded vs unsharded Q4/Q5 byte-equality across shard counts
+//! {1, 4, 16} under seeded fault schedules.
 
 pub mod api;
 pub mod baseline;
@@ -98,6 +117,7 @@ pub mod net;
 pub mod nexmark;
 pub mod proptest_lite;
 pub mod runtime;
+pub mod shard;
 pub mod sim;
 pub mod storage;
 pub mod util;

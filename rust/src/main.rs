@@ -12,6 +12,11 @@
 //! holon inspect  [--config=FILE] [--key=value ...] — print the resolved config
 //! ```
 //!
+//! Keyed workloads run over sharded keyed state when `--shard-count=N`
+//! is set (`holon run q4 --shard-count=16`): same outputs byte for
+//! byte, with per-shard delta gossip and parallel replica joins (see
+//! `holon::shard`).
+//!
 //! `holon bench` runs the throughput_max and table2_latency scenarios
 //! headlessly and writes a machine-readable report (schema
 //! `holon-bench/v1`, see EXPERIMENTS.md) to `bench_out` so every PR
@@ -295,7 +300,7 @@ fn cmd_bench(cfg: &HolonConfig, args: &[&str]) {
             ],
         );
     }
-    let json = bench_report_json("PR3", quick, &scenarios);
+    let json = bench_report_json("PR4", quick, &scenarios);
     if let Err(e) = std::fs::write(&cfg.bench_out, json.as_bytes()) {
         eprintln!("error writing {}: {e}", cfg.bench_out);
         std::process::exit(1);

@@ -153,7 +153,10 @@ impl Bus {
     /// As [`broadcast`](Self::broadcast), but the payload is already an
     /// `Arc` — the caller encoded once for the whole round and every
     /// recipient shares the same bytes (no per-recipient clone, no
-    /// re-wrap). The gossip hot path.
+    /// re-wrap). The gossip hot path — including sharded keyed-state
+    /// deltas, whose shard-tagged segments ride inside the one encoded
+    /// payload (`crate::shard`), so per-shard granularity costs no
+    /// extra messages or allocations on the bus.
     pub fn broadcast_shared(&self, from: NodeId, kind: MsgKind, payload: Arc<Vec<u8>>) {
         let now = self.clock.now();
         let inboxes = self.inner.inboxes.read().unwrap();

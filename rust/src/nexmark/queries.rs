@@ -5,10 +5,13 @@
 //!   the structure of the paper's Listing 2 (insert → advance watermark
 //!   → drain completed windows → emit);
 //! * the **dataflow API v2** ([`crate::api::Dataflow`], §3.1):
-//!   [`dataflow_q0`], [`dataflow_q2`], [`dataflow_q5`] and
-//!   [`dataflow_q7`] declare the same queries in a handful of lines.
-//!   The procedural versions serve as differential-test oracles: both
-//!   forms emit byte-identical outputs over the same input.
+//!   [`dataflow_q0`], [`dataflow_q2`], [`dataflow_q4`], [`dataflow_q5`]
+//!   and [`dataflow_q7`] declare the same queries in a handful of
+//!   lines, and [`dataflow_q4_sharded`]/[`dataflow_q5_sharded`] run the
+//!   keyed queries over shard-partitioned state
+//!   ([`crate::shard::ShardedMapCrdt`]). The procedural versions serve
+//!   as differential-test oracles: all forms emit byte-identical
+//!   outputs over the same input.
 //!
 //! All emission uses the *safe pattern* of the unsafe-mode read: windows
 //! are drained in sequence behind a cursor, so completion timing never
@@ -18,6 +21,7 @@ use crate::api::{Ctx, Dataflow, Processor};
 use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
 use crate::crdt::{BoundedTopK, GCounter, MapCrdt, PrefixAgg};
 use crate::log::Record;
+use crate::shard::ShardedMapCrdt;
 use crate::util::PartitionId;
 use crate::wcrdt::{WindowAssigner, WindowId, WindowedCrdt};
 
@@ -386,17 +390,28 @@ impl Processor for Q4 {
         }
         while let Some(m) = shared.window_value(local.next) {
             let w = local.next;
-            let rows: Vec<(u64, f64, u64)> = m
-                .iter()
-                .filter_map(|(&cat, agg)| {
-                    // sums are in cents; convert the average to dollars
-                    agg.avg().map(|a| (cat, a / 100.0, agg.count()))
-                })
-                .collect();
-            ctx.emit(wa.window_end(w), Q4Out { window: w, rows }.to_bytes());
+            ctx.emit(wa.window_end(w), q4_out(w, m.iter()).to_bytes());
             local.next += 1;
         }
     }
+}
+
+/// The per-category average rows of a completed Q4 window — shared by
+/// the procedural processor and the [`dataflow_q4`]/
+/// [`dataflow_q4_sharded`] pipelines so all forms emit byte-identical
+/// outputs. Entries arrive in ascending category order from both flat
+/// and sharded keyed state.
+fn q4_out<'a>(
+    w: WindowId,
+    entries: impl Iterator<Item = (&'a u64, &'a PrefixAgg)>,
+) -> Q4Out {
+    let rows: Vec<(u64, f64, u64)> = entries
+        .filter_map(|(&cat, agg)| {
+            // sums are in cents; convert the average to dollars
+            agg.avg().map(|a| (cat, a / 100.0, agg.count()))
+        })
+        .collect();
+    Q4Out { window: w, rows }
 }
 
 // ======================================================================
@@ -430,14 +445,15 @@ impl Decode for Q5Out {
 }
 
 /// The hot item of a completed Q5 window: most bids, ties broken by the
-/// larger auction id — shared by the procedural processor and
-/// [`dataflow_q5`] so both emit byte-identical outputs.
-fn q5_hot_item(w: WindowId, m: &MapCrdt<u64, GCounter>) -> Q5Out {
-    let (bids, auction) = m
-        .iter()
-        .map(|(&a, c)| (c.value(), a))
-        .max()
-        .unwrap_or((0, 0));
+/// larger auction id — shared by the procedural processor and the
+/// [`dataflow_q5`]/[`dataflow_q5_sharded`] pipelines so all forms emit
+/// byte-identical outputs (the entries iterator abstracts over flat
+/// [`MapCrdt`] and [`ShardedMapCrdt`] keyed state).
+fn q5_hot_item<'a>(
+    w: WindowId,
+    entries: impl Iterator<Item = (&'a u64, &'a GCounter)>,
+) -> Q5Out {
+    let (bids, auction) = entries.map(|(&a, c)| (c.value(), a)).max().unwrap_or((0, 0));
     Q5Out {
         window: w,
         auction,
@@ -501,7 +517,7 @@ impl Processor for Q5 {
         }
         while let Some(m) = shared.window_value(local.next) {
             let w = local.next;
-            ctx.emit(wa.window_end(w), q5_hot_item(w, &m).to_bytes());
+            ctx.emit(wa.window_end(w), q5_hot_item(w, m.iter()).to_bytes());
             local.next += 1;
         }
     }
@@ -544,7 +560,72 @@ pub fn dataflow_q5(
             _ => 0,
         })
         .aggregate(|p, _ev, c: &mut GCounter| c.add(p as u64, 1))
-        .emit_typed(|w, m| Some(q5_hot_item(w, m)))
+        .emit_typed(|w, m| Some(q5_hot_item(w, m.iter())))
+}
+
+/// Q5 over sharded keyed state: identical outputs to [`dataflow_q5`]
+/// and the procedural [`Q5`], with per-auction counters partitioned
+/// across `shards` — per-shard delta gossip and parallel replica joins.
+pub fn dataflow_q5_sharded(
+    size_ms: u64,
+    slide_ms: u64,
+    shards: u32,
+) -> impl Processor<Shared = WindowedCrdt<ShardedMapCrdt<u64, GCounter>>, Local = Cursor> {
+    Dataflow::<Event>::source()
+        .filter(|ev| ev.is_bid())
+        .sliding(size_ms, slide_ms)
+        .key_by_sharded(shards, |ev| match ev {
+            Event::Bid { auction, .. } => *auction,
+            _ => 0,
+        })
+        .aggregate(|p, _ev, c: &mut GCounter| c.add(p as u64, 1))
+        // `entries()` (unsorted, allocation-free): the hot-item max is
+        // order-independent, so the sorted `iter()` would be pure cost
+        .emit_typed(|w, m| Some(q5_hot_item(w, m.entries())))
+}
+
+/// Q4 (average price per category) in the dataflow API: keyed
+/// tumbling-window prefix aggregates in integer cents, emitted through
+/// the same [`q4_out`] rows as the procedural [`Q4`] — byte-identical
+/// outputs (the per-event `observe` folds the same exact-integer cent
+/// sums the procedural batch path accumulates).
+pub fn dataflow_q4(
+    window_ms: u64,
+) -> impl Processor<Shared = WindowedCrdt<MapCrdt<u64, PrefixAgg>>, Local = Cursor> {
+    Dataflow::<Event>::source()
+        .filter(|ev| ev.is_bid())
+        .tumbling(window_ms)
+        .key_by(|ev| match ev {
+            Event::Bid { category, .. } => *category,
+            _ => 0,
+        })
+        .aggregate(|p, ev, agg: &mut PrefixAgg| {
+            if let Event::Bid { price, .. } = ev {
+                agg.observe(p as u64, (price * 100.0).round());
+            }
+        })
+        .emit_typed(|w, m| Some(q4_out(w, m.iter())))
+}
+
+/// Q4 over sharded keyed state — the `q4_keyed_sharded` bench pipeline
+/// and the sharded side of the determinism differential tests.
+pub fn dataflow_q4_sharded(
+    window_ms: u64,
+    shards: u32,
+) -> impl Processor<Shared = WindowedCrdt<ShardedMapCrdt<u64, PrefixAgg>>, Local = Cursor> {
+    Dataflow::<Event>::source()
+        .filter(|ev| ev.is_bid())
+        .tumbling(window_ms)
+        .key_by_sharded(shards, |ev| match ev {
+            Event::Bid { category, .. } => *category,
+            _ => 0,
+        })
+        .aggregate(|p, ev, agg: &mut PrefixAgg| {
+            if let Event::Bid { price, .. } = ev {
+                agg.observe(p as u64, (price * 100.0).round());
+            }
+        })
+        .emit_typed(|w, m| Some(q4_out(w, m.iter())))
 }
 
 /// Q7 (highest bid per window) in the dataflow API.
@@ -1056,6 +1137,35 @@ mod tests {
             &dataflow_q5(2000, 1000),
             &gen_records(17, 0, 500),
         );
+    }
+
+    #[test]
+    fn dataflow_q4_matches_procedural_q4() {
+        // per-event cent observes vs the procedural batch-aggregated
+        // path: exact integer sums make them byte-identical
+        assert_differential(&Q4::new(1000), &dataflow_q4(1000), &gen_records(23, 0, 500));
+    }
+
+    #[test]
+    fn sharded_q4_matches_procedural_q4() {
+        for shards in [1, 4, 16] {
+            assert_differential(
+                &Q4::new(1000),
+                &dataflow_q4_sharded(1000, shards),
+                &gen_records(29, 0, 500),
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_q5_matches_procedural_q5() {
+        for shards in [1, 4, 16] {
+            assert_differential(
+                &Q5::new(2000, 1000),
+                &dataflow_q5_sharded(2000, 1000, shards),
+                &gen_records(31, 0, 500),
+            );
+        }
     }
 
     #[test]

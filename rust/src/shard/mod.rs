@@ -1,0 +1,773 @@
+//! Sharded keyed state — key-partitioned [`MapCrdt`] composition.
+//!
+//! Keyed global aggregations (Nexmark Q4/Q5) hold a map from key to an
+//! inner CRDT per window per replica. With a single `BTreeMap` that map
+//! is one lock-step structure: every gossip round re-ships the whole
+//! map and every merge walks it on one core. [`ShardedMapCrdt`] splits
+//! the key space across a configurable power-of-two number of shards by
+//! a seeded key-hash; each shard is an independent inner [`MapCrdt`]
+//! with its own dirty marker, so
+//!
+//! * **delta gossip is per-shard**: [`take_delta`](ShardedMapCrdt::take_delta)
+//!   carries only the shards touched since the previous round, encoded
+//!   as shard-tagged payloads ([`crate::codec::Writer::put_nested`]
+//!   segments), and merge on the receiving side touches only those
+//!   shards;
+//! * **merge is embarrassingly parallel**: shards hold disjoint key
+//!   sets, so a replica join is a pointwise join of shard pairs —
+//!   [`exec`] fans large joins out over scoped worker threads;
+//! * **checkpoint slices stay per-shard**: projection composes
+//!   pointwise, and the encoded layout keeps one length-prefixed
+//!   segment per shard, so a reader can skip shards it does not need.
+//!
+//! Sharding preserves the lattice: the shard assignment is a pure
+//! function of `(key, seed, shard count)`, identical on every replica,
+//! and per-shard joins compose to the same pointwise join a flat
+//! [`MapCrdt`] computes (delta-state CRDT composition; Almeida et al.).
+//! The whole type implements [`Crdt`] + [`Encode`] + [`Decode`], so it
+//! drops into [`WindowedCrdt`](crate::wcrdt::WindowedCrdt) unchanged —
+//! `tests/determinism.rs` asserts byte-identical Q4/Q5 outputs for
+//! sharded vs unsharded pipelines across shard counts under seeded
+//! fault schedules.
+//!
+//! Equality is *logical* (the sorted key→value entries), independent of
+//! shard layout: a 4-shard and a 16-shard replica holding the same
+//! entries are equal, and the lattice bottom (no layout yet) equals any
+//! empty layout. This is what lets differently-configured replicas —
+//! and deltas, whose absent shards decode as empty — converge under the
+//! usual CRDT laws.
+
+pub mod exec;
+
+use std::cell::RefCell;
+
+use crate::codec::{Decode, DecodeError, DecodeResult, Encode, Reader, Writer};
+use crate::crdt::{Crdt, MapCrdt};
+
+/// Default seed folded into every key hash (any fixed value works; it
+/// only has to be identical on all replicas of a deployment).
+pub const DEFAULT_HASH_SEED: u64 = 0x5EED_5AAD_0BAD_F00D;
+
+/// Hard ceiling on the shard count — bounds the `Vec` a decode
+/// preallocates from the wire-read count field (a corrupted payload
+/// must fail with a `DecodeError`, not abort in the allocator) and is
+/// far above any sane configuration.
+pub const MAX_SHARDS: usize = 1 << 16;
+
+/// Below this many shards a parallel merge never pays for itself.
+const PAR_MIN_SHARDS: usize = 4;
+
+/// Minimum combined entry count before a merge fans out to the pool
+/// (scoped-thread spawn costs dominate below it).
+const PAR_MIN_ENTRIES: usize = 1024;
+
+thread_local! {
+    /// Reusable hash buffer: keys are hashed over their encoded bytes,
+    /// and re-encoding into a fresh `Vec` per lookup would put an
+    /// allocation on the per-event insert path.
+    static HASH_BUF: RefCell<Writer> = RefCell::new(Writer::new());
+    /// Per-shard encoded byte counts since the last drain — the engine
+    /// samples this right after a gossip encode to attribute payload
+    /// bytes to shards (see `ClusterMetrics::shard_gossip_bytes`).
+    static ENCODED_BYTES: RefCell<Vec<u64>> = RefCell::new(Vec::new());
+}
+
+fn note_shard_bytes(idx: usize, n: u64) {
+    ENCODED_BYTES.with(|b| {
+        let mut b = b.borrow_mut();
+        if b.len() <= idx {
+            b.resize(idx + 1, 0);
+        }
+        b[idx] += n;
+    });
+}
+
+/// Size the per-thread counters to the full layout so the drained
+/// vector's length is the configured shard count (stable across runs),
+/// not the highest shard that happened to encode bytes.
+fn note_shard_layout(count: usize) {
+    ENCODED_BYTES.with(|b| {
+        let mut b = b.borrow_mut();
+        if b.len() < count {
+            b.resize(count, 0);
+        }
+    });
+}
+
+/// Drain this thread's per-shard encoded byte counters (index = shard
+/// id). The engine calls this around the gossip encode so checkpoint
+/// encodes on the same thread are not misattributed to gossip.
+pub fn take_shard_encoded_bytes() -> Vec<u64> {
+    ENCODED_BYTES.with(|b| std::mem::take(&mut *b.borrow_mut()))
+}
+
+/// Seeded FNV-1a over a key's encoded bytes — deterministic across
+/// replicas, processes and runs (no `RandomState`).
+fn hash_key<K: Encode>(seed: u64, key: &K) -> u64 {
+    HASH_BUF.with(|buf| {
+        let mut buf = buf.borrow_mut();
+        buf.clear();
+        key.encode(&mut buf);
+        let mut h = seed ^ 0xcbf2_9ce4_8422_2325;
+        for &b in buf.as_slice() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    })
+}
+
+/// A keyed CRDT map partitioned across power-of-two shards by seeded
+/// key-hash. See the module docs for the design.
+#[derive(Debug, Clone)]
+pub struct ShardedMapCrdt<K: Ord + Clone, C: Crdt> {
+    seed: u64,
+    /// Empty = lattice bottom (layout adopted from the first non-bottom
+    /// merge partner or fixed by [`ensure_shards`](Self::ensure_shards)).
+    shards: Vec<MapCrdt<K, C>>,
+    /// Shards touched since the last [`take_delta`](Self::take_delta) /
+    /// [`mark_clean`](Self::mark_clean) — sync metadata, not state (not
+    /// serialized, excluded from equality).
+    dirty: Vec<bool>,
+}
+
+impl<K: Ord + Clone, C: Crdt> Default for ShardedMapCrdt<K, C> {
+    fn default() -> Self {
+        Self {
+            seed: DEFAULT_HASH_SEED,
+            shards: Vec::new(),
+            dirty: Vec::new(),
+        }
+    }
+}
+
+fn normalize_shards(n: u32) -> usize {
+    (n.max(1) as usize).next_power_of_two().min(MAX_SHARDS)
+}
+
+impl<K: Ord + Clone, C: Crdt> ShardedMapCrdt<K, C> {
+    /// The lattice bottom: no entries, layout not yet fixed.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bottom with the layout fixed to `shards` (rounded up to a power
+    /// of two) under the default hash seed.
+    pub fn with_shards(shards: u32) -> Self {
+        Self::with_shards_seeded(shards, DEFAULT_HASH_SEED)
+    }
+
+    /// Bottom with an explicit hash seed (must match across replicas).
+    pub fn with_shards_seeded(shards: u32, seed: u64) -> Self {
+        let n = normalize_shards(shards);
+        Self {
+            seed,
+            shards: (0..n).map(|_| MapCrdt::new()).collect(),
+            dirty: vec![false; n],
+        }
+    }
+
+    /// Fix the layout if it is still unset (no-op otherwise — decoded or
+    /// merged state keeps its layout). Called by insert paths that know
+    /// the configured shard count; a bare [`entry`](Self::entry) on a
+    /// bottom value defaults to a single shard.
+    pub fn ensure_shards(&mut self, shards: u32) {
+        if self.shards.is_empty() {
+            let n = normalize_shards(shards);
+            self.shards = (0..n).map(|_| MapCrdt::new()).collect();
+            self.dirty = vec![false; n];
+        }
+    }
+
+    /// Number of shards (0 while still at bottom).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard slices themselves (observability and tests).
+    pub fn shards(&self) -> &[MapCrdt<K, C>] {
+        &self.shards
+    }
+
+    /// Shards currently marked dirty.
+    pub fn dirty_shards(&self) -> usize {
+        self.dirty.iter().filter(|&&d| d).count()
+    }
+
+    /// Total entries across shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|s| s.is_empty())
+    }
+
+    fn sorted_entries(&self) -> Vec<(&K, &C)> {
+        let mut v: Vec<(&K, &C)> = Vec::with_capacity(self.len());
+        for s in &self.shards {
+            v.extend(s.iter());
+        }
+        v.sort_by(|a, b| a.0.cmp(b.0));
+        v
+    }
+
+    /// Iterate `(key, value)` in ascending key order across all shards —
+    /// the same order a flat [`MapCrdt`] iterates, which is what keeps
+    /// sharded and unsharded emission byte-identical. Allocates and
+    /// sorts; order-independent consumers (max/sum folds like Q5's hot
+    /// item) should use [`entries`](Self::entries) instead.
+    pub fn iter(&self) -> impl Iterator<Item = (&K, &C)> {
+        self.sorted_entries().into_iter()
+    }
+
+    /// Iterate `(key, value)` in unspecified (shard-major) order —
+    /// allocation- and sort-free. Only for order-independent folds.
+    pub fn entries(&self) -> impl Iterator<Item = (&K, &C)> {
+        self.shards.iter().flat_map(|s| s.iter())
+    }
+
+    /// Apply `f` pointwise, preserving the shard layout (checkpoint
+    /// slices for sharded maps).
+    pub fn project_with(&self, f: impl Fn(&C) -> C) -> Self {
+        Self {
+            seed: self.seed,
+            shards: self.shards.iter().map(|s| s.project_with(&f)).collect(),
+            dirty: vec![false; self.shards.len()],
+        }
+    }
+
+    /// A partial replica carrying only the shards touched since the
+    /// previous call (clean shards ship as empty maps, which the encoder
+    /// skips entirely). Clears the dirty markers.
+    pub fn take_delta(&mut self) -> Self {
+        let shards: Vec<MapCrdt<K, C>> = self
+            .shards
+            .iter()
+            .zip(&self.dirty)
+            .map(|(s, &d)| if d { s.clone() } else { MapCrdt::new() })
+            .collect();
+        self.dirty.fill(false);
+        Self {
+            seed: self.seed,
+            dirty: vec![false; shards.len()],
+            shards,
+        }
+    }
+
+    /// Drop the dirty markers without building a delta (a full-state
+    /// observer has seen everything).
+    pub fn mark_clean(&mut self) {
+        self.dirty.fill(false);
+    }
+}
+
+impl<K: Ord + Clone + Encode, C: Crdt> ShardedMapCrdt<K, C> {
+    fn shard_of(&self, key: &K) -> usize {
+        // power-of-two shard count: mask instead of modulo
+        (hash_key(self.seed, key) & (self.shards.len() as u64 - 1)) as usize
+    }
+
+    /// Mutable access to the inner CRDT at `key` (created at bottom),
+    /// marking the key's shard dirty.
+    pub fn entry(&mut self, key: K) -> &mut C {
+        self.ensure_shards(1);
+        let idx = self.shard_of(&key);
+        self.dirty[idx] = true;
+        self.shards[idx].entry(key)
+    }
+
+    pub fn get(&self, key: &K) -> Option<&C> {
+        if self.shards.is_empty() {
+            return None;
+        }
+        self.shards[self.shard_of(key)].get(key)
+    }
+}
+
+impl<K, C> Crdt for ShardedMapCrdt<K, C>
+where
+    K: Ord + Clone + Send + Sync + Encode + Decode + 'static,
+    C: Crdt + Sync,
+{
+    fn project(&self, contributor: u64) -> Self {
+        self.project_with(|c| c.project(contributor))
+    }
+
+    fn merge(&mut self, other: &Self) {
+        if other.shards.is_empty() {
+            return;
+        }
+        if self.shards.is_empty() {
+            // bottom adopts the partner's layout; everything merged in
+            // is new information, so every non-empty shard is dirty
+            // (transitive delta propagation).
+            self.seed = other.seed;
+            self.shards = other.shards.clone();
+            self.dirty = other.shards.iter().map(|s| !s.is_empty()).collect();
+            return;
+        }
+        if self.shards.len() == other.shards.len() && self.seed == other.seed {
+            // The fast path: identical layouts join shard-by-shard —
+            // disjoint key sets, so pairs are independent and large
+            // joins fan out across the scoped worker pool.
+            for (d, s) in self.dirty.iter_mut().zip(&other.shards) {
+                *d |= !s.is_empty();
+            }
+            let parallel = self.shards.len() >= PAR_MIN_SHARDS
+                && self.len() + other.len() >= PAR_MIN_ENTRIES
+                && exec::max_threads() > 1;
+            if parallel {
+                exec::merge_pairwise(&mut self.shards, &other.shards, exec::max_threads());
+            } else {
+                for (mine, theirs) in self.shards.iter_mut().zip(&other.shards) {
+                    mine.merge(theirs);
+                }
+            }
+            exec::note_merge(parallel);
+            return;
+        }
+        // Layout mismatch (misconfigured replicas or a reshard in
+        // flight): rehash into our layout. Slow but correct — shard
+        // assignment is deterministic per layout, so this is still the
+        // pointwise map join.
+        for shard in &other.shards {
+            for (k, v) in shard.iter() {
+                self.entry(k.clone()).merge(v);
+            }
+        }
+        exec::note_merge(false);
+    }
+
+    fn take_delta(&mut self) -> Self {
+        ShardedMapCrdt::take_delta(self)
+    }
+
+    fn mark_clean(&mut self) {
+        ShardedMapCrdt::mark_clean(self);
+    }
+
+    fn join_delta_into(&mut self, dst: &mut Self) {
+        if self.shards.is_empty() {
+            return;
+        }
+        if dst.shards.len() != self.shards.len() || dst.seed != self.seed {
+            // bottom dst (adopts the layout) or a mismatched layout:
+            // the full-state path is correct and these cases are rare
+            dst.merge(self);
+            self.dirty.fill(false);
+            return;
+        }
+        // same layout: drain only the dirty shards, by reference
+        for (i, (mine, theirs)) in dst.shards.iter_mut().zip(&self.shards).enumerate() {
+            if self.dirty[i] && !theirs.is_empty() {
+                mine.merge(theirs);
+                dst.dirty[i] = true;
+            }
+        }
+        self.dirty.fill(false);
+        exec::note_merge(false);
+    }
+}
+
+/// Logical equality: the sorted entry set, independent of shard layout
+/// and dirty markers (see module docs).
+impl<K: Ord + Clone, C: Crdt + PartialEq> PartialEq for ShardedMapCrdt<K, C> {
+    fn eq(&self, other: &Self) -> bool {
+        self.len() == other.len() && self.sorted_entries() == other.sorted_entries()
+    }
+}
+
+impl<K: Ord + Clone + Encode, C: Crdt> Encode for ShardedMapCrdt<K, C> {
+    fn encode(&self, w: &mut Writer) {
+        if !self.shards.is_empty() {
+            note_shard_layout(self.shards.len());
+        }
+        w.put_u64(self.seed);
+        w.put_u32(self.shards.len() as u32);
+        let present = self.shards.iter().filter(|s| !s.is_empty()).count();
+        w.put_u32(present as u32);
+        for (i, s) in self.shards.iter().enumerate() {
+            if s.is_empty() {
+                continue; // absent shards decode as empty (delta payloads)
+            }
+            w.put_u32(i as u32);
+            let before = w.len();
+            w.put_nested(|w| s.encode(w));
+            note_shard_bytes(i, (w.len() - before) as u64);
+        }
+    }
+}
+
+impl<K: Ord + Clone + Encode + Decode, C: Crdt> Decode for ShardedMapCrdt<K, C> {
+    fn decode(r: &mut Reader) -> DecodeResult<Self> {
+        let seed = r.get_u64()?;
+        let count = r.get_u32()? as usize;
+        if count > MAX_SHARDS {
+            // validate before the preallocation below: a corrupted count
+            // field must not turn into a multi-gigabyte Vec
+            return Err(DecodeError("shard count exceeds MAX_SHARDS"));
+        }
+        if count > 0 && !count.is_power_of_two() {
+            // shard routing masks with `count - 1`; a non-power-of-two
+            // layout would silently make some shards unreachable and
+            // duplicate keys across shards — fail loudly instead
+            return Err(DecodeError("shard count is not a power of two"));
+        }
+        let present = r.get_u32()? as usize;
+        if present > count {
+            return Err(DecodeError("more present shards than shards"));
+        }
+        let mut shards: Vec<MapCrdt<K, C>> = (0..count).map(|_| MapCrdt::new()).collect();
+        for _ in 0..present {
+            let idx = r.get_u32()? as usize;
+            if idx >= count {
+                return Err(DecodeError("shard index out of range"));
+            }
+            if !shards[idx].is_empty() {
+                return Err(DecodeError("duplicate shard index"));
+            }
+            let m: MapCrdt<K, C> = MapCrdt::from_bytes(r.get_bytes()?)?;
+            // Routing integrity (debug builds only — this is a per-key
+            // re-hash on the gossip-receive hot path): a key in the
+            // wrong shard would make `get` miss it while `iter`/`len`
+            // still see it, and a later `entry` would duplicate it in
+            // the right shard. The structural checks above stay on in
+            // release; tier-1 `cargo test` runs debug, so the sim and
+            // differential suites exercise this guard.
+            #[cfg(debug_assertions)]
+            {
+                let mask = count as u64 - 1;
+                for (k, _) in m.iter() {
+                    if (hash_key(seed, k) & mask) as usize != idx {
+                        return Err(DecodeError("key routed to the wrong shard"));
+                    }
+                }
+            }
+            shards[idx] = m;
+        }
+        Ok(Self {
+            seed,
+            dirty: vec![false; count],
+            shards,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crdt::lawcheck::{check_codec_roundtrip, check_laws};
+    use crate::crdt::GCounter;
+    use crate::wcrdt::{WindowAssigner, WindowedCrdt};
+
+    fn sharded(n: u32, pairs: &[(u64, u64, u64)]) -> ShardedMapCrdt<u64, GCounter> {
+        let mut m = ShardedMapCrdt::with_shards(n);
+        for &(k, c, amount) in pairs {
+            m.entry(k).add(c, amount);
+        }
+        m
+    }
+
+    fn flat(pairs: &[(u64, u64, u64)]) -> MapCrdt<u64, GCounter> {
+        let mut m: MapCrdt<u64, GCounter> = MapCrdt::new();
+        for &(k, c, amount) in pairs {
+            m.entry(k).add(c, amount);
+        }
+        m
+    }
+
+    const PAIRS: &[(u64, u64, u64)] = &[(1, 0, 5), (9, 1, 3), (2, 0, 7), (17, 2, 1), (9, 0, 4)];
+
+    #[test]
+    fn laws_hold_per_shard_layout() {
+        for n in [1, 4, 16] {
+            let samples = vec![
+                ShardedMapCrdt::with_shards(n),
+                sharded(n, &PAIRS[..2]),
+                sharded(n, &PAIRS[..4]),
+                sharded(n, PAIRS),
+            ];
+            check_laws(&samples);
+            check_codec_roundtrip(&samples);
+        }
+    }
+
+    #[test]
+    fn shard_count_normalizes_to_power_of_two() {
+        assert_eq!(ShardedMapCrdt::<u64, GCounter>::with_shards(0).shard_count(), 1);
+        assert_eq!(ShardedMapCrdt::<u64, GCounter>::with_shards(3).shard_count(), 4);
+        assert_eq!(ShardedMapCrdt::<u64, GCounter>::with_shards(16).shard_count(), 16);
+    }
+
+    #[test]
+    fn sharded_equals_flat_logically() {
+        for n in [1, 2, 4, 16] {
+            let s = sharded(n, PAIRS);
+            let f = flat(PAIRS);
+            let sv: Vec<(u64, u64)> = s.iter().map(|(&k, c)| (k, c.value())).collect();
+            let fv: Vec<(u64, u64)> = f.iter().map(|(&k, c)| (k, c.value())).collect();
+            assert_eq!(sv, fv, "{n} shards must iterate like the flat map");
+            assert_eq!(s.get(&9).unwrap().value(), f.get(&9).unwrap().value());
+            assert_eq!(s.len(), f.len());
+        }
+    }
+
+    #[test]
+    fn cross_layout_merge_converges_logically() {
+        let mut a = sharded(4, &PAIRS[..3]);
+        let b = sharded(16, &PAIRS[3..]);
+        a.merge(&b);
+        assert_eq!(a, sharded(4, PAIRS), "rehash merge must reach the same join");
+        // and equality itself is layout-independent
+        assert_eq!(sharded(4, PAIRS), sharded(16, PAIRS));
+    }
+
+    #[test]
+    fn bottom_adopts_layout_on_merge() {
+        let mut bottom: ShardedMapCrdt<u64, GCounter> = ShardedMapCrdt::new();
+        assert_eq!(bottom.shard_count(), 0);
+        bottom.merge(&sharded(8, PAIRS));
+        assert_eq!(bottom.shard_count(), 8);
+        assert_eq!(bottom, sharded(8, PAIRS));
+        assert!(bottom.dirty_shards() > 0, "merged-in shards propagate as dirty");
+    }
+
+    #[test]
+    fn take_delta_carries_only_dirty_shards() {
+        let mut m = sharded(8, PAIRS);
+        let _ = ShardedMapCrdt::take_delta(&mut m); // drain
+        assert_eq!(m.dirty_shards(), 0);
+        m.entry(9).add(1, 1); // dirties exactly key 9's shard
+        let d = ShardedMapCrdt::take_delta(&mut m);
+        assert_eq!(m.dirty_shards(), 0);
+        let populated = d.shards().iter().filter(|s| !s.is_empty()).count();
+        assert_eq!(populated, 1, "delta must carry one shard");
+        assert!(d.get(&9).is_some());
+        // the delta round-trips through the shard-tagged codec
+        let back = ShardedMapCrdt::<u64, GCounter>::from_bytes(&d.to_bytes()).unwrap();
+        assert_eq!(back, d);
+        // and joining the delta onto a stale replica converges it
+        let mut stale = sharded(8, PAIRS);
+        stale.merge(&back);
+        assert_eq!(stale, m);
+    }
+
+    #[test]
+    fn delta_encoding_skips_clean_shards() {
+        let mut m = sharded(16, PAIRS);
+        let full_bytes = m.to_bytes().len();
+        let _ = ShardedMapCrdt::take_delta(&mut m);
+        m.entry(2).add(0, 1);
+        let delta_bytes = ShardedMapCrdt::take_delta(&mut m).to_bytes().len();
+        assert!(
+            delta_bytes < full_bytes,
+            "delta ({delta_bytes} B) must be smaller than full state ({full_bytes} B)"
+        );
+    }
+
+    #[test]
+    fn mark_clean_is_metadata_only() {
+        let mut m = sharded(4, PAIRS);
+        let before = m.clone();
+        assert!(m.dirty_shards() > 0);
+        ShardedMapCrdt::mark_clean(&mut m);
+        assert_eq!(m.dirty_shards(), 0);
+        assert_eq!(m, before);
+        // next delta is empty-shard-only
+        assert!(ShardedMapCrdt::take_delta(&mut m).is_empty());
+    }
+
+    #[test]
+    fn project_slices_pointwise_per_shard() {
+        let m = sharded(4, &[(1, 0, 5), (1, 1, 2), (9, 1, 3)]);
+        let p = Crdt::project(&m, 1);
+        assert_eq!(p.shard_count(), 4);
+        assert_eq!(p.get(&1).unwrap().value(), 2);
+        assert_eq!(p.get(&9).unwrap().value(), 3);
+        // projection then join restores the contribution
+        let mut joined = m.clone();
+        joined.merge(&p);
+        assert_eq!(joined, m);
+    }
+
+    #[test]
+    fn parallel_merge_matches_serial_merge() {
+        // enough entries to clear PAR_MIN_ENTRIES with 8 shards
+        let mut big_a = ShardedMapCrdt::with_shards(8);
+        let mut big_b = ShardedMapCrdt::with_shards(8);
+        for k in 0..1200u64 {
+            big_a.entry(k).add(k % 4, k + 1);
+            big_b.entry(k * 3).add(k % 4, k + 2);
+        }
+        // pin the cap > 1 so the test is not flaky on single-core hosts
+        exec::set_max_threads(4);
+        let _ = exec::take_merge_stats(); // reset this thread's counters
+        let mut par = big_a.clone();
+        par.merge(&big_b);
+        exec::set_max_threads(0);
+        let (parallel, _serial) = exec::take_merge_stats();
+        assert_eq!(parallel, 1, "large same-layout merge must use the pool");
+        // serial oracle: pairwise merge without the pool
+        let mut serial = big_a.clone();
+        for (mine, theirs) in serial.shards.iter_mut().zip(&big_b.shards) {
+            mine.merge(theirs);
+        }
+        serial.dirty = par.dirty.clone();
+        assert_eq!(par, serial);
+    }
+
+    #[test]
+    fn small_merges_stay_inline() {
+        let _ = exec::take_merge_stats();
+        let mut a = sharded(8, PAIRS);
+        a.merge(&sharded(8, PAIRS));
+        let (parallel, serial) = exec::take_merge_stats();
+        assert_eq!((parallel, serial), (0, 1), "tiny merges must not spawn threads");
+    }
+
+    #[test]
+    fn decode_rejects_absurd_shard_counts() {
+        // a corrupted count field must fail as a DecodeError, not as a
+        // multi-gigabyte preallocation
+        let mut w = crate::codec::Writer::new();
+        w.put_u64(DEFAULT_HASH_SEED);
+        w.put_u32(u32::MAX); // shard count from a corrupted payload
+        w.put_u32(0);
+        assert!(ShardedMapCrdt::<u64, GCounter>::from_bytes(&w.into_bytes()).is_err());
+    }
+
+    #[test]
+    fn shard_assignment_is_stable_across_replicas() {
+        // the same key must land on the same shard on every replica —
+        // the determinism the whole design rests on
+        let a = sharded(16, PAIRS);
+        let b = sharded(16, PAIRS);
+        for (sa, sb) in a.shards().iter().zip(b.shards()) {
+            let ka: Vec<&u64> = sa.iter().map(|(k, _)| k).collect();
+            let kb: Vec<&u64> = sb.iter().map(|(k, _)| k).collect();
+            assert_eq!(ka, kb);
+        }
+    }
+
+    #[test]
+    fn encoded_bytes_are_attributed_per_shard() {
+        let _ = take_shard_encoded_bytes(); // reset
+        let m = sharded(8, PAIRS);
+        let _ = m.to_bytes();
+        let per = take_shard_encoded_bytes();
+        // the full layout is always represented (stable shard_count in
+        // the bench report), with zero slots for shards that shipped
+        // nothing
+        assert_eq!(per.len(), 8);
+        let populated = m.shards().iter().filter(|s| !s.is_empty()).count();
+        assert_eq!(per.iter().filter(|&&b| b > 0).count(), populated);
+        // drained: a second take reads empty
+        assert!(take_shard_encoded_bytes().is_empty());
+    }
+
+    #[cfg(debug_assertions)] // the routing guard is compiled out in release
+    #[test]
+    fn decode_rejects_misrouted_keys() {
+        // craft a payload whose only shard segment carries a key that
+        // hashes to the other shard
+        let mut m: ShardedMapCrdt<u64, GCounter> = ShardedMapCrdt::with_shards(2);
+        m.entry(7).add(0, 1);
+        let right = m.shards().iter().position(|s| !s.is_empty()).unwrap();
+        let wrong = 1 - right;
+        let mut w = crate::codec::Writer::new();
+        w.put_u64(DEFAULT_HASH_SEED);
+        w.put_u32(2);
+        w.put_u32(1);
+        w.put_u32(wrong as u32);
+        w.put_nested(|w| m.shards()[right].encode(w));
+        assert!(ShardedMapCrdt::<u64, GCounter>::from_bytes(&w.into_bytes()).is_err());
+        // the healthy encoding still round-trips
+        assert_eq!(ShardedMapCrdt::<u64, GCounter>::from_bytes(&m.to_bytes()).unwrap(), m);
+    }
+
+    #[test]
+    fn decode_rejects_non_power_of_two_counts() {
+        // routing masks with len-1: a non-pow2 layout would silently
+        // strand shards, so the codec must refuse it
+        let mut w = crate::codec::Writer::new();
+        w.put_u64(DEFAULT_HASH_SEED);
+        w.put_u32(6);
+        w.put_u32(0);
+        assert!(ShardedMapCrdt::<u64, GCounter>::from_bytes(&w.into_bytes()).is_err());
+    }
+
+    #[test]
+    fn entries_covers_the_same_pairs_as_iter() {
+        let m = sharded(8, PAIRS);
+        let mut unsorted: Vec<(u64, u64)> = m.entries().map(|(&k, c)| (k, c.value())).collect();
+        unsorted.sort_unstable();
+        let sorted: Vec<(u64, u64)> = m.iter().map(|(&k, c)| (k, c.value())).collect();
+        assert_eq!(unsorted, sorted);
+    }
+
+    #[test]
+    fn join_delta_into_equals_merge_of_take_delta() {
+        // the engine's reference-drain must be indistinguishable from
+        // materializing the delta and merging it
+        let mut src_a = sharded(8, PAIRS);
+        let _ = ShardedMapCrdt::take_delta(&mut src_a); // drain construction dirt
+        src_a.entry(9).add(1, 2);
+        src_a.entry(2).add(0, 1);
+        let mut src_b = src_a.clone();
+
+        let mut dst_a = sharded(8, &PAIRS[..3]);
+        let mut dst_b = dst_a.clone();
+        Crdt::join_delta_into(&mut src_a, &mut dst_a);
+        dst_b.merge(&Crdt::take_delta(&mut src_b));
+        assert_eq!(dst_a, dst_b);
+        assert_eq!(src_a.dirty_shards(), 0, "drain clears the markers");
+        // dst marks exactly the drained shards dirty (transitive gossip)
+        assert_eq!(dst_a.dirty_shards(), dst_b.dirty_shards());
+        // bottom dst adopts the layout through the fallback path
+        let mut src_c = sharded(4, PAIRS);
+        let mut bottom: ShardedMapCrdt<u64, GCounter> = ShardedMapCrdt::new();
+        Crdt::join_delta_into(&mut src_c, &mut bottom);
+        assert_eq!(bottom, sharded(4, PAIRS));
+    }
+
+    #[test]
+    fn drops_into_windowed_crdt_with_per_shard_deltas() {
+        // the integration the subsystem exists for: a WCRDT over sharded
+        // keyed state, where window deltas carry only dirty shards
+        let mut w: WindowedCrdt<ShardedMapCrdt<u64, GCounter>> =
+            WindowedCrdt::new(WindowAssigner::tumbling(1000), [0, 1]);
+        w.insert_with(0, 100, |m| {
+            m.ensure_shards(8);
+            m.entry(1).add(0, 5);
+            m.entry(9).add(0, 3);
+        })
+        .unwrap();
+        let _ = w.take_delta(); // drain both window- and shard-dirty
+        w.insert_with(0, 200, |m| {
+            m.entry(9).add(0, 2);
+        })
+        .unwrap();
+        w.increment_watermark(0, 1200);
+        let d = w.take_delta();
+        let win = d.raw_window(0).expect("touched window in delta");
+        let populated = win.shards().iter().filter(|s| !s.is_empty()).count();
+        assert_eq!(populated, 1, "window delta must carry only key 9's shard");
+        // replica exchange via deltas converges
+        let mut replica: WindowedCrdt<ShardedMapCrdt<u64, GCounter>> =
+            WindowedCrdt::new(WindowAssigner::tumbling(1000), [0, 1]);
+        replica.insert_with(1, 150, |m| {
+            m.ensure_shards(8);
+            m.entry(1).add(1, 7);
+        })
+        .unwrap();
+        replica.increment_watermark(1, 1200);
+        let dr = replica.take_delta();
+        replica.merge(&w); // full state one way
+        w.merge(&dr); // delta the other
+        assert_eq!(replica, w);
+        let v = w.window_value(0).unwrap();
+        assert_eq!(v.get(&1).unwrap().value(), 12);
+        assert_eq!(v.get(&9).unwrap().value(), 5);
+    }
+}

@@ -35,7 +35,9 @@ pub use oracle::{
     MIN_WINDOWS,
 };
 pub use plan::{FaultAction, FaultEvent, FaultPlan};
-pub use runner::{collect_outputs, repro_line, run_plan, Mutation, RunArtifacts, SimSpec};
+pub use runner::{
+    collect_outputs, repro_line, run_plan, run_plan_with, Mutation, RunArtifacts, SimSpec,
+};
 pub use shrink::shrink_plan;
 
 /// A falsified seed: the original and shrunk plans plus the repro line.

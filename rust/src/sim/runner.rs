@@ -138,12 +138,34 @@ fn seed_input(input: &Topic, cfg: &HolonConfig) {
 }
 
 /// Run `plan` against a fresh cluster; optionally corrupt the artifacts
-/// with `mutation` before returning (oracle self-checks only).
+/// with `mutation` before returning (oracle self-checks only). Runs the
+/// harness's canonical workload (Query1); [`run_plan_with`] executes
+/// the same seeded schedule against any other processor.
 pub fn run_plan(spec: &SimSpec, plan: &FaultPlan, mutation: Option<Mutation>) -> RunArtifacts {
+    run_plan_with(spec, plan, mutation, Query1::new(spec.window_ms))
+}
+
+/// As [`run_plan`], generic over the query: the differential tests in
+/// `tests/determinism.rs` drive sharded and unsharded keyed pipelines
+/// through the *same* seeded fault schedule and compare outputs byte
+/// for byte.
+///
+/// Caveat: of the oracle suite, only the output-side checks
+/// ([`super::oracle::check_exactly_once`] /
+/// [`super::oracle::check_determinism`]) are processor-generic.
+/// [`super::oracle::check_convergence`] decodes the harvested replicas
+/// as Query1's `WindowedCrdt<GCounter>` and will report
+/// `CorruptReplica` for any other shared-state type — don't feed
+/// non-Query1 artifacts through `check_run`.
+pub fn run_plan_with<P: crate::api::Processor>(
+    spec: &SimSpec,
+    plan: &FaultPlan,
+    mutation: Option<Mutation>,
+    processor: P,
+) -> RunArtifacts {
     let cfg = spec.config();
     let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
-    let cluster =
-        HolonCluster::start_with_clock(cfg.clone(), Query1::new(cfg.window_ms), clock.clone());
+    let cluster = HolonCluster::start_with_clock(cfg.clone(), processor, clock.clone());
     seed_input(&cluster.input, &cfg);
 
     // Expand bursts into primitive (time, step) pairs. Bursts carry an

@@ -223,13 +223,18 @@ impl<C: Crdt> WindowedCrdt<C> {
     /// carrying only the windows touched since the previous call, plus
     /// the (small) full progress map. Joining a delta is sound because
     /// any sub-state of a CRDT is a valid state — deltas just converge
-    /// with less traffic. Clears the dirty set.
+    /// with less traffic. Clears the dirty set, and drills into each
+    /// touched window via [`Crdt::take_delta`] so inner CRDTs with their
+    /// own dirty tracking (sharded keyed state) ship only the changed
+    /// sub-state.
     pub fn take_delta(&mut self) -> Self {
         let dirty = std::mem::take(&mut self.dirty);
-        let windows = dirty
-            .iter()
-            .filter_map(|w| self.windows.get(w).map(|c| (*w, c.clone())))
-            .collect();
+        let mut windows = BTreeMap::new();
+        for w in &dirty {
+            if let Some(c) = self.windows.get_mut(w) {
+                windows.insert(*w, c.take_delta());
+            }
+        }
         Self {
             assigner: self.assigner,
             windows,
@@ -245,12 +250,46 @@ impl<C: Crdt> WindowedCrdt<C> {
         self.dirty.len()
     }
 
+    /// Drain this replica's delta into `dst` by reference — equivalent
+    /// to `dst.merge(&self.take_delta())` with no window clones and no
+    /// progress-map clone. The engine joins each partition's own
+    /// contribution accumulator into the node replica after every batch
+    /// through this: only the windows the batch touched are walked (and
+    /// within them, via [`Crdt::join_delta_into`], only the changed
+    /// sub-state), and `dst` marks exactly those windows dirty so the
+    /// next gossip delta ships them.
+    pub fn join_delta_into(&mut self, dst: &mut Self) {
+        for w in std::mem::take(&mut self.dirty) {
+            if w < dst.compacted_below {
+                continue; // already finalized and dropped there
+            }
+            if let Some(c) = self.windows.get_mut(&w) {
+                c.join_delta_into(dst.windows.entry(w).or_default());
+                dst.dirty.insert(w);
+            }
+        }
+        for (&p, &ts) in &self.progress {
+            let e = dst.progress.entry(p).or_insert(0);
+            if *e < ts {
+                *e = ts;
+            }
+        }
+        dst.compacted_below = dst.compacted_below.max(self.compacted_below);
+    }
+
     /// Discard the dirty markers without building a delta — used after a
     /// consumer has observed the full state (a full-sync gossip round, a
     /// checkpoint encode). Without this, a replica that never calls
     /// [`take_delta`](Self::take_delta) accumulates dirty ids forever.
+    /// Inner dirty markers ([`Crdt::mark_clean`]) are dropped with the
+    /// window ids; only dirty windows can hold them (inserts and merges
+    /// mark both levels together).
     pub fn mark_clean(&mut self) {
-        self.dirty.clear();
+        for w in std::mem::take(&mut self.dirty) {
+            if let Some(c) = self.windows.get_mut(&w) {
+                c.mark_clean();
+            }
+        }
     }
 
     /// Checkpoint slice: this partition's contributions + its progress
@@ -460,6 +499,33 @@ mod tests {
         assert_eq!(d.live_windows(), 1); // only window 1 was touched
         assert_eq!(d.progress_of(0), 1200); // progress always included
         assert_eq!(w.dirty_windows(), 0);
+    }
+
+    #[test]
+    fn join_delta_into_equals_merge_of_take_delta() {
+        // the engine's per-batch own→replica drain must land dst in the
+        // same state (value AND dirty markers) as merging a take_delta
+        let build_src = || {
+            let mut s = wcrdt(&[0, 1]);
+            s.insert_with(0, 100, |c| c.add(0, 5)).unwrap();
+            s.insert_with(0, 1200, |c| c.add(0, 2)).unwrap();
+            s.increment_watermark(0, 1500);
+            s
+        };
+        let mut src_a = build_src();
+        let mut src_b = build_src();
+        let mut dst_a = wcrdt(&[0, 1]);
+        dst_a.insert_with(1, 150, |c| c.add(1, 7)).unwrap();
+        dst_a.increment_watermark(1, 1500);
+        let mut dst_b = dst_a.clone(); // clone() carries the dirty set too
+
+        src_a.join_delta_into(&mut dst_a);
+        dst_b.merge(&src_b.take_delta());
+        assert_eq!(dst_a, dst_b);
+        assert_eq!(dst_a.dirty, dst_b.dirty, "drain must mark the same windows");
+        assert_eq!(src_a.dirty_windows(), 0, "drain clears the source markers");
+        assert_eq!(dst_a.window_value(0).unwrap().value(), 12);
+        assert_eq!(dst_a.progress_of(0), 1500);
     }
 
     #[test]

@@ -9,6 +9,7 @@ use holon::crdt::{
 };
 use holon::engine::membership::{assignment, target_owner};
 use holon::proptest_lite::forall;
+use holon::shard::ShardedMapCrdt;
 use holon::util::XorShift64;
 use holon::wcrdt::{WindowAssigner, WindowedCrdt};
 
@@ -63,6 +64,14 @@ fn gen_map(rng: &mut XorShift64, size: usize) -> MapCrdt<u64, GCounter> {
     let mut m: MapCrdt<u64, GCounter> = MapCrdt::new();
     for _ in 0..rng.next_below(size as u64 + 1) {
         m.entry(rng.next_below(6)).add(rng.next_below(8), rng.next_below(50));
+    }
+    m
+}
+
+fn gen_sharded_map(rng: &mut XorShift64, size: usize) -> ShardedMapCrdt<u64, GCounter> {
+    let mut m: ShardedMapCrdt<u64, GCounter> = ShardedMapCrdt::with_shards(4);
+    for _ in 0..rng.next_below(size as u64 + 1) {
+        m.entry(rng.next_below(24)).add(rng.next_below(8), rng.next_below(50));
     }
     m
 }
@@ -163,6 +172,7 @@ lattice_law_test!(pncounter_lattice_laws, gen_pncounter);
 lattice_law_test!(topk_lattice_laws, gen_topk);
 lattice_law_test!(orset_lattice_laws, gen_orset);
 lattice_law_test!(mapcrdt_lattice_laws, gen_map);
+lattice_law_test!(sharded_map_lattice_laws, gen_sharded_map);
 lattice_law_test!(lww_register_lattice_laws, gen_lww);
 lattice_law_test!(max_register_lattice_laws, gen_maxreg);
 lattice_law_test!(min_register_lattice_laws, gen_minreg);
@@ -320,6 +330,20 @@ split_equivalence_test!(
 );
 
 split_equivalence_test!(
+    sharded_map_split_equivalence,
+    |rng: &mut XorShift64| {
+        (
+            rng.next_below(6),
+            (rng.next_below(24), rng.next_below(50)),
+        )
+    },
+    |m: &mut ShardedMapCrdt<u64, GCounter>, contributor, op: &(u64, u64)| {
+        m.ensure_shards(4);
+        m.entry(op.0).add(contributor, op.1)
+    }
+);
+
+split_equivalence_test!(
     gset_split_equivalence,
     |rng: &mut XorShift64| {
         let c = rng.next_below(6);
@@ -410,6 +434,96 @@ codec_roundtrip_test!(gcounter_codec_roundtrip, gen_gcounter, GCounter);
 codec_roundtrip_test!(topk_codec_roundtrip, gen_topk, BoundedTopK);
 codec_roundtrip_test!(orset_codec_roundtrip, gen_orset, ORSet<u64>);
 codec_roundtrip_test!(map_codec_roundtrip, gen_map, MapCrdt<u64, GCounter>);
+codec_roundtrip_test!(
+    sharded_map_codec_roundtrip,
+    gen_sharded_map,
+    ShardedMapCrdt<u64, GCounter>
+);
+
+// ---- sharded keyed state: layout independence --------------------------
+//
+// The shard layer must be *transparent*: the same ops through any shard
+// count (including the flat MapCrdt) read back as the same logical map,
+// merges across different layouts converge, and per-shard deltas join
+// like full states. This is the algebra behind the engine-level
+// determinism claim (sharded vs unsharded byte-identical outputs).
+
+#[test]
+fn sharded_map_is_layout_independent() {
+    forall(
+        "sharded layout independence",
+        100,
+        48,
+        &|rng: &mut XorShift64, size: usize| {
+            let n = rng.next_below(size as u64 + 1);
+            (0..n)
+                .map(|_| (rng.next_below(24), rng.next_below(8), rng.next_below(50)))
+                .collect::<Vec<_>>()
+        },
+        |ops: &Vec<(u64, u64, u64)>| {
+            let mut flat: MapCrdt<u64, GCounter> = MapCrdt::new();
+            for &(k, c, a) in ops {
+                flat.entry(k).add(c, a);
+            }
+            let flat_view: Vec<(u64, u64)> = flat.iter().map(|(&k, c)| (k, c.value())).collect();
+            let mut replicas = Vec::new();
+            for shards in [1u32, 2, 4, 16] {
+                let mut m: ShardedMapCrdt<u64, GCounter> = ShardedMapCrdt::with_shards(shards);
+                for &(k, c, a) in ops {
+                    m.entry(k).add(c, a);
+                }
+                let view: Vec<(u64, u64)> = m.iter().map(|(&k, c)| (k, c.value())).collect();
+                if view != flat_view {
+                    return Err(format!("{shards} shards read differently: {view:?}"));
+                }
+                replicas.push(m);
+            }
+            // cross-layout merges still converge to the same logical map
+            let mut merged = replicas[0].clone();
+            merged.merge(&replicas[2]);
+            if merged != replicas[3] {
+                return Err("cross-layout merge diverged".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sharded_map_delta_join_equals_full_join() {
+    forall(
+        "sharded delta join",
+        100,
+        32,
+        &|rng: &mut XorShift64, size: usize| {
+            let n = 1 + rng.next_below(size as u64 + 1);
+            let ops: Vec<(u64, u64, u64)> = (0..n)
+                .map(|_| (rng.next_below(24), rng.next_below(8), rng.next_below(50)))
+                .collect();
+            let cut = rng.next_below(n + 1) as usize;
+            (ops, cut)
+        },
+        |(ops, cut)| {
+            // replica A applies everything; replica B receives a full
+            // state at `cut` and only per-shard deltas afterwards
+            let mut a: ShardedMapCrdt<u64, GCounter> = ShardedMapCrdt::with_shards(8);
+            let mut b: ShardedMapCrdt<u64, GCounter> = ShardedMapCrdt::with_shards(8);
+            for &(k, c, amount) in &ops[..*cut] {
+                a.entry(k).add(c, amount);
+            }
+            b.merge(&Crdt::take_delta(&mut a)); // full so far (all dirty)
+            for &(k, c, amount) in &ops[*cut..] {
+                a.entry(k).add(c, amount);
+            }
+            let delta = Crdt::take_delta(&mut a);
+            b.merge(&delta);
+            if b != a {
+                return Err(format!("delta join diverged: {b:?} != {a:?}"));
+            }
+            Ok(())
+        },
+    );
+}
 
 // ---- WCRDT convergence: any merge order, same completed values ---------
 

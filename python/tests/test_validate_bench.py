@@ -36,6 +36,10 @@ def scenario(**overrides):
         "payload_clones_per_event": 0.0,
         "dedup_duplicates": 3,
         "seq_gaps": 0,
+        "merge_changed": 4100,
+        "merge_noop": 100,
+        "redundant_gossip_bytes": 2048,
+        "gossip_skipped": 0,
         "shard_count": 0,
         "shard_gossip_bytes": [],
         "shard_parallel_merges": 0,
@@ -136,6 +140,27 @@ def test_shard_bytes_must_be_nonneg_ints():
     assert any("shard_gossip_bytes[1]" in e for e in validate(d))
     d["scenarios"][0]["shard_gossip_bytes"] = "not a list"
     assert any("shard_gossip_bytes" in e for e in validate(d))
+
+
+def test_merge_outcome_fields_are_required():
+    # the trait-v3 counters are part of the schema: a report missing any
+    # of them (an old binary) must fail validation
+    for field in ("merge_changed", "merge_noop", "redundant_gossip_bytes", "gossip_skipped"):
+        d = doc()
+        del d["scenarios"][0][field]
+        assert any(field in e for e in validate(d)), field
+
+
+def test_merge_outcome_fields_are_typed_counters():
+    d = doc()
+    d["scenarios"][0]["redundant_gossip_bytes"] = -5
+    assert any("redundant_gossip_bytes" in e for e in validate(d))
+    d = doc()
+    d["scenarios"][0]["merge_noop"] = 1.5
+    assert any("merge_noop" in e for e in validate(d))
+    d = doc()
+    d["scenarios"][0]["gossip_skipped"] = True
+    assert any("gossip_skipped" in e for e in validate(d))
 
 
 def test_shard_count_must_match_array_length():

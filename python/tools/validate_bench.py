@@ -45,6 +45,10 @@ SCENARIO_FIELDS = {
     "payload_clones_per_event": (int, float),
     "dedup_duplicates": (int,),
     "seq_gaps": (int,),
+    "merge_changed": (int,),
+    "merge_noop": (int,),
+    "redundant_gossip_bytes": (int,),
+    "gossip_skipped": (int,),
     "shard_count": (int,),
     "shard_gossip_bytes": (list,),
     "shard_parallel_merges": (int,),

@@ -53,7 +53,7 @@ fn main() {
     }
     bench("gcounter_merge_50_contributors", 100, 10_000, || {
         let mut x = a.clone();
-        x.merge(&b);
+        let _ = x.merge(&b);
         std::hint::black_box(&x);
     });
 
@@ -65,7 +65,7 @@ fn main() {
     }
     bench("topk10_merge", 100, 10_000, || {
         let mut x = ta.clone();
-        x.merge(&tb);
+        let _ = x.merge(&tb);
         std::hint::black_box(&x);
     });
 
@@ -82,13 +82,13 @@ fn main() {
     let mut warm = build_counted(0..512);
     let incoming = build_counted(0..512);
     let before = KEY_CLONES.load(Ordering::Relaxed);
-    warm.merge(&incoming);
+    let _ = warm.merge(&incoming);
     let clones = KEY_CLONES.load(Ordering::Relaxed) - before;
     assert_eq!(clones, 0, "existing-key merge must clone zero keys (was 512/merge pre-fix)");
     println!("steady-state merge of 512 present keys: {clones} key clones (pre-fix: 512)");
     let fresh = build_counted(512..640);
     let before = KEY_CLONES.load(Ordering::Relaxed);
-    warm.merge(&fresh);
+    let _ = warm.merge(&fresh);
     let clones = KEY_CLONES.load(Ordering::Relaxed) - before;
     assert_eq!(clones, 128, "only genuinely new keys may clone");
     println!("merge introducing 128 new keys: {clones} key clones");
@@ -101,7 +101,7 @@ fn main() {
     }
     bench("map_merge_4096_existing_keys", 20, 2_000, || {
         let mut x = ma.clone();
-        x.merge(&mb);
+        let _ = x.merge(&mb);
         std::hint::black_box(&x);
     });
 
@@ -117,7 +117,7 @@ fn main() {
     let sb = build_sharded(8, 2);
     bench("sharded_map_merge_8x4096", 20, 2_000, || {
         let mut x = sa.clone();
-        x.merge(&sb);
+        let _ = x.merge(&sb);
         std::hint::black_box(&x);
     });
     // flat baseline with the SAME per-iteration work shape as the
@@ -134,7 +134,7 @@ fn main() {
     let fb = build_flat(2);
     bench("flat_map_merge_4096_oracle", 20, 2_000, || {
         let mut x = fa.clone();
-        x.merge(&fb);
+        let _ = x.merge(&fb);
         std::hint::black_box(&x);
     });
     // delta encode: one dirty shard out of 8 vs the full map
@@ -171,7 +171,7 @@ fn main() {
     let other = w.clone();
     bench("wcrdt_join", 10, 2_000, || {
         let mut x = w.clone();
-        x.merge(&other);
+        let _ = x.merge(&other);
         std::hint::black_box(&x);
     });
 

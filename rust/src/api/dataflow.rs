@@ -646,7 +646,7 @@ mod tests {
         let mut agg = ScalarAggregator;
         let mut ctx = Ctx::new(0, 0, &mut agg);
         q.process(&mut ctx, shared, own, local, events);
-        shared.join(own);
+        let _ = shared.join(own);
         ctx.into_outputs()
     }
 

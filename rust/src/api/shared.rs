@@ -8,15 +8,21 @@
 //! and for `()` (stateless queries like Nexmark Q0).
 
 use crate::codec::{Decode, Encode};
-use crate::crdt::Crdt;
+use crate::crdt::{Crdt, MergeOutcome};
 use crate::util::PartitionId;
 use crate::wcrdt::{WindowId, WindowedCrdt};
 
 /// Node-level replicated state: a join-semilattice that also supports
 /// per-partition projection and window compaction.
 pub trait SharedState: Clone + Send + Encode + Decode + 'static {
-    /// Join with another replica (gossip receive / recovery).
-    fn join(&mut self, other: &Self);
+    /// Join with another replica (gossip receive / recovery),
+    /// reporting whether this replica inflated. The engine's receive
+    /// path counts no-op joins (`ClusterMetrics::merge_noop`) and their
+    /// payload bytes (`redundant_gossip_bytes`), and relies on the
+    /// drilled-down dirty-marking: a full-sync payload the replica
+    /// already subsumes marks nothing dirty, so the delta round after
+    /// an anti-entropy round ships only genuine divergence.
+    fn join(&mut self, other: &Self) -> MergeOutcome;
 
     /// The slice of this state contributed by `partition` (plus its
     /// progress entries) — what goes into the partition checkpoint.
@@ -51,18 +57,29 @@ pub trait SharedState: Clone + Send + Encode + Decode + 'static {
     /// `take_delta`.
     fn mark_clean(&mut self);
 
+    /// Whether a delta round would ship anything: some window is dirty
+    /// or some watermark moved since the last drain. When false (and
+    /// the round is not a full sync) the engine skips the gossip
+    /// encode and broadcast entirely. Defaults to the dirty-window
+    /// count, which is correct for states without progress tracking.
+    fn has_delta(&self) -> bool {
+        self.dirty_windows() > 0
+    }
+
     /// Drain this state's delta into `dst` by reference — semantically
-    /// `dst.join(&self.take_delta())` without materializing the delta.
-    /// The engine's per-batch own→replica join runs through this (the
-    /// hot path must not clone per batch); the default is only for
-    /// exotic implementations.
-    fn join_delta_into(&mut self, dst: &mut Self) {
-        dst.join(&self.take_delta());
+    /// `dst.join(&self.take_delta())` without materializing the delta —
+    /// reporting whether `dst` inflated. The engine's per-batch
+    /// own→replica join runs through this (the hot path must not clone
+    /// per batch); the default is only for exotic implementations.
+    fn join_delta_into(&mut self, dst: &mut Self) -> MergeOutcome {
+        dst.join(&self.take_delta())
     }
 }
 
 impl SharedState for () {
-    fn join(&mut self, _other: &Self) {}
+    fn join(&mut self, _other: &Self) -> MergeOutcome {
+        MergeOutcome::Unchanged
+    }
 
     fn project(&self, _partition: PartitionId) -> Self {}
 
@@ -82,12 +99,18 @@ impl SharedState for () {
 
     fn mark_clean(&mut self) {}
 
-    fn join_delta_into(&mut self, _dst: &mut Self) {}
+    fn has_delta(&self) -> bool {
+        false
+    }
+
+    fn join_delta_into(&mut self, _dst: &mut Self) -> MergeOutcome {
+        MergeOutcome::Unchanged
+    }
 }
 
 impl<C: Crdt> SharedState for WindowedCrdt<C> {
-    fn join(&mut self, other: &Self) {
-        self.merge(other);
+    fn join(&mut self, other: &Self) -> MergeOutcome {
+        self.merge(other).outcome()
     }
 
     fn project(&self, partition: PartitionId) -> Self {
@@ -118,15 +141,18 @@ impl<C: Crdt> SharedState for WindowedCrdt<C> {
         WindowedCrdt::mark_clean(self);
     }
 
-    fn join_delta_into(&mut self, dst: &mut Self) {
-        WindowedCrdt::join_delta_into(self, dst);
+    fn has_delta(&self) -> bool {
+        WindowedCrdt::has_delta(self)
+    }
+
+    fn join_delta_into(&mut self, dst: &mut Self) -> MergeOutcome {
+        WindowedCrdt::join_delta_into(self, dst)
     }
 }
 
 impl<A: SharedState, B: SharedState> SharedState for (A, B) {
-    fn join(&mut self, other: &Self) {
-        self.0.join(&other.0);
-        self.1.join(&other.1);
+    fn join(&mut self, other: &Self) -> MergeOutcome {
+        self.0.join(&other.0) | self.1.join(&other.1)
     }
 
     fn project(&self, partition: PartitionId) -> Self {
@@ -159,17 +185,18 @@ impl<A: SharedState, B: SharedState> SharedState for (A, B) {
         self.1.mark_clean();
     }
 
-    fn join_delta_into(&mut self, dst: &mut Self) {
-        self.0.join_delta_into(&mut dst.0);
-        self.1.join_delta_into(&mut dst.1);
+    fn has_delta(&self) -> bool {
+        self.0.has_delta() || self.1.has_delta()
+    }
+
+    fn join_delta_into(&mut self, dst: &mut Self) -> MergeOutcome {
+        self.0.join_delta_into(&mut dst.0) | self.1.join_delta_into(&mut dst.1)
     }
 }
 
 impl<A: SharedState, B: SharedState, C: SharedState> SharedState for (A, B, C) {
-    fn join(&mut self, other: &Self) {
-        self.0.join(&other.0);
-        self.1.join(&other.1);
-        self.2.join(&other.2);
+    fn join(&mut self, other: &Self) -> MergeOutcome {
+        self.0.join(&other.0) | self.1.join(&other.1) | self.2.join(&other.2)
     }
 
     fn project(&self, partition: PartitionId) -> Self {
@@ -215,10 +242,14 @@ impl<A: SharedState, B: SharedState, C: SharedState> SharedState for (A, B, C) {
         self.2.mark_clean();
     }
 
-    fn join_delta_into(&mut self, dst: &mut Self) {
-        self.0.join_delta_into(&mut dst.0);
-        self.1.join_delta_into(&mut dst.1);
-        self.2.join_delta_into(&mut dst.2);
+    fn has_delta(&self) -> bool {
+        self.0.has_delta() || self.1.has_delta() || self.2.has_delta()
+    }
+
+    fn join_delta_into(&mut self, dst: &mut Self) -> MergeOutcome {
+        self.0.join_delta_into(&mut dst.0)
+            | self.1.join_delta_into(&mut dst.1)
+            | self.2.join_delta_into(&mut dst.2)
     }
 }
 
@@ -235,9 +266,10 @@ mod tests {
     #[test]
     fn unit_shared_state_is_inert() {
         let mut s = ();
-        s.join(&());
+        assert_eq!(s.join(&()), MergeOutcome::Unchanged);
         assert_eq!(s.project(0), ());
         assert_eq!(s.live_windows(), 0);
+        assert!(!s.has_delta());
     }
 
     #[test]
@@ -262,9 +294,11 @@ mod tests {
         s.increment_watermark(0, 50);
         let slice = SharedState::project(&s, 0);
         let mut fresh = counter(&[0, 1]);
-        fresh.join(&slice);
+        assert_eq!(fresh.join(&slice), MergeOutcome::Changed);
         assert_eq!(fresh.raw_window(0).unwrap().value(), 3);
         assert_eq!(fresh.progress_of(0), 50);
+        // joining it again is a no-op (recovery after gossip caught up)
+        assert_eq!(fresh.join(&slice), MergeOutcome::Unchanged);
     }
 
     #[test]
@@ -288,10 +322,28 @@ mod tests {
             w
         });
         let b = a.clone();
-        a.join(&b);
-        assert_eq!(a, b); // idempotent
+        assert_eq!(a.join(&b), MergeOutcome::Unchanged); // idempotent
+        assert_eq!(a, b);
         assert_eq!(a.live_windows(), 1);
         a.compact_below(10);
         assert_eq!(a.live_windows(), 0);
+    }
+
+    #[test]
+    fn has_delta_composes_through_tuples() {
+        let mut s = (counter(&[0]), counter(&[0]));
+        SharedState::mark_clean(&mut s);
+        assert!(!SharedState::has_delta(&s));
+        // watermark movement alone arms the delta (no dirty window)
+        s.1.increment_watermark(0, 700);
+        assert_eq!(SharedState::dirty_windows(&s), 0);
+        assert!(SharedState::has_delta(&s));
+        let _ = SharedState::take_delta(&mut s);
+        assert!(!SharedState::has_delta(&s));
+        // a dirty window arms it too
+        s.0.insert_with(0, 750, |c| c.add(0, 1)).unwrap();
+        assert!(SharedState::has_delta(&s));
+        SharedState::mark_clean(&mut s);
+        assert!(!SharedState::has_delta(&s));
     }
 }

@@ -10,7 +10,7 @@
 
 use std::collections::BTreeMap;
 
-use super::Crdt;
+use super::{Crdt, MergeOutcome};
 use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
 
 /// One contributor's running aggregate over its input prefix.
@@ -139,20 +139,24 @@ impl Crdt for PrefixAgg {
         PrefixAgg::project(self, contributor)
     }
 
-    fn merge(&mut self, other: &Self) {
+    fn merge(&mut self, other: &Self) -> MergeOutcome {
+        let mut changed = false;
         for (&k, cell) in &other.cells {
             match self.cells.get_mut(&k) {
                 None => {
                     self.cells.insert(k, *cell);
+                    changed = true;
                 }
                 Some(mine) => {
                     // Longer prefix wins; ties are identical by determinism.
                     if cell.count > mine.count {
                         *mine = *cell;
+                        changed = true;
                     }
                 }
             }
         }
+        MergeOutcome::changed_if(changed)
     }
 }
 
@@ -190,7 +194,7 @@ impl Decode for PrefixAgg {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::crdt::lawcheck::{check_codec_roundtrip, check_laws};
+    use crate::crdt::lawcheck::{check_codec_roundtrip, check_laws, check_merge_outcome};
 
     fn agg(contributor: u64, vals: &[f64]) -> PrefixAgg {
         let mut a = PrefixAgg::new();
@@ -208,7 +212,18 @@ mod tests {
         let p1_long = agg(1, &[1.0, 2.0, 3.0]);
         let p2 = agg(2, &[10.0]);
         check_laws(&[PrefixAgg::new(), p1_short.clone(), p1_long.clone(), p2.clone()]);
-        check_codec_roundtrip(&[p1_short, p1_long, p2]);
+        check_codec_roundtrip(&[p1_short.clone(), p1_long.clone(), p2.clone()]);
+        check_merge_outcome(&[PrefixAgg::new(), p1_short, p1_long, p2]);
+    }
+
+    #[test]
+    fn merge_reports_change_only_on_prefix_extension() {
+        let short = agg(1, &[1.0, 2.0]);
+        let long = agg(1, &[1.0, 2.0, 3.0]);
+        let mut m = short.clone();
+        assert_eq!(m.merge(&long), MergeOutcome::Changed);
+        assert_eq!(m.merge(&short), MergeOutcome::Unchanged); // shorter prefix
+        assert_eq!(m.merge(&long), MergeOutcome::Unchanged); // same prefix
     }
 
     #[test]
@@ -224,7 +239,7 @@ mod tests {
     #[test]
     fn aggregates_across_contributors() {
         let mut a = agg(1, &[2.0, 4.0]);
-        a.merge(&agg(2, &[6.0]));
+        let _ = a.merge(&agg(2, &[6.0]));
         assert_eq!(a.count(), 3);
         assert_eq!(a.avg(), Some(4.0));
         assert_eq!(a.max(), Some(6.0));
@@ -262,7 +277,7 @@ mod tests {
     #[test]
     fn project_isolates() {
         let mut a = agg(1, &[1.0]);
-        a.merge(&agg(2, &[5.0]));
+        let _ = a.merge(&agg(2, &[5.0]));
         let p = a.project(2);
         assert_eq!(p.count(), 1);
         assert_eq!(p.sum(), 5.0);

@@ -2,7 +2,7 @@
 
 use std::collections::BTreeMap;
 
-use super::Crdt;
+use super::{Crdt, MergeOutcome};
 use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
 
 /// Grow-only counter (the paper's Listing 1/2 `GCounter`).
@@ -59,11 +59,23 @@ impl Crdt for GCounter {
         GCounter::project(self, contributor)
     }
 
-    fn merge(&mut self, other: &Self) {
+    fn merge(&mut self, other: &Self) -> MergeOutcome {
+        let mut changed = false;
         for (&k, &v) in &other.counts {
-            let e = self.counts.entry(k).or_insert(0);
-            *e = (*e).max(v);
+            match self.counts.get_mut(&k) {
+                Some(e) => {
+                    if v > *e {
+                        *e = v;
+                        changed = true;
+                    }
+                }
+                None => {
+                    self.counts.insert(k, v);
+                    changed = true;
+                }
+            }
         }
+        MergeOutcome::changed_if(changed)
     }
 }
 
@@ -118,9 +130,8 @@ impl Crdt for PNCounter {
         PNCounter::project(self, contributor)
     }
 
-    fn merge(&mut self, other: &Self) {
-        self.pos.merge(&other.pos);
-        self.neg.merge(&other.neg);
+    fn merge(&mut self, other: &Self) -> MergeOutcome {
+        self.pos.merge(&other.pos) | self.neg.merge(&other.neg)
     }
 }
 
@@ -143,7 +154,7 @@ impl Decode for PNCounter {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::crdt::lawcheck::{check_codec_roundtrip, check_laws};
+    use crate::crdt::lawcheck::{check_codec_roundtrip, check_laws, check_merge_outcome};
 
     fn samples() -> Vec<GCounter> {
         let mut a = GCounter::new();
@@ -168,6 +179,22 @@ mod tests {
     }
 
     #[test]
+    fn gcounter_merge_reports_change() {
+        check_merge_outcome(&samples());
+        // raising one contributor's count is Changed; re-merging is not
+        let mut a = GCounter::new();
+        a.add(1, 5);
+        let mut b = GCounter::new();
+        b.add(1, 7);
+        assert_eq!(a.merge(&b), MergeOutcome::Changed);
+        assert_eq!(a.merge(&b), MergeOutcome::Unchanged);
+        // a dominated partner changes nothing
+        let mut low = GCounter::new();
+        low.add(1, 2);
+        assert_eq!(a.merge(&low), MergeOutcome::Unchanged);
+    }
+
+    #[test]
     fn gcounter_value_sums_contributors() {
         let mut g = GCounter::new();
         g.add(1, 2);
@@ -184,7 +211,7 @@ mod tests {
         let mut b = GCounter::new();
         b.add(1, 3);
         b.add(2, 4);
-        a.merge(&b);
+        let _ = a.merge(&b);
         assert_eq!(a.value(), 9); // max(5,3) + 4
     }
 
@@ -195,7 +222,7 @@ mod tests {
         a.add(1, 10);
         let replay = a.project(1);
         let before = a.clone();
-        a.merge(&replay);
+        assert_eq!(a.merge(&replay), MergeOutcome::Unchanged);
         assert_eq!(a, before);
     }
 
@@ -206,7 +233,8 @@ mod tests {
         a.sub(1, 2);
         let mut b = PNCounter::new();
         b.sub(2, 1);
-        check_laws(&[PNCounter::new(), a.clone(), b]);
+        check_laws(&[PNCounter::new(), a.clone(), b.clone()]);
+        check_merge_outcome(&[PNCounter::new(), a.clone(), b]);
         assert_eq!(a.value(), 3);
     }
 

@@ -6,7 +6,7 @@
 
 use std::collections::BTreeMap;
 
-use super::Crdt;
+use super::{Crdt, MergeOutcome};
 use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
 
 /// Map from key to inner CRDT; join is pointwise.
@@ -55,6 +55,40 @@ impl<K: Ord + Clone, C: Crdt> MapCrdt<K, C> {
             entries: self.entries.iter().map(|(k, v)| (k.clone(), f(v))).collect(),
         }
     }
+
+    /// Join one `(key, value)` pair in, reporting whether this map
+    /// changed. A fresh key is always a change (the map gains an entry);
+    /// an existing key reports its inner join's outcome.
+    pub fn merge_entry(&mut self, key: &K, value: &C) -> MergeOutcome {
+        match self.entries.get_mut(key) {
+            Some(mine) => mine.merge(value),
+            None => {
+                let mut fresh = C::default();
+                let _ = fresh.merge(value);
+                self.entries.insert(key.clone(), fresh);
+                MergeOutcome::Changed
+            }
+        }
+    }
+
+    /// Pointwise join with a per-key changed-set: `on_changed` fires
+    /// once for every key whose entry actually inflated (the trait-v3
+    /// `merge_report` hook — [`crate::shard::ShardedMapCrdt`] rides it
+    /// to confine shard dirty-marking to genuine changes).
+    pub fn merge_report(&mut self, other: &Self, mut on_changed: impl FnMut(&K)) -> MergeOutcome {
+        let mut outcome = MergeOutcome::Unchanged;
+        for (k, v) in &other.entries {
+            // Probe with the borrowed key first: the steady-state merge
+            // (gossip between warmed-up replicas) touches only existing
+            // keys, and the old `entry(k.clone())` paid a key clone per
+            // key per merge just to discover that.
+            if self.merge_entry(k, v).is_changed() {
+                on_changed(k);
+                outcome = MergeOutcome::Changed;
+            }
+        }
+        outcome
+    }
 }
 
 impl<K, C> Crdt for MapCrdt<K, C>
@@ -66,21 +100,8 @@ where
         self.project_with(|c| c.project(contributor))
     }
 
-    fn merge(&mut self, other: &Self) {
-        for (k, v) in &other.entries {
-            // Probe with the borrowed key first: the steady-state merge
-            // (gossip between warmed-up replicas) touches only existing
-            // keys, and the old `entry(k.clone())` paid a key clone per
-            // key per merge just to discover that.
-            match self.entries.get_mut(k) {
-                Some(mine) => mine.merge(v),
-                None => {
-                    let mut fresh = C::default();
-                    fresh.merge(v);
-                    self.entries.insert(k.clone(), fresh);
-                }
-            }
-        }
+    fn merge(&mut self, other: &Self) -> MergeOutcome {
+        self.merge_report(other, |_| {})
     }
 }
 
@@ -110,7 +131,7 @@ impl<K: Ord + Clone + Decode, C: Crdt> Decode for MapCrdt<K, C> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::crdt::lawcheck::{check_codec_roundtrip, check_laws};
+    use crate::crdt::lawcheck::{check_codec_roundtrip, check_laws, check_merge_outcome};
     use crate::crdt::GCounter;
 
     fn sample(pairs: &[(u64, u64, u64)]) -> MapCrdt<u64, GCounter> {
@@ -131,15 +152,35 @@ mod tests {
         ];
         check_laws(&samples);
         check_codec_roundtrip(&samples);
+        check_merge_outcome(&samples);
     }
 
     #[test]
     fn merge_joins_per_key() {
         let mut a = sample(&[(1, 0, 5)]);
         let b = sample(&[(1, 1, 3), (2, 0, 7)]);
-        a.merge(&b);
+        assert_eq!(a.merge(&b), MergeOutcome::Changed);
         assert_eq!(a.get(&1).unwrap().value(), 8);
         assert_eq!(a.get(&2).unwrap().value(), 7);
+        assert_eq!(a.merge(&b), MergeOutcome::Unchanged);
+    }
+
+    #[test]
+    fn merge_report_names_exactly_the_changed_keys() {
+        let mut a = sample(&[(1, 0, 5), (2, 0, 7), (3, 0, 1)]);
+        // key 1: dominated (no-op); key 2: inflates; key 4: fresh
+        let b = sample(&[(1, 0, 3), (2, 0, 9), (4, 2, 2)]);
+        let mut changed = Vec::new();
+        let outcome = a.merge_report(&b, |k| changed.push(*k));
+        assert_eq!(outcome, MergeOutcome::Changed);
+        assert_eq!(changed, vec![2, 4]);
+        // a now subsumes b: the report is empty and the outcome a no-op
+        let mut changed = Vec::new();
+        assert_eq!(
+            a.merge_report(&b, |k| changed.push(*k)),
+            MergeOutcome::Unchanged
+        );
+        assert!(changed.is_empty());
     }
 
     #[test]
@@ -201,12 +242,12 @@ mod tests {
             let mut a = build(&[1, 2, 3, 4]);
             let b = build(&[1, 2, 3, 4]);
             let before = KEY_CLONES.load(Ordering::Relaxed);
-            a.merge(&b); // all keys present: zero clones
+            let _ = a.merge(&b); // all keys present: zero clones
             assert_eq!(KEY_CLONES.load(Ordering::Relaxed) - before, 0);
 
             let c = build(&[3, 4, 5, 6]);
             let before = KEY_CLONES.load(Ordering::Relaxed);
-            a.merge(&c); // exactly the two absent keys clone
+            let _ = a.merge(&c); // exactly the two absent keys clone
             assert_eq!(KEY_CLONES.load(Ordering::Relaxed) - before, 2);
             assert_eq!(a.len(), 6);
             // same contributor, same count: the join is the max, not a sum

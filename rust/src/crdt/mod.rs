@@ -28,6 +28,61 @@ pub use topk::BoundedTopK;
 
 use crate::codec::{Decode, Encode};
 
+/// What a join did to its target — the central currency of delta
+/// synchronization (Crdt trait v3).
+///
+/// Delta-state CRDT theory (Almeida et al.) observes that a join can
+/// report *inflation* for free: it already compares every piece of
+/// incoming state against the local lattice position. Reporting it is
+/// what confines dirty-marking to genuine changes — a replica that
+/// receives a full-sync payload it already subsumes must not re-mark
+/// (and re-ship) its whole state on the next delta round.
+///
+/// Contract (checked by the `merge_outcome_*` property suites): a merge
+/// returns [`Changed`](MergeOutcome::Changed) **iff** the target state
+/// actually differs afterwards (per `PartialEq`). In particular,
+/// re-merging the same state is always `Unchanged` (idempotence).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[must_use = "the merge outcome drives dirty-marking; discard it explicitly with `let _ =` if unneeded"]
+pub enum MergeOutcome {
+    /// The join was a no-op: the target already subsumed `other`.
+    #[default]
+    Unchanged,
+    /// The target inflated (gained information it did not have).
+    Changed,
+}
+
+impl MergeOutcome {
+    /// `Changed` iff the flag is set.
+    pub fn changed_if(changed: bool) -> Self {
+        if changed {
+            MergeOutcome::Changed
+        } else {
+            MergeOutcome::Unchanged
+        }
+    }
+
+    pub fn is_changed(self) -> bool {
+        self == MergeOutcome::Changed
+    }
+}
+
+/// Outcomes combine like the joins they describe: any changed part
+/// changes the whole.
+impl std::ops::BitOr for MergeOutcome {
+    type Output = MergeOutcome;
+
+    fn bitor(self, rhs: Self) -> Self {
+        MergeOutcome::changed_if(self.is_changed() || rhs.is_changed())
+    }
+}
+
+impl std::ops::BitOrAssign for MergeOutcome {
+    fn bitor_assign(&mut self, rhs: Self) {
+        *self = *self | rhs;
+    }
+}
+
 /// A state-based CRDT: a join-semilattice with a bottom element
 /// (`Default::default()`) and a join ([`merge`](Crdt::merge)).
 ///
@@ -36,9 +91,14 @@ use crate::codec::{Decode, Encode};
 /// * associativity: `(a ⊔ b) ⊔ c == a ⊔ (b ⊔ c)`
 /// * idempotence:   `a ⊔ a == a`
 /// * identity:      `a ⊔ ⊥ == a`
+/// * change reporting: `merge` returns [`MergeOutcome::Changed`] iff the
+///   target actually differs afterwards
 pub trait Crdt: Clone + Default + Send + Encode + Decode + 'static {
-    /// Join this replica with another (least upper bound).
-    fn merge(&mut self, other: &Self);
+    /// Join this replica with another (least upper bound), reporting
+    /// whether the join inflated `self`. Keyed compositions additionally
+    /// expose per-unit changed-sets via their `merge_report` hooks
+    /// ([`MapCrdt::merge_report`], [`crate::shard::ShardedMapCrdt::merge_report`]).
+    fn merge(&mut self, other: &Self) -> MergeOutcome;
 
     /// Project the sub-state contributed by `contributor` (a partition
     /// id) — used to build minimal checkpoint slices. The default
@@ -55,7 +115,7 @@ pub trait Crdt: Clone + Default + Send + Encode + Decode + 'static {
     where
         Self: Sized,
     {
-        self.merge(other);
+        let _ = self.merge(other);
         self
     }
 
@@ -76,16 +136,18 @@ pub trait Crdt: Clone + Default + Send + Encode + Decode + 'static {
     fn mark_clean(&mut self) {}
 
     /// Drain this value's delta into `dst` by reference — semantically
-    /// `dst.merge(&self.take_delta())` without materializing the delta.
-    /// The default merges the full state (for types without dirty
-    /// tracking the delta *is* the full state, and merging by reference
-    /// costs no clone); [`crate::shard::ShardedMapCrdt`] overrides it to
-    /// merge only its dirty shards. The engine's per-batch
-    /// own-contribution→replica join runs through this, so it must stay
-    /// allocation-free on the default path.
-    fn join_delta_into(&mut self, dst: &mut Self) {
-        dst.merge(self);
+    /// `dst.merge(&self.take_delta())` without materializing the delta —
+    /// reporting whether `dst` inflated. The default merges the full
+    /// state (for types without dirty tracking the delta *is* the full
+    /// state, and merging by reference costs no clone);
+    /// [`crate::shard::ShardedMapCrdt`] overrides it to merge only its
+    /// dirty shards. The engine's per-batch own-contribution→replica
+    /// join runs through this, so it must stay allocation-free on the
+    /// default path.
+    fn join_delta_into(&mut self, dst: &mut Self) -> MergeOutcome {
+        let outcome = dst.merge(self);
         self.mark_clean();
+        outcome
     }
 }
 
@@ -93,7 +155,7 @@ pub trait Crdt: Clone + Default + Send + Encode + Decode + 'static {
 pub fn join_all<C: Crdt, I: IntoIterator<Item = C>>(iter: I) -> C {
     let mut acc = C::default();
     for x in iter {
-        acc.merge(&x);
+        let _ = acc.merge(&x);
     }
     acc
 }
@@ -101,7 +163,31 @@ pub fn join_all<C: Crdt, I: IntoIterator<Item = C>>(iter: I) -> C {
 #[cfg(test)]
 pub(crate) mod lawcheck {
     //! Reusable lattice-law checker used by each CRDT's unit tests.
-    use super::Crdt;
+    use super::{Crdt, MergeOutcome};
+
+    /// The trait-v3 contract: `merge -> Changed` iff the target actually
+    /// differs afterwards, and an immediate re-merge is always a no-op.
+    pub fn check_merge_outcome<C: Crdt + PartialEq + std::fmt::Debug>(samples: &[C]) {
+        for a in samples {
+            for b in samples {
+                let mut t = a.clone();
+                let outcome = t.merge(b);
+                assert_eq!(
+                    outcome.is_changed(),
+                    &t != a,
+                    "merge must report Changed iff the target differs \
+                     (target {a:?}, source {b:?}, result {t:?})"
+                );
+                let settled = t.clone();
+                assert_eq!(
+                    t.merge(b),
+                    MergeOutcome::Unchanged,
+                    "re-merging the same state must be a no-op"
+                );
+                assert_eq!(t, settled);
+            }
+        }
+    }
 
     pub fn check_laws<C: Crdt + PartialEq + std::fmt::Debug>(samples: &[C]) {
         for a in samples {

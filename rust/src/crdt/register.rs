@@ -1,6 +1,6 @@
 //! Register CRDTs: last-writer-wins, max and min registers.
 
-use super::Crdt;
+use super::{Crdt, MergeOutcome};
 use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
 
 /// Last-writer-wins register. Ties on timestamp break by contributor id
@@ -41,10 +41,18 @@ impl<T: Clone> LwwRegister<T> {
 }
 
 impl<T: Clone + Send + Encode + Decode + 'static> Crdt for LwwRegister<T> {
-    fn merge(&mut self, other: &Self) {
+    fn merge(&mut self, other: &Self) -> MergeOutcome {
         if let Some((ts, c, v)) = &other.entry {
-            self.set(*ts, *c, v.clone());
+            let newer = match &self.entry {
+                None => true,
+                Some((t, mc, _)) => (*ts, *c) > (*t, *mc),
+            };
+            if newer {
+                self.entry = Some((*ts, *c, v.clone()));
+                return MergeOutcome::Changed;
+            }
         }
+        MergeOutcome::Unchanged
     }
 }
 
@@ -108,10 +116,18 @@ impl<T: Ord + Clone> MaxRegister<T> {
 }
 
 impl<T: Ord + Clone + Send + Encode + Decode + 'static> Crdt for MaxRegister<T> {
-    fn merge(&mut self, other: &Self) {
+    fn merge(&mut self, other: &Self) -> MergeOutcome {
         if let Some(v) = &other.value {
-            self.put(v.clone());
+            let raises = match &self.value {
+                Some(cur) => v > cur,
+                None => true,
+            };
+            if raises {
+                self.value = Some(v.clone());
+                return MergeOutcome::Changed;
+            }
         }
+        MergeOutcome::Unchanged
     }
 }
 
@@ -159,10 +175,18 @@ impl<T: Ord + Clone> MinRegister<T> {
 }
 
 impl<T: Ord + Clone + Send + Encode + Decode + 'static> Crdt for MinRegister<T> {
-    fn merge(&mut self, other: &Self) {
+    fn merge(&mut self, other: &Self) -> MergeOutcome {
         if let Some(v) = &other.value {
-            self.put(v.clone());
+            let lowers = match &self.value {
+                Some(cur) => v < cur,
+                None => true,
+            };
+            if lowers {
+                self.value = Some(v.clone());
+                return MergeOutcome::Changed;
+            }
         }
+        MergeOutcome::Unchanged
     }
 }
 
@@ -183,7 +207,7 @@ impl<T: Ord + Clone + Decode> Decode for MinRegister<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::crdt::lawcheck::{check_codec_roundtrip, check_laws};
+    use crate::crdt::lawcheck::{check_codec_roundtrip, check_laws, check_merge_outcome};
 
     #[test]
     fn lww_laws() {
@@ -193,7 +217,8 @@ mod tests {
         b.set(2, 1, 20);
         let mut c = LwwRegister::new();
         c.set(2, 2, 30); // same ts as b, higher contributor
-        check_laws(&[LwwRegister::new(), a, b, c]);
+        check_laws(&[LwwRegister::new(), a.clone(), b.clone(), c.clone()]);
+        check_merge_outcome(&[LwwRegister::new(), a, b, c]);
     }
 
     #[test]
@@ -225,6 +250,25 @@ mod tests {
         let samples = vec![MaxRegister::new(), a, b];
         check_laws(&samples);
         check_codec_roundtrip(&samples);
+        check_merge_outcome(&samples);
+    }
+
+    #[test]
+    fn register_merge_reports_change() {
+        let mut lo = MaxRegister::new();
+        lo.put(3u64);
+        let mut hi = MaxRegister::new();
+        hi.put(9);
+        assert_eq!(lo.merge(&hi), MergeOutcome::Changed);
+        assert_eq!(lo.merge(&hi), MergeOutcome::Unchanged);
+        assert_eq!(hi.merge(&lo), MergeOutcome::Unchanged); // already dominated
+        let mut min_a = MinRegister::new();
+        min_a.put(5u64);
+        let mut min_b = MinRegister::new();
+        min_b.put(2);
+        assert_eq!(min_a.merge(&min_b), MergeOutcome::Changed);
+        assert_eq!(min_b.merge(&min_a), MergeOutcome::Unchanged);
+        check_merge_outcome(&[MinRegister::new(), min_a, min_b]);
     }
 
     #[test]

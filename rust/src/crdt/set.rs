@@ -3,7 +3,7 @@
 use std::collections::BTreeMap;
 use std::collections::BTreeSet;
 
-use super::Crdt;
+use super::{Crdt, MergeOutcome};
 use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
 
 /// Grow-only set; join = union.
@@ -49,10 +49,17 @@ impl<T: Ord + Clone> GSet<T> {
 }
 
 impl<T: Ord + Clone + Send + Encode + Decode + 'static> Crdt for GSet<T> {
-    fn merge(&mut self, other: &Self) {
+    fn merge(&mut self, other: &Self) -> MergeOutcome {
+        let mut changed = false;
         for x in &other.items {
-            self.items.insert(x.clone());
+            // probe before cloning: the steady-state merge (warmed-up
+            // replicas) carries mostly-present items
+            if !self.items.contains(x) {
+                self.items.insert(x.clone());
+                changed = true;
+            }
         }
+        MergeOutcome::changed_if(changed)
     }
 }
 
@@ -119,9 +126,8 @@ impl<T: Ord + Clone + Send + Encode + Decode + 'static> TwoPSet<T> {
 }
 
 impl<T: Ord + Clone + Send + Encode + Decode + 'static> Crdt for TwoPSet<T> {
-    fn merge(&mut self, other: &Self) {
-        self.added.merge(&other.added);
-        self.removed.merge(&other.removed);
+    fn merge(&mut self, other: &Self) -> MergeOutcome {
+        self.added.merge(&other.added) | self.removed.merge(&other.removed)
     }
 }
 
@@ -204,17 +210,44 @@ impl<T: Ord + Clone + Send + Encode + Decode + 'static> ORSet<T> {
 }
 
 impl<T: Ord + Clone + Send + Encode + Decode + 'static> Crdt for ORSet<T> {
-    fn merge(&mut self, other: &Self) {
-        for (k, tags) in &other.entries {
-            self.entries.entry(k.clone()).or_default().extend(tags.iter().copied());
+    fn merge(&mut self, other: &Self) -> MergeOutcome {
+        fn union_tags<T: Ord + Clone>(
+            dst: &mut BTreeMap<T, BTreeSet<(u64, u64)>>,
+            src: &BTreeMap<T, BTreeSet<(u64, u64)>>,
+        ) -> bool {
+            let mut changed = false;
+            for (k, tags) in src {
+                match dst.get_mut(k) {
+                    Some(mine) => {
+                        for &t in tags {
+                            changed |= mine.insert(t);
+                        }
+                    }
+                    None => {
+                        dst.insert(k.clone(), tags.clone());
+                        changed = true;
+                    }
+                }
+            }
+            changed
         }
-        for (k, tags) in &other.tombs {
-            self.tombs.entry(k.clone()).or_default().extend(tags.iter().copied());
-        }
+        let mut changed = union_tags(&mut self.entries, &other.entries);
+        changed |= union_tags(&mut self.tombs, &other.tombs);
         for (&c, &s) in &other.seqs {
-            let e = self.seqs.entry(c).or_insert(0);
-            *e = (*e).max(s);
+            match self.seqs.get_mut(&c) {
+                Some(e) => {
+                    if s > *e {
+                        *e = s;
+                        changed = true;
+                    }
+                }
+                None => {
+                    self.seqs.insert(c, s);
+                    changed = true;
+                }
+            }
         }
+        MergeOutcome::changed_if(changed)
     }
 }
 
@@ -263,7 +296,7 @@ impl<T: Ord + Clone + Decode> Decode for ORSet<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::crdt::lawcheck::{check_codec_roundtrip, check_laws};
+    use crate::crdt::lawcheck::{check_codec_roundtrip, check_laws, check_merge_outcome};
 
     fn gsamples() -> Vec<GSet<u64>> {
         let mut a = GSet::new();
@@ -288,8 +321,11 @@ mod tests {
     #[test]
     fn gset_merge_is_union() {
         let mut s = gsamples().remove(1);
-        s.merge(&gsamples()[2]);
+        assert_eq!(s.merge(&gsamples()[2]), MergeOutcome::Changed);
         assert_eq!(s.len(), 3);
+        // the union already holds both partners: further merges are no-ops
+        assert_eq!(s.merge(&gsamples()[1]), MergeOutcome::Unchanged);
+        check_merge_outcome(&gsamples());
     }
 
     #[test]
@@ -298,7 +334,7 @@ mod tests {
         a.insert(1u64);
         let mut b = a.clone();
         b.remove(1);
-        a.merge(&b);
+        assert_eq!(a.merge(&b), MergeOutcome::Changed); // tombstone arrived
         assert!(!a.contains(&1));
         // re-add cannot resurrect
         a.insert(1);
@@ -315,7 +351,8 @@ mod tests {
         b.remove(1);
         let mut c = TwoPSet::new();
         c.insert(2);
-        check_laws(&[TwoPSet::new(), a, b, c]);
+        check_laws(&[TwoPSet::new(), a.clone(), b.clone(), c.clone()]);
+        check_merge_outcome(&[TwoPSet::new(), a, b, c]);
     }
 
     #[test]
@@ -337,7 +374,7 @@ mod tests {
         let mut b = base.clone();
         a.remove(&7);
         b.insert(2, 7);
-        a.merge(&b);
+        let _ = a.merge(&b);
         assert!(a.contains(&7)); // B's unobserved tag survives
     }
 
@@ -349,7 +386,8 @@ mod tests {
         b.remove(&1);
         let mut c = ORSet::new();
         c.insert(2, 2);
-        check_laws(&[ORSet::new(), a, b, c]);
+        check_laws(&[ORSet::new(), a.clone(), b.clone(), c.clone()]);
+        check_merge_outcome(&[ORSet::new(), a, b, c]);
     }
 
     #[test]

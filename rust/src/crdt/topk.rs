@@ -8,7 +8,7 @@
 
 use std::collections::BTreeSet;
 
-use super::Crdt;
+use super::{Crdt, MergeOutcome};
 use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
 use crate::util::OrdF64;
 
@@ -101,14 +101,33 @@ impl Crdt for BoundedTopK {
         BoundedTopK::project(self, contributor)
     }
 
-    fn merge(&mut self, other: &Self) {
+    fn merge(&mut self, other: &Self) -> MergeOutcome {
         // Replicas of the same logical aggregate always share k; the
         // defensive max keeps merge total anyway.
+        let mut changed = other.k > self.k;
         self.k = self.k.max(other.k);
+        // Inserted entries may be evicted right back by the truncation
+        // (they ranked below the incumbent top k), in which case they
+        // did not change the state — count them apart from evicted
+        // incumbents, which always do.
+        let mut fresh: Vec<TopKEntry> = Vec::new();
         for e in &other.entries {
-            self.entries.insert(*e);
+            if self.entries.insert(*e) {
+                fresh.push(*e);
+            }
         }
-        self.truncate();
+        let mut evicted_fresh = 0usize;
+        while self.entries.len() > self.k {
+            let min = *self.entries.iter().next().unwrap();
+            self.entries.remove(&min);
+            if fresh.contains(&min) {
+                evicted_fresh += 1;
+            } else {
+                changed = true; // an incumbent fell out of the top k
+            }
+        }
+        changed |= fresh.len() > evicted_fresh; // some fresh entry survived
+        MergeOutcome::changed_if(changed)
     }
 }
 
@@ -142,7 +161,7 @@ impl Decode for BoundedTopK {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::crdt::lawcheck::{check_codec_roundtrip, check_laws};
+    use crate::crdt::lawcheck::{check_codec_roundtrip, check_laws, check_merge_outcome};
 
     fn topk(k: usize, xs: &[(f64, u64)]) -> BoundedTopK {
         let mut t = BoundedTopK::new(k);
@@ -162,6 +181,22 @@ mod tests {
         ];
         check_laws(&samples);
         check_codec_roundtrip(&samples);
+        check_merge_outcome(&samples);
+    }
+
+    #[test]
+    fn merge_of_evicted_entries_is_a_noop() {
+        // other's entries all rank below the incumbent top k: the join
+        // inserts and immediately evicts them — no state change.
+        let mut top = topk(2, &[(8.0, 1), (9.0, 2)]);
+        let low = topk(2, &[(1.0, 3), (2.0, 4)]);
+        let before = top.clone();
+        assert_eq!(top.merge(&low), MergeOutcome::Unchanged);
+        assert_eq!(top, before);
+        // the reverse direction evicts incumbents: Changed
+        let mut low = low;
+        assert_eq!(low.merge(&before), MergeOutcome::Changed);
+        assert_eq!(low, before);
     }
 
     #[test]

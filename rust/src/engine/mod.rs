@@ -66,6 +66,22 @@ pub struct ClusterMetrics {
     /// Sharded-state merges executed inline (below the parallel
     /// threshold, or layout-mismatch rehashes).
     pub shard_serial_merges: Arc<AtomicU64>,
+    /// Gossip payloads whose join inflated the receiving replica
+    /// (trait-v3 change-reporting merges).
+    pub merge_changed: Arc<AtomicU64>,
+    /// Gossip payloads whose join was a complete no-op — the receiver
+    /// already subsumed everything in them.
+    pub merge_noop: Arc<AtomicU64>,
+    /// Bytes of received payloads whose join was a *complete* no-op
+    /// (whole-payload granularity: a payload with even one inflating
+    /// unit counts zero here). The traffic a smarter sync protocol
+    /// would not have shipped; full-sync anti-entropy keeps a baseline
+    /// of these by design.
+    pub redundant_gossip_bytes: Arc<AtomicU64>,
+    /// Delta gossip rounds skipped entirely because the replica had
+    /// nothing dirty and no watermark movement (no encode, no
+    /// broadcast — the empty-delta fast path).
+    pub gossip_skipped: Arc<AtomicU64>,
 }
 
 impl ClusterMetrics {
@@ -84,6 +100,10 @@ impl ClusterMetrics {
             shard_gossip_bytes: Arc::new(Mutex::new(Vec::new())),
             shard_parallel_merges: Arc::new(AtomicU64::new(0)),
             shard_serial_merges: Arc::new(AtomicU64::new(0)),
+            merge_changed: Arc::new(AtomicU64::new(0)),
+            merge_noop: Arc::new(AtomicU64::new(0)),
+            redundant_gossip_bytes: Arc::new(AtomicU64::new(0)),
+            gossip_skipped: Arc::new(AtomicU64::new(0)),
         }
     }
 

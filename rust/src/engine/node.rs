@@ -250,7 +250,19 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
                 MsgKind::Heartbeat => membership.heard_from(msg.from, now),
                 MsgKind::Gossip => {
                     if let Ok(other) = P::Shared::from_bytes(&msg.payload) {
-                        shared.join(&other);
+                        // Change-reporting join (trait v3): only units
+                        // that actually inflated were marked dirty, so a
+                        // received full-sync payload we already subsume
+                        // costs nothing on the next delta round — and
+                        // the outcome feeds the redundancy counters.
+                        if shared.join(&other).is_changed() {
+                            metrics.merge_changed.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            metrics.merge_noop.fetch_add(1, Ordering::Relaxed);
+                            metrics
+                                .redundant_gossip_bytes
+                                .fetch_add(msg.payload.len() as u64, Ordering::Relaxed);
+                        }
                     }
                     membership.heard_from(msg.from, now);
                 }
@@ -357,14 +369,15 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
             // watermark bump), so skip the drain entirely; recovery
             // joins the full accumulator already.
             if consumed > 0 {
-                st.own.join_delta_into(&mut shared);
+                let _ = st.own.join_delta_into(&mut shared);
             } else {
                 // contract (documented on Processor::process): an empty
                 // batch must not mutate `own` — anything it wrote here
-                // would sit undrained until the next consuming batch
-                debug_assert_eq!(
-                    st.own.dirty_windows(),
-                    0,
+                // (a window insert OR a watermark bump) would sit
+                // undrained until the next consuming batch, and a
+                // drained partition might never have one
+                debug_assert!(
+                    !st.own.has_delta(),
                     "processor mutated `own` on an empty batch"
                 );
             }
@@ -399,34 +412,44 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
                 cfg.effective_gossip_fanout(),
                 gossip_round,
             );
-            // Discard per-shard byte samples accumulated by checkpoint
-            // encodes on this thread, so the drain below attributes
-            // gossip bytes only.
-            let _ = crate::shard::take_shard_encoded_bytes();
-            // Encode once per round into an Arc shared by every
-            // recipient; the previous round's size pre-sizes the buffer
-            // so a round is a single exact allocation (the payload used
-            // to be re-wrapped per broadcast call and, before that,
-            // cloned per recipient).
-            let mut w = Writer::with_capacity(gossip_size_hint);
-            if plan.full {
-                shared.encode(&mut w);
-                // Every peer is about to see the full state (delta-mode
-                // full-sync forces fanout = all; non-delta mode has no
-                // delta reader at all): the dirty markers can drop
-                // without losing any peer's missing windows.
-                shared.mark_clean();
+            if !plan.full && !shared.has_delta() {
+                // Empty-delta fast path: nothing dirty and no watermark
+                // movement since the last drain — the delta would carry
+                // no information, so skip the encode AND the broadcast
+                // (the round still counts toward the full-sync cadence,
+                // which keeps anti-entropy flowing on idle replicas).
+                metrics.gossip_skipped.fetch_add(1, Ordering::Relaxed);
             } else {
-                shared.take_delta().encode(&mut w);
+                // Discard per-shard byte samples accumulated by
+                // checkpoint encodes on this thread, so the drain below
+                // attributes gossip bytes only.
+                let _ = crate::shard::take_shard_encoded_bytes();
+                // Encode once per round into an Arc shared by every
+                // recipient; the previous round's size pre-sizes the
+                // buffer so a round is a single exact allocation (the
+                // payload used to be re-wrapped per broadcast call and,
+                // before that, cloned per recipient).
+                let mut w = Writer::with_capacity(gossip_size_hint);
+                if plan.full {
+                    shared.encode(&mut w);
+                    // Every peer is about to see the full state
+                    // (delta-mode full-sync forces fanout = all;
+                    // non-delta mode has no delta reader at all): the
+                    // dirty markers can drop without losing any peer's
+                    // missing windows.
+                    shared.mark_clean();
+                } else {
+                    shared.take_delta().encode(&mut w);
+                }
+                gossip_size_hint = w.len();
+                metrics.add_shard_gossip_bytes(&crate::shard::take_shard_encoded_bytes());
+                let payload = Arc::new(w.into_bytes());
+                metrics
+                    .gossip_payload_bytes
+                    .fetch_add(payload.len() as u64, Ordering::Relaxed);
+                bus.broadcast_sample_shared(id, MsgKind::Gossip, payload, plan.fanout);
+                metrics.gossip_sent.fetch_add(1, Ordering::Relaxed);
             }
-            gossip_size_hint = w.len();
-            metrics.add_shard_gossip_bytes(&crate::shard::take_shard_encoded_bytes());
-            let payload = Arc::new(w.into_bytes());
-            metrics
-                .gossip_payload_bytes
-                .fetch_add(payload.len() as u64, Ordering::Relaxed);
-            bus.broadcast_sample_shared(id, MsgKind::Gossip, payload, plan.fanout);
-            metrics.gossip_sent.fetch_add(1, Ordering::Relaxed);
             last_gossip = now;
 
             // 7. Compaction, piggybacked on the gossip cadence: drop
@@ -506,7 +529,7 @@ fn recover_partition<P: Processor>(
         if let Some((local, own)) = decode_checkpoint_state::<P::Shared, P::Local>(&cp.state) {
             // The recovered contribution re-joins the replica; if newer
             // state already arrived via gossip the join is a no-op.
-            shared.join(&own);
+            let _ = shared.join(&own);
             metrics.recoveries.fetch_add(1, Ordering::Relaxed);
             return PartState {
                 nxt_idx: cp.nxt_idx,

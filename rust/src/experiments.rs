@@ -143,6 +143,20 @@ pub struct DataPlaneStats {
     pub gaps: u64,
     /// Physical duplicates dropped by the sink.
     pub duplicates: u64,
+    /// Gossip payloads whose join inflated the receiving replica
+    /// (change-reporting merges, Crdt trait v3).
+    pub merge_changed: u64,
+    /// Gossip payloads whose join was a complete no-op on the receiver.
+    pub merge_noop: u64,
+    /// Bytes of received payloads whose join was a complete no-op
+    /// (whole-payload granularity — a partially-redundant payload
+    /// counts zero). The redundancy the anti-entropy duty cycle pays on
+    /// purpose; once nothing diverges, full-sync payloads land here and
+    /// delta rounds contribute ~nothing.
+    pub redundant_gossip_bytes: u64,
+    /// Delta rounds skipped entirely (nothing dirty, no watermark
+    /// movement): no encode, no broadcast.
+    pub gossip_skipped: u64,
     /// Encoded gossip bytes per shard (index = shard id) for sharded
     /// keyed state; empty for unsharded queries. Deltas skip clean
     /// shards, so the distribution shows how much of the map each
@@ -224,6 +238,10 @@ fn data_plane_stats(
         records_read: in_read + out_read,
         gaps: metrics.gaps.load(Ordering::Acquire),
         duplicates: metrics.duplicates.load(Ordering::Acquire),
+        merge_changed: metrics.merge_changed.load(Ordering::Acquire),
+        merge_noop: metrics.merge_noop.load(Ordering::Acquire),
+        redundant_gossip_bytes: metrics.redundant_gossip_bytes.load(Ordering::Acquire),
+        gossip_skipped: metrics.gossip_skipped.load(Ordering::Acquire),
         shard_gossip_bytes: metrics.shard_gossip_bytes.lock().unwrap().clone(),
         shard_parallel_merges: metrics.shard_parallel_merges.load(Ordering::Acquire),
         shard_serial_merges: metrics.shard_serial_merges.load(Ordering::Acquire),
@@ -644,6 +662,10 @@ pub fn bench_report_json(pr: &str, quick: bool, scenarios: &[BenchScenario]) -> 
             .f64_field("payload_clones_per_event", per(r.data_plane.payload_clones))
             .u64_field("dedup_duplicates", r.data_plane.duplicates)
             .u64_field("seq_gaps", r.data_plane.gaps)
+            .u64_field("merge_changed", r.data_plane.merge_changed)
+            .u64_field("merge_noop", r.data_plane.merge_noop)
+            .u64_field("redundant_gossip_bytes", r.data_plane.redundant_gossip_bytes)
+            .u64_field("gossip_skipped", r.data_plane.gossip_skipped)
             .u64_field("shard_count", r.data_plane.shard_gossip_bytes.len() as u64)
             .arr_field("shard_gossip_bytes");
         for b in &r.data_plane.shard_gossip_bytes {
@@ -689,6 +711,9 @@ mod tests {
         assert!(r.data_plane.records_read >= r.consumed);
         assert!(r.data_plane.gossip_msgs > 0);
         assert!(r.data_plane.gossip_bytes_encoded > 0);
+        // every received gossip payload was classified by its join
+        // outcome (change-reporting merges)
+        assert!(r.data_plane.merge_changed + r.data_plane.merge_noop > 0);
         // broadcast fan-out: wire volume is the encoded volume times the
         // recipients each shared-Arc payload reached
         assert!(r.data_plane.gossip_bytes_wire >= r.data_plane.gossip_bytes_encoded);
@@ -760,6 +785,10 @@ mod tests {
             "payload_clones_per_event",
             "dedup_duplicates",
             "seq_gaps",
+            "merge_changed",
+            "merge_noop",
+            "redundant_gossip_bytes",
+            "gossip_skipped",
             "shard_count",
             "shard_gossip_bytes",
             "shard_parallel_merges",

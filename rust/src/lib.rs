@@ -10,12 +10,17 @@
 //! * substrates: [`codec`], [`clock`], [`log`] (the Kafka substitute),
 //!   [`net`] (simulated network), [`storage`] (checkpoint store),
 //!   [`metrics`], [`config`];
-//! * the paper's abstractions: [`crdt`] (state-based CRDTs), [`wcrdt`]
-//!   (Windowed CRDTs, Algorithm 1), [`shard`] (sharded keyed state: a
-//!   key-partitioned `MapCrdt` with per-shard delta gossip and a
-//!   parallel merge pool — the layer that lets keyed aggregations like
-//!   Q4/Q5 scale past one core and one whole-map gossip payload per
-//!   replica), [`api`] (the procedural programming model of Table 1);
+//! * the paper's abstractions: [`crdt`] (state-based CRDTs; since trait
+//!   v3 every join reports its effect — `merge ->`
+//!   [`crdt::MergeOutcome`], with per-key/per-shard changed-sets via
+//!   the `merge_report` hooks — which is what confines delta
+//!   dirty-marking to genuine changes), [`wcrdt`] (Windowed CRDTs,
+//!   Algorithm 1; `merge` returns the exact set of inflated windows),
+//!   [`shard`] (sharded keyed state: a key-partitioned `MapCrdt` with
+//!   per-shard delta gossip and a parallel merge pool — the layer that
+//!   lets keyed aggregations like Q4/Q5 scale past one core and one
+//!   whole-map gossip payload per replica), [`api`] (the procedural
+//!   programming model of Table 1);
 //! * the engines: [`engine`] (Holon: decentralized nodes, work stealing,
 //!   Algorithm 2) and [`baseline`] (the centralized Flink-model used as
 //!   the paper's comparison system);
@@ -101,6 +106,28 @@
 //! Sharding never changes a single output byte — `tests/determinism.rs`
 //! pins sharded vs unsharded Q4/Q5 byte-equality across shard counts
 //! {1, 4, 16} under seeded fault schedules.
+//!
+//! ## Change-reporting merges (Crdt trait v3)
+//!
+//! Delta gossip is only as good as its dirty markers. Pre-v3, merging a
+//! *received* full-sync payload had to conservatively re-mark every
+//! window/shard dirty (a `()`-returning merge cannot tell a no-op join
+//! from new information), so the delta round after each anti-entropy
+//! round re-shipped ~full state. Trait v3 makes every join report its
+//! effect: [`crdt::Crdt::merge`] returns [`crdt::MergeOutcome`]
+//! (`Changed` **iff** the target actually differs — a contract pinned by
+//! the `merge_outcome_*` property suites), `MapCrdt`/`ShardedMapCrdt`
+//! expose per-key/per-shard changed-sets via `merge_report`, and
+//! [`wcrdt::WindowedCrdt::merge`] returns a [`wcrdt::MergeReport`] with
+//! the exact set of inflated windows. The engine drills these through
+//! [`api::SharedState`]: the gossip receive path dirty-marks only what
+//! genuinely inflated (counted by `ClusterMetrics::{merge_changed,
+//! merge_noop}` and `redundant_gossip_bytes`), and a replica with
+//! nothing dirty and no watermark movement skips the delta-round
+//! encode/broadcast entirely (`gossip_skipped`).
+//! `tests/amplification.rs` holds the headline regression: the
+//! post-full-sync delta round ships <5% of full-state bytes when
+//! replicas have not diverged.
 
 pub mod api;
 pub mod baseline;

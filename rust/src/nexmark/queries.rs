@@ -827,7 +827,7 @@ mod tests {
         let mut agg = ScalarAggregator;
         let mut ctx = Ctx::new(partition, now, &mut agg);
         q.process(&mut ctx, shared, own, local, events);
-        shared.join(own);
+        let _ = shared.join(own);
         ctx.into_outputs()
     }
 
@@ -901,8 +901,8 @@ mod tests {
         );
         // gossip both ways
         use crate::api::SharedState;
-        shared0.join(&shared1);
-        shared1.join(&shared0);
+        let _ = shared0.join(&shared1);
+        let _ = shared1.join(&shared0);
 
         let outs0 = run(&q, &mut shared0, &mut own0, &mut local0, 0, 2100, &[]);
         let outs1 = run(&q, &mut shared1, &mut own1, &mut local1, 1, 2100, &[]);
@@ -971,7 +971,7 @@ mod tests {
             &[bid_record(0, 150, 1, 1.0), bid_record(1, 1100, 1, 1.0)],
         );
         use crate::api::SharedState;
-        shared0.join(&shared1);
+        let _ = shared0.join(&shared1);
         let outs = run(&q, &mut shared0, &mut own0, &mut local0, 0, 2100, &[]);
         assert_eq!(outs.len(), 1);
         let o = RatioOut::from_bytes(&outs[0].payload).unwrap();

@@ -60,29 +60,41 @@ pub fn take_merge_stats() -> (u64, u64) {
 }
 
 /// Join `src` into `dst` shard-by-shard across up to `threads` scoped
-/// workers. Caller guarantees `dst.len() == src.len()` (same layout).
-pub(crate) fn merge_pairwise<K, C>(dst: &mut [MapCrdt<K, C>], src: &[MapCrdt<K, C>], threads: usize)
-where
+/// workers, OR-ing each pair's change flag into `changed` (index =
+/// shard id) so the caller can dirty-mark only the shards that actually
+/// inflated. Caller guarantees `dst.len() == src.len() == changed.len()`
+/// (same layout).
+pub(crate) fn merge_pairwise<K, C>(
+    dst: &mut [MapCrdt<K, C>],
+    src: &[MapCrdt<K, C>],
+    changed: &mut [bool],
+    threads: usize,
+) where
     K: Ord + Clone + Send + Sync + Encode + Decode + 'static,
     C: Crdt + Sync,
 {
     debug_assert_eq!(dst.len(), src.len());
+    debug_assert_eq!(dst.len(), changed.len());
     if dst.is_empty() {
         return;
     }
     let threads = threads.clamp(1, dst.len());
     if threads <= 1 {
-        for (d, s) in dst.iter_mut().zip(src) {
-            d.merge(s);
+        for ((d, s), c) in dst.iter_mut().zip(src).zip(changed.iter_mut()) {
+            *c |= d.merge(s).is_changed();
         }
         return;
     }
     let chunk = dst.len().div_ceil(threads);
     std::thread::scope(|scope| {
-        for (dc, sc) in dst.chunks_mut(chunk).zip(src.chunks(chunk)) {
+        for ((dc, sc), cc) in dst
+            .chunks_mut(chunk)
+            .zip(src.chunks(chunk))
+            .zip(changed.chunks_mut(chunk))
+        {
             scope.spawn(move || {
-                for (d, s) in dc.iter_mut().zip(sc) {
-                    d.merge(s);
+                for ((d, s), c) in dc.iter_mut().zip(sc).zip(cc.iter_mut()) {
+                    *c |= d.merge(s).is_changed();
                 }
             });
         }
@@ -111,9 +123,19 @@ mod tests {
         let src = shard_vec(8, 7);
         let mut serial = shard_vec(8, 1);
         let mut parallel = serial.clone();
-        merge_pairwise(&mut serial, &src, 1);
-        merge_pairwise(&mut parallel, &src, 4);
+        let mut changed_serial = vec![false; 8];
+        let mut changed_parallel = vec![false; 8];
+        merge_pairwise(&mut serial, &src, &mut changed_serial, 1);
+        merge_pairwise(&mut parallel, &src, &mut changed_parallel, 4);
         assert_eq!(serial, parallel);
+        // every pair inflated (disjoint contributor salts), and both
+        // execution shapes report identical per-shard change flags
+        assert_eq!(changed_serial, changed_parallel);
+        assert!(changed_serial.iter().all(|&c| c));
+        // re-merging the same source is a cross-shard no-op
+        let mut changed_again = vec![false; 8];
+        merge_pairwise(&mut parallel, &src, &mut changed_again, 4);
+        assert!(changed_again.iter().all(|&c| !c));
     }
 
     #[test]

@@ -42,7 +42,7 @@ pub mod exec;
 use std::cell::RefCell;
 
 use crate::codec::{Decode, DecodeError, DecodeResult, Encode, Reader, Writer};
-use crate::crdt::{Crdt, MapCrdt};
+use crate::crdt::{Crdt, MapCrdt, MergeOutcome};
 
 /// Default seed folded into every key hash (any fixed value works; it
 /// only has to be identical on all replicas of a deployment).
@@ -285,6 +285,95 @@ impl<K: Ord + Clone + Encode, C: Crdt> ShardedMapCrdt<K, C> {
     }
 }
 
+impl<K, C> ShardedMapCrdt<K, C>
+where
+    K: Ord + Clone + Send + Sync + Encode + Decode + 'static,
+    C: Crdt + Sync,
+{
+    /// Pointwise join with a per-shard changed-set: `on_changed` fires
+    /// once for every shard index whose state actually inflated (the
+    /// trait-v3 `merge_report` hook). Dirty markers are set on exactly
+    /// those shards — a no-op join (e.g. a received full-sync payload
+    /// the replica already subsumes) marks nothing, so the next delta
+    /// round ships nothing.
+    pub fn merge_report(
+        &mut self,
+        other: &Self,
+        mut on_changed: impl FnMut(usize),
+    ) -> MergeOutcome {
+        if other.shards.is_empty() {
+            return MergeOutcome::Unchanged;
+        }
+        if self.shards.is_empty() {
+            // bottom adopts the partner's layout; everything merged in
+            // is new information, so every non-empty shard is dirty
+            // (transitive delta propagation).
+            self.seed = other.seed;
+            self.shards = other.shards.clone();
+            self.dirty = other.shards.iter().map(|s| !s.is_empty()).collect();
+            let mut changed = false;
+            for (i, d) in self.dirty.iter().enumerate() {
+                if *d {
+                    changed = true;
+                    on_changed(i);
+                }
+            }
+            return MergeOutcome::changed_if(changed);
+        }
+        if self.shards.len() == other.shards.len() && self.seed == other.seed {
+            // The fast path: identical layouts join shard-by-shard —
+            // disjoint key sets, so pairs are independent and large
+            // joins fan out across the scoped worker pool. Each pair
+            // reports its own outcome; only inflated shards dirty.
+            let mut round = vec![false; self.shards.len()];
+            let parallel = self.shards.len() >= PAR_MIN_SHARDS
+                && self.len() + other.len() >= PAR_MIN_ENTRIES
+                && exec::max_threads() > 1;
+            if parallel {
+                exec::merge_pairwise(
+                    &mut self.shards,
+                    &other.shards,
+                    &mut round,
+                    exec::max_threads(),
+                );
+            } else {
+                exec::merge_pairwise(&mut self.shards, &other.shards, &mut round, 1);
+            }
+            exec::note_merge(parallel);
+            let mut changed = false;
+            for (i, &c) in round.iter().enumerate() {
+                if c {
+                    self.dirty[i] = true;
+                    changed = true;
+                    on_changed(i);
+                }
+            }
+            return MergeOutcome::changed_if(changed);
+        }
+        // Layout mismatch (misconfigured replicas or a reshard in
+        // flight): rehash into our layout. Slow but correct — shard
+        // assignment is deterministic per layout, so this is still the
+        // pointwise map join.
+        let mut reported = vec![false; self.shards.len()];
+        let mut changed = false;
+        for shard in &other.shards {
+            for (k, v) in shard.iter() {
+                let idx = self.shard_of(k);
+                if self.shards[idx].merge_entry(k, v).is_changed() {
+                    self.dirty[idx] = true;
+                    changed = true;
+                    if !reported[idx] {
+                        reported[idx] = true;
+                        on_changed(idx);
+                    }
+                }
+            }
+        }
+        exec::note_merge(false);
+        MergeOutcome::changed_if(changed)
+    }
+}
+
 impl<K, C> Crdt for ShardedMapCrdt<K, C>
 where
     K: Ord + Clone + Send + Sync + Encode + Decode + 'static,
@@ -294,49 +383,8 @@ where
         self.project_with(|c| c.project(contributor))
     }
 
-    fn merge(&mut self, other: &Self) {
-        if other.shards.is_empty() {
-            return;
-        }
-        if self.shards.is_empty() {
-            // bottom adopts the partner's layout; everything merged in
-            // is new information, so every non-empty shard is dirty
-            // (transitive delta propagation).
-            self.seed = other.seed;
-            self.shards = other.shards.clone();
-            self.dirty = other.shards.iter().map(|s| !s.is_empty()).collect();
-            return;
-        }
-        if self.shards.len() == other.shards.len() && self.seed == other.seed {
-            // The fast path: identical layouts join shard-by-shard —
-            // disjoint key sets, so pairs are independent and large
-            // joins fan out across the scoped worker pool.
-            for (d, s) in self.dirty.iter_mut().zip(&other.shards) {
-                *d |= !s.is_empty();
-            }
-            let parallel = self.shards.len() >= PAR_MIN_SHARDS
-                && self.len() + other.len() >= PAR_MIN_ENTRIES
-                && exec::max_threads() > 1;
-            if parallel {
-                exec::merge_pairwise(&mut self.shards, &other.shards, exec::max_threads());
-            } else {
-                for (mine, theirs) in self.shards.iter_mut().zip(&other.shards) {
-                    mine.merge(theirs);
-                }
-            }
-            exec::note_merge(parallel);
-            return;
-        }
-        // Layout mismatch (misconfigured replicas or a reshard in
-        // flight): rehash into our layout. Slow but correct — shard
-        // assignment is deterministic per layout, so this is still the
-        // pointwise map join.
-        for shard in &other.shards {
-            for (k, v) in shard.iter() {
-                self.entry(k.clone()).merge(v);
-            }
-        }
-        exec::note_merge(false);
+    fn merge(&mut self, other: &Self) -> MergeOutcome {
+        self.merge_report(other, |_| {})
     }
 
     fn take_delta(&mut self) -> Self {
@@ -347,26 +395,29 @@ where
         ShardedMapCrdt::mark_clean(self);
     }
 
-    fn join_delta_into(&mut self, dst: &mut Self) {
+    fn join_delta_into(&mut self, dst: &mut Self) -> MergeOutcome {
         if self.shards.is_empty() {
-            return;
+            return MergeOutcome::Unchanged;
         }
         if dst.shards.len() != self.shards.len() || dst.seed != self.seed {
             // bottom dst (adopts the layout) or a mismatched layout:
             // the full-state path is correct and these cases are rare
-            dst.merge(self);
+            let outcome = dst.merge(self);
             self.dirty.fill(false);
-            return;
+            return outcome;
         }
-        // same layout: drain only the dirty shards, by reference
+        // same layout: drain only the dirty shards, by reference; dst
+        // dirty-marks exactly the shards its state inflated on
+        let mut changed = false;
         for (i, (mine, theirs)) in dst.shards.iter_mut().zip(&self.shards).enumerate() {
-            if self.dirty[i] && !theirs.is_empty() {
-                mine.merge(theirs);
+            if self.dirty[i] && !theirs.is_empty() && mine.merge(theirs).is_changed() {
                 dst.dirty[i] = true;
+                changed = true;
             }
         }
         self.dirty.fill(false);
         exec::note_merge(false);
+        MergeOutcome::changed_if(changed)
     }
 }
 
@@ -517,8 +568,10 @@ mod tests {
     fn cross_layout_merge_converges_logically() {
         let mut a = sharded(4, &PAIRS[..3]);
         let b = sharded(16, &PAIRS[3..]);
-        a.merge(&b);
+        assert_eq!(a.merge(&b), MergeOutcome::Changed);
         assert_eq!(a, sharded(4, PAIRS), "rehash merge must reach the same join");
+        // re-merging the cross-layout partner is now a no-op
+        assert_eq!(a.merge(&b), MergeOutcome::Unchanged);
         // and equality itself is layout-independent
         assert_eq!(sharded(4, PAIRS), sharded(16, PAIRS));
     }
@@ -527,7 +580,7 @@ mod tests {
     fn bottom_adopts_layout_on_merge() {
         let mut bottom: ShardedMapCrdt<u64, GCounter> = ShardedMapCrdt::new();
         assert_eq!(bottom.shard_count(), 0);
-        bottom.merge(&sharded(8, PAIRS));
+        assert_eq!(bottom.merge(&sharded(8, PAIRS)), MergeOutcome::Changed);
         assert_eq!(bottom.shard_count(), 8);
         assert_eq!(bottom, sharded(8, PAIRS));
         assert!(bottom.dirty_shards() > 0, "merged-in shards propagate as dirty");
@@ -549,7 +602,7 @@ mod tests {
         assert_eq!(back, d);
         // and joining the delta onto a stale replica converges it
         let mut stale = sharded(8, PAIRS);
-        stale.merge(&back);
+        let _ = stale.merge(&back);
         assert_eq!(stale, m);
     }
 
@@ -564,6 +617,45 @@ mod tests {
             delta_bytes < full_bytes,
             "delta ({delta_bytes} B) must be smaller than full state ({full_bytes} B)"
         );
+    }
+
+    #[test]
+    fn merge_report_names_exactly_the_inflated_shards() {
+        let mut m = sharded(8, PAIRS);
+        ShardedMapCrdt::mark_clean(&mut m);
+        // a partner that only extends key 9's counter
+        let mut partner = sharded(8, PAIRS);
+        partner.entry(9).add(1, 100);
+        let nine = partner.shard_of(&9);
+        let mut changed = Vec::new();
+        let outcome = m.merge_report(&partner, |i| changed.push(i));
+        assert_eq!(outcome, MergeOutcome::Changed);
+        assert_eq!(changed, vec![nine], "only key 9's shard inflated");
+        assert_eq!(m.dirty_shards(), 1, "dirty-marking follows the report");
+        // re-merging the same partner: nothing inflates, nothing dirties
+        ShardedMapCrdt::mark_clean(&mut m);
+        let mut changed = Vec::new();
+        assert_eq!(
+            m.merge_report(&partner, |i| changed.push(i)),
+            MergeOutcome::Unchanged
+        );
+        assert!(changed.is_empty());
+        assert_eq!(m.dirty_shards(), 0);
+    }
+
+    #[test]
+    fn noop_full_sync_merge_leaves_the_delta_empty() {
+        // The amplification fix at the shard level: a received full-sync
+        // payload the replica already subsumes must not re-mark shards
+        // dirty — the next delta round ships nothing instead of ~full
+        // state (failing before trait v3: merge marked every non-empty
+        // received shard).
+        let mut replica = sharded(8, PAIRS);
+        let _ = ShardedMapCrdt::take_delta(&mut replica); // markers clean
+        let full_sync = sharded(8, PAIRS); // identical remote full state
+        assert_eq!(replica.merge(&full_sync), MergeOutcome::Unchanged);
+        assert_eq!(replica.dirty_shards(), 0, "no-op join must not dirty");
+        assert!(ShardedMapCrdt::take_delta(&mut replica).is_empty());
     }
 
     #[test]
@@ -585,9 +677,9 @@ mod tests {
         assert_eq!(p.shard_count(), 4);
         assert_eq!(p.get(&1).unwrap().value(), 2);
         assert_eq!(p.get(&9).unwrap().value(), 3);
-        // projection then join restores the contribution
+        // projection then join restores the contribution (a no-op join)
         let mut joined = m.clone();
-        joined.merge(&p);
+        assert_eq!(joined.merge(&p), MergeOutcome::Unchanged);
         assert_eq!(joined, m);
     }
 
@@ -604,14 +696,14 @@ mod tests {
         exec::set_max_threads(4);
         let _ = exec::take_merge_stats(); // reset this thread's counters
         let mut par = big_a.clone();
-        par.merge(&big_b);
+        let _ = par.merge(&big_b);
         exec::set_max_threads(0);
         let (parallel, _serial) = exec::take_merge_stats();
         assert_eq!(parallel, 1, "large same-layout merge must use the pool");
         // serial oracle: pairwise merge without the pool
         let mut serial = big_a.clone();
         for (mine, theirs) in serial.shards.iter_mut().zip(&big_b.shards) {
-            mine.merge(theirs);
+            let _ = mine.merge(theirs);
         }
         serial.dirty = par.dirty.clone();
         assert_eq!(par, serial);
@@ -621,7 +713,7 @@ mod tests {
     fn small_merges_stay_inline() {
         let _ = exec::take_merge_stats();
         let mut a = sharded(8, PAIRS);
-        a.merge(&sharded(8, PAIRS));
+        let _ = a.merge(&sharded(8, PAIRS));
         let (parallel, serial) = exec::take_merge_stats();
         assert_eq!((parallel, serial), (0, 1), "tiny merges must not spawn threads");
     }
@@ -718,16 +810,17 @@ mod tests {
 
         let mut dst_a = sharded(8, &PAIRS[..3]);
         let mut dst_b = dst_a.clone();
-        Crdt::join_delta_into(&mut src_a, &mut dst_a);
-        dst_b.merge(&Crdt::take_delta(&mut src_b));
+        let oc_a = Crdt::join_delta_into(&mut src_a, &mut dst_a);
+        let oc_b = dst_b.merge(&Crdt::take_delta(&mut src_b));
         assert_eq!(dst_a, dst_b);
+        assert_eq!(oc_a, oc_b, "both drain shapes report the same outcome");
         assert_eq!(src_a.dirty_shards(), 0, "drain clears the markers");
         // dst marks exactly the drained shards dirty (transitive gossip)
         assert_eq!(dst_a.dirty_shards(), dst_b.dirty_shards());
         // bottom dst adopts the layout through the fallback path
         let mut src_c = sharded(4, PAIRS);
         let mut bottom: ShardedMapCrdt<u64, GCounter> = ShardedMapCrdt::new();
-        Crdt::join_delta_into(&mut src_c, &mut bottom);
+        let _ = Crdt::join_delta_into(&mut src_c, &mut bottom);
         assert_eq!(bottom, sharded(4, PAIRS));
     }
 
@@ -763,8 +856,8 @@ mod tests {
         .unwrap();
         replica.increment_watermark(1, 1200);
         let dr = replica.take_delta();
-        replica.merge(&w); // full state one way
-        w.merge(&dr); // delta the other
+        let _ = replica.merge(&w); // full state one way
+        let _ = w.merge(&dr); // delta the other
         assert_eq!(replica, w);
         let v = w.window_value(0).unwrap();
         assert_eq!(v.get(&1).unwrap().value(), 12);

@@ -393,7 +393,7 @@ fn apply_mutation(a: &mut RunArtifacts, m: Mutation) {
                         let mut skew: WindowedCrdt<GCounter> =
                             WindowedCrdt::new(assigner, std::iter::empty());
                         let _ = skew.insert_with(0, ts, |c| c.add(u64::MAX, 1));
-                        w.merge(&skew);
+                        let _ = w.merge(&skew);
                         *bytes = w.to_bytes();
                     }
                     Err(_) => {

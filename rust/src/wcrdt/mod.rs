@@ -31,7 +31,7 @@ pub use wlocal::{Local, WLocal};
 use std::collections::BTreeMap;
 
 use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
-use crate::crdt::Crdt;
+use crate::crdt::{Crdt, MergeOutcome};
 use crate::util::{PartitionId, SimTime};
 
 /// Errors from WCRDT operations.
@@ -41,6 +41,30 @@ pub enum WcrdtError {
     /// (Algorithm 1 line 5: `if ts < progress[self] then error`).
     #[error("insert at ts={ts} below own watermark {watermark}")]
     LateInsert { ts: SimTime, watermark: SimTime },
+}
+
+/// What a [`WindowedCrdt::merge`] actually did — the windowed face of
+/// the trait-v3 change-reporting contract. The engine's receive path
+/// reads this to dirty-mark only the windows that genuinely inflated;
+/// a received full-sync payload the replica already subsumes reports
+/// an empty set, killing the post-anti-entropy delta amplification.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MergeReport {
+    /// Windows whose state actually inflated (ascending window id).
+    pub changed_windows: Vec<WindowId>,
+    /// Some progress (watermark) entry was raised or added.
+    pub progress_changed: bool,
+    /// `compacted_below` advanced.
+    pub compaction_advanced: bool,
+}
+
+impl MergeReport {
+    /// Collapse to the scalar outcome: did the target change at all?
+    pub fn outcome(&self) -> MergeOutcome {
+        MergeOutcome::changed_if(
+            !self.changed_windows.is_empty() || self.progress_changed || self.compaction_advanced,
+        )
+    }
 }
 
 /// A windowed, replicated, convergent aggregate (Algorithm 1).
@@ -56,6 +80,15 @@ pub struct WindowedCrdt<C: Crdt> {
     /// — local metadata (not serialized, not part of equality) backing
     /// delta-based synchronization (paper §7 future work).
     dirty: std::collections::BTreeSet<WindowId>,
+    /// Whether any progress entry was raised since the last
+    /// [`take_delta`](Self::take_delta) / [`mark_clean`](Self::mark_clean)
+    /// — sync metadata like `dirty`. Deltas always carry the (small)
+    /// full progress map, so a replica whose only news is watermark
+    /// movement still has a (tiny) delta to ship; a replica with neither
+    /// dirty windows nor progress movement has nothing to gossip at all
+    /// ([`has_delta`](Self::has_delta)), which is what lets the engine
+    /// skip encoding/broadcasting empty delta rounds entirely.
+    progress_dirty: bool,
 }
 
 impl<C: Crdt + PartialEq> PartialEq for WindowedCrdt<C> {
@@ -82,6 +115,7 @@ impl<C: Crdt> WindowedCrdt<C> {
             progress,
             compacted_below: 0,
             dirty: std::collections::BTreeSet::new(),
+            progress_dirty: false,
         }
     }
 
@@ -137,6 +171,7 @@ impl<C: Crdt> WindowedCrdt<C> {
         let e = self.progress.entry(myself).or_insert(0);
         if *e < ts {
             *e = ts;
+            self.progress_dirty = true;
         }
     }
 
@@ -186,24 +221,59 @@ impl<C: Crdt> WindowedCrdt<C> {
         }
     }
 
-    /// Algorithm 1 `MERGE`: join windows pointwise and progress by max.
-    /// Merged windows are marked dirty so deltas propagate transitively
-    /// through sampled gossip.
-    pub fn merge(&mut self, other: &Self) {
+    /// Algorithm 1 `MERGE`: join windows pointwise and progress by max,
+    /// reporting exactly the windows that inflated (trait v3). Only
+    /// *changed* windows are marked dirty — genuinely new information
+    /// still propagates transitively through sampled gossip, while a
+    /// no-op join (a full-sync payload this replica already subsumes)
+    /// marks nothing and therefore costs nothing on the next delta
+    /// round. Windows whose join would leave them at bottom are not
+    /// materialized at all.
+    #[must_use = "the report drives receive-path dirty-marking; discard with `let _ =` if unneeded"]
+    pub fn merge(&mut self, other: &Self) -> MergeReport {
+        let mut report = MergeReport::default();
         for (&w, win) in &other.windows {
             if w < self.compacted_below {
                 continue; // already finalized and dropped here
             }
-            self.windows.entry(w).or_default().merge(win);
-            self.dirty.insert(w);
-        }
-        for (&p, &ts) in &other.progress {
-            let e = self.progress.entry(p).or_insert(0);
-            if *e < ts {
-                *e = ts;
+            let changed = match self.windows.get_mut(&w) {
+                Some(mine) => mine.merge(win).is_changed(),
+                None => {
+                    let mut fresh = C::default();
+                    let inflated = fresh.merge(win).is_changed();
+                    if inflated {
+                        self.windows.insert(w, fresh);
+                    }
+                    inflated
+                }
+            };
+            if changed {
+                self.dirty.insert(w);
+                report.changed_windows.push(w);
             }
         }
-        self.compacted_below = self.compacted_below.max(other.compacted_below);
+        for (&p, &ts) in &other.progress {
+            match self.progress.get_mut(&p) {
+                Some(e) => {
+                    if *e < ts {
+                        *e = ts;
+                        report.progress_changed = true;
+                    }
+                }
+                None => {
+                    self.progress.insert(p, ts);
+                    report.progress_changed = true;
+                }
+            }
+        }
+        if report.progress_changed {
+            self.progress_dirty = true;
+        }
+        if other.compacted_below > self.compacted_below {
+            self.compacted_below = other.compacted_below;
+            report.compaction_advanced = true;
+        }
+        report
     }
 
     /// Drop windows strictly below `wid` (metadata compaction). Callers
@@ -229,6 +299,7 @@ impl<C: Crdt> WindowedCrdt<C> {
     /// sub-state.
     pub fn take_delta(&mut self) -> Self {
         let dirty = std::mem::take(&mut self.dirty);
+        self.progress_dirty = false;
         let mut windows = BTreeMap::new();
         for w in &dirty {
             if let Some(c) = self.windows.get_mut(w) {
@@ -241,6 +312,7 @@ impl<C: Crdt> WindowedCrdt<C> {
             progress: self.progress.clone(),
             compacted_below: self.compacted_below,
             dirty: Default::default(),
+            progress_dirty: false,
         }
     }
 
@@ -250,31 +322,72 @@ impl<C: Crdt> WindowedCrdt<C> {
         self.dirty.len()
     }
 
+    /// Whether a delta round would ship anything: some window is dirty
+    /// or some progress entry was raised since the last drain. The
+    /// engine skips encoding/broadcasting the gossip payload entirely
+    /// when this is false (and the round is not a full sync).
+    pub fn has_delta(&self) -> bool {
+        !self.dirty.is_empty() || self.progress_dirty
+    }
+
     /// Drain this replica's delta into `dst` by reference — equivalent
     /// to `dst.merge(&self.take_delta())` with no window clones and no
-    /// progress-map clone. The engine joins each partition's own
-    /// contribution accumulator into the node replica after every batch
-    /// through this: only the windows the batch touched are walked (and
-    /// within them, via [`Crdt::join_delta_into`], only the changed
-    /// sub-state), and `dst` marks exactly those windows dirty so the
-    /// next gossip delta ships them.
-    pub fn join_delta_into(&mut self, dst: &mut Self) {
+    /// progress-map clone — reporting whether `dst` inflated. The engine
+    /// joins each partition's own contribution accumulator into the node
+    /// replica after every batch through this: only the windows the
+    /// batch touched are walked (and within them, via
+    /// [`Crdt::join_delta_into`], only the changed sub-state), and `dst`
+    /// marks exactly the windows that inflated dirty so the next gossip
+    /// delta ships them.
+    pub fn join_delta_into(&mut self, dst: &mut Self) -> MergeOutcome {
+        let mut changed = false;
         for w in std::mem::take(&mut self.dirty) {
             if w < dst.compacted_below {
                 continue; // already finalized and dropped there
             }
             if let Some(c) = self.windows.get_mut(&w) {
-                c.join_delta_into(dst.windows.entry(w).or_default());
-                dst.dirty.insert(w);
+                let inflated = match dst.windows.get_mut(&w) {
+                    Some(d) => c.join_delta_into(d).is_changed(),
+                    None => {
+                        let mut fresh = C::default();
+                        let inflated = c.join_delta_into(&mut fresh).is_changed();
+                        if inflated {
+                            dst.windows.insert(w, fresh);
+                        }
+                        inflated
+                    }
+                };
+                if inflated {
+                    dst.dirty.insert(w);
+                    changed = true;
+                }
             }
         }
+        let mut progress_changed = false;
         for (&p, &ts) in &self.progress {
-            let e = dst.progress.entry(p).or_insert(0);
-            if *e < ts {
-                *e = ts;
+            match dst.progress.get_mut(&p) {
+                Some(e) => {
+                    if *e < ts {
+                        *e = ts;
+                        progress_changed = true;
+                    }
+                }
+                None => {
+                    dst.progress.insert(p, ts);
+                    progress_changed = true;
+                }
             }
         }
-        dst.compacted_below = dst.compacted_below.max(self.compacted_below);
+        if progress_changed {
+            dst.progress_dirty = true;
+            changed = true;
+        }
+        self.progress_dirty = false;
+        if self.compacted_below > dst.compacted_below {
+            dst.compacted_below = self.compacted_below;
+            changed = true;
+        }
+        MergeOutcome::changed_if(changed)
     }
 
     /// Discard the dirty markers without building a delta — used after a
@@ -290,6 +403,7 @@ impl<C: Crdt> WindowedCrdt<C> {
                 c.mark_clean();
             }
         }
+        self.progress_dirty = false;
     }
 
     /// Checkpoint slice: this partition's contributions + its progress
@@ -307,6 +421,7 @@ impl<C: Crdt> WindowedCrdt<C> {
             progress,
             compacted_below: self.compacted_below,
             dirty: Default::default(),
+            progress_dirty: false,
         }
     }
 
@@ -342,6 +457,7 @@ impl<C: Crdt> Decode for WindowedCrdt<C> {
             progress: BTreeMap::decode(r)?,
             compacted_below: r.get_u64()?,
             dirty: Default::default(),
+            progress_dirty: false,
         })
     }
 }
@@ -401,8 +517,8 @@ mod tests {
 
         // exchange state both ways — in any order
         let a0 = a.clone();
-        a.merge(&b);
-        b.merge(&a0);
+        let _ = a.merge(&b);
+        let _ = b.merge(&a0);
         assert_eq!(a, b);
         assert_eq!(a.window_value(0).unwrap().value(), 12);
     }
@@ -415,14 +531,17 @@ mod tests {
         b.insert_with(1, 1, |c| c.add(1, 4)).unwrap();
 
         let mut ab = a.clone();
-        ab.merge(&b);
+        let _ = ab.merge(&b);
         let mut ba = b.clone();
-        ba.merge(&a);
+        let _ = ba.merge(&a);
         assert_eq!(ab, ba);
 
         let mut aa = a.clone();
-        aa.merge(&a.clone());
+        let report = aa.merge(&a.clone());
         assert_eq!(aa, a);
+        // idempotent self-merge reports no change at all
+        assert_eq!(report, MergeReport::default());
+        assert_eq!(report.outcome(), MergeOutcome::Unchanged);
     }
 
     #[test]
@@ -441,10 +560,10 @@ mod tests {
         }
         // a merges 0,1,2; b merges 2,0,1
         for i in [0, 1, 2] {
-            a.merge(&updates[i]);
+            let _ = a.merge(&updates[i]);
         }
         for i in [2, 0, 1] {
-            b.merge(&updates[i]);
+            let _ = b.merge(&updates[i]);
         }
         assert_eq!(a.window_value(0), b.window_value(0));
         assert_eq!(a.window_value(0).unwrap().value(), 6);
@@ -462,7 +581,8 @@ mod tests {
         // merging an old replica cannot resurrect window 0
         let mut old = wcrdt(&[0]);
         old.insert_with(0, 100, |c| c.add(0, 9)).unwrap();
-        w.merge(&old);
+        let report = w.merge(&old);
+        assert!(report.changed_windows.is_empty());
         assert_eq!(w.live_windows(), 1);
     }
 
@@ -519,13 +639,86 @@ mod tests {
         dst_a.increment_watermark(1, 1500);
         let mut dst_b = dst_a.clone(); // clone() carries the dirty set too
 
-        src_a.join_delta_into(&mut dst_a);
-        dst_b.merge(&src_b.take_delta());
+        let oc_a = src_a.join_delta_into(&mut dst_a);
+        let oc_b = dst_b.merge(&src_b.take_delta()).outcome();
         assert_eq!(dst_a, dst_b);
+        assert_eq!(oc_a, oc_b, "both drain shapes report the same outcome");
         assert_eq!(dst_a.dirty, dst_b.dirty, "drain must mark the same windows");
         assert_eq!(src_a.dirty_windows(), 0, "drain clears the source markers");
         assert_eq!(dst_a.window_value(0).unwrap().value(), 12);
         assert_eq!(dst_a.progress_of(0), 1500);
+    }
+
+    #[test]
+    fn noop_full_sync_merge_leaves_the_delta_empty() {
+        // The amplification fix: merging a received full-sync payload
+        // the replica already subsumes must not re-mark windows dirty —
+        // pre-v3, every received window was marked and the next delta
+        // round re-shipped ~full state.
+        let build = || {
+            let mut w = wcrdt(&[0, 1]);
+            w.insert_with(0, 100, |c| c.add(0, 5)).unwrap();
+            w.insert_with(0, 1200, |c| c.add(0, 2)).unwrap();
+            w.increment_watermark(0, 1500);
+            w
+        };
+        let mut replica = build();
+        let _ = replica.take_delta(); // markers drained (delta shipped)
+        assert!(!replica.has_delta());
+        let report = replica.merge(&build()); // identical remote full state
+        assert_eq!(report, MergeReport::default(), "no-op join: {report:?}");
+        assert_eq!(replica.dirty_windows(), 0);
+        assert!(!replica.has_delta(), "nothing to gossip after a no-op join");
+        assert_eq!(replica.take_delta().live_windows(), 0);
+        // a genuinely new contribution still propagates transitively
+        let mut remote = build();
+        remote.insert_with(1, 300, |c| c.add(1, 7)).unwrap();
+        let report = replica.merge(&remote);
+        assert_eq!(report.changed_windows, vec![0]);
+        assert!(replica.has_delta());
+    }
+
+    #[test]
+    fn watermark_movement_alone_still_has_a_delta() {
+        // Progress must keep flowing through delta rounds even when no
+        // window was touched (a filter-heavy batch advances watermarks
+        // without inserting): has_delta reflects progress movement, and
+        // merging newer progress marks the receiver's own progress
+        // dirty so watermarks also propagate transitively.
+        let mut w = wcrdt(&[0, 1]);
+        let _ = w.take_delta();
+        assert!(!w.has_delta());
+        w.increment_watermark(0, 500);
+        assert!(w.has_delta(), "raised watermark is gossip-worthy");
+        let d = w.take_delta();
+        assert_eq!(d.live_windows(), 0);
+        assert_eq!(d.progress_of(0), 500);
+        assert!(!w.has_delta());
+        // receiving newer progress re-arms the receiver's delta
+        let mut peer = wcrdt(&[0, 1]);
+        let _ = peer.take_delta();
+        let report = peer.merge(&d);
+        assert!(report.progress_changed);
+        assert!(peer.has_delta());
+        // receiving the same progress again does not
+        let mut settled = peer.clone();
+        let _ = settled.take_delta();
+        let report = settled.merge(&d);
+        assert!(!report.progress_changed);
+        assert!(!settled.has_delta());
+    }
+
+    #[test]
+    fn merge_report_lists_exactly_the_inflated_windows() {
+        let mut a = wcrdt(&[0, 1]);
+        a.insert_with(0, 100, |c| c.add(0, 5)).unwrap(); // window 0
+        a.insert_with(0, 2500, |c| c.add(0, 1)).unwrap(); // window 2
+        let mut b = a.clone();
+        b.insert_with(1, 2600, |c| c.add(1, 9)).unwrap(); // window 2 only
+        let report = a.merge(&b);
+        assert_eq!(report.changed_windows, vec![2]);
+        assert!(!report.progress_changed);
+        assert_eq!(report.outcome(), MergeOutcome::Changed);
     }
 
     #[test]
@@ -552,8 +745,8 @@ mod tests {
         // exchange deltas instead of full state
         let da = a.take_delta();
         let db = b.take_delta();
-        a.merge(&db);
-        b.merge(&da);
+        let _ = a.merge(&db);
+        let _ = b.merge(&da);
         assert_eq!(a, b);
         assert_eq!(a.window_value(0).unwrap().value(), 12);
         // merging a delta marks windows dirty => transitive propagation
@@ -571,7 +764,8 @@ mod tests {
         // merging an older replica cannot regress progress either
         let mut old = wcrdt(&[0]);
         old.increment_watermark(0, 100);
-        w.merge(&old);
+        let report = w.merge(&old);
+        assert!(!report.progress_changed);
         assert_eq!(w.progress_of(0), 700);
         assert_eq!(w.global_watermark(), 700);
     }

@@ -1,0 +1,174 @@
+//! Regression tests for the full-sync delta-amplification fix (Crdt
+//! trait v3, change-reporting merges).
+//!
+//! Pre-v3, `Crdt::merge` returned nothing, so merging a *received*
+//! full-sync payload had to conservatively re-mark every window/shard
+//! dirty — and the one delta round after each anti-entropy round
+//! re-shipped ~full state (the 1-in-`FULL_SYNC_EVERY` amplification
+//! documented in EXPERIMENTS.md). With merges reporting inflation,
+//! receive-path dirty-marking is confined to genuine changes, and a
+//! replica with nothing dirty and no watermark movement skips the
+//! gossip encode/broadcast entirely.
+
+use std::sync::atomic::Ordering;
+
+use holon::api::SharedState;
+use holon::clock::SimClock;
+use holon::codec::{Decode, Encode};
+use holon::config::HolonConfig;
+use holon::crdt::{GCounter, MergeOutcome};
+use holon::engine::HolonCluster;
+use holon::nexmark::queries::Q7;
+use holon::shard::ShardedMapCrdt;
+use holon::wcrdt::{WindowAssigner, WindowedCrdt};
+
+type Keyed = WindowedCrdt<ShardedMapCrdt<u64, GCounter>>;
+
+/// `n` already-converged replicas of a realistically-sized keyed
+/// windowed state, with their dirty markers drained (the deltas were
+/// shipped in earlier rounds).
+fn converged_replicas(n: usize) -> Vec<Keyed> {
+    let mut base: Keyed = WindowedCrdt::new(WindowAssigner::tumbling(1000), [0, 1, 2]);
+    for k in 0..400u64 {
+        let p = (k % 3) as u32;
+        let ts = 100 + (k % 3) * 1000;
+        base.insert_with(p, ts, |m| {
+            m.ensure_shards(8);
+            m.entry(k).add(p as u64, k + 1);
+        })
+        .unwrap();
+    }
+    for p in 0..3u32 {
+        base.increment_watermark(p, 3500);
+    }
+    let mut reps: Vec<Keyed> = (0..n).map(|_| base.clone()).collect();
+    for r in &mut reps {
+        let _ = SharedState::take_delta(r); // markers drained
+        assert!(!SharedState::has_delta(r));
+    }
+    reps
+}
+
+/// The acceptance-criterion regression (failing before trait v3): after
+/// a received full-sync round, the next delta round ships <5% of the
+/// full-state bytes when the replicas have not diverged. This mirrors
+/// the engine's gossip protocol exactly — a full-sync payload is decoded
+/// and joined via `SharedState::join`, then the receiver's next delta is
+/// what `take_delta` encodes.
+#[test]
+fn post_full_sync_delta_round_ships_under_5_percent() {
+    let mut reps = converged_replicas(3);
+    let full_bytes = reps[0].to_bytes();
+    assert!(full_bytes.len() > 2000, "full state must be non-trivial");
+
+    // anti-entropy round: replica 0 broadcasts its full state
+    let payload = Keyed::from_bytes(&full_bytes).unwrap();
+    for r in &mut reps[1..] {
+        // nothing diverged: the join reports a complete no-op ...
+        assert_eq!(SharedState::join(r, &payload), MergeOutcome::Unchanged);
+    }
+    for r in &mut reps[1..] {
+        // ... so the receiver has nothing to gossip (the engine skips
+        // the encode/broadcast of this round entirely) ...
+        assert!(
+            !SharedState::has_delta(r),
+            "a subsumed full-sync must not re-arm the delta"
+        );
+        // ... and even encoding the delta anyway ships near-zero bytes
+        // (the empty window set plus the small progress map).
+        let delta_bytes = SharedState::take_delta(r).to_bytes();
+        assert!(
+            delta_bytes.len() * 20 < full_bytes.len(),
+            "post-full-sync delta round ships {} B — more than 5% of the \
+             {} B full state (the pre-v3 amplification)",
+            delta_bytes.len(),
+            full_bytes.len()
+        );
+    }
+}
+
+/// Genuine divergence still propagates — and the delta after a full sync
+/// carries exactly the divergent shard, not the whole state.
+#[test]
+fn post_full_sync_delta_carries_only_genuine_divergence() {
+    let mut reps = converged_replicas(2);
+    let full_size = reps[0].to_bytes().len();
+
+    // the sender diverged on one key before its full-sync broadcast
+    let mut sender = reps.remove(0);
+    sender
+        .insert_with(0, 3500, |m| {
+            m.entry(9).add(0, 1000);
+        })
+        .unwrap();
+    let payload = Keyed::from_bytes(&sender.to_bytes()).unwrap();
+
+    let receiver = &mut reps[0];
+    assert_eq!(SharedState::join(receiver, &payload), MergeOutcome::Changed);
+    assert!(
+        SharedState::has_delta(receiver),
+        "new information must re-arm the delta for transitive gossip"
+    );
+    let delta = SharedState::take_delta(receiver);
+    let delta_bytes = delta.to_bytes().len();
+    assert!(
+        delta_bytes * 5 < full_size,
+        "delta after divergent full-sync must stay shard-sized: {delta_bytes} B vs {full_size} B"
+    );
+    // the delta converges a stale replica on exactly the divergent value
+    let mut stale = converged_replicas(1).remove(0);
+    assert_eq!(SharedState::join(&mut stale, &delta), MergeOutcome::Changed);
+    let w3 = stale.raw_window(3).expect("divergent window present");
+    assert_eq!(w3.get(&9).unwrap().value(), 1000);
+}
+
+/// The engine-level empty-delta fast path (satellite of the trait-v3
+/// redesign): a delta-mode replica with nothing dirty and no watermark
+/// movement skips the gossip encode and broadcast entirely — asserted
+/// via `Bus::bytes_sent` against an otherwise-identical full-state-mode
+/// cluster, which encodes and ships every round.
+#[test]
+fn idle_delta_cluster_skips_empty_gossip_rounds() {
+    fn idle_run(delta: bool) -> (u64, u64, u64) {
+        let mut cfg = HolonConfig::default();
+        cfg.nodes = 3;
+        cfg.partitions = 6;
+        cfg.gossip_delta = delta;
+        cfg.gossip_interval_ms = 50;
+        cfg.wall_ms_per_sim_sec = 50.0;
+        cfg.seed = 7;
+        let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
+        let cluster = HolonCluster::start_with_clock(cfg, Q7::new(1000), clock.clone());
+        // no producer: the cluster is idle, watermarks never move
+        std::thread::sleep(clock.wall_for(6000));
+        cluster.stop();
+        (
+            cluster.bus.bytes_sent(),
+            cluster.metrics.gossip_sent.load(Ordering::Acquire),
+            cluster.metrics.gossip_skipped.load(Ordering::Acquire),
+        )
+    }
+
+    let (full_bytes, full_sent, full_skipped) = idle_run(false);
+    let (delta_bytes, delta_sent, delta_skipped) = idle_run(true);
+
+    // full-state mode never skips (every round carries the anti-entropy)
+    assert_eq!(full_skipped, 0);
+    assert!(full_sent > 0);
+    // delta mode skips the empty rounds and ships only the periodic
+    // full syncs — an order of magnitude fewer sends; allow wide margin
+    // for scheduling jitter
+    assert!(
+        delta_skipped > delta_sent,
+        "idle delta rounds must be skipped ({delta_skipped} skipped vs {delta_sent} sent)"
+    );
+    assert!(
+        delta_sent * 3 < full_sent,
+        "delta mode must ship far fewer rounds ({delta_sent} vs {full_sent})"
+    );
+    assert!(delta_sent > 0, "full-sync anti-entropy must still flow");
+    assert!(
+        delta_bytes * 2 < full_bytes,
+        "skipped rounds must show up as wire bytes saved ({delta_bytes} B vs {full_bytes} B)"
+    );
+}

@@ -4,8 +4,8 @@
 
 use holon::codec::{Decode, Encode};
 use holon::crdt::{
-    BoundedTopK, Crdt, GCounter, GSet, LwwRegister, MapCrdt, MaxRegister, MinRegister, ORSet,
-    PNCounter, PrefixAgg, TwoPSet,
+    BoundedTopK, Crdt, GCounter, GSet, LwwRegister, MapCrdt, MaxRegister, MergeOutcome,
+    MinRegister, ORSet, PNCounter, PrefixAgg, TwoPSet,
 };
 use holon::engine::membership::{assignment, target_owner};
 use holon::proptest_lite::forall;
@@ -214,6 +214,166 @@ fn prefix_agg_lattice_laws_under_prefix_discipline() {
             (a, b, c)
         },
         |(a, b, c)| check_laws(a, b, c),
+    );
+}
+
+// ---- change-reporting merges (Crdt trait v3) ---------------------------
+//
+// The contract the delta-amplification fix rests on: `merge` returns
+// `Changed` iff the target state actually differs afterwards (per
+// `PartialEq`), and an immediate re-merge of the same source is always
+// `Unchanged`. Checked over randomized state pairs for every CRDT,
+// including the sharded and windowed compositions.
+
+fn check_merge_outcome<C: Crdt + PartialEq + std::fmt::Debug>(a: &C, b: &C) -> Result<(), String> {
+    let mut t = a.clone();
+    let outcome = t.merge(b);
+    if outcome.is_changed() != (&t != a) {
+        return Err(format!(
+            "outcome {outcome:?} but target {} (target {a:?}, source {b:?})",
+            if &t != a { "changed" } else { "did not change" }
+        ));
+    }
+    let settled = t.clone();
+    if t.merge(b) != MergeOutcome::Unchanged {
+        return Err("re-merge of the same source reported Changed".to_string());
+    }
+    if t != settled {
+        return Err("re-merge of the same source mutated the target".to_string());
+    }
+    Ok(())
+}
+
+macro_rules! merge_outcome_test {
+    ($name:ident, $gen:ident) => {
+        #[test]
+        fn $name() {
+            forall(
+                stringify!($name),
+                150,
+                48,
+                &|rng: &mut XorShift64, size: usize| ($gen(rng, size), $gen(rng, size)),
+                |(a, b)| check_merge_outcome(a, b),
+            );
+        }
+    };
+}
+
+merge_outcome_test!(gcounter_merge_outcome, gen_gcounter);
+merge_outcome_test!(pncounter_merge_outcome, gen_pncounter);
+merge_outcome_test!(topk_merge_outcome, gen_topk);
+merge_outcome_test!(orset_merge_outcome, gen_orset);
+merge_outcome_test!(mapcrdt_merge_outcome, gen_map);
+merge_outcome_test!(sharded_map_merge_outcome, gen_sharded_map);
+merge_outcome_test!(lww_register_merge_outcome, gen_lww);
+merge_outcome_test!(max_register_merge_outcome, gen_maxreg);
+merge_outcome_test!(min_register_merge_outcome, gen_minreg);
+merge_outcome_test!(gset_merge_outcome, gen_gset);
+merge_outcome_test!(twopset_merge_outcome, gen_2pset);
+
+#[test]
+fn prefix_agg_merge_outcome_under_prefix_discipline() {
+    // PrefixAgg's contract only holds over prefix-disciplined replicas
+    // (same-contributor states are prefixes of one shared sequence —
+    // which execution guarantees): generate two random cuts of shared
+    // per-contributor sequences, like the laws test does.
+    forall(
+        "prefix agg merge outcome",
+        120,
+        32,
+        &|rng: &mut XorShift64, size: usize| {
+            let contributors = 1 + rng.next_below(4);
+            let seqs: Vec<Vec<f64>> = (0..contributors)
+                .map(|_| {
+                    (0..rng.next_below(size as u64 + 1))
+                        .map(|_| rng.next_below(10_000) as f64)
+                        .collect()
+                })
+                .collect();
+            let cut = |rng: &mut XorShift64| -> PrefixAgg {
+                let mut a = PrefixAgg::new();
+                for (c, seq) in seqs.iter().enumerate() {
+                    let n = rng.next_below(seq.len() as u64 + 1) as usize;
+                    for &v in &seq[..n] {
+                        a.observe(c as u64, v);
+                    }
+                }
+                a
+            };
+            let a = cut(rng);
+            let b = cut(rng);
+            (a, b)
+        },
+        |(a, b)| check_merge_outcome(a, b),
+    );
+}
+
+#[test]
+fn sharded_map_cross_layout_merge_outcome() {
+    // the rehash path must honor the same contract as the fast path
+    forall(
+        "cross-layout merge outcome",
+        100,
+        32,
+        &|rng: &mut XorShift64, size: usize| {
+            let ops: Vec<(u64, u64, u64)> = (0..rng.next_below(size as u64 + 1))
+                .map(|_| (rng.next_below(24), rng.next_below(8), rng.next_below(50)))
+                .collect();
+            let cut = rng.next_below(ops.len() as u64 + 1) as usize;
+            (ops, cut)
+        },
+        |(ops, cut)| {
+            let build = |shards: u32, ops: &[(u64, u64, u64)]| {
+                let mut m: ShardedMapCrdt<u64, GCounter> = ShardedMapCrdt::with_shards(shards);
+                for &(k, c, amount) in ops {
+                    m.entry(k).add(c, amount);
+                }
+                m
+            };
+            let a = build(4, &ops[..*cut]);
+            let b = build(16, &ops[*cut..]);
+            check_merge_outcome(&a, &b)
+        },
+    );
+}
+
+#[test]
+fn wcrdt_merge_outcome_matches_state_change() {
+    forall(
+        "wcrdt merge outcome",
+        80,
+        32,
+        &|rng: &mut XorShift64, size: usize| {
+            let build = |rng: &mut XorShift64| {
+                let mut w: WindowedCrdt<GCounter> =
+                    WindowedCrdt::new(WindowAssigner::tumbling(500), [0, 1]);
+                let mut ts = 0;
+                for _ in 0..rng.next_below(size as u64 + 1) {
+                    ts += rng.next_below(300);
+                    let p = rng.next_below(2) as u32;
+                    let _ = w.insert_with(p, ts, |c| c.add(p as u64, 1 + rng.next_below(5)));
+                }
+                if rng.chance(0.7) {
+                    w.increment_watermark(rng.next_below(2) as u32, ts);
+                }
+                w
+            };
+            (build(rng), build(rng))
+        },
+        |(a, b)| {
+            let mut t = a.clone();
+            let report = t.merge(b);
+            if report.outcome().is_changed() != (&t != a) {
+                return Err(format!("report {report:?} disagrees with state change"));
+            }
+            // the changed-window set is exact: re-merging reports nothing
+            let settled = t.clone();
+            let again = t.merge(b);
+            if again != holon::wcrdt::MergeReport::default() || t != settled {
+                return Err(format!("re-merge not a no-op: {again:?}"));
+            }
+            Ok(())
+        },
     );
 }
 
@@ -480,7 +640,7 @@ fn sharded_map_is_layout_independent() {
             }
             // cross-layout merges still converge to the same logical map
             let mut merged = replicas[0].clone();
-            merged.merge(&replicas[2]);
+            let _ = merged.merge(&replicas[2]);
             if merged != replicas[3] {
                 return Err("cross-layout merge diverged".to_string());
             }
@@ -511,12 +671,12 @@ fn sharded_map_delta_join_equals_full_join() {
             for &(k, c, amount) in &ops[..*cut] {
                 a.entry(k).add(c, amount);
             }
-            b.merge(&Crdt::take_delta(&mut a)); // full so far (all dirty)
+            let _ = b.merge(&Crdt::take_delta(&mut a)); // full so far (all dirty)
             for &(k, c, amount) in &ops[*cut..] {
                 a.entry(k).add(c, amount);
             }
             let delta = Crdt::take_delta(&mut a);
-            b.merge(&delta);
+            let _ = b.merge(&delta);
             if b != a {
                 return Err(format!("delta join diverged: {b:?} != {a:?}"));
             }
@@ -566,7 +726,7 @@ fn wcrdt_replicas_converge_in_any_merge_order() {
             // replica A merges in order; replica B in a shuffled order
             let mut a = mk();
             for s in &sources {
-                a.merge(s);
+                let _ = a.merge(s);
             }
             let mut b = mk();
             let mut order: Vec<usize> = (0..sources.len()).collect();
@@ -575,7 +735,7 @@ fn wcrdt_replicas_converge_in_any_merge_order() {
                 order.swap(i, rng.next_below(i as u64 + 1) as usize);
             }
             for &i in &order {
-                b.merge(&sources[i]);
+                let _ = b.merge(&sources[i]);
             }
             if a != b {
                 return Err("merge order changed the state".to_string());
@@ -617,7 +777,7 @@ fn wcrdt_projection_roundtrip_preserves_contribution() {
             for p in 0..3u32 {
                 let slice = SharedState::project(w, p);
                 let mut joined = w.clone();
-                joined.merge(&slice);
+                let _ = joined.merge(&slice);
                 if &joined != w {
                     return Err(format!("projection of {p} added information"));
                 }
@@ -713,7 +873,7 @@ fn prefix_agg_replay_join_is_lossless() {
             for &v in &vals[*cut..] {
                 replica.observe(1, v);
             }
-            replica.merge(&full);
+            let _ = replica.merge(&full);
             if replica != full {
                 return Err("replayed replica != full state".to_string());
             }

@@ -44,6 +44,11 @@ def scenario(**overrides):
         "shard_gossip_bytes": [],
         "shard_parallel_merges": 0,
         "shard_serial_merges": 0,
+        "queries_served": 0,
+        "query_index_hits": 0,
+        "query_index_misses": 0,
+        "query_scan_rows_avoided": 0,
+        "changefeed_lag": 0,
         "stalled": False,
     }
     base.update(overrides)
@@ -161,6 +166,52 @@ def test_merge_outcome_fields_are_typed_counters():
     d = doc()
     d["scenarios"][0]["gossip_skipped"] = True
     assert any("gossip_skipped" in e for e in validate(d))
+
+
+def test_read_path_fields_are_required():
+    # PR6 read-path counters are part of the schema: a report missing
+    # any of them (an old binary) must fail validation
+    for field in (
+        "queries_served",
+        "query_index_hits",
+        "query_index_misses",
+        "query_scan_rows_avoided",
+        "changefeed_lag",
+    ):
+        d = doc()
+        del d["scenarios"][0][field]
+        assert any(field in e for e in validate(d)), field
+
+
+def test_read_path_fields_are_typed_counters():
+    d = doc()
+    d["scenarios"][0]["queries_served"] = -2
+    assert any("queries_served" in e for e in validate(d))
+    d = doc()
+    d["scenarios"][0]["query_index_hits"] = 0.5
+    assert any("query_index_hits" in e for e in validate(d))
+    d = doc()
+    d["scenarios"][0]["changefeed_lag"] = True
+    assert any("changefeed_lag" in e for e in validate(d))
+
+
+def test_read_heavy_scenario_passes():
+    d = doc(
+        scenarios=[
+            scenario(
+                name="mixed_rw_q4_point",
+                workload="q4",
+                shard_count=8,
+                shard_gossip_bytes=[1, 2, 3, 4, 5, 6, 7, 8],
+                queries_served=1200,
+                query_index_hits=700,
+                query_index_misses=500,
+                query_scan_rows_avoided=34000,
+                changefeed_lag=3,
+            )
+        ]
+    )
+    assert validate(d) == []
 
 
 def test_shard_count_must_match_array_length():

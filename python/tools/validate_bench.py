@@ -2,8 +2,8 @@
 """Validate a BENCH_*.json perf-trajectory report (schema holon-bench/v1).
 
 Usage:
-    python python/tools/validate_bench.py BENCH_PR4.json
-    python python/tools/validate_bench.py BENCH_PR4.json --baseline BENCH_BASELINE.json
+    python python/tools/validate_bench.py BENCH_PR6.json
+    python python/tools/validate_bench.py BENCH_PR6.json --baseline BENCH_BASELINE.json
 
 Exit code 0 when the document is schema-valid (and, with --baseline, no
 scenario regressed), 1 otherwise (errors on stderr). Stdlib-only so the
@@ -53,6 +53,11 @@ SCENARIO_FIELDS = {
     "shard_gossip_bytes": (list,),
     "shard_parallel_merges": (int,),
     "shard_serial_merges": (int,),
+    "queries_served": (int,),
+    "query_index_hits": (int,),
+    "query_index_misses": (int,),
+    "query_scan_rows_avoided": (int,),
+    "changefeed_lag": (int,),
     "stalled": (bool,),
 }
 

@@ -151,6 +151,58 @@ fn main() {
         std::hint::black_box(delta.to_bytes());
     });
 
+    section("micro: query read path (scan paths clone zero keys)");
+    {
+        use holon::query::QueryEngine;
+        // Flat state: signing every window key plus an absent-key point
+        // lookup must not clone a single key — `MapCrdt::iter` and the
+        // scanner's `for_each` walk by reference.
+        let mut wq: WindowedCrdt<MapCrdt<CountKey, GCounter>> =
+            WindowedCrdt::new(WindowAssigner::tumbling(1000), [0u32].iter().copied());
+        for k in 0..4096u64 {
+            let _ = wq.insert_with(0, 100, |m| m.entry(CountKey(k)).add(k % 8, k + 1));
+        }
+        wq.increment_watermark(0, 1000);
+        let before = KEY_CLONES.load(Ordering::Relaxed);
+        let mut q = QueryEngine::new(wq); // signs all 4096 keys
+        let miss = q.point(0, &CountKey(999_999_999), 0).unwrap();
+        assert!(miss.value.is_none());
+        let clones = KEY_CLONES.load(Ordering::Relaxed) - before;
+        assert_eq!(clones, 0, "flat sign + absent point lookup must clone zero keys");
+        println!("flat sign_into(4096 keys) + point miss: {clones} key clones");
+
+        // A range scan visits all 4096 rows but may only clone the rows
+        // it returns.
+        let before = KEY_CLONES.load(Ordering::Relaxed);
+        let r = q.range(0, &CountKey(10), &CountKey(13), 0).unwrap();
+        assert_eq!(r.value.len(), 4);
+        let clones = KEY_CLONES.load(Ordering::Relaxed) - before;
+        assert_eq!(clones, 4, "range must clone returned rows only, not scanned rows");
+        println!("range 4 of 4096 rows: {clones} key clones");
+        bench("query_range_4_of_4096", 50, 5_000, || {
+            std::hint::black_box(q.range(0, &CountKey(10), &CountKey(13), 0).unwrap().value.len());
+        });
+
+        // Sharded state: `entries()` (the scanner's traversal) and
+        // `sign_into` across 8 shards are reference walks too.
+        let mut ws: WindowedCrdt<ShardedMapCrdt<CountKey, GCounter>> =
+            WindowedCrdt::new(WindowAssigner::tumbling(1000), [0u32].iter().copied());
+        for k in 0..4096u64 {
+            let _ = ws.insert_with(0, 100, |m| {
+                m.ensure_shards(8);
+                m.entry(CountKey(k)).add(k % 8, 1);
+            });
+        }
+        ws.increment_watermark(0, 1000);
+        let before = KEY_CLONES.load(Ordering::Relaxed);
+        let qs = QueryEngine::new(ws); // per-shard sign_into
+        let n = qs.state().raw_window(0).unwrap().entries().count();
+        assert_eq!(n, 4096);
+        let clones = KEY_CLONES.load(Ordering::Relaxed) - before;
+        assert_eq!(clones, 0, "sharded sign + entries() traversal must clone zero keys");
+        println!("sharded sign_into(8x512) + entries() walk: {clones} key clones");
+    }
+
     section("micro: WCRDT gossip path (encode + decode + join)");
     let mut w: WindowedCrdt<MapCrdt<u64, PrefixAgg>> =
         WindowedCrdt::new(WindowAssigner::tumbling(1000), 0..50);

@@ -170,7 +170,7 @@ impl Default for HolonConfig {
             flink_spare_slots: false,
             use_xla: false,
             artifacts_dir: "artifacts".to_string(),
-            bench_out: "BENCH_PR4.json".to_string(),
+            bench_out: "BENCH_PR6.json".to_string(),
         }
     }
 }

@@ -82,6 +82,19 @@ pub struct ClusterMetrics {
     /// nothing dirty and no watermark movement (no encode, no
     /// broadcast — the empty-delta fast path).
     pub gossip_skipped: Arc<AtomicU64>,
+    /// Read-path: queries answered (point + range + top-k) across all
+    /// query engines attached to this cluster's read handles.
+    pub queries_served: Arc<AtomicU64>,
+    /// Read-path: queries where the signature pre-filter pruned work.
+    pub query_index_hits: Arc<AtomicU64>,
+    /// Read-path: queries the pre-filter could not narrow.
+    pub query_index_misses: Arc<AtomicU64>,
+    /// Read-path: state rows the pre-filter excluded from scans.
+    pub query_scan_rows_avoided: Arc<AtomicU64>,
+    /// Read-path high-water mark: the most items any live changefeed
+    /// subscriber was observed behind its feed head (fetch_max over all
+    /// nodes' publish points, not a sum).
+    pub changefeed_lag: Arc<AtomicU64>,
 }
 
 impl ClusterMetrics {
@@ -104,7 +117,23 @@ impl ClusterMetrics {
             merge_noop: Arc::new(AtomicU64::new(0)),
             redundant_gossip_bytes: Arc::new(AtomicU64::new(0)),
             gossip_skipped: Arc::new(AtomicU64::new(0)),
+            queries_served: Arc::new(AtomicU64::new(0)),
+            query_index_hits: Arc::new(AtomicU64::new(0)),
+            query_index_misses: Arc::new(AtomicU64::new(0)),
+            query_scan_rows_avoided: Arc::new(AtomicU64::new(0)),
+            changefeed_lag: Arc::new(AtomicU64::new(0)),
         }
+    }
+
+    /// Fold a drained [`crate::query::QueryStats`] into the read-path
+    /// counters.
+    pub fn add_query_stats(&self, s: &crate::query::QueryStats) {
+        self.queries_served.fetch_add(s.served, Ordering::Relaxed);
+        self.query_index_hits.fetch_add(s.index_hits, Ordering::Relaxed);
+        self.query_index_misses
+            .fetch_add(s.index_misses, Ordering::Relaxed);
+        self.query_scan_rows_avoided
+            .fetch_add(s.scan_rows_avoided, Ordering::Relaxed);
     }
 
     /// Fold a node's per-shard encoded gossip byte counts (index =
@@ -147,6 +176,10 @@ pub struct HolonCluster<P: Processor> {
     /// shutdown (crashed nodes never publish). The simulation oracles
     /// decode these to check replica convergence after a run.
     final_states: Arc<Mutex<BTreeMap<NodeId, Vec<u8>>>>,
+    /// Per-node changefeed publication points. Keyed by node id and kept
+    /// across restarts, so a subscriber's cursor survives its node's
+    /// crash (the restarted node publishes into the same handle).
+    read_handles: Mutex<BTreeMap<NodeId, crate::query::ReadHandle>>,
 }
 
 impl<P: Processor> HolonCluster<P> {
@@ -193,6 +226,7 @@ impl<P: Processor> HolonCluster<P> {
             nodes: Mutex::new(BTreeMap::new()),
             sink: Mutex::new(None),
             final_states: Arc::new(Mutex::new(BTreeMap::new())),
+            read_handles: Mutex::new(BTreeMap::new()),
             cfg,
         });
         for id in 0..cluster.cfg.nodes {
@@ -206,6 +240,13 @@ impl<P: Processor> HolonCluster<P> {
     fn spawn_node(self: &Arc<Self>, id: NodeId) {
         let failed = Arc::new(AtomicBool::new(false));
         self.bus.register(id);
+        let reads = self
+            .read_handles
+            .lock()
+            .unwrap()
+            .entry(id)
+            .or_default()
+            .clone();
         let ctx = node::NodeCtx {
             id,
             cfg: self.cfg.clone(),
@@ -219,6 +260,7 @@ impl<P: Processor> HolonCluster<P> {
             failed: failed.clone(),
             metrics: self.metrics.clone(),
             state_out: self.final_states.clone(),
+            reads,
         };
         let join = std::thread::Builder::new()
             .name(format!("holon-node-{id}"))
@@ -276,6 +318,13 @@ impl<P: Processor> HolonCluster<P> {
     /// not publish). Keyed by node id.
     pub fn final_replicas(&self) -> BTreeMap<NodeId, Vec<u8>> {
         self.final_states.lock().unwrap().clone()
+    }
+
+    /// The changefeed read handle of node `id` — present for any node
+    /// that was ever spawned, even while it is down (the handle and its
+    /// subscribers' cursors outlive node restarts).
+    pub fn read_handle(&self, id: NodeId) -> Option<crate::query::ReadHandle> {
+        self.read_handles.lock().unwrap().get(&id).cloned()
     }
 
     /// Ids of currently running nodes.

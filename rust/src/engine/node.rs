@@ -99,6 +99,10 @@ pub struct NodeCtx<P: Processor> {
     /// Where to publish the encoded shared replica on graceful shutdown
     /// (the convergence oracle's view; killed nodes never publish).
     pub state_out: Arc<std::sync::Mutex<BTreeMap<NodeId, Vec<u8>>>>,
+    /// Changefeed publication point: every gossip payload this node
+    /// encodes (full state or delta) is also published here for read-path
+    /// subscribers, at zero extra encode cost (shared `Arc`).
+    pub reads: crate::query::ReadHandle,
 }
 
 /// Execution state of one owned partition.
@@ -181,6 +185,7 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
         failed,
         metrics,
         state_out,
+        reads,
     } = ctx;
 
     let all_parts: Vec<PartitionId> = (0..cfg.partitions).collect();
@@ -236,11 +241,17 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
         let now = clock.now();
         if shutdown.load(Ordering::Acquire) {
             // Graceful stop: final checkpoints + publish the replica for
-            // post-run convergence checks.
+            // post-run convergence checks. The changefeed gets the same
+            // bytes as a final full snapshot so late subscribers can
+            // still bootstrap to the node's last state.
             for (&p, st) in parts.iter_mut() {
                 checkpoint_partition(&store, p, st);
             }
-            state_out.lock().unwrap().insert(id, shared.to_bytes());
+            let bytes = shared.to_bytes();
+            let floor = shared.watermark_floor();
+            let wm = if floor == SimTime::MAX { 0 } else { floor };
+            reads.publish_full(Arc::new(bytes.clone()), wm);
+            state_out.lock().unwrap().insert(id, bytes);
             return;
         }
 
@@ -447,6 +458,19 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
                 metrics
                     .gossip_payload_bytes
                     .fetch_add(payload.len() as u64, Ordering::Relaxed);
+                // Changefeed: subscribers ride the gossip encode — same
+                // Arc, no extra serialization. Full rounds double as
+                // bootstrap snapshots for late/lagging subscribers.
+                let floor = shared.watermark_floor();
+                let wm = if floor == SimTime::MAX { 0 } else { floor };
+                if plan.full {
+                    reads.publish_full(Arc::clone(&payload), wm);
+                } else {
+                    reads.publish_delta(Arc::clone(&payload), wm);
+                }
+                metrics
+                    .changefeed_lag
+                    .fetch_max(reads.max_lag(), Ordering::Relaxed);
                 bus.broadcast_sample_shared(id, MsgKind::Gossip, payload, plan.fanout);
                 metrics.gossip_sent.fetch_add(1, Ordering::Relaxed);
             }

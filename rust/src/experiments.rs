@@ -166,6 +166,19 @@ pub struct DataPlaneStats {
     pub shard_parallel_merges: u64,
     /// Sharded-state merges that ran inline.
     pub shard_serial_merges: u64,
+    /// Read-path: queries answered (point + range + top-k) by query
+    /// engines attached to this run; zero for write-only scenarios.
+    pub queries_served: u64,
+    /// Read-path: queries where the signature pre-filter pruned work.
+    pub query_index_hits: u64,
+    /// Read-path: queries the pre-filter could not narrow.
+    pub query_index_misses: u64,
+    /// Read-path: state rows the pre-filter excluded from scans — the
+    /// index's measurable win (acceptance counter).
+    pub query_scan_rows_avoided: u64,
+    /// Read-path high-water mark: most feed items any live changefeed
+    /// subscriber was observed behind its node's publish head.
+    pub changefeed_lag: u64,
 }
 
 /// Measurements of one run.
@@ -245,6 +258,11 @@ fn data_plane_stats(
         shard_gossip_bytes: metrics.shard_gossip_bytes.lock().unwrap().clone(),
         shard_parallel_merges: metrics.shard_parallel_merges.load(Ordering::Acquire),
         shard_serial_merges: metrics.shard_serial_merges.load(Ordering::Acquire),
+        queries_served: metrics.queries_served.load(Ordering::Acquire),
+        query_index_hits: metrics.query_index_hits.load(Ordering::Acquire),
+        query_index_misses: metrics.query_index_misses.load(Ordering::Acquire),
+        query_scan_rows_avoided: metrics.query_scan_rows_avoided.load(Ordering::Acquire),
+        changefeed_lag: metrics.changefeed_lag.load(Ordering::Acquire),
     }
 }
 
@@ -530,6 +548,131 @@ pub fn run_max_throughput_with<P: crate::api::Processor>(
     collect(SystemKind::Holon, workload, &cluster.metrics, produced, cfg.duration_ms, dp)
 }
 
+/// Access pattern of the mixed read/write bench reader.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReadMode {
+    /// Point lookups: every live category plus a spread of absent keys
+    /// (the absent keys exercise the signature pre-filter's pruning).
+    Point,
+    /// Range + top-k scans over the category space.
+    Scan,
+}
+
+/// Mixed read/write run: the Q4 keyed workload writes while a reader
+/// thread serves queries off node 0's replica through the changefeed —
+/// bootstrap from snapshot, apply deltas by cursor, query the newest
+/// completed window each round with `staleness = window_ms`. The
+/// reader's [`crate::query::QueryStats`] and the changefeed lag land in
+/// the run's [`DataPlaneStats`] read-path counters.
+pub fn run_mixed_read_write(cfg: &HolonConfig, mode: ReadMode) -> RunResult {
+    use crate::crdt::PrefixAgg;
+    use crate::nexmark::CATEGORIES;
+    use crate::query::QueryEngine;
+    use crate::shard::ShardedMapCrdt;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    let mut cfg = cfg.clone();
+    cfg.gossip_delta = true; // the changefeed's delta stream is the point
+    let shards = if cfg.shard_count > 0 { cfg.shard_count } else { 8 };
+    let processor = crate::nexmark::queries::dataflow_q4_sharded(cfg.window_ms, shards);
+    let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
+    let cluster = HolonCluster::start_with_clock(cfg.clone(), processor, clock.clone());
+    let prod = spawn_producer(&cfg, &cluster.input, &clock);
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let handle = cluster.read_handle(0).expect("node 0 was spawned");
+    let reader = {
+        let stop = stop.clone();
+        let poll_every = clock.wall_for(cfg.gossip_interval_ms.max(1));
+        let window_ms = cfg.window_ms;
+        std::thread::Builder::new()
+            .name("holon-reader".into())
+            .spawn(move || {
+                type Q4Shared = ShardedMapCrdt<u64, PrefixAgg>;
+                let mut engine: Option<QueryEngine<Q4Shared>> = None;
+                let mut sub = None;
+                let mut folded = crate::query::QueryStats::default();
+                let mut lag_hwm = 0u64;
+                while !stop.load(Ordering::Acquire) {
+                    std::thread::sleep(poll_every);
+                    let Some(e) = engine.as_mut() else {
+                        // bootstrap once the node's first full-sync round
+                        // (or shutdown snapshot) lands
+                        if let Some(snap) = handle.snapshot() {
+                            if let Ok(fresh) = QueryEngine::from_snapshot(&snap) {
+                                sub = Some(handle.subscribe_at(snap.cursor));
+                                engine = Some(fresh);
+                            }
+                        }
+                        continue;
+                    };
+                    let s = sub.as_mut().expect("subscription exists with engine");
+                    match s.poll(64) {
+                        Ok(items) => {
+                            for item in &items {
+                                let _ = e.apply_feed(item);
+                            }
+                        }
+                        Err(_gap) => {
+                            // fell behind retention: re-bootstrap from the
+                            // snapshot, carrying the accumulated stats
+                            folded.absorb(&e.take_stats());
+                            if let Some(snap) = handle.snapshot() {
+                                if let Ok(fresh) = QueryEngine::from_snapshot(&snap) {
+                                    sub = Some(handle.subscribe_at(snap.cursor));
+                                    engine = Some(fresh);
+                                }
+                            }
+                            continue;
+                        }
+                    }
+                    lag_hwm = lag_hwm.max(handle.max_lag());
+                    let Some(wid) = e.state().completed_up_to() else {
+                        continue;
+                    };
+                    if wid < e.state().first_available() {
+                        continue; // already compacted past
+                    }
+                    match mode {
+                        ReadMode::Point => {
+                            for cat in 0..CATEGORIES {
+                                let _ = e.point(wid, &cat, window_ms);
+                            }
+                            // absent keys: the Bloom prunes these without
+                            // consulting state (drives scan_rows_avoided)
+                            for i in 0..CATEGORIES {
+                                let _ = e.point(wid, &(1_000_000 + i), window_ms);
+                            }
+                        }
+                        ReadMode::Scan => {
+                            let _ = e.range(wid, &0, &(CATEGORIES - 1), window_ms);
+                            let _ = e.top_k(wid, 3, window_ms);
+                        }
+                    }
+                }
+                if let Some(mut e) = engine {
+                    folded.absorb(&e.take_stats());
+                }
+                (folded, lag_hwm)
+            })
+            .expect("spawn reader")
+    };
+
+    drive(&clock, cfg.duration_ms, drain_ms(&cfg), vec![], |_| {});
+    let produced = prod.stop();
+    stop.store(true, Ordering::Release);
+    let (stats, lag_hwm) = reader.join().expect("reader thread");
+    cluster.stop();
+    cluster.metrics.add_query_stats(&stats);
+    cluster
+        .metrics
+        .changefeed_lag
+        .fetch_max(lag_hwm, Ordering::Relaxed);
+    let dp = data_plane_stats(&cluster.metrics, &cluster.input, &cluster.output, Some(&cluster.bus));
+    collect(SystemKind::Holon, Workload::Q4, &cluster.metrics, produced, cfg.duration_ms, dp)
+}
+
 // ---- the `holon bench` perf trajectory ---------------------------------
 
 /// One named scenario of the `holon bench` suite.
@@ -590,6 +733,22 @@ pub fn bench_scenarios(cfg: &HolonConfig, quick: bool) -> Vec<BenchScenario> {
             crate::nexmark::queries::dataflow_q4_sharded(kcfg.window_ms, shards),
         ),
     });
+
+    // Mixed read/write: the Q4 keyed workload under concurrent readers
+    // served off live replica state through the changefeed — the row
+    // family that measures the read path (queries_served, index
+    // hits/misses, scan rows avoided, changefeed lag).
+    let mut rcfg = kcfg.clone();
+    rcfg.shard_count = shards;
+    for (name, mode) in [
+        ("mixed_rw_q4_point", ReadMode::Point),
+        ("mixed_rw_q4_scan", ReadMode::Scan),
+    ] {
+        out.push(BenchScenario {
+            name: name.to_string(),
+            result: run_mixed_read_write(&rcfg, mode),
+        });
+    }
 
     // Table 2 latency rows under the paper's failure scenarios.
     let mut lcfg = cfg.clone();
@@ -674,6 +833,11 @@ pub fn bench_report_json(pr: &str, quick: bool, scenarios: &[BenchScenario]) -> 
         j.end_arr()
             .u64_field("shard_parallel_merges", r.data_plane.shard_parallel_merges)
             .u64_field("shard_serial_merges", r.data_plane.shard_serial_merges)
+            .u64_field("queries_served", r.data_plane.queries_served)
+            .u64_field("query_index_hits", r.data_plane.query_index_hits)
+            .u64_field("query_index_misses", r.data_plane.query_index_misses)
+            .u64_field("query_scan_rows_avoided", r.data_plane.query_scan_rows_avoided)
+            .u64_field("changefeed_lag", r.data_plane.changefeed_lag)
             .bool_field("stalled", r.stalled)
             .end_obj();
     }
@@ -793,6 +957,11 @@ mod tests {
             "shard_gossip_bytes",
             "shard_parallel_merges",
             "shard_serial_merges",
+            "queries_served",
+            "query_index_hits",
+            "query_index_misses",
+            "query_scan_rows_avoided",
+            "changefeed_lag",
             "stalled",
         ] {
             assert_eq!(
@@ -806,6 +975,40 @@ mod tests {
         // unsharded Q7: the shard counters are present and empty/zero
         assert!(s.contains("\"shard_count\":0,"), "{s}");
         assert!(s.contains("\"shard_gossip_bytes\":[],"), "{s}");
+    }
+
+    #[test]
+    fn mixed_read_write_run_serves_queries_with_index_wins() {
+        let mut cfg = small_cfg();
+        cfg.gossip_delta = true;
+        cfg.shard_count = 8;
+        // enough run time for several completed windows under the reader
+        cfg.duration_ms = 6000;
+        let r = run_mixed_read_write(&cfg, ReadMode::Point);
+        assert!(r.outputs > 0, "writes must still flow under readers");
+        assert_eq!(r.data_plane.gaps, 0);
+        let dp = &r.data_plane;
+        assert!(dp.queries_served > 0, "reader served no queries: {dp:?}");
+        // every served query was classified by the pre-filter
+        assert_eq!(
+            dp.query_index_hits + dp.query_index_misses,
+            dp.queries_served,
+            "{dp:?}"
+        );
+        // the acceptance counter: absent-key points are Bloom-pruned, so
+        // the index measurably reduced scanned rows
+        assert!(dp.query_scan_rows_avoided > 0, "{dp:?}");
+        // and the JSON row carries the read-path fields with real values
+        let s = bench_report_json("PR6", true, &[BenchScenario {
+            name: "mixed_rw_q4_point".to_string(),
+            result: r,
+        }]);
+        assert!(s.contains("\"name\":\"mixed_rw_q4_point\""), "{s}");
+        assert!(!s.contains("\"queries_served\":0,"), "{s}");
+
+        // scans exercise range + top-k through the same counters
+        let r = run_mixed_read_write(&cfg, ReadMode::Scan);
+        assert!(r.data_plane.queries_served > 0, "{:?}", r.data_plane);
     }
 
     #[test]

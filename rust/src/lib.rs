@@ -24,6 +24,9 @@
 //! * the engines: [`engine`] (Holon: decentralized nodes, work stealing,
 //!   Algorithm 2) and [`baseline`] (the centralized Flink-model used as
 //!   the paper's comparison system);
+//! * the read path: [`query`] (any-replica point/range/top-k queries
+//!   with per-query staleness bounds, a signature-index pre-filter, and
+//!   changefeed subscriptions over the gossip delta stream);
 //! * workloads: [`nexmark`] (generator + queries Q0/Q4/Q7/Query1);
 //! * the AOT hot path: [`runtime`] (PJRT-loaded XLA kernels);
 //! * harness support: [`benchkit`], [`proptest_lite`], [`sim`].
@@ -73,7 +76,7 @@
 //!
 //! runs the §5.3 max-throughput ramp (Holon + the Flink-model baseline)
 //! and the Table 2 latency rows headlessly, prints human-readable rows,
-//! and writes a `holon-bench/v1` JSON report (default `BENCH_PR4.json`;
+//! and writes a `holon-bench/v1` JSON report (default `BENCH_PR6.json`;
 //! see EXPERIMENTS.md for the schema and the trajectory log). Each
 //! scenario entry carries events/sec (peak + mean), p50/p99/mean
 //! latency, gossip volume (`gossip_bytes_wire`, per-recipient), and the
@@ -128,6 +131,36 @@
 //! `tests/amplification.rs` holds the headline regression: the
 //! post-full-sync delta round ships <5% of full-state bytes when
 //! replicas have not diverged.
+//!
+//! ## Queryable state (the read path)
+//!
+//! Production means clients *querying* live windowed state, not just
+//! sinks draining outputs. The [`query`] subsystem serves reads off any
+//! replica without coordination — safe because windowed-CRDT
+//! convergence makes completed windows identical everywhere, and
+//! bounded-stale for incomplete ones. [`query::QueryEngine`] wraps a
+//! [`wcrdt::WindowedCrdt`] replica and answers point lookups, inclusive
+//! range scans and top-k scans over keyed windows (flat
+//! [`crdt::MapCrdt`] or [`shard::ShardedMapCrdt`]) under a per-query
+//! **staleness bound** against the replica's watermark: `staleness == 0`
+//! demands the final value (exactly `is_complete`, with the same
+//! exact-boundary semantics as allowed lateness), larger bounds admit
+//! fresher-but-provisional reads stamped with their `lag_ms`. Reads are
+//! pre-filtered through a per-window signature index
+//! ([`query::SignatureIndex`]: key-fingerprint Bloom + shard-occupancy
+//! bitset) maintained incrementally from the
+//! [`wcrdt::MergeReport`] changed-window sets — it prunes lookups and
+//! whole shards but never drops a matching key (property-tested in
+//! `tests/query_read_path.rs`). Replica state reaches readers over a
+//! changefeed ([`query::ReadHandle`]): each node publishes the very
+//! payload Arcs it gossips (full state on full-sync rounds, deltas
+//! otherwise) into a bounded retention ring; subscribers poll with
+//! exactly-once-per-cursor delivery, resume from a saved cursor, and
+//! re-bootstrap from the latest full snapshot after falling behind
+//! retention. `holon query` demos the path end-to-end, and the
+//! `mixed_rw_q4_*` bench scenarios measure it (`queries_served`,
+//! `query_index_hits/misses`, `query_scan_rows_avoided`,
+//! `changefeed_lag`).
 
 pub mod api;
 pub mod baseline;
@@ -143,6 +176,7 @@ pub mod metrics;
 pub mod net;
 pub mod nexmark;
 pub mod proptest_lite;
+pub mod query;
 pub mod runtime;
 pub mod shard;
 pub mod sim;

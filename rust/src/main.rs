@@ -10,6 +10,8 @@
 //! holon bench --targets — list the cargo bench targets for each figure/table
 //! holon generate [--count=N] [--partition=P] — dump Nexmark events as text
 //! holon inspect  [--config=FILE] [--key=value ...] — print the resolved config
+//! holon query    [--staleness=MS] [--key=value ...] — run Q4 briefly, then answer
+//!                point/range/top-k queries from every replica's read path
 //! ```
 //!
 //! Keyed workloads run over sharded keyed state when `--shard-count=N`
@@ -76,10 +78,12 @@ fn main() {
             println!("{}", cfg.dump());
         }
         Some("bench") => cmd_bench(&cfg, &rest[1..]),
+        Some("query") => cmd_query(&cfg, &rest[1..]),
         _ => {
-            eprintln!("usage: holon <run|sim|generate|inspect|bench> [options]");
+            eprintln!("usage: holon <run|sim|generate|inspect|bench|query> [options]");
             eprintln!("       holon run q7 --system=holon --scenario=concurrent --nodes=5");
             eprintln!("       holon sim --seeds=100 --start-seed=0");
+            eprintln!("       holon query --staleness=0 --shard-count=8");
             std::process::exit(2);
         }
     }
@@ -300,10 +304,110 @@ fn cmd_bench(cfg: &HolonConfig, args: &[&str]) {
             ],
         );
     }
-    let json = bench_report_json("PR4", quick, &scenarios);
+    let json = bench_report_json("PR6", quick, &scenarios);
     if let Err(e) = std::fs::write(&cfg.bench_out, json.as_bytes()) {
         eprintln!("error writing {}: {e}", cfg.bench_out);
         std::process::exit(1);
     }
     println!("wrote {} ({} scenarios)", cfg.bench_out, scenarios.len());
+}
+
+/// Read-path demo: run the keyed Q4 workload briefly, then answer
+/// point/range/top-k queries from *every* node's final replica through
+/// `holon::query::QueryEngine` — the same rows from each, because
+/// completed windows are identical on every converged replica.
+fn cmd_query(cfg: &HolonConfig, args: &[&str]) {
+    use holon::clock::SimClock;
+    use holon::crdt::PrefixAgg;
+    use holon::engine::HolonCluster;
+    use holon::nexmark::{producer, CATEGORIES};
+    use holon::query::QueryEngine;
+    use holon::shard::ShardedMapCrdt;
+    use holon::wcrdt::WindowedCrdt;
+
+    let mut staleness = 0u64;
+    for a in args {
+        if let Some(v) = a.strip_prefix("--staleness=") {
+            staleness = v.parse().unwrap_or_else(|_| {
+                eprintln!("bad value for --staleness: {v}");
+                std::process::exit(2);
+            });
+        } else {
+            eprintln!("unknown query option: {a}");
+            std::process::exit(2);
+        }
+    }
+
+    let mut cfg = cfg.clone();
+    cfg.gossip_delta = true;
+    let shards = if cfg.shard_count > 0 { cfg.shard_count } else { 8 };
+    section(&format!(
+        "holon query — Q4 over {} nodes, {} shards, staleness bound {staleness} ms",
+        cfg.nodes, shards
+    ));
+
+    let processor = holon::nexmark::queries::dataflow_q4_sharded(cfg.window_ms, shards);
+    let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
+    let cluster = HolonCluster::start_with_clock(cfg.clone(), processor, clock.clone());
+    let prod = producer::spawn(
+        cluster.input.clone(),
+        clock.clone(),
+        cfg.seed,
+        cfg.events_per_sec_per_partition,
+        cfg.duration_ms,
+    );
+    std::thread::sleep(clock.wall_for(cfg.duration_ms + (cfg.window_ms * 4).max(4000)));
+    let produced = prod.stop();
+    cluster.stop();
+    println!("ingested {produced} events; querying each replica:");
+
+    for (node, bytes) in cluster.final_replicas() {
+        let state = match WindowedCrdt::<ShardedMapCrdt<u64, PrefixAgg>>::from_bytes(&bytes) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("node {node}: undecodable replica: {e}");
+                continue;
+            }
+        };
+        let mut q = QueryEngine::new(state);
+        let Some(wid) = q.state().completed_up_to() else {
+            println!("node {node}: no completed window yet");
+            continue;
+        };
+        let wid = wid.max(q.state().first_available());
+        match q.top_k(wid, 3, staleness) {
+            Ok(r) => {
+                let rows: Vec<String> = r
+                    .value
+                    .iter()
+                    .map(|(cat, agg)| {
+                        format!("cat {cat}: avg {:.0}¢ × {}", agg.avg().unwrap_or(0.0), agg.count())
+                    })
+                    .collect();
+                println!(
+                    "node {node} | window {wid} (lag {} ms{}) | top-3 {}",
+                    r.lag_ms,
+                    if r.is_final { ", final" } else { "" },
+                    rows.join(" | "),
+                );
+            }
+            Err(e) => println!("node {node} | window {wid} | {e}"),
+        }
+        // a point probe per category plus one verifiably-absent key to
+        // show the index pre-filter pruning
+        for cat in [0, CATEGORIES / 2, 999_999] {
+            match q.point(wid, &cat, staleness) {
+                Ok(r) => match r.value {
+                    Some(agg) => println!("  point cat {cat}: count {}", agg.count()),
+                    None => println!("  point cat {cat}: absent"),
+                },
+                Err(e) => println!("  point cat {cat}: {e}"),
+            }
+        }
+        let s = q.stats();
+        println!(
+            "  stats: served {} | index hits {} misses {} | rows avoided {}",
+            s.served, s.index_hits, s.index_misses, s.scan_rows_avoided
+        );
+    }
 }

@@ -1,0 +1,339 @@
+//! Changefeed: subscription surface over the delta stream a node
+//! already produces for gossip.
+//!
+//! The write path publishes every outbound state payload (full-state on
+//! full-sync rounds, `take_delta()` encodes otherwise) into a
+//! [`ReadHandle`] — the same `Arc<Vec<u8>>` handed to the bus, so
+//! serving subscribers costs one Arc clone per item, not a re-encode.
+//! Each item gets a monotonically increasing cursor. Subscribers pull
+//! with [`Subscription::poll`]; delivery is exactly-once per cursor per
+//! subscription, and a dropped subscriber resumes from its saved cursor
+//! via [`ReadHandle::subscribe_at`].
+//!
+//! Retention is bounded (a ring of the last N items). A subscriber that
+//! falls behind the ring gets [`FeedGap`] — the feed analogue of window
+//! compaction's `first_available()` — and must re-bootstrap from
+//! [`ReadHandle::snapshot`], which carries the cursor to resume from.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+use crate::util::SimTime;
+
+/// Default ring retention (items). Roughly `FULL_SYNC_EVERY * fanout`
+/// rounds of slack: a subscriber polling at gossip cadence never gaps.
+pub const DEFAULT_RETENTION: usize = 256;
+
+/// One published state payload.
+#[derive(Debug, Clone)]
+pub struct FeedItem {
+    /// Position in the feed; consecutive, starting at 0.
+    pub cursor: u64,
+    /// Publisher's watermark floor when the payload was produced.
+    pub watermark: SimTime,
+    /// `true` when `payload` is a full state encode (safe bootstrap
+    /// point), `false` for a delta.
+    pub full: bool,
+    /// Encoded `WindowedCrdt` state or delta — shared with the gossip
+    /// path, never copied per subscriber.
+    pub payload: Arc<Vec<u8>>,
+}
+
+/// Bootstrap snapshot: the most recent full-state payload plus the
+/// cursor a fresh subscriber should resume the delta stream from.
+#[derive(Debug, Clone)]
+pub struct StateSnapshot {
+    pub bytes: Arc<Vec<u8>>,
+    /// First cursor NOT covered by `bytes` — pass to `subscribe_at`.
+    pub cursor: u64,
+    pub watermark: SimTime,
+}
+
+/// A subscriber fell behind retention: `requested` is its cursor,
+/// `oldest_available` the oldest still in the ring. Re-bootstrap from
+/// the snapshot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FeedGap {
+    pub requested: u64,
+    pub oldest_available: u64,
+}
+
+struct HandleInner {
+    snapshot: Option<StateSnapshot>,
+    /// Cursor the next published item will receive.
+    next_cursor: u64,
+    ring: VecDeque<FeedItem>,
+    retention: usize,
+    /// Live subscriber cursors, for lag accounting only.
+    subscribers: Vec<Weak<AtomicU64>>,
+}
+
+impl HandleInner {
+    fn oldest_retained(&self) -> u64 {
+        self.next_cursor - self.ring.len() as u64
+    }
+
+    fn push(&mut self, item: FeedItem) {
+        self.ring.push_back(item);
+        while self.ring.len() > self.retention {
+            self.ring.pop_front();
+        }
+        self.next_cursor += 1;
+    }
+}
+
+/// Per-node publication point for the changefeed. Cloned into the node
+/// loop (publisher) and held by the cluster (readers); cheap to clone.
+#[derive(Clone)]
+pub struct ReadHandle {
+    inner: Arc<Mutex<HandleInner>>,
+}
+
+impl Default for ReadHandle {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ReadHandle {
+    pub fn new() -> Self {
+        Self::with_retention(DEFAULT_RETENTION)
+    }
+
+    pub fn with_retention(retention: usize) -> Self {
+        assert!(retention > 0);
+        ReadHandle {
+            inner: Arc::new(Mutex::new(HandleInner {
+                snapshot: None,
+                next_cursor: 0,
+                ring: VecDeque::new(),
+                retention,
+                subscribers: Vec::new(),
+            })),
+        }
+    }
+
+    /// Publish a full-state payload: appended to the feed AND installed
+    /// as the bootstrap snapshot. Returns the item's cursor.
+    pub fn publish_full(&self, payload: Arc<Vec<u8>>, watermark: SimTime) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        let cursor = inner.next_cursor;
+        inner.push(FeedItem {
+            cursor,
+            watermark,
+            full: true,
+            payload: Arc::clone(&payload),
+        });
+        inner.snapshot = Some(StateSnapshot {
+            bytes: payload,
+            cursor: cursor + 1,
+            watermark,
+        });
+        cursor
+    }
+
+    /// Publish a delta payload. Returns the item's cursor.
+    pub fn publish_delta(&self, payload: Arc<Vec<u8>>, watermark: SimTime) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        let cursor = inner.next_cursor;
+        inner.push(FeedItem {
+            cursor,
+            watermark,
+            full: false,
+            payload,
+        });
+        cursor
+    }
+
+    /// Latest bootstrap snapshot, if any full state was published yet.
+    pub fn snapshot(&self) -> Option<StateSnapshot> {
+        self.inner.lock().unwrap().snapshot.clone()
+    }
+
+    /// Subscribe from the live tail (items published after this call).
+    pub fn subscribe(&self) -> Subscription {
+        let at = self.inner.lock().unwrap().next_cursor;
+        self.subscribe_at(at)
+    }
+
+    /// Subscribe from an explicit cursor (resume). If the cursor has
+    /// fallen out of retention the first `poll` reports [`FeedGap`].
+    pub fn subscribe_at(&self, cursor: u64) -> Subscription {
+        let cur = Arc::new(AtomicU64::new(cursor));
+        let mut inner = self.inner.lock().unwrap();
+        inner.subscribers.push(Arc::downgrade(&cur));
+        Subscription {
+            inner: Arc::clone(&self.inner),
+            cursor: cur,
+        }
+    }
+
+    /// Cursor the next published item will receive.
+    pub fn latest_cursor(&self) -> u64 {
+        self.inner.lock().unwrap().next_cursor
+    }
+
+    /// Oldest cursor still retained in the ring.
+    pub fn oldest_retained(&self) -> u64 {
+        self.inner.lock().unwrap().oldest_retained()
+    }
+
+    /// Items the slowest live subscriber is behind the head (0 when no
+    /// subscribers). Dead subscriptions are pruned here.
+    pub fn max_lag(&self) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        let head = inner.next_cursor;
+        let mut lag = 0u64;
+        inner.subscribers.retain(|w| match w.upgrade() {
+            Some(cur) => {
+                lag = lag.max(head.saturating_sub(cur.load(Ordering::Relaxed)));
+                true
+            }
+            None => false,
+        });
+        lag
+    }
+}
+
+/// A pull-model changefeed subscription. Not `Clone`: the cursor is the
+/// delivery state, and sharing it would break exactly-once.
+pub struct Subscription {
+    inner: Arc<Mutex<HandleInner>>,
+    cursor: Arc<AtomicU64>,
+}
+
+impl Subscription {
+    /// Next cursor this subscription will read — save it to resume
+    /// later via [`ReadHandle::subscribe_at`].
+    pub fn cursor(&self) -> u64 {
+        self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// Pull up to `max` items past the cursor. Advances the cursor by
+    /// the number returned — each cursor is delivered exactly once per
+    /// subscription. Returns [`FeedGap`] if the cursor fell behind
+    /// retention (cursor is NOT advanced; re-bootstrap via snapshot).
+    pub fn poll(&mut self, max: usize) -> Result<Vec<FeedItem>, FeedGap> {
+        let inner = self.inner.lock().unwrap();
+        let want = self.cursor.load(Ordering::Relaxed);
+        let oldest = inner.oldest_retained();
+        if want < oldest {
+            return Err(FeedGap {
+                requested: want,
+                oldest_available: oldest,
+            });
+        }
+        let skip = (want - oldest) as usize;
+        let items: Vec<FeedItem> = inner.ring.iter().skip(skip).take(max).cloned().collect();
+        self.cursor
+            .store(want + items.len() as u64, Ordering::Relaxed);
+        Ok(items)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payload(n: u8) -> Arc<Vec<u8>> {
+        Arc::new(vec![n; 4])
+    }
+
+    #[test]
+    fn poll_is_exactly_once_and_in_order() {
+        let h = ReadHandle::new();
+        let mut sub = h.subscribe();
+        h.publish_full(payload(0), 0);
+        h.publish_delta(payload(1), 100);
+        h.publish_delta(payload(2), 200);
+        let items = sub.poll(10).unwrap();
+        assert_eq!(items.iter().map(|i| i.cursor).collect::<Vec<_>>(), [0, 1, 2]);
+        assert!(items[0].full && !items[1].full);
+        // nothing new: empty, not a re-delivery
+        assert!(sub.poll(10).unwrap().is_empty());
+        h.publish_delta(payload(3), 300);
+        assert_eq!(sub.poll(10).unwrap()[0].cursor, 3);
+    }
+
+    #[test]
+    fn poll_respects_max() {
+        let h = ReadHandle::new();
+        let mut sub = h.subscribe();
+        for i in 0..5 {
+            h.publish_delta(payload(i), 0);
+        }
+        assert_eq!(sub.poll(2).unwrap().len(), 2);
+        assert_eq!(sub.poll(2).unwrap()[0].cursor, 2);
+        assert_eq!(sub.poll(10).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn cursor_resume_continues_where_dropped() {
+        let h = ReadHandle::new();
+        let mut sub = h.subscribe();
+        h.publish_delta(payload(0), 0);
+        h.publish_delta(payload(1), 0);
+        sub.poll(1).unwrap();
+        let saved = sub.cursor();
+        drop(sub);
+        let mut resumed = h.subscribe_at(saved);
+        let items = resumed.poll(10).unwrap();
+        assert_eq!(items.iter().map(|i| i.cursor).collect::<Vec<_>>(), [1]);
+    }
+
+    #[test]
+    fn laggard_behind_retention_gets_gap_then_rebootstraps() {
+        let h = ReadHandle::with_retention(4);
+        let mut sub = h.subscribe();
+        for i in 0..10u8 {
+            h.publish_full(payload(i), u64::from(i) * 100);
+        }
+        let gap = sub.poll(10).unwrap_err();
+        assert_eq!(gap, FeedGap { requested: 0, oldest_available: 6 });
+        // the documented recovery: snapshot + subscribe_at(snapshot.cursor)
+        let snap = h.snapshot().unwrap();
+        assert_eq!(snap.cursor, 10);
+        assert_eq!(snap.bytes.as_slice(), &[9; 4]);
+        let mut fresh = h.subscribe_at(snap.cursor);
+        assert!(fresh.poll(10).unwrap().is_empty());
+        h.publish_delta(payload(42), 1000);
+        assert_eq!(fresh.poll(10).unwrap()[0].cursor, 10);
+    }
+
+    #[test]
+    fn snapshot_cursor_skips_the_snapshot_item() {
+        let h = ReadHandle::new();
+        h.publish_delta(payload(0), 0);
+        h.publish_full(payload(1), 100);
+        let snap = h.snapshot().unwrap();
+        // snapshot covers cursor 1; resume stream at 2
+        assert_eq!(snap.cursor, 2);
+        let mut sub = h.subscribe_at(snap.cursor);
+        h.publish_delta(payload(2), 200);
+        assert_eq!(sub.poll(10).unwrap()[0].cursor, 2);
+    }
+
+    #[test]
+    fn max_lag_tracks_slowest_live_subscriber() {
+        let h = ReadHandle::new();
+        assert_eq!(h.max_lag(), 0);
+        let mut fast = h.subscribe();
+        let slow = h.subscribe();
+        for i in 0..6 {
+            h.publish_delta(payload(i), 0);
+        }
+        fast.poll(10).unwrap();
+        assert_eq!(h.max_lag(), 6); // slow hasn't polled
+        drop(slow);
+        assert_eq!(h.max_lag(), 0); // dead subscriber pruned
+        let _keep = fast;
+    }
+
+    #[test]
+    fn no_snapshot_before_first_full_publish() {
+        let h = ReadHandle::new();
+        h.publish_delta(payload(0), 0);
+        assert!(h.snapshot().is_none());
+    }
+}

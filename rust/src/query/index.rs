@@ -1,0 +1,239 @@
+//! Signature-index pre-filter for the read path.
+//!
+//! One [`WindowSig`] per live window: a 64-bit two-probe Bloom filter
+//! over key fingerprints plus a 64-bit shard-occupancy bitset. Both
+//! halves are monotone under bit-or — exactly like the CRDT state they
+//! summarize — so a signature maintained across merges never un-learns
+//! a key. The index can answer "definitely absent" (prune the lookup or
+//! a whole shard) or "maybe present" (validate against state); it can
+//! never drop a matching key. Zero false negatives is property-tested
+//! in `tests/query_read_path.rs`.
+//!
+//! Signatures are maintained incrementally by
+//! [`QueryEngine::ingest`](crate::query::QueryEngine::ingest): after a
+//! merge, only the windows named in the
+//! [`MergeReport`](crate::wcrdt::MergeReport) changed-set are re-signed
+//! from the replica's own post-merge state. Signing our own state (not
+//! the incoming payload) keeps the shard bitset correct even when a
+//! payload arrives with a different shard layout and the merge rehashes
+//! its keys.
+
+use std::collections::BTreeMap;
+
+use crate::codec::Encode;
+use crate::wcrdt::WindowId;
+
+/// 64-bit fingerprint of an encodable key: FNV-1a over the key's
+/// encoded bytes, with a final avalanche mix so the Bloom probes (low
+/// bit slices) differ even for short sequential keys.
+pub fn fingerprint<K: Encode>(key: &K) -> u64 {
+    fingerprint_bytes(&key.to_bytes())
+}
+
+/// [`fingerprint`] over pre-encoded key bytes.
+pub fn fingerprint_bytes(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    // avalanche (splitmix-style): FNV alone leaves short keys clustered
+    // in the low bits, which is where the Bloom probes look
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    h ^= h >> 33;
+    h
+}
+
+/// Compact signature of one window's keyed state.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WindowSig {
+    /// Two-probe Bloom filter over key fingerprints.
+    keys: u64,
+    /// Occupancy bitset over shard indices (`shard % 64`); bit 0 doubles
+    /// as the "has any data" bit for flat (unsharded) state.
+    shards: u64,
+}
+
+impl WindowSig {
+    /// The two Bloom probe positions of a fingerprint.
+    fn key_mask(fp: u64) -> u64 {
+        (1u64 << (fp & 63)) | (1u64 << ((fp >> 6) & 63))
+    }
+
+    /// Record a key fingerprint.
+    pub fn note_key(&mut self, fp: u64) {
+        self.keys |= Self::key_mask(fp);
+    }
+
+    /// Whether a key with this fingerprint may be present. `false` is
+    /// definitive (prune); `true` requires validation against state.
+    pub fn may_contain_key(&self, fp: u64) -> bool {
+        let m = Self::key_mask(fp);
+        self.keys & m == m
+    }
+
+    /// Record an occupied shard index.
+    pub fn note_shard(&mut self, shard: usize) {
+        self.shards |= 1u64 << (shard & 63);
+    }
+
+    /// Whether the shard may hold data for this window. With ≤ 64 shards
+    /// the bitset is exact; beyond that it aliases (still no false
+    /// negatives).
+    pub fn may_contain_shard(&self, shard: usize) -> bool {
+        self.shards & (1u64 << (shard & 63)) != 0
+    }
+
+    /// Nothing was ever signed into this window.
+    pub fn is_empty(&self) -> bool {
+        self.keys == 0 && self.shards == 0
+    }
+
+    /// Fold another signature in (bit-or; monotone like the state).
+    pub fn merge(&mut self, other: &WindowSig) {
+        self.keys |= other.keys;
+        self.shards |= other.shards;
+    }
+
+    /// Bloom occupancy (set bits out of 64) — a saturation diagnostic:
+    /// at 64 the filter prunes nothing.
+    pub fn key_bits(&self) -> u32 {
+        self.keys.count_ones()
+    }
+}
+
+/// Per-window signatures of a replica's keyed state.
+#[derive(Debug, Clone, Default)]
+pub struct SignatureIndex {
+    windows: BTreeMap<WindowId, WindowSig>,
+}
+
+impl SignatureIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The signature of a window, if anything was ever signed into it.
+    /// `None` means the window verifiably holds no data (prune).
+    pub fn sig(&self, wid: WindowId) -> Option<&WindowSig> {
+        self.windows.get(&wid)
+    }
+
+    /// The signature of a window, created empty on first touch.
+    pub fn sig_mut(&mut self, wid: WindowId) -> &mut WindowSig {
+        self.windows.entry(wid).or_default()
+    }
+
+    /// Whether `wid` may contain a key with fingerprint `fp`.
+    pub fn may_contain(&self, wid: WindowId, fp: u64) -> bool {
+        self.windows.get(&wid).is_some_and(|s| s.may_contain_key(fp))
+    }
+
+    /// Drop signatures below `first` (mirrors window compaction — a
+    /// compacted window must not look "verifiably empty but queryable").
+    pub fn retain_from(&mut self, first: WindowId) {
+        self.windows = self.windows.split_off(&first);
+    }
+
+    /// Number of signed windows.
+    pub fn len(&self) -> usize {
+        self.windows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noted_keys_are_always_contained() {
+        let mut sig = WindowSig::default();
+        for k in 0u64..1000 {
+            let fp = fingerprint(&k);
+            sig.note_key(fp);
+            assert!(sig.may_contain_key(fp), "false negative for key {k}");
+        }
+        // after 1000 keys a 64-bit Bloom is saturated — still no false
+        // negatives, just no pruning power
+        for k in 0u64..1000 {
+            assert!(sig.may_contain_key(fingerprint(&k)));
+        }
+    }
+
+    #[test]
+    fn sparse_signature_prunes_absent_keys() {
+        let mut sig = WindowSig::default();
+        for k in 0u64..4 {
+            sig.note_key(fingerprint(&k));
+        }
+        // with 4 keys (≤ 8 set bits of 64) most absent keys must be
+        // pruned — quantifies the filter actually filters
+        let pruned = (1000u64..2000)
+            .filter(|k| !sig.may_contain_key(fingerprint(k)))
+            .count();
+        assert!(pruned > 800, "only {pruned}/1000 absent keys pruned");
+    }
+
+    #[test]
+    fn fingerprints_of_sequential_keys_spread() {
+        // the avalanche mix must keep low-bit slices distinct for the
+        // sequential integer keys real workloads use
+        let mut seen = std::collections::BTreeSet::new();
+        for k in 0u64..64 {
+            seen.insert(fingerprint(&k) & 63);
+        }
+        assert!(seen.len() > 32, "low probe bits collapsed: {}", seen.len());
+    }
+
+    #[test]
+    fn shard_bits_are_exact_up_to_64() {
+        let mut sig = WindowSig::default();
+        sig.note_shard(0);
+        sig.note_shard(7);
+        assert!(sig.may_contain_shard(0));
+        assert!(sig.may_contain_shard(7));
+        assert!(!sig.may_contain_shard(1));
+        // beyond 64 the bitset aliases — never a false negative
+        sig.note_shard(65);
+        assert!(sig.may_contain_shard(65));
+        assert!(sig.may_contain_shard(1), "aliased bit must stay conservative");
+    }
+
+    #[test]
+    fn merge_is_monotone() {
+        let mut a = WindowSig::default();
+        let mut b = WindowSig::default();
+        a.note_key(fingerprint(&1u64));
+        b.note_key(fingerprint(&2u64));
+        b.note_shard(3);
+        a.merge(&b);
+        assert!(a.may_contain_key(fingerprint(&1u64)));
+        assert!(a.may_contain_key(fingerprint(&2u64)));
+        assert!(a.may_contain_shard(3));
+    }
+
+    #[test]
+    fn index_retain_from_mirrors_compaction() {
+        let mut idx = SignatureIndex::new();
+        for w in 0..8u64 {
+            idx.sig_mut(w).note_key(fingerprint(&w));
+        }
+        idx.retain_from(5);
+        assert_eq!(idx.len(), 3);
+        assert!(idx.sig(4).is_none());
+        assert!(idx.sig(5).is_some());
+        assert!(!idx.may_contain(4, fingerprint(&4u64)));
+    }
+
+    #[test]
+    fn absent_window_is_definitively_empty() {
+        let idx = SignatureIndex::new();
+        assert!(!idx.may_contain(0, fingerprint(&0u64)));
+        assert!(idx.sig(0).is_none());
+    }
+}

@@ -283,6 +283,17 @@ impl<K: Ord + Clone + Encode, C: Crdt> ShardedMapCrdt<K, C> {
         }
         self.shards[self.shard_of(key)].get(key)
     }
+
+    /// The shard a key routes to, or `None` while still at bottom (no
+    /// shards materialized). The read path's signature index uses this
+    /// to prune per-shard lookups without touching shard contents.
+    pub fn shard_index(&self, key: &K) -> Option<usize> {
+        if self.shards.is_empty() {
+            None
+        } else {
+            Some(self.shard_of(key))
+        }
+    }
 }
 
 impl<K, C> ShardedMapCrdt<K, C>

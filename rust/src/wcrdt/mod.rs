@@ -430,6 +430,12 @@ impl<C: Crdt> WindowedCrdt<C> {
         self.windows.len()
     }
 
+    /// Ids of the live (uncompacted) windows, ascending. The read path
+    /// uses this to seed its signature index from an existing replica.
+    pub fn window_ids(&self) -> impl Iterator<Item = WindowId> + '_ {
+        self.windows.keys().copied()
+    }
+
     /// Direct read access for tests/benches.
     pub fn raw_window(&self, wid: WindowId) -> Option<&C> {
         self.windows.get(&wid)

@@ -1,0 +1,336 @@
+//! Read-path acceptance: any converged replica answers queries
+//! identically (byte for byte) within its declared staleness bound,
+//! the signature-index pre-filter never produces a false negative, and
+//! the changefeed delivers every gossip payload exactly once with
+//! cursor resume across subscriber drops and node restarts.
+
+use std::collections::BTreeSet;
+
+use holon::clock::SimClock;
+use holon::codec::Encode;
+use holon::config::HolonConfig;
+use holon::crdt::{GCounter, MapCrdt, PrefixAgg};
+use holon::engine::HolonCluster;
+use holon::log::Topic;
+use holon::nexmark::queries::dataflow_q4_sharded;
+use holon::nexmark::{NexmarkGen, CATEGORIES};
+use holon::query::{fingerprint, QueryEngine, QueryError};
+use holon::shard::ShardedMapCrdt;
+use holon::sim::{run_plan_with, FaultPlan, SimSpec};
+use holon::wcrdt::{WindowAssigner, WindowedCrdt};
+
+type Q4State = WindowedCrdt<ShardedMapCrdt<u64, PrefixAgg>>;
+type Q4Engine = QueryEngine<ShardedMapCrdt<u64, PrefixAgg>>;
+
+/// Canonical byte encoding of one engine's answers over a window range:
+/// per window, every category's point value, the full range scan, and
+/// the top-3. Two replicas agree iff these bytes agree.
+fn answers(q: &mut Q4Engine, lo: u64, hi: u64) -> Vec<u8> {
+    let mut out = Vec::new();
+    for wid in lo..=hi {
+        for cat in 0..CATEGORIES {
+            let r = q.point(wid, &cat, 0).expect("complete window at staleness 0");
+            assert!(r.is_final, "window {wid} must be final at staleness 0");
+            match r.value {
+                Some(agg) => {
+                    out.push(1);
+                    out.extend(agg.to_bytes());
+                }
+                None => out.push(0),
+            }
+        }
+        let range = q.range(wid, &0, &(CATEGORIES - 1), 0).unwrap();
+        for (k, v) in &range.value {
+            out.extend(k.to_bytes());
+            out.extend(v.to_bytes());
+        }
+        let top = q.top_k(wid, 3, 0).unwrap();
+        for (k, v) in &top.value {
+            out.extend(k.to_bytes());
+            out.extend(v.to_bytes());
+        }
+    }
+    out
+}
+
+#[test]
+fn any_replica_queries_converge_under_faults() {
+    // Run the sharded Q4 pipeline through a seeded kill/restart/
+    // partition/burst schedule, then query every surviving replica
+    // directly — no coordination, no designated leader. For every
+    // window complete on all of them, point/range/top-k answers must
+    // be byte-identical (the §3.3 determinism claim, served as reads).
+    let spec = SimSpec { seed: 91, ..SimSpec::default() };
+    let plan = FaultPlan::generate(91, spec.nodes, spec.fault_window());
+    let art = run_plan_with(&spec, &plan, None, dataflow_q4_sharded(spec.window_ms, 8));
+    assert!(art.replicas.len() >= 2, "need >= 2 surviving replicas");
+
+    let mut engines: Vec<(u32, Q4Engine)> = art
+        .replicas
+        .iter()
+        .map(|(&n, bytes)| {
+            (n, QueryEngine::new(Q4State::from_bytes(bytes).expect("decodable replica")))
+        })
+        .collect();
+
+    // the windows final on every replica
+    let lo = engines
+        .iter()
+        .map(|(_, q)| q.state().first_available())
+        .max()
+        .unwrap();
+    let hi = engines
+        .iter()
+        .map(|(_, q)| q.state().completed_up_to().expect("completed windows"))
+        .min()
+        .unwrap();
+    assert!(hi > lo, "need >= 2 comparable windows (got [{lo}, {hi}])");
+
+    let reference = answers(&mut engines[0].1, lo, hi);
+    assert!(!reference.is_empty());
+    for (node, q) in engines.iter_mut().skip(1) {
+        assert_eq!(
+            answers(q, lo, hi),
+            reference,
+            "replica {node} disagrees with replica {} on final windows [{lo}, {hi}]",
+            engines_first_node(&art)
+        );
+    }
+
+    // Staleness gate per replica: the first incomplete window is
+    // rejected at staleness 0 but readable as a non-final value under
+    // a one-window bound (its lag is at most window_ms by definition).
+    for (_, q) in engines.iter_mut() {
+        let c = q.state().completed_up_to().unwrap();
+        match q.point(c + 1, &0, 0) {
+            Err(QueryError::TooStale { lag_ms, bound_ms: 0 }) => assert!(lag_ms > 0),
+            other => panic!("incomplete window must be TooStale at 0, got {other:?}"),
+        }
+        let near = q.point(c + 1, &0, spec.window_ms).unwrap();
+        assert!(!near.is_final);
+        assert!(near.lag_ms > 0 && near.lag_ms <= spec.window_ms);
+    }
+}
+
+fn engines_first_node(art: &holon::sim::RunArtifacts) -> u32 {
+    *art.replicas.keys().next().unwrap()
+}
+
+struct XorShift64(u64);
+
+impl XorShift64 {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+}
+
+#[test]
+fn index_prefilter_has_zero_false_negatives() {
+    // Property: for every (window, key) ever written, a reader that
+    // ingested the writer's state — through any interleaving of delta
+    // and full-state payloads — must (a) pass the Bloom/shard
+    // pre-filter and (b) find the key with a point lookup. The filter
+    // may only prune truly-absent keys.
+    for seed in [3u64, 41, 1999] {
+        // flat MapCrdt state
+        let mut rng = XorShift64(seed | 1);
+        let assigner = WindowAssigner::tumbling(1000);
+        let mut writer: WindowedCrdt<MapCrdt<u64, GCounter>> =
+            WindowedCrdt::new(assigner, [0u32].iter().copied());
+        let mut reader = QueryEngine::new(WindowedCrdt::<MapCrdt<u64, GCounter>>::new(
+            assigner,
+            [0u32].iter().copied(),
+        ));
+        let mut inserted: BTreeSet<(u64, u64)> = BTreeSet::new();
+        for step in 0..400u64 {
+            let wid = rng.next() % 6;
+            let key = rng.next() % 512;
+            let ts = wid * 1000 + rng.next() % 1000;
+            writer.insert_with(0, ts, |m| m.entry(key).add(0, 1)).unwrap();
+            inserted.insert((wid, key));
+            if step % 7 == 0 {
+                reader.ingest(&writer.take_delta());
+            }
+            if step % 97 == 0 {
+                reader.ingest(&writer); // periodic full-state anti-entropy
+            }
+        }
+        reader.ingest(&writer.take_delta());
+        for &(wid, key) in &inserted {
+            assert!(
+                reader.index().may_contain(wid, fingerprint(&key)),
+                "flat seed {seed}: filter lost window {wid} key {key}"
+            );
+            let r = reader.point(wid, &key, u64::MAX).unwrap();
+            assert!(r.value.is_some(), "flat seed {seed}: window {wid} key {key} pruned");
+        }
+
+        // sharded state: deltas carry dirty shards only, and the reader
+        // starts bottom (0 shards) so merges cross shard layouts
+        let mut rng = XorShift64(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1);
+        let mut writer: Q4State = WindowedCrdt::new(assigner, [0u32].iter().copied());
+        let mut reader: Q4Engine =
+            QueryEngine::new(WindowedCrdt::new(assigner, [0u32].iter().copied()));
+        let mut inserted: BTreeSet<(u64, u64)> = BTreeSet::new();
+        for step in 0..400u64 {
+            let wid = rng.next() % 6;
+            let key = rng.next() % 512;
+            let ts = wid * 1000 + rng.next() % 1000;
+            writer
+                .insert_with(0, ts, |m| {
+                    m.ensure_shards(8);
+                    m.entry(key).observe(0, 1.0);
+                })
+                .unwrap();
+            inserted.insert((wid, key));
+            if step % 5 == 0 {
+                reader.ingest(&writer.take_delta());
+            }
+            if step % 89 == 0 {
+                reader.ingest(&writer);
+            }
+        }
+        reader.ingest(&writer.take_delta());
+        for &(wid, key) in &inserted {
+            assert!(
+                reader.index().may_contain(wid, fingerprint(&key)),
+                "sharded seed {seed}: filter lost window {wid} key {key}"
+            );
+            let r = reader.point(wid, &key, u64::MAX).unwrap();
+            assert!(
+                r.value.is_some(),
+                "sharded seed {seed}: window {wid} key {key} pruned"
+            );
+        }
+    }
+}
+
+/// Pre-seed a byte-identical input log (same idiom as determinism.rs:
+/// timestamps are a pure function of the index).
+fn seed_input(input: &Topic, cfg: &HolonConfig) {
+    for p in 0..cfg.partitions {
+        let mut gen = NexmarkGen::new(cfg.seed, p);
+        let n = cfg.events_per_sec_per_partition * cfg.duration_ms / 1000;
+        let batch: Vec<(u64, Vec<u8>)> = (0..n)
+            .map(|i| {
+                let ts = i * 1000 / cfg.events_per_sec_per_partition;
+                (ts, gen.next_event().to_bytes())
+            })
+            .collect();
+        input.append_batch(p, batch);
+    }
+}
+
+#[test]
+fn changefeed_delivers_every_delta_exactly_once_with_resume() {
+    // Subscribe to node 0's changefeed before the run, drop the
+    // subscription mid-stream and resume from the saved cursor, and
+    // kill/restart node 1 while subscribed to it. Every published
+    // payload must arrive exactly once with strictly consecutive
+    // cursors, the restarted node must keep publishing into the SAME
+    // feed (cursors survive the restart), and an engine built purely
+    // from the feed must answer byte-identically to node 0's final
+    // replica.
+    let mut cfg = HolonConfig::default();
+    cfg.nodes = 4;
+    cfg.partitions = 8;
+    cfg.events_per_sec_per_partition = 1000;
+    cfg.wall_ms_per_sim_sec = 50.0;
+    cfg.duration_ms = 6000;
+    cfg.window_ms = 1000;
+    cfg.gossip_interval_ms = 50;
+    cfg.gossip_delta = true;
+    cfg.seed = 97;
+
+    let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
+    let cluster =
+        HolonCluster::start_with_clock(cfg.clone(), dataflow_q4_sharded(1000, 8), clock.clone());
+    seed_input(&cluster.input, &cfg);
+
+    let h0 = cluster.read_handle(0).expect("node 0 read handle");
+    let mut sub0 = h0.subscribe_at(0);
+    let h1 = cluster.read_handle(1).expect("node 1 read handle");
+    let mut sub1 = h1.subscribe_at(0);
+
+    std::thread::sleep(clock.wall_for(2000));
+    cluster.fail_node(1);
+    let pre_kill_cursor = h1.latest_cursor();
+    std::thread::sleep(clock.wall_for(1500));
+    cluster.restart_node(1);
+    std::thread::sleep(clock.wall_for(cfg.duration_ms - 3500 + 4000));
+    cluster.stop();
+
+    // node 0: poll a prefix, drop, resume from the saved cursor
+    let mut items = sub0.poll(40).expect("within retention");
+    let saved = sub0.cursor();
+    assert_eq!(saved, items.len() as u64);
+    drop(sub0);
+    let mut resumed = h0.subscribe_at(saved);
+    loop {
+        let batch = resumed.poll(64).expect("within retention");
+        if batch.is_empty() {
+            break;
+        }
+        items.extend(batch);
+    }
+    assert!(items.len() > 10, "only {} feed items", items.len());
+    for (i, item) in items.iter().enumerate() {
+        assert_eq!(item.cursor, i as u64, "cursor gap or duplicate at {i}");
+    }
+    assert_eq!(h0.latest_cursor(), items.len() as u64);
+    assert!(items.iter().any(|i| i.full), "full-sync rounds must be in the feed");
+    assert!(items.iter().any(|i| !i.full), "delta rounds must be in the feed");
+
+    // node 1: the restart must append to the same feed, not reset it
+    assert!(
+        h1.latest_cursor() > pre_kill_cursor,
+        "restarted node stopped publishing (cursor stuck at {pre_kill_cursor})"
+    );
+    let restarted: Vec<_> = {
+        let mut all = Vec::new();
+        loop {
+            let batch = sub1.poll(64).expect("within retention");
+            if batch.is_empty() {
+                break;
+            }
+            all.extend(batch);
+        }
+        all
+    };
+    for (i, item) in restarted.iter().enumerate() {
+        assert_eq!(item.cursor, i as u64, "node 1 cursor break at {i} (restart reset?)");
+    }
+
+    // an engine fed only by the changefeed equals the final replica
+    let mut feed_engine: Q4Engine =
+        QueryEngine::new(WindowedCrdt::new(WindowAssigner::tumbling(1000), std::iter::empty()));
+    for item in &items {
+        assert!(feed_engine.apply_feed(item).expect("decodable payload"));
+    }
+    assert_eq!(feed_engine.cursor(), items.len() as u64);
+
+    let replicas = cluster.final_replicas();
+    let mut direct =
+        QueryEngine::new(Q4State::from_bytes(&replicas[&0]).expect("decodable replica"));
+    assert_eq!(
+        feed_engine.state().global_watermark(),
+        direct.state().global_watermark(),
+        "feed-built engine watermark diverges from the replica"
+    );
+    let lo = direct
+        .state()
+        .first_available()
+        .max(feed_engine.state().first_available());
+    let hi = direct.state().completed_up_to().expect("completed windows");
+    assert!(hi >= lo, "no comparable window ([{lo}, {hi}])");
+    assert_eq!(
+        answers(&mut feed_engine, lo, hi),
+        answers(&mut direct, lo, hi),
+        "feed-built engine answers diverge from the replica's"
+    );
+}

@@ -49,6 +49,9 @@ def scenario(**overrides):
         "query_index_misses": 0,
         "query_scan_rows_avoided": 0,
         "changefeed_lag": 0,
+        "outbound_queue_depth_max": 0,
+        "credits_stalled_rounds": 0,
+        "inbox_depth_max": 0,
         "stalled": False,
     }
     base.update(overrides)
@@ -208,6 +211,45 @@ def test_read_heavy_scenario_passes():
                 query_index_misses=500,
                 query_scan_rows_avoided=34000,
                 changefeed_lag=3,
+            )
+        ]
+    )
+    assert validate(d) == []
+
+
+def test_backpressure_fields_are_required():
+    # PR7 async-data-plane counters are part of the schema: a report
+    # missing any of them (an old binary) must fail validation
+    for field in (
+        "outbound_queue_depth_max",
+        "credits_stalled_rounds",
+        "inbox_depth_max",
+    ):
+        d = doc()
+        del d["scenarios"][0][field]
+        assert any(field in e for e in validate(d)), field
+
+
+def test_backpressure_fields_are_typed_counters():
+    d = doc()
+    d["scenarios"][0]["outbound_queue_depth_max"] = -1
+    assert any("outbound_queue_depth_max" in e for e in validate(d))
+    d = doc()
+    d["scenarios"][0]["credits_stalled_rounds"] = 2.5
+    assert any("credits_stalled_rounds" in e for e in validate(d))
+    d = doc()
+    d["scenarios"][0]["inbox_depth_max"] = True
+    assert any("inbox_depth_max" in e for e in validate(d))
+
+
+def test_overloaded_scenario_passes():
+    d = doc(
+        scenarios=[
+            scenario(
+                name="overload_q7_slow_receiver",
+                outbound_queue_depth_max=64,
+                credits_stalled_rounds=12,
+                inbox_depth_max=32,
             )
         ]
     )

@@ -92,6 +92,19 @@ pub struct HolonConfig {
     pub net_tail_prob: f64,
     /// Extra delay of a tail spike, sim-ms (uniform in [tail/2, tail]).
     pub net_tail_ms: u64,
+    /// Max undelivered messages per node inbox (`0` = unbounded). The
+    /// backpressure knob: with a cap set, flush parks overflow on the
+    /// sender's outbound queues, receivers advertise their free space
+    /// as credits on heartbeats, and senders shrink their event budget
+    /// when credits run dry — overload degrades to bounded lag instead
+    /// of unbounded inbox memory.
+    pub inbox_capacity: usize,
+    /// Changefeed retention ring depth per node (`0` = derive from the
+    /// gossip config; see `engine::effective_changefeed_retention`). A
+    /// batched flush burst can deliver many gossip rounds at once, so
+    /// retention must cover at least a full anti-entropy period or one
+    /// slow subscriber turns every burst into a FeedGap re-bootstrap.
+    pub changefeed_retention: usize,
     /// Modeled per-event service cost of a Holon node, microseconds of
     /// sim-time (calibrated from the paper's measured 2.05M ev/s on 10
     /// nodes ≈ 4.9 µs/event; §5.3).
@@ -158,6 +171,8 @@ impl Default for HolonConfig {
             net_drop_prob: 0.0,
             net_tail_prob: 0.02,
             net_tail_ms: 200,
+            inbox_capacity: 0,
+            changefeed_retention: 0,
             holon_event_cost_us: 4.9,
             flink_event_cost_us: 9.0,
             flink_checkpoint_interval_ms: 5000,
@@ -170,7 +185,7 @@ impl Default for HolonConfig {
             flink_spare_slots: false,
             use_xla: false,
             artifacts_dir: "artifacts".to_string(),
-            bench_out: "BENCH_PR6.json".to_string(),
+            bench_out: "BENCH_PR7.json".to_string(),
         }
     }
 }
@@ -228,6 +243,8 @@ impl HolonConfig {
             "net_drop_prob" => self.net_drop_prob = parse!(),
             "net_tail_prob" => self.net_tail_prob = parse!(),
             "net_tail_ms" => self.net_tail_ms = parse!(),
+            "inbox_capacity" => self.inbox_capacity = parse!(),
+            "changefeed_retention" => self.changefeed_retention = parse!(),
             "holon_event_cost_us" => self.holon_event_cost_us = parse!(),
             "flink_event_cost_us" => self.flink_event_cost_us = parse!(),
             "flink_checkpoint_interval_ms" => self.flink_checkpoint_interval_ms = parse!(),
@@ -351,6 +368,11 @@ impl HolonConfig {
         m.insert("net_drop_prob", self.net_drop_prob.to_string());
         m.insert("net_tail_prob", self.net_tail_prob.to_string());
         m.insert("net_tail_ms", self.net_tail_ms.to_string());
+        m.insert("inbox_capacity", self.inbox_capacity.to_string());
+        m.insert(
+            "changefeed_retention",
+            self.changefeed_retention.to_string(),
+        );
         m.insert("holon_event_cost_us", self.holon_event_cost_us.to_string());
         m.insert("flink_event_cost_us", self.flink_event_cost_us.to_string());
         m.insert(
@@ -523,6 +545,20 @@ mod tests {
             c.set("gossip_fanout", "lots"),
             Err(ConfigError::InvalidValue { .. })
         ));
+    }
+
+    #[test]
+    fn backpressure_knobs_parse_and_roundtrip() {
+        let mut c = HolonConfig::default();
+        assert_eq!(c.inbox_capacity, 0, "backpressure is opt-in");
+        assert_eq!(c.changefeed_retention, 0, "retention derives by default");
+        c.apply_text("inbox_capacity = 64\nchangefeed_retention = 512\n")
+            .unwrap();
+        assert_eq!(c.inbox_capacity, 64);
+        assert_eq!(c.changefeed_retention, 512);
+        let mut c2 = HolonConfig::default();
+        c2.apply_text(&c.dump()).unwrap();
+        assert_eq!(c, c2);
     }
 
     #[test]

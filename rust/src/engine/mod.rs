@@ -95,6 +95,28 @@ pub struct ClusterMetrics {
     /// subscriber was observed behind its feed head (fetch_max over all
     /// nodes' publish points, not a sum).
     pub changefeed_lag: Arc<AtomicU64>,
+    /// Messages dropped because sender and receiver were partitioned
+    /// (mirror of [`crate::net::DropStats::partition`]).
+    pub dropped_partition: Arc<AtomicU64>,
+    /// Messages lost to `drop_prob`/fault-overlay loss
+    /// (mirror of [`crate::net::DropStats::loss`]).
+    pub dropped_loss: Arc<AtomicU64>,
+    /// Messages to nodes with no registered inbox — restart churn
+    /// (mirror of [`crate::net::DropStats::no_inbox`]).
+    pub dropped_no_inbox: Arc<AtomicU64>,
+    /// Parked messages shed at the outbound-queue cap under sustained
+    /// backpressure (mirror of [`crate::net::DropStats::backpressure`]).
+    pub dropped_backpressure: Arc<AtomicU64>,
+    /// Node-loop iterations that shrank the event budget because a peer
+    /// advertised zero credits or the last flush had to park traffic —
+    /// how often backpressure actually throttled sources.
+    pub credits_stalled_rounds: Arc<AtomicU64>,
+    /// High-water mark of any sender's per-peer outbound queue depth.
+    pub outbound_queue_depth_max: Arc<AtomicU64>,
+    /// High-water mark of any receiver's inbox depth; stays ≤
+    /// `inbox_capacity` when the cap is set (the bounded-memory
+    /// guarantee backpressure exists to provide).
+    pub inbox_depth_max: Arc<AtomicU64>,
 }
 
 impl ClusterMetrics {
@@ -122,6 +144,13 @@ impl ClusterMetrics {
             query_index_misses: Arc::new(AtomicU64::new(0)),
             query_scan_rows_avoided: Arc::new(AtomicU64::new(0)),
             changefeed_lag: Arc::new(AtomicU64::new(0)),
+            dropped_partition: Arc::new(AtomicU64::new(0)),
+            dropped_loss: Arc::new(AtomicU64::new(0)),
+            dropped_no_inbox: Arc::new(AtomicU64::new(0)),
+            dropped_backpressure: Arc::new(AtomicU64::new(0)),
+            credits_stalled_rounds: Arc::new(AtomicU64::new(0)),
+            outbound_queue_depth_max: Arc::new(AtomicU64::new(0)),
+            inbox_depth_max: Arc::new(AtomicU64::new(0)),
         }
     }
 
@@ -150,6 +179,23 @@ impl ClusterMetrics {
             *slot += b;
         }
     }
+}
+
+/// Changefeed retention ring depth for a deployment: the configured
+/// [`HolonConfig::changefeed_retention`] override, or a default derived
+/// from the gossip config. The derivation covers the worst publish
+/// burst a batched flush can deliver at once — a full anti-entropy
+/// period ([`node::FULL_SYNC_EVERY`] rounds) scaled by the effective
+/// fan-out (each round of transitive gossip can trigger up to fan-out
+/// re-publishes downstream), with headroom — and never goes below the
+/// previous hard-coded default, so existing deployments keep their
+/// retention byte-for-byte.
+pub fn effective_changefeed_retention(cfg: &HolonConfig) -> usize {
+    if cfg.changefeed_retention > 0 {
+        return cfg.changefeed_retention;
+    }
+    (node::FULL_SYNC_EVERY as usize * cfg.effective_gossip_fanout().max(1) * 8)
+        .max(crate::query::feed::DEFAULT_RETENTION)
 }
 
 /// Handle to a running node thread.
@@ -209,6 +255,7 @@ impl<P: Processor> HolonCluster<P> {
                 drop_prob: cfg.net_drop_prob,
                 tail_prob: cfg.net_tail_prob,
                 tail_ms: cfg.net_tail_ms,
+                inbox_capacity: cfg.inbox_capacity,
             },
             cfg.seed ^ 0xB05,
         );
@@ -245,7 +292,9 @@ impl<P: Processor> HolonCluster<P> {
             .lock()
             .unwrap()
             .entry(id)
-            .or_default()
+            .or_insert_with(|| {
+                crate::query::ReadHandle::with_retention(effective_changefeed_retention(&self.cfg))
+            })
             .clone();
         let ctx = node::NodeCtx {
             id,
@@ -371,5 +420,41 @@ impl<P: Processor> HolonCluster<P> {
             std::thread::sleep(std::time::Duration::from_millis(1));
         }
         self.metrics.outputs.load(Ordering::Acquire) >= n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Regression (changefeed gap storms): retention was hard-coded at
+    /// 256 while the comment tied it to the gossip cadence. The derived
+    /// default must (a) keep the old value under the default config so
+    /// nothing shifts silently, (b) scale up with fan-out so a batched
+    /// flush burst covering an anti-entropy period cannot out-run
+    /// retention, (c) yield to an explicit override.
+    #[test]
+    fn changefeed_retention_derives_from_gossip_config() {
+        let cfg = HolonConfig::default(); // 5 nodes → auto fanout 3
+        assert_eq!(
+            effective_changefeed_retention(&cfg),
+            crate::query::feed::DEFAULT_RETENTION,
+            "default config keeps the pre-derivation retention"
+        );
+        // larger fan-out pushes past the floor: 10 rounds × 7 × 8 = 560
+        let mut big = HolonConfig::default();
+        big.nodes = 100; // auto fanout ⌈log₂ 100⌉ = 7
+        assert_eq!(effective_changefeed_retention(&big), 560);
+        // broadcast-to-all (fanout 0) clamps at the floor, not at 0
+        let mut bc = HolonConfig::default();
+        bc.gossip_fanout = 0;
+        assert_eq!(
+            effective_changefeed_retention(&bc),
+            crate::query::feed::DEFAULT_RETENTION
+        );
+        // explicit override wins
+        let mut ov = HolonConfig::default();
+        ov.changefeed_retention = 32;
+        assert_eq!(effective_changefeed_retention(&ov), 32);
     }
 }

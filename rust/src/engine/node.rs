@@ -41,8 +41,10 @@ use super::membership::{target_owner, Membership};
 use super::ClusterMetrics;
 
 /// Every Nth gossip round sends full state instead of a delta
-/// (anti-entropy against dropped messages and fan-out gaps).
-const FULL_SYNC_EVERY: u64 = 10;
+/// (anti-entropy against dropped messages and fan-out gaps). Crate-
+/// visible because the changefeed retention default derives from it
+/// (see `engine::effective_changefeed_retention`).
+pub(crate) const FULL_SYNC_EVERY: u64 = 10;
 
 /// What one gossip round does: payload shape and effective fan-out.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -141,6 +143,22 @@ pub fn decode_output(bytes: &[u8]) -> Option<(u64, SimTime, Vec<u8>)> {
     Some((seq, ref_ts, inner))
 }
 
+/// Heartbeat payload: the sender's advertised inbox credits (free inbox
+/// slots; `u64::MAX` = unbounded). Riding the existing heartbeat path
+/// means backpressure needs no extra message kind or cadence.
+fn encode_heartbeat(credits: u64) -> Vec<u8> {
+    let mut w = Writer::with_capacity(8);
+    w.put_u64(credits);
+    w.into_bytes()
+}
+
+/// Empty/short payloads (older nodes, the startup announce) decode as
+/// `None` = no credit information = treat the peer as unbounded.
+fn decode_heartbeat(bytes: &[u8]) -> Option<u64> {
+    let mut r = Reader::new(bytes);
+    r.get_u64().ok()
+}
+
 fn encode_claim(p: PartitionId, ts: SimTime) -> Vec<u8> {
     let mut w = Writer::new();
     w.put_u32(p);
@@ -216,12 +234,20 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
     // reusable gossip encode target: size hint from the previous round
     // so each round is one exact allocation into the shared Arc.
     let mut gossip_size_hint: usize = 0;
+    // Backpressure state: last advertised credits per peer (absent =
+    // unknown = unbounded) and how much the last flush left parked.
+    let mut peer_credits: BTreeMap<NodeId, u64> = BTreeMap::new();
+    let mut parked_last_flush: u64 = 0;
 
     // Announce ourselves, then wait one heartbeat round before claiming
     // anything: peers' announcements arrive during the grace period, so
     // the first ownership reconciliation sees the real membership
     // instead of every node transiently claiming every partition.
-    bus.broadcast(id, MsgKind::Heartbeat, Vec::new());
+    // Each announce is flushed immediately — the bus is enqueue-only
+    // until flush, and the grace-period sleep must cover in-flight
+    // delivery, not shift it.
+    bus.broadcast(id, MsgKind::Heartbeat, encode_heartbeat(bus.advertised_credits(id)));
+    bus.flush(id);
     membership.refresh_self(clock.now());
     clock.sleep(cfg.heartbeat_interval_ms.max(2 * (cfg.net_delay_ms + cfg.net_jitter_ms)));
     {
@@ -229,7 +255,8 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
         for msg in bus.recv(id) {
             membership.heard_from(msg.from, now);
         }
-        bus.broadcast(id, MsgKind::Heartbeat, Vec::new());
+        bus.broadcast(id, MsgKind::Heartbeat, encode_heartbeat(bus.advertised_credits(id)));
+        bus.flush(id);
         membership.refresh_self(now);
     }
 
@@ -258,7 +285,12 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
         // 1. Drain control/broadcast messages.
         for msg in bus.recv(id) {
             match msg.kind {
-                MsgKind::Heartbeat => membership.heard_from(msg.from, now),
+                MsgKind::Heartbeat => {
+                    if let Some(credits) = decode_heartbeat(&msg.payload) {
+                        peer_credits.insert(msg.from, credits);
+                    }
+                    membership.heard_from(msg.from, now);
+                }
                 MsgKind::Gossip => {
                     if let Ok(other) = P::Shared::from_bytes(&msg.payload) {
                         // Change-reporting join (trait v3): only units
@@ -289,9 +321,10 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
             }
         }
 
-        // 2. Heartbeat.
+        // 2. Heartbeat, carrying this node's advertised inbox credits
+        // (free inbox space) so senders can throttle before shedding.
         if now.saturating_sub(last_hb) >= cfg.heartbeat_interval_ms {
-            bus.broadcast(id, MsgKind::Heartbeat, Vec::new());
+            bus.broadcast(id, MsgKind::Heartbeat, encode_heartbeat(bus.advertised_credits(id)));
             membership.refresh_self(now);
             last_hb = now;
         }
@@ -340,6 +373,27 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
             budget_events = f64::MAX;
         }
         last_budget_at = now;
+        // Credit-based backpressure: when a peer advertised zero credits
+        // or our last flush had to park traffic, shrink the accrued
+        // burst headroom to one batch per partition. This throttles the
+        // *source* of new events (excess input stays queued in the log),
+        // never the gossip/ack machinery — exactly-once is cursor-based
+        // and unaffected. The shrink is gentle by design: steady-state
+        // throughput (one batch per partition per iteration) is
+        // preserved, only the 4x catch-up burst is surrendered, so a
+        // slowed receiver degrades writers to bounded lag, not a stall.
+        if cfg.inbox_capacity > 0
+            && (parked_last_flush > 0
+                || last_alive
+                    .iter()
+                    .any(|&n| n != id && peer_credits.get(&n) == Some(&0)))
+        {
+            let tight = (cfg.batch_size * parts.len().max(1)) as f64;
+            if budget_events > tight {
+                budget_events = tight;
+            }
+            metrics.credits_stalled_rounds.fetch_add(1, Ordering::Relaxed);
+        }
         let mut did_work = false;
         // Budgeted pass in rotated partition order: under sustained
         // budget pressure a fixed (BTreeMap) order spends the whole
@@ -507,6 +561,25 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
             metrics.shard_serial_merges.fetch_add(ser, Ordering::Relaxed);
         }
 
+        // Flush the whole iteration's sends (heartbeat, claims, gossip)
+        // as one batch: a single RNG critical section for all of it, and
+        // the parked count feeds the next iteration's budget shrink.
+        parked_last_flush = bus.flush(id).parked;
+        // Mirror bus-level backpressure observability into the cluster
+        // counters (bus totals, so `store`/`fetch_max` are idempotent
+        // across nodes).
+        let drops = bus.drop_stats();
+        metrics.dropped_partition.store(drops.partition, Ordering::Relaxed);
+        metrics.dropped_loss.store(drops.loss, Ordering::Relaxed);
+        metrics.dropped_no_inbox.store(drops.no_inbox, Ordering::Relaxed);
+        metrics.dropped_backpressure.store(drops.backpressure, Ordering::Relaxed);
+        metrics
+            .outbound_queue_depth_max
+            .fetch_max(bus.outbound_depth_max(), Ordering::Relaxed);
+        metrics
+            .inbox_depth_max
+            .fetch_max(bus.inbox_depth_max(), Ordering::Relaxed);
+
         if !did_work {
             clock.sleep(cfg.poll_interval_ms);
         }
@@ -593,6 +666,15 @@ mod tests {
     fn claim_codec_roundtrip() {
         let b = encode_claim(9, 555);
         assert_eq!(decode_claim(&b), Some((9, 555)));
+    }
+
+    #[test]
+    fn heartbeat_codec_roundtrip_and_legacy_empty() {
+        assert_eq!(decode_heartbeat(&encode_heartbeat(42)), Some(42));
+        assert_eq!(decode_heartbeat(&encode_heartbeat(u64::MAX)), Some(u64::MAX));
+        // the startup announce / older nodes send no payload: no credit
+        // info, peer treated as unbounded
+        assert_eq!(decode_heartbeat(&[]), None);
     }
 
     #[test]

@@ -179,6 +179,16 @@ pub struct DataPlaneStats {
     /// Read-path high-water mark: most feed items any live changefeed
     /// subscriber was observed behind its node's publish head.
     pub changefeed_lag: u64,
+    /// Backpressure: high-water mark of any sender's per-peer outbound
+    /// queue depth (parked + unflushed messages).
+    pub outbound_queue_depth_max: u64,
+    /// Backpressure: node-loop iterations that shrank the event budget
+    /// because a peer advertised zero credits or the last flush parked
+    /// traffic. Zero when `inbox_capacity` is unset.
+    pub credits_stalled_rounds: u64,
+    /// Backpressure: high-water mark of any receiver's inbox depth —
+    /// bounded by `inbox_capacity` when the cap is set.
+    pub inbox_depth_max: u64,
 }
 
 /// Measurements of one run.
@@ -263,6 +273,9 @@ fn data_plane_stats(
         query_index_misses: metrics.query_index_misses.load(Ordering::Acquire),
         query_scan_rows_avoided: metrics.query_scan_rows_avoided.load(Ordering::Acquire),
         changefeed_lag: metrics.changefeed_lag.load(Ordering::Acquire),
+        outbound_queue_depth_max: bus.map_or(0, |b| b.outbound_depth_max()),
+        credits_stalled_rounds: metrics.credits_stalled_rounds.load(Ordering::Acquire),
+        inbox_depth_max: bus.map_or(0, |b| b.inbox_depth_max()),
     }
 }
 
@@ -673,6 +686,64 @@ pub fn run_mixed_read_write(cfg: &HolonConfig, mode: ReadMode) -> RunResult {
     collect(SystemKind::Holon, Workload::Q4, &cluster.metrics, produced, cfg.duration_ms, dp)
 }
 
+/// Overload run: the Q7 workload with `inbox_capacity` set (32 unless
+/// the caller configured one — small enough that a 10×-slowed drain
+/// cadence genuinely accumulates past it), optionally with a
+/// deliberately slowed
+/// receiver attached. The slow receiver is a *phantom* bus endpoint: it
+/// registers an inbox (so every broadcast targets it) but never
+/// heartbeats (so it owns no partitions), and drains its inbox at 10×
+/// the gossip interval — an order of magnitude slower than the cadence
+/// that fills it. The backpressure acceptance criterion rides the
+/// `uniform` vs `slow_receiver` pair: the slowed receiver's inbox stays
+/// bounded at `inbox_capacity` (overflow parks on the senders' outbound
+/// queues, the parked tail sheds oldest-first) while writer throughput
+/// stays within 20% of the uniform run — the senders' loop never blocks
+/// on the stalled peer.
+pub fn run_overload(cfg: &HolonConfig, slow_receiver: bool) -> RunResult {
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    let mut cfg = cfg.clone();
+    if cfg.inbox_capacity == 0 {
+        cfg.inbox_capacity = 32;
+    }
+    let clock = SimClock::scaled(cfg.wall_ms_per_sim_sec);
+    let cluster =
+        HolonCluster::start_with_clock(cfg.clone(), Q7::new(cfg.window_ms), clock.clone());
+    let prod = spawn_producer(&cfg, &cluster.input, &clock);
+    let stop = Arc::new(AtomicBool::new(false));
+    let drainer = if slow_receiver {
+        let phantom: NodeId = cfg.nodes + 1000;
+        cluster.bus.register(phantom);
+        let bus = cluster.bus.clone();
+        let stop = stop.clone();
+        let poll_every = clock.wall_for(cfg.gossip_interval_ms.max(1) * 10);
+        Some(
+            std::thread::Builder::new()
+                .name("holon-slow-receiver".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::Acquire) {
+                        std::thread::sleep(poll_every);
+                        let _ = bus.recv(phantom);
+                    }
+                })
+                .expect("spawn slow receiver"),
+        )
+    } else {
+        None
+    };
+    drive(&clock, cfg.duration_ms, drain_ms(&cfg), vec![], |_| {});
+    let produced = prod.stop();
+    stop.store(true, Ordering::Release);
+    if let Some(d) = drainer {
+        let _ = d.join();
+    }
+    cluster.stop();
+    let dp = data_plane_stats(&cluster.metrics, &cluster.input, &cluster.output, Some(&cluster.bus));
+    collect(SystemKind::Holon, Workload::Q7, &cluster.metrics, produced, cfg.duration_ms, dp)
+}
+
 // ---- the `holon bench` perf trajectory ---------------------------------
 
 /// One named scenario of the `holon bench` suite.
@@ -747,6 +818,23 @@ pub fn bench_scenarios(cfg: &HolonConfig, quick: bool) -> Vec<BenchScenario> {
         out.push(BenchScenario {
             name: name.to_string(),
             result: run_mixed_read_write(&rcfg, mode),
+        });
+    }
+
+    // Overload pair: same workload/rate with backpressure armed, with
+    // and without a 10×-slowed receiver attached. The slow row's writer
+    // throughput must stay within 20% of the uniform row's while
+    // `inbox_depth_max` stays ≤ `inbox_capacity` — one stalled peer
+    // degrades to bounded lag, never a writer stall.
+    let mut ocfg = tcfg.clone();
+    ocfg.inbox_capacity = 32;
+    for (name, slow) in [
+        ("overload_q7_uniform", false),
+        ("overload_q7_slow_receiver", true),
+    ] {
+        out.push(BenchScenario {
+            name: name.to_string(),
+            result: run_overload(&ocfg, slow),
         });
     }
 
@@ -838,6 +926,9 @@ pub fn bench_report_json(pr: &str, quick: bool, scenarios: &[BenchScenario]) -> 
             .u64_field("query_index_misses", r.data_plane.query_index_misses)
             .u64_field("query_scan_rows_avoided", r.data_plane.query_scan_rows_avoided)
             .u64_field("changefeed_lag", r.data_plane.changefeed_lag)
+            .u64_field("outbound_queue_depth_max", r.data_plane.outbound_queue_depth_max)
+            .u64_field("credits_stalled_rounds", r.data_plane.credits_stalled_rounds)
+            .u64_field("inbox_depth_max", r.data_plane.inbox_depth_max)
             .bool_field("stalled", r.stalled)
             .end_obj();
     }
@@ -962,6 +1053,9 @@ mod tests {
             "query_index_misses",
             "query_scan_rows_avoided",
             "changefeed_lag",
+            "outbound_queue_depth_max",
+            "credits_stalled_rounds",
+            "inbox_depth_max",
             "stalled",
         ] {
             assert_eq!(

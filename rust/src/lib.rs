@@ -76,7 +76,7 @@
 //!
 //! runs the §5.3 max-throughput ramp (Holon + the Flink-model baseline)
 //! and the Table 2 latency rows headlessly, prints human-readable rows,
-//! and writes a `holon-bench/v1` JSON report (default `BENCH_PR6.json`;
+//! and writes a `holon-bench/v1` JSON report (default `BENCH_PR7.json`;
 //! see EXPERIMENTS.md for the schema and the trajectory log). Each
 //! scenario entry carries events/sec (peak + mean), p50/p99/mean
 //! latency, gossip volume (`gossip_bytes_wire`, per-recipient), and the
@@ -161,6 +161,38 @@
 //! `mixed_rw_q4_*` bench scenarios measure it (`queries_served`,
 //! `query_index_hits/misses`, `query_scan_rows_avoided`,
 //! `changefeed_lag`).
+//!
+//! ## Async data plane (per-peer outbound queues + credit backpressure)
+//!
+//! Gossip sends are *enqueue-only*: [`net::Bus::send`],
+//! [`net::Bus::broadcast_shared`] and [`net::Bus::broadcast_sample_shared`]
+//! append `(kind, sent_at, Arc<payload>)` to a per-peer outbound queue
+//! and return immediately — a sender's loop iteration costs O(1) pushes
+//! no matter how congested any receiver is. Each node drains its own
+//! queues once per loop iteration via [`net::Bus::flush`], which applies
+//! loss, partitions, delay/jitter and any live [`net::FaultOverlay`] in
+//! **one** RNG critical section per batch and bulk-appends to receiver
+//! inboxes. Because `sent_at` is stamped at enqueue time and
+//! [`net::Bus::recv`] orders by `(deliver_at, from, sent_at)`, the async
+//! hop is invisible to the determinism oracles: seeded fault schedules
+//! stay byte-reproducible.
+//!
+//! Backpressure is credit-based and **gates sources, never acks**: with
+//! [`config::HolonConfig::inbox_capacity`] set, a full inbox parks
+//! overflow on the sender's queue (in order; the bounded outbound queue
+//! sheds its *oldest* entries as `dropped_backpressure` — newer CRDT
+//! state subsumes older), receivers advertise free inbox space as
+//! credits piggybacked on heartbeats, and a sender seeing parked traffic
+//! or a zero-credit live peer shrinks its per-iteration event budget —
+//! bounded lag instead of unbounded memory, while delivery/ack paths
+//! run untouched so exactly-once progress cannot deadlock on a slow
+//! reader. Drops are accounted by cause
+//! (`dropped_{partition,loss,no_inbox,backpressure}`, sum-preserving vs
+//! the old single counter), and the `overload_q7_*` bench rows pin the
+//! acceptance claim: a 10×-slowed receiver leaves writer throughput
+//! within 20% of the uniform run with `inbox_depth_max ≤
+//! inbox_capacity` (`tests/backpressure.rs` also pins byte-identical
+//! outputs under pressure).
 
 pub mod api;
 pub mod baseline;

@@ -304,7 +304,7 @@ fn cmd_bench(cfg: &HolonConfig, args: &[&str]) {
             ],
         );
     }
-    let json = bench_report_json("PR6", quick, &scenarios);
+    let json = bench_report_json("PR7", quick, &scenarios);
     if let Err(e) = std::fs::write(&cfg.bench_out, json.as_bytes()) {
         eprintln!("error writing {}: {e}", cfg.bench_out);
         std::process::exit(1);

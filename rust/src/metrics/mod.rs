@@ -2,6 +2,13 @@
 //! derived *sensitivity* metric (§5.1, after Gramoli et al.): the area
 //! between the latency curve under failures and the failure-free
 //! baseline — it captures both amplitude and duration of a disturbance.
+//!
+//! Cluster-wide counters (gossip volume, per-cause drop counters
+//! `dropped_{partition,loss,no_inbox,backpressure}`, the async
+//! data-plane high-water marks `outbound_queue_depth_max` /
+//! `inbox_depth_max`, and `credits_stalled_rounds`) live on
+//! [`crate::engine::ClusterMetrics`]; this module holds the reusable
+//! measurement primitives they feed into.
 
 use std::sync::{Arc, Mutex};
 

@@ -7,6 +7,35 @@
 //! for the CAP-behaviour experiments. Because gossip is periodic
 //! full-state CRDT exchange, dropped messages only delay convergence —
 //! they never break it (that is the point of the paper's design).
+//!
+//! ## Async data plane
+//!
+//! Send-side calls ([`Bus::send`], [`Bus::broadcast_shared`],
+//! [`Bus::broadcast_sample_shared`]) only *enqueue* `(to, kind, Arc
+//! payload)` onto the sender's per-peer outbound queues and return
+//! immediately — no RNG lock, no recipient inbox lock, no fault
+//! pipeline on the sender's hot path, so send cost is O(fan-out) queue
+//! pushes regardless of how congested any receiver is. [`Bus::flush`]
+//! (driven once per node-loop iteration) moves the whole batch: it
+//! applies partition checks, loss, delay and jitter in ONE RNG critical
+//! section for the entire batch and bulk-appends to recipient inboxes.
+//! Delivery ordering stays canonical — [`Bus::recv`] sorts due messages
+//! by `(deliver_at, from, sent_at)`, and `sent_at` is stamped at
+//! enqueue time — so seeded fault schedules remain byte-reproducible.
+//!
+//! Backpressure: when [`NetConfig::inbox_capacity`] is non-zero, a
+//! recipient inbox never holds more than that many undelivered
+//! messages. Flush delivers into the free space and *parks* the
+//! remainder on the sender's outbound queue (state-based CRDT gossip
+//! converges from any prefix of deliveries, so parking is bounded
+//! staleness, never divergence). Parked queues are themselves bounded
+//! (4× the inbox capacity); beyond that the *oldest* parked message is
+//! dropped — old gossip is subsumed by newer state, so oldest-first is
+//! the CRDT-safe shedding order. Receivers advertise their free inbox
+//! space as *credits* on the heartbeat path (see `engine::node`), which
+//! lets senders shrink their event budget before shedding starts.
+//! Credits gate *sources*, never acknowledgements — exactly-once
+//! delivery is cursor/dedup-based and unaffected.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -20,7 +49,7 @@ use crate::util::{NodeId, SimTime, XorShift64};
 pub enum MsgKind {
     /// CRDT state gossip (the background "async shuffle" of state).
     Gossip,
-    /// Node heartbeat (failure detection).
+    /// Node heartbeat (failure detection + credit advertisement).
     Heartbeat,
     /// Partition-ownership claim (work stealing coordination).
     Claim,
@@ -47,6 +76,10 @@ pub struct NetConfig {
     pub tail_prob: f64,
     /// Spike magnitude, sim-ms (uniform in [tail/2, tail]).
     pub tail_ms: u64,
+    /// Max undelivered messages per recipient inbox (0 = unbounded).
+    /// The backpressure knob: flush parks what does not fit instead of
+    /// growing inbox memory without bound.
+    pub inbox_capacity: usize,
 }
 
 impl Default for NetConfig {
@@ -57,6 +90,7 @@ impl Default for NetConfig {
             drop_prob: 0.0,
             tail_prob: 0.0,
             tail_ms: 0,
+            inbox_capacity: 0,
         }
     }
 }
@@ -71,13 +105,67 @@ struct Inbox {
 /// A transient fault condition layered on top of the steady-state
 /// [`NetConfig`] — the knob the simulation harness turns for delay and
 /// loss *bursts* (cloud incidents are episodic, not stationary). Unlike
-/// `NetConfig`, the overlay can change while the bus is live.
+/// `NetConfig`, the overlay can change while the bus is live. The
+/// overlay rides the flush step: messages enqueued before a burst but
+/// flushed during it see the burst's loss/delay.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct FaultOverlay {
     /// Extra one-way delay added to every message, sim-ms.
     pub extra_delay_ms: u64,
     /// Extra independent drop probability applied to every message.
     pub extra_drop_prob: f64,
+}
+
+/// A message sitting on a sender's outbound queue, waiting for flush.
+/// `sent_at` is the enqueue time — it keys canonical delivery ordering,
+/// so the async hop is invisible to the determinism oracles.
+#[derive(Debug, Clone)]
+struct OutMsg {
+    kind: MsgKind,
+    sent_at: SimTime,
+    payload: Arc<Vec<u8>>,
+}
+
+/// One sender's pending traffic: a queue per destination. Only the
+/// owning node thread enqueues and flushes, so the single mutex is
+/// uncontended in steady state.
+#[derive(Debug, Default)]
+struct Outbound {
+    queues: BTreeMap<NodeId, VecDeque<OutMsg>>,
+}
+
+/// What one [`Bus::flush`] accomplished.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FlushStats {
+    /// Messages moved into recipient inboxes this flush.
+    pub delivered: u64,
+    /// Messages left parked on outbound queues because their
+    /// destination inbox was at capacity — the backpressure signal.
+    pub parked: u64,
+}
+
+/// Dropped-message accounting, split by cause. Restart churn
+/// (`no_inbox`), partitions, lossy links and backpressure shedding are
+/// different operational problems; folding them into one counter made
+/// sim triage blame "network loss" for all of them.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DropStats {
+    /// Sender and destination were in different partition groups.
+    pub partition: u64,
+    /// Lost to `drop_prob` or a fault-overlay loss burst.
+    pub loss: u64,
+    /// Destination had no registered inbox (crashed/unregistered node).
+    pub no_inbox: u64,
+    /// Oldest parked message shed because a stalled peer's outbound
+    /// queue hit its cap (only possible with `inbox_capacity > 0`).
+    pub backpressure: u64,
+}
+
+impl DropStats {
+    /// Sum over all causes — the pre-split `dropped` counter.
+    pub fn total(&self) -> u64 {
+        self.partition + self.loss + self.no_inbox + self.backpressure
+    }
 }
 
 /// Registry + partition state; per-inbox queues are individually locked
@@ -87,13 +175,23 @@ struct BusInner {
     cfg: NetConfig,
     rng: Mutex<XorShift64>,
     inboxes: RwLock<BTreeMap<NodeId, Arc<Mutex<Inbox>>>>,
+    /// Per-sender outbound queues, flushed by the sender's own thread.
+    outbound: RwLock<BTreeMap<NodeId, Arc<Mutex<Outbound>>>>,
     /// group id per node; nodes in different groups are partitioned.
     /// Empty map = fully connected.
     groups: RwLock<BTreeMap<NodeId, u32>>,
     /// Transient delay/loss burst injected by the fault harness.
     faults: RwLock<FaultOverlay>,
     delivered: AtomicU64,
-    dropped: AtomicU64,
+    dropped_partition: AtomicU64,
+    dropped_loss: AtomicU64,
+    dropped_no_inbox: AtomicU64,
+    dropped_backpressure: AtomicU64,
+    /// High-water mark of any recipient inbox depth (undelivered
+    /// messages) — with `inbox_capacity > 0` this never exceeds it.
+    inbox_depth_max: AtomicU64,
+    /// High-water mark of any sender's per-peer outbound queue depth.
+    outbound_depth_max: AtomicU64,
     /// Payload bytes enqueued toward recipients (post-drop) — the bench
     /// harness's gossip-bytes/sec source. Payloads are `Arc`-shared, so
     /// this counts logical wire bytes, not allocations.
@@ -107,6 +205,16 @@ pub struct Bus {
     inner: Arc<BusInner>,
 }
 
+/// Partition reachability against a groups snapshot (empty = connected).
+fn reachable_in(groups: &BTreeMap<NodeId, u32>, from: NodeId, to: NodeId) -> bool {
+    if groups.is_empty() {
+        return true;
+    }
+    let gf = groups.get(&from).copied().unwrap_or(0);
+    let gt = groups.get(&to).copied().unwrap_or(0);
+    gf == gt
+}
+
 impl Bus {
     pub fn new(clock: SimClock, cfg: NetConfig, seed: u64) -> Self {
         Self {
@@ -115,10 +223,16 @@ impl Bus {
                 cfg,
                 rng: Mutex::new(XorShift64::new(seed)),
                 inboxes: RwLock::new(BTreeMap::new()),
+                outbound: RwLock::new(BTreeMap::new()),
                 groups: RwLock::new(BTreeMap::new()),
                 faults: RwLock::new(FaultOverlay::default()),
                 delivered: AtomicU64::new(0),
-                dropped: AtomicU64::new(0),
+                dropped_partition: AtomicU64::new(0),
+                dropped_loss: AtomicU64::new(0),
+                dropped_no_inbox: AtomicU64::new(0),
+                dropped_backpressure: AtomicU64::new(0),
+                inbox_depth_max: AtomicU64::new(0),
+                outbound_depth_max: AtomicU64::new(0),
                 bytes_sent: AtomicU64::new(0),
             }),
         }
@@ -130,19 +244,73 @@ impl Bus {
         inboxes.entry(node).or_default();
     }
 
-    /// Remove a node's inbox (simulated crash drops queued messages).
+    /// Remove a node's inbox (simulated crash drops queued messages —
+    /// both its inbox and anything it had enqueued but not flushed).
     pub fn unregister(&self, node: NodeId) {
         self.inner.inboxes.write().unwrap().remove(&node);
+        self.inner.outbound.write().unwrap().remove(&node);
     }
 
-    fn reachable(&self, from: NodeId, to: NodeId) -> bool {
-        let groups = self.inner.groups.read().unwrap();
-        if groups.is_empty() {
-            return true;
+    /// Per-peer parked-queue cap: beyond this, the oldest parked message
+    /// is shed (`DropStats::backpressure`). Unbounded inboxes never
+    /// park, so no cap is needed there.
+    fn outbound_cap(&self) -> usize {
+        match self.inner.cfg.inbox_capacity {
+            0 => usize::MAX,
+            cap => cap.saturating_mul(4),
         }
-        let gf = groups.get(&from).copied().unwrap_or(0);
-        let gt = groups.get(&to).copied().unwrap_or(0);
-        gf == gt
+    }
+
+    /// This sender's outbound state, created lazily (senders need no
+    /// inbox of their own — the overload bench's phantom receiver has
+    /// the converse: an inbox but no outbound traffic).
+    fn sender_outbound(&self, from: NodeId) -> Arc<Mutex<Outbound>> {
+        if let Some(ob) = self.inner.outbound.read().unwrap().get(&from) {
+            return ob.clone();
+        }
+        self.inner
+            .outbound
+            .write()
+            .unwrap()
+            .entry(from)
+            .or_default()
+            .clone()
+    }
+
+    /// Enqueue one message onto `from`'s queue toward `to`. O(1), no
+    /// RNG, no recipient locks — the sender-side cost is independent of
+    /// the destination's congestion.
+    fn enqueue(&self, from: NodeId, to: NodeId, kind: MsgKind, payload: Arc<Vec<u8>>) {
+        let sent_at = self.clock.now();
+        let cap = self.outbound_cap();
+        let ob = self.sender_outbound(from);
+        let mut ob = ob.lock().unwrap();
+        let q = ob.queues.entry(to).or_default();
+        q.push_back(OutMsg {
+            kind,
+            sent_at,
+            payload,
+        });
+        if q.len() > cap {
+            // shed oldest-first: newer CRDT state subsumes older
+            q.pop_front();
+            self.inner.dropped_backpressure.fetch_add(1, Ordering::Relaxed);
+        }
+        self.inner
+            .outbound_depth_max
+            .fetch_max(q.len() as u64, Ordering::Relaxed);
+    }
+
+    /// Registered peers other than `from` (broadcast targets).
+    fn peers_of(&self, from: NodeId) -> Vec<NodeId> {
+        self.inner
+            .inboxes
+            .read()
+            .unwrap()
+            .keys()
+            .copied()
+            .filter(|&n| n != from)
+            .collect()
     }
 
     /// Broadcast to all registered nodes except the sender.
@@ -156,14 +324,11 @@ impl Bus {
     /// re-wrap). The gossip hot path — including sharded keyed-state
     /// deltas, whose shard-tagged segments ride inside the one encoded
     /// payload (`crate::shard`), so per-shard granularity costs no
-    /// extra messages or allocations on the bus.
+    /// extra messages or allocations on the bus. Enqueue-only: the
+    /// fault/delay pipeline runs at the next [`flush`](Self::flush).
     pub fn broadcast_shared(&self, from: NodeId, kind: MsgKind, payload: Arc<Vec<u8>>) {
-        let now = self.clock.now();
-        let inboxes = self.inner.inboxes.read().unwrap();
-        for (&to, inbox) in inboxes.iter() {
-            if to != from {
-                self.push(inbox, now, from, to, kind, payload.clone());
-            }
+        for to in self.peers_of(from) {
+            self.enqueue(from, to, kind, payload.clone());
         }
     }
 
@@ -178,6 +343,14 @@ impl Bus {
 
     /// `Arc`-payload variant of [`broadcast_sample`](Self::broadcast_sample):
     /// one encode per gossip round, shared across all sampled peers.
+    ///
+    /// Sampling is a bounded partial Fisher–Yates shuffle: exactly
+    /// `fanout` RNG draws regardless of how close `fanout` is to the
+    /// peer count. The previous rejection sampler ("draw until the set
+    /// has `fanout` members") was a coupon-collector: with fanout near
+    /// `peers.len()` its expected draw count blew up and the number of
+    /// draws varied per round. Differential suites pin *outputs*, not
+    /// RNG draw sequences, so the stream change is free.
     pub fn broadcast_sample_shared(
         &self,
         from: NodeId,
@@ -185,88 +358,124 @@ impl Bus {
         payload: Arc<Vec<u8>>,
         fanout: usize,
     ) {
-        let now = self.clock.now();
-        let inboxes = self.inner.inboxes.read().unwrap();
-        let peers: Vec<NodeId> = inboxes.keys().copied().filter(|&n| n != from).collect();
+        let mut peers = self.peers_of(from);
         if peers.is_empty() {
             return;
         }
-        if fanout == 0 || fanout >= peers.len() {
-            for &to in &peers {
-                self.push(&inboxes[&to], now, from, to, kind, payload.clone());
+        if fanout > 0 && fanout < peers.len() {
+            let mut rng = self.inner.rng.lock().unwrap();
+            for i in 0..fanout {
+                let j = i + rng.next_below((peers.len() - i) as u64) as usize;
+                peers.swap(i, j);
             }
-            return;
+            drop(rng);
+            peers.truncate(fanout);
         }
-        let mut rng = self.inner.rng.lock().unwrap();
-        let mut chosen = std::collections::BTreeSet::new();
-        while chosen.len() < fanout {
-            chosen.insert(*rng.pick(&peers));
-        }
-        drop(rng);
-        for &to in &chosen {
-            self.push(&inboxes[&to], now, from, to, kind, payload.clone());
+        for &to in &peers {
+            self.enqueue(from, to, kind, payload.clone());
         }
     }
 
-    /// Point-to-point send.
+    /// Point-to-point send (enqueue-only; an unregistered target counts
+    /// as `DropStats::no_inbox` at flush time).
     pub fn send(&self, from: NodeId, to: NodeId, kind: MsgKind, payload: Vec<u8>) {
-        let now = self.clock.now();
-        let inboxes = self.inner.inboxes.read().unwrap();
-        match inboxes.get(&to) {
-            Some(inbox) => self.push(inbox, now, from, to, kind, Arc::new(payload)),
-            None => {
-                self.inner.dropped.fetch_add(1, Ordering::Relaxed);
-            }
-        }
+        self.enqueue(from, to, kind, Arc::new(payload));
     }
 
-    fn push(
-        &self,
-        inbox: &Arc<Mutex<Inbox>>,
-        now: SimTime,
-        from: NodeId,
-        to: NodeId,
-        kind: MsgKind,
-        payload: Arc<Vec<u8>>,
-    ) {
-        if !self.reachable(from, to) {
-            self.inner.dropped.fetch_add(1, Ordering::Relaxed);
-            return;
+    /// Move `from`'s enqueued batch toward recipient inboxes: partition
+    /// check per destination, loss/delay/jitter per message — all RNG
+    /// work in one critical section for the whole batch — and bulk
+    /// append into each inbox up to its free capacity. Messages that
+    /// don't fit stay parked (in order) for the next flush; their
+    /// count is returned so the caller can feed the backpressure loop.
+    pub fn flush(&self, from: NodeId) -> FlushStats {
+        let mut stats = FlushStats::default();
+        let ob = match self.inner.outbound.read().unwrap().get(&from) {
+            Some(ob) => ob.clone(),
+            None => return stats,
+        };
+        let mut ob = ob.lock().unwrap();
+        if ob.queues.values().all(|q| q.is_empty()) {
+            return stats;
         }
+        let now = self.clock.now();
         let cfg = &self.inner.cfg;
         let overlay = *self.inner.faults.read().unwrap();
-        let jitter;
-        {
-            let mut rng = self.inner.rng.lock().unwrap();
-            if cfg.drop_prob > 0.0 && rng.chance(cfg.drop_prob) {
-                self.inner.dropped.fetch_add(1, Ordering::Relaxed);
-                return;
+        let inboxes = self.inner.inboxes.read().unwrap();
+        let groups = self.inner.groups.read().unwrap().clone();
+        let mut bytes = 0u64;
+        // ONE RNG critical section for the whole batch (the synchronous
+        // bus locked it once per message, on the sender's hot path).
+        let mut rng = self.inner.rng.lock().unwrap();
+        for (&to, q) in ob.queues.iter_mut() {
+            if q.is_empty() {
+                continue;
             }
-            if overlay.extra_drop_prob > 0.0 && rng.chance(overlay.extra_drop_prob) {
-                self.inner.dropped.fetch_add(1, Ordering::Relaxed);
-                return;
-            }
-            jitter = if cfg.jitter_ms > 0 {
-                rng.next_below(cfg.jitter_ms + 1)
-            } else {
-                0
-            } + if cfg.tail_prob > 0.0 && cfg.tail_ms > 1 && rng.chance(cfg.tail_prob) {
-                cfg.tail_ms / 2 + rng.next_below(cfg.tail_ms / 2)
-            } else {
-                0
+            let Some(inbox) = inboxes.get(&to) else {
+                self.inner
+                    .dropped_no_inbox
+                    .fetch_add(q.len() as u64, Ordering::Relaxed);
+                q.clear();
+                continue;
             };
+            if !reachable_in(&groups, from, to) {
+                self.inner
+                    .dropped_partition
+                    .fetch_add(q.len() as u64, Ordering::Relaxed);
+                q.clear();
+                continue;
+            }
+            let mut inq = inbox.lock().unwrap();
+            let mut free = match cfg.inbox_capacity {
+                0 => usize::MAX,
+                cap => cap.saturating_sub(inq.queue.len()),
+            };
+            while let Some(m) = q.pop_front() {
+                if free == 0 {
+                    q.push_front(m);
+                    break;
+                }
+                if cfg.drop_prob > 0.0 && rng.chance(cfg.drop_prob) {
+                    self.inner.dropped_loss.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                if overlay.extra_drop_prob > 0.0 && rng.chance(overlay.extra_drop_prob) {
+                    self.inner.dropped_loss.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                let jitter = if cfg.jitter_ms > 0 {
+                    rng.next_below(cfg.jitter_ms + 1)
+                } else {
+                    0
+                } + if cfg.tail_prob > 0.0 && cfg.tail_ms > 1 && rng.chance(cfg.tail_prob) {
+                    cfg.tail_ms / 2 + rng.next_below(cfg.tail_ms / 2)
+                } else {
+                    0
+                };
+                let deliver_at = now + cfg.base_delay_ms + overlay.extra_delay_ms + jitter;
+                bytes += m.payload.len() as u64;
+                inq.queue.push_back((
+                    deliver_at,
+                    Msg {
+                        from,
+                        kind: m.kind,
+                        sent_at: m.sent_at,
+                        payload: m.payload,
+                    },
+                ));
+                free -= 1;
+                stats.delivered += 1;
+            }
+            self.inner
+                .inbox_depth_max
+                .fetch_max(inq.queue.len() as u64, Ordering::Relaxed);
+            stats.parked += q.len() as u64;
         }
-        let deliver_at = now + cfg.base_delay_ms + overlay.extra_delay_ms + jitter;
-        self.inner.bytes_sent.fetch_add(payload.len() as u64, Ordering::Relaxed);
-        inbox.lock().unwrap().queue.push_back((
-            deliver_at,
-            Msg {
-                from,
-                kind,
-                sent_at: now,
-                payload,
-            },
-        ));
+        drop(rng);
+        if bytes > 0 {
+            self.inner.bytes_sent.fetch_add(bytes, Ordering::Relaxed);
+        }
+        stats
     }
 
     /// Drain all messages due for `node` at the current sim-time.
@@ -303,7 +512,23 @@ impl Bus {
         due.into_iter().map(|(_, m)| m).collect()
     }
 
-    /// Install a transient delay/loss burst on every subsequent message.
+    /// Free inbox space `node` can advertise as credits on its
+    /// heartbeat (`u64::MAX` = unbounded inbox, never throttles).
+    pub fn advertised_credits(&self, node: NodeId) -> u64 {
+        if self.inner.cfg.inbox_capacity == 0 {
+            return u64::MAX;
+        }
+        let inboxes = self.inner.inboxes.read().unwrap();
+        match inboxes.get(&node) {
+            Some(inbox) => {
+                let depth = inbox.lock().unwrap().queue.len();
+                (self.inner.cfg.inbox_capacity.saturating_sub(depth)) as u64
+            }
+            None => 0,
+        }
+    }
+
+    /// Install a transient delay/loss burst on every subsequent flush.
     pub fn set_fault_overlay(&self, overlay: FaultOverlay) {
         *self.inner.faults.write().unwrap() = overlay;
     }
@@ -331,11 +556,35 @@ impl Bus {
     }
 
     /// (delivered, dropped) counters — for tests and the bench reports.
+    /// `dropped` is the sum over all causes (see [`drop_stats`](Self::drop_stats)
+    /// for the split), preserving the pre-split counter's meaning.
     pub fn stats(&self) -> (u64, u64) {
         (
             self.inner.delivered.load(Ordering::Acquire),
-            self.inner.dropped.load(Ordering::Acquire),
+            self.drop_stats().total(),
         )
+    }
+
+    /// Dropped messages split by cause.
+    pub fn drop_stats(&self) -> DropStats {
+        DropStats {
+            partition: self.inner.dropped_partition.load(Ordering::Acquire),
+            loss: self.inner.dropped_loss.load(Ordering::Acquire),
+            no_inbox: self.inner.dropped_no_inbox.load(Ordering::Acquire),
+            backpressure: self.inner.dropped_backpressure.load(Ordering::Acquire),
+        }
+    }
+
+    /// High-water mark of any recipient inbox depth (undelivered
+    /// messages). With `inbox_capacity > 0` this is ≤ the capacity — the
+    /// bounded-memory guarantee the backpressure tests pin.
+    pub fn inbox_depth_max(&self) -> u64 {
+        self.inner.inbox_depth_max.load(Ordering::Acquire)
+    }
+
+    /// High-water mark of any sender's per-peer outbound queue depth.
+    pub fn outbound_depth_max(&self) -> u64 {
+        self.inner.outbound_depth_max.load(Ordering::Acquire)
     }
 
     /// Payload bytes enqueued toward recipients so far (logical wire
@@ -350,6 +599,10 @@ mod tests {
     use super::*;
 
     fn bus(clock: &SimClock) -> Bus {
+        bus_with_capacity(clock, 0)
+    }
+
+    fn bus_with_capacity(clock: &SimClock, inbox_capacity: usize) -> Bus {
         Bus::new(
             clock.clone(),
             NetConfig {
@@ -358,6 +611,7 @@ mod tests {
                 drop_prob: 0.0,
                 tail_prob: 0.0,
                 tail_ms: 0,
+                inbox_capacity,
             },
             7,
         )
@@ -370,12 +624,32 @@ mod tests {
         b.register(1);
         b.register(2);
         b.send(1, 2, MsgKind::Gossip, vec![42]);
+        assert!(b.recv(2).is_empty()); // not flushed yet
+        b.flush(1);
         assert!(b.recv(2).is_empty()); // not due yet
         clock.advance(10);
         let msgs = b.recv(2);
         assert_eq!(msgs.len(), 1);
         assert_eq!(*msgs[0].payload, vec![42]);
         assert_eq!(msgs[0].from, 1);
+    }
+
+    #[test]
+    fn send_is_enqueue_only_until_flush() {
+        let clock = SimClock::manual();
+        let b = bus(&clock);
+        b.register(1);
+        b.register(2);
+        b.send(1, 2, MsgKind::Gossip, vec![1]);
+        clock.advance(100);
+        // never flushed: nothing ever arrives, no drop recorded either
+        assert!(b.recv(2).is_empty());
+        assert_eq!(b.stats(), (0, 0));
+        // flush moves it; delay counts from flush time
+        let fl = b.flush(1);
+        assert_eq!(fl, FlushStats { delivered: 1, parked: 0 });
+        clock.advance(10);
+        assert_eq!(b.recv(2).len(), 1);
     }
 
     #[test]
@@ -386,6 +660,7 @@ mod tests {
             b.register(n);
         }
         b.broadcast(1, MsgKind::Heartbeat, vec![]);
+        b.flush(1);
         clock.advance(10);
         assert!(b.recv(1).is_empty());
         assert_eq!(b.recv(2).len(), 1);
@@ -401,12 +676,15 @@ mod tests {
         }
         b.set_partition(&[&[1, 2], &[3, 4]]);
         b.broadcast(1, MsgKind::Gossip, vec![]);
+        b.flush(1);
         clock.advance(10);
         assert_eq!(b.recv(2).len(), 1);
         assert!(b.recv(3).is_empty());
         assert!(b.recv(4).is_empty());
+        assert_eq!(b.drop_stats().partition, 2);
         b.heal_partition();
         b.broadcast(1, MsgKind::Gossip, vec![]);
+        b.flush(1);
         clock.advance(10);
         assert_eq!(b.recv(3).len(), 1);
     }
@@ -422,15 +700,21 @@ mod tests {
                 drop_prob: 1.0,
                 tail_prob: 0.0,
                 tail_ms: 0,
+                inbox_capacity: 0,
             },
             9,
         );
         b.register(1);
         b.register(2);
         b.send(1, 2, MsgKind::Gossip, vec![]);
+        b.flush(1);
         clock.advance(1);
         assert!(b.recv(2).is_empty());
         assert_eq!(b.stats().1, 1);
+        // the split attributes it to loss, not partition/churn
+        assert_eq!(b.drop_stats().loss, 1);
+        assert_eq!(b.drop_stats().partition, 0);
+        assert_eq!(b.drop_stats().no_inbox, 0);
     }
 
     #[test]
@@ -439,7 +723,40 @@ mod tests {
         let b = bus(&clock);
         b.register(1);
         b.send(1, 99, MsgKind::Claim, vec![]);
+        b.flush(1);
         assert_eq!(b.stats().1, 1);
+        assert_eq!(b.drop_stats().no_inbox, 1);
+        assert_eq!(b.drop_stats().loss, 0);
+    }
+
+    /// Regression (drop accounting): the three non-backpressure causes
+    /// were a single `dropped` counter, so restart churn and partitions
+    /// masqueraded as network loss in metrics and sim triage. Each
+    /// cause must land in its own counter while the sum keeps the old
+    /// counter's meaning.
+    #[test]
+    fn drop_causes_are_split_and_sum_preserved() {
+        let clock = SimClock::manual();
+        let b = bus(&clock);
+        for n in 1..=3 {
+            b.register(n);
+        }
+        // cause 1: partition
+        b.set_partition(&[&[1], &[2, 3]]);
+        b.send(1, 2, MsgKind::Gossip, vec![]);
+        b.flush(1);
+        // cause 2: no inbox (node 3 crashed between enqueue and flush)
+        b.heal_partition();
+        b.send(1, 3, MsgKind::Gossip, vec![]);
+        b.unregister(3);
+        b.flush(1);
+        let d = b.drop_stats();
+        assert_eq!(d.partition, 1);
+        assert_eq!(d.no_inbox, 1);
+        assert_eq!(d.loss, 0);
+        assert_eq!(d.backpressure, 0);
+        assert_eq!(b.stats().1, d.total());
+        assert_eq!(d.total(), 2);
     }
 
     #[test]
@@ -453,6 +770,7 @@ mod tests {
             extra_drop_prob: 0.0,
         });
         b.send(1, 2, MsgKind::Gossip, vec![7]);
+        b.flush(1);
         clock.advance(10);
         assert!(b.recv(2).is_empty()); // base delay alone is not enough
         clock.advance(40);
@@ -463,16 +781,38 @@ mod tests {
             extra_drop_prob: 1.0,
         });
         b.send(1, 2, MsgKind::Gossip, vec![8]);
+        b.flush(1);
         clock.advance(100);
         assert!(b.recv(2).is_empty());
         assert_eq!(b.stats().1, 1);
+        assert_eq!(b.drop_stats().loss, 1);
 
-        // messages queued during a burst keep their (delayed) schedule,
+        // messages flushed during a burst keep their (delayed) schedule,
         // but new messages after clear() are back to normal
         b.clear_fault_overlay();
         b.send(1, 2, MsgKind::Gossip, vec![9]);
+        b.flush(1);
         clock.advance(10);
         assert_eq!(b.recv(2).len(), 1);
+    }
+
+    /// The overlay rides the *flush* step: a message enqueued before a
+    /// burst but flushed during it sees the burst.
+    #[test]
+    fn fault_overlay_applies_at_flush_time() {
+        let clock = SimClock::manual();
+        let b = bus(&clock);
+        b.register(1);
+        b.register(2);
+        b.send(1, 2, MsgKind::Gossip, vec![1]); // enqueued pre-burst
+        b.set_fault_overlay(FaultOverlay {
+            extra_delay_ms: 0,
+            extra_drop_prob: 1.0,
+        });
+        b.flush(1); // flushed mid-burst → lost
+        clock.advance(50);
+        assert!(b.recv(2).is_empty());
+        assert_eq!(b.drop_stats().loss, 1);
     }
 
     #[test]
@@ -484,6 +824,8 @@ mod tests {
         }
         let payload = Arc::new(vec![1u8, 2, 3]);
         b.broadcast_shared(1, MsgKind::Gossip, payload.clone());
+        assert_eq!(b.bytes_sent(), 0); // enqueue-only: no wire volume yet
+        b.flush(1);
         // 3 recipients × 3 bytes of logical wire volume, one allocation
         assert_eq!(b.bytes_sent(), 9);
         clock.advance(10);
@@ -503,10 +845,48 @@ mod tests {
             b.register(n);
         }
         b.broadcast_sample_shared(1, MsgKind::Gossip, Arc::new(vec![7, 7]), 2);
+        b.flush(1);
         assert_eq!(b.bytes_sent(), 4); // 2 peers × 2 bytes
         clock.advance(10);
         let got: usize = (2..=5).map(|n| b.recv(n).len()).sum();
         assert_eq!(got, 2);
+    }
+
+    /// Regression (coupon-collector sampling): the old sampler drew
+    /// from the RNG *until* the chosen set reached `fanout`, so with
+    /// fanout = peers - 1 the expected draw count blew up and varied
+    /// per round. The partial Fisher–Yates replacement makes exactly
+    /// `fanout` draws; this pins the bounded draw count by checking the
+    /// RNG stream position after sampling (two buses with the same
+    /// seed must consume the same number of draws regardless of how
+    /// many collisions a rejection sampler would have hit).
+    #[test]
+    fn fanout_sampling_is_bounded_and_exact() {
+        let clock = SimClock::manual();
+        // fanout = peers - 1: worst case for the rejection sampler
+        for fanout in 1..=4usize {
+            let b = bus(&clock);
+            for n in 1..=6 {
+                b.register(n);
+            }
+            b.broadcast_sample_shared(1, MsgKind::Gossip, Arc::new(vec![1]), fanout);
+            b.flush(1);
+            clock.advance(10);
+            let got: usize = (2..=6).map(|n| b.recv(n).len()).sum();
+            assert_eq!(got, fanout, "exactly {fanout} distinct peers sampled");
+        }
+        // fanout 0 and >= peers: broadcast to all, no RNG at all
+        let b = bus(&clock);
+        for n in 1..=4 {
+            b.register(n);
+        }
+        b.broadcast_sample_shared(1, MsgKind::Gossip, Arc::new(vec![1]), 0);
+        b.broadcast_sample_shared(1, MsgKind::Gossip, Arc::new(vec![2]), 9);
+        b.flush(1);
+        clock.advance(10);
+        for n in 2..=4 {
+            assert_eq!(b.recv(n).len(), 2);
+        }
     }
 
     #[test]
@@ -520,6 +900,8 @@ mod tests {
         // regardless of push order
         b.send(3, 1, MsgKind::Gossip, vec![3]);
         b.send(2, 1, MsgKind::Gossip, vec![2]);
+        b.flush(3);
+        b.flush(2);
         clock.advance(10);
         let msgs = b.recv(1);
         assert_eq!(msgs.len(), 2);
@@ -534,13 +916,111 @@ mod tests {
         b.register(1);
         b.register(2);
         b.send(1, 2, MsgKind::Gossip, vec![1]);
+        b.flush(1);
         clock.advance(5);
         b.send(1, 2, MsgKind::Gossip, vec![2]);
+        b.flush(1);
         clock.advance(5);
         // first due (t=10), second not (t=15)
         let msgs = b.recv(2);
         assert_eq!(msgs.len(), 1);
         clock.advance(5);
         assert_eq!(b.recv(2).len(), 1);
+    }
+
+    /// Backpressure: a full inbox parks the overflow on the sender's
+    /// outbound queue instead of growing without bound, and the parked
+    /// messages deliver (in order) once the receiver drains.
+    #[test]
+    fn full_inbox_parks_overflow_until_receiver_drains() {
+        let clock = SimClock::manual();
+        let b = bus_with_capacity(&clock, 2);
+        b.register(1);
+        b.register(2);
+        for i in 0..5u8 {
+            b.send(1, 2, MsgKind::Gossip, vec![i]);
+        }
+        let fl = b.flush(1);
+        assert_eq!(fl, FlushStats { delivered: 2, parked: 3 });
+        assert_eq!(b.inbox_depth_max(), 2);
+        clock.advance(10);
+        let first: Vec<u8> = b.recv(2).iter().map(|m| m.payload[0]).collect();
+        assert_eq!(first, [0, 1]);
+        // drained: the next flush moves the parked remainder, in order
+        let fl = b.flush(1);
+        assert_eq!(fl, FlushStats { delivered: 2, parked: 1 });
+        clock.advance(10);
+        let second: Vec<u8> = b.recv(2).iter().map(|m| m.payload[0]).collect();
+        assert_eq!(second, [2, 3]);
+        let fl = b.flush(1);
+        assert_eq!(fl, FlushStats { delivered: 1, parked: 0 });
+        // nothing was dropped: parking is bounded lag, not loss
+        assert_eq!(b.stats().1, 0);
+        // and the cap held the whole time
+        assert!(b.inbox_depth_max() <= 2);
+    }
+
+    /// A stalled peer never blocks or steals delivery from healthy
+    /// peers in the same flush — the sender-side cost of a slow
+    /// receiver is parking, not stalling.
+    #[test]
+    fn stalled_peer_does_not_block_healthy_peers() {
+        let clock = SimClock::manual();
+        let b = bus_with_capacity(&clock, 1);
+        for n in 1..=3 {
+            b.register(n);
+        }
+        // saturate peer 2's inbox
+        b.send(1, 2, MsgKind::Gossip, vec![0]);
+        b.flush(1);
+        // broadcast: peer 2 is full, peer 3 is healthy
+        b.broadcast(1, MsgKind::Gossip, vec![1]);
+        let fl = b.flush(1);
+        assert_eq!(fl.parked, 1); // peer 2's copy parked
+        assert_eq!(fl.delivered, 1); // peer 3's copy delivered
+        clock.advance(10);
+        assert_eq!(b.recv(3).len(), 1);
+    }
+
+    /// The parked-queue cap sheds oldest-first and counts it as a
+    /// backpressure drop, bounding sender-side memory too.
+    #[test]
+    fn outbound_cap_sheds_oldest_as_backpressure_drop() {
+        let clock = SimClock::manual();
+        let b = bus_with_capacity(&clock, 1); // outbound cap = 4
+        b.register(1);
+        b.register(2);
+        for i in 0..6u8 {
+            b.send(1, 2, MsgKind::Gossip, vec![i]);
+        }
+        // queue held at 4: messages 0 and 1 were shed
+        assert_eq!(b.drop_stats().backpressure, 2);
+        assert!(b.outbound_depth_max() >= 4);
+        b.flush(1);
+        clock.advance(10);
+        let got: Vec<u8> = b.recv(2).iter().map(|m| m.payload[0]).collect();
+        assert_eq!(got, [2]); // oldest survivor delivered first
+    }
+
+    #[test]
+    fn advertised_credits_track_free_inbox_space() {
+        let clock = SimClock::manual();
+        let b = bus_with_capacity(&clock, 3);
+        b.register(1);
+        b.register(2);
+        assert_eq!(b.advertised_credits(2), 3);
+        b.send(1, 2, MsgKind::Gossip, vec![0]);
+        b.send(1, 2, MsgKind::Gossip, vec![1]);
+        b.flush(1);
+        assert_eq!(b.advertised_credits(2), 1);
+        clock.advance(10);
+        b.recv(2);
+        assert_eq!(b.advertised_credits(2), 3);
+        // unbounded inboxes never throttle
+        let ub = bus(&clock);
+        ub.register(1);
+        assert_eq!(ub.advertised_credits(1), u64::MAX);
+        // no inbox → no credits
+        assert_eq!(b.advertised_credits(99), 0);
     }
 }

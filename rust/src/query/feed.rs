@@ -21,8 +21,13 @@ use std::sync::{Arc, Mutex, Weak};
 
 use crate::util::SimTime;
 
-/// Default ring retention (items). Roughly `FULL_SYNC_EVERY * fanout`
-/// rounds of slack: a subscriber polling at gossip cadence never gaps.
+/// Default ring retention (items) — the *floor*: deployments size the
+/// ring from the gossip config via
+/// `engine::effective_changefeed_retention` (override:
+/// `changefeed_retention` config key), which derives
+/// `FULL_SYNC_EVERY × fanout` rounds of slack with headroom and never
+/// goes below this value. A subscriber polling at gossip cadence never
+/// gaps, even when a batched flush delivers a burst of rounds at once.
 pub const DEFAULT_RETENTION: usize = 256;
 
 /// One published state payload.
@@ -299,6 +304,38 @@ mod tests {
         assert!(fresh.poll(10).unwrap().is_empty());
         h.publish_delta(payload(42), 1000);
         assert_eq!(fresh.poll(10).unwrap()[0].cursor, 10);
+    }
+
+    /// Regression (changefeed gap storms): a batched flush can publish a
+    /// burst of up to retention items between two polls of a live
+    /// subscriber. That must be the boundary case that still succeeds —
+    /// the subscriber's cursor lands exactly on `oldest_retained`, so it
+    /// reads every item with zero loss. One more item and it gaps; the
+    /// retention derivation exists to keep real bursts at or under the
+    /// ring size.
+    #[test]
+    fn burst_of_exactly_retention_items_does_not_gap_a_live_poller() {
+        let h = ReadHandle::with_retention(4);
+        h.publish_full(payload(9), 0);
+        let mut sub = h.subscribe();
+        assert!(sub.poll(10).unwrap().is_empty()); // live at the tail
+        // the burst: exactly `retention` items while the poller is away
+        for i in 0..4u8 {
+            h.publish_delta(payload(i), u64::from(i));
+        }
+        let items = sub.poll(10).expect("exactly-retention burst must not gap");
+        assert_eq!(
+            items.iter().map(|i| i.cursor).collect::<Vec<_>>(),
+            [1, 2, 3, 4],
+            "every burst item delivered, none lost"
+        );
+        // retention + 1 is the first burst size that gaps
+        let mut lag = h.subscribe();
+        for i in 0..5u8 {
+            h.publish_delta(payload(i), 0);
+        }
+        let gap = lag.poll(10).unwrap_err();
+        assert_eq!(gap.oldest_available, gap.requested + 1);
     }
 
     #[test]

@@ -52,6 +52,9 @@ def scenario(**overrides):
         "outbound_queue_depth_max": 0,
         "credits_stalled_rounds": 0,
         "inbox_depth_max": 0,
+        "output_arena_bytes": 0,
+        "output_frames": 0,
+        "window_ring_spills": 0,
         "stalled": False,
     }
     base.update(overrides)
@@ -240,6 +243,41 @@ def test_backpressure_fields_are_typed_counters():
     d = doc()
     d["scenarios"][0]["inbox_depth_max"] = True
     assert any("inbox_depth_max" in e for e in validate(d))
+
+
+def test_arena_fields_are_required():
+    # PR8 arena/ring memory-layout counters are part of the schema: a
+    # report missing any of them (an old binary) must fail validation
+    for field in ("output_arena_bytes", "output_frames", "window_ring_spills"):
+        d = doc()
+        del d["scenarios"][0][field]
+        assert any(field in e for e in validate(d)), field
+
+
+def test_arena_fields_are_typed_counters():
+    d = doc()
+    d["scenarios"][0]["output_arena_bytes"] = -1
+    assert any("output_arena_bytes" in e for e in validate(d))
+    d = doc()
+    d["scenarios"][0]["output_frames"] = 0.5
+    assert any("output_frames" in e for e in validate(d))
+    d = doc()
+    d["scenarios"][0]["window_ring_spills"] = True
+    assert any("window_ring_spills" in e for e in validate(d))
+
+
+def test_arena_heavy_scenario_passes():
+    d = doc(
+        scenarios=[
+            scenario(
+                name="throughput_max_q7_arena",
+                output_arena_bytes=52428800,
+                output_frames=120000,
+                window_ring_spills=0,
+            )
+        ]
+    )
+    assert validate(d) == []
 
 
 def test_overloaded_scenario_passes():

@@ -2,8 +2,8 @@
 """Validate a BENCH_*.json perf-trajectory report (schema holon-bench/v1).
 
 Usage:
-    python python/tools/validate_bench.py BENCH_PR7.json
-    python python/tools/validate_bench.py BENCH_PR7.json --baseline BENCH_BASELINE.json
+    python python/tools/validate_bench.py BENCH_PR8.json
+    python python/tools/validate_bench.py BENCH_PR8.json --baseline BENCH_BASELINE.json
 
 Exit code 0 when the document is schema-valid (and, with --baseline, no
 scenario regressed), 1 otherwise (errors on stderr). Stdlib-only so the
@@ -61,6 +61,9 @@ SCENARIO_FIELDS = {
     "outbound_queue_depth_max": (int,),
     "credits_stalled_rounds": (int,),
     "inbox_depth_max": (int,),
+    "output_arena_bytes": (int,),
+    "output_frames": (int,),
+    "window_ring_spills": (int,),
     "stalled": (bool,),
 }
 

@@ -53,7 +53,7 @@
 
 use std::sync::Arc;
 
-use crate::codec::{Decode, Encode};
+use crate::codec::{Decode, Encode, Writer};
 use crate::crdt::{Crdt, MapCrdt};
 use crate::log::Record;
 use crate::shard::ShardedMapCrdt;
@@ -73,8 +73,10 @@ pub use super::EmitCursor as DfCursor;
 type XForm<E> = Arc<dyn Fn(&Record, &mut dyn FnMut(E)) + Send + Sync>;
 /// Event fold into a per-window CRDT contribution.
 type InsertFn<E, C> = Arc<dyn Fn(PartitionId, &E, &mut C) + Send + Sync>;
-/// Completed-window map to encoded output bytes (`None` suppresses).
-type EmitFn<C> = Arc<dyn Fn(WindowId, &C) -> Option<Vec<u8>> + Send + Sync>;
+/// Completed-window emission: encode the output *in place* into the
+/// batch's arena frame (`false` withdraws the frame — the zero-alloc
+/// analogue of returning `None`).
+type EmitFn<C> = Arc<dyn Fn(WindowId, &C, &mut Writer) -> bool + Send + Sync>;
 
 // ======================================================================
 // Stage 1 — event stream: decode + filter/map/flat_map
@@ -207,10 +209,12 @@ impl<E: 'static> Dataflow<E> {
     ) -> Passthrough {
         let xform = self.xform;
         Passthrough {
-            apply: Arc::new(move |rec, out| {
+            apply: Arc::new(move |rec, ctx| {
                 xform(rec, &mut |e| {
                     if let Some(o) = f(&e) {
-                        out(o.to_bytes());
+                        // Latency reference = input insertion time; the
+                        // output encodes straight into the arena frame.
+                        ctx.emit_with(rec.insert_ts, |w| o.encode(w));
                     }
                 })
             }),
@@ -365,19 +369,28 @@ pub struct WindowAgg<E, C: Crdt> {
 
 impl<E: 'static, C: Crdt> WindowAgg<E, C> {
     /// Typed emission: map each completed (deterministic) window value
-    /// to an `Encode`d output; `None` suppresses the window.
+    /// to an `Encode`d output; `None` suppresses the window. The output
+    /// encodes straight into the batch's arena frame — no intermediate
+    /// `Vec<u8>` per record.
     pub fn emit_typed<O: Encode + 'static>(
         self,
         emit: impl Fn(WindowId, &C) -> Option<O> + Send + Sync + 'static,
     ) -> WindowPipeline<E, C> {
-        self.emit_raw(move |w, c| emit(w, c).map(|o| o.to_bytes()))
+        self.emit_raw(move |w, c, wr| match emit(w, c) {
+            Some(o) => {
+                o.encode(wr);
+                true
+            }
+            None => false,
+        })
     }
 
-    /// Raw-bytes emission, for outputs assembled with [`crate::codec::Writer`]
-    /// directly.
+    /// Raw emission: write the output payload directly through the
+    /// [`Writer`] positioned inside the arena frame; return `false` to
+    /// suppress the window (the frame is rolled back).
     pub fn emit_raw(
         self,
-        emit: impl Fn(WindowId, &C) -> Option<Vec<u8>> + Send + Sync + 'static,
+        emit: impl Fn(WindowId, &C, &mut Writer) -> bool + Send + Sync + 'static,
     ) -> WindowPipeline<E, C> {
         WindowPipeline {
             xform: self.xform,
@@ -474,15 +487,14 @@ impl<E: 'static, C: Crdt> Processor for WindowPipeline<E, C> {
             own.increment_watermark(p, self.watermark_gen.watermark(max_ts));
         }
 
-        // The safe emission pattern (cursor-sequenced deterministic reads).
+        // The safe emission pattern (cursor-sequenced deterministic
+        // reads), encoding each window's output in place in the arena.
         if local.next < shared.first_available() {
             local.next = shared.first_available();
         }
         while let Some(value) = shared.window_value(local.next) {
             let w = local.next;
-            if let Some(payload) = (self.emit)(w, &value) {
-                ctx.emit(self.assigner.window_end(w), payload);
-            }
+            ctx.try_emit_with(self.assigner.window_end(w), |wr| (self.emit)(w, &value, wr));
             local.next += 1;
         }
     }
@@ -492,7 +504,7 @@ impl<E: 'static, C: Crdt> Processor for WindowPipeline<E, C> {
 /// emission (no windows, no shared state). Created by
 /// [`Dataflow::emit_each`].
 pub struct Passthrough {
-    apply: Arc<dyn Fn(&Record, &mut dyn FnMut(Vec<u8>)) + Send + Sync>,
+    apply: Arc<dyn Fn(&Record, &mut Ctx) + Send + Sync>,
 }
 
 impl Clone for Passthrough {
@@ -518,8 +530,7 @@ impl Processor for Passthrough {
         events: &[Record],
     ) {
         for rec in events {
-            // Latency reference = input insertion time.
-            (self.apply)(rec, &mut |payload| ctx.emit(rec.insert_ts, payload));
+            (self.apply)(rec, ctx);
         }
     }
 }
@@ -563,13 +574,6 @@ pub fn demux(payload: &[u8]) -> (u8, &[u8]) {
     (*tag, rest)
 }
 
-fn tagged(tag: u8, payload: Vec<u8>) -> Vec<u8> {
-    let mut out = Vec::with_capacity(payload.len() + 1);
-    out.push(tag);
-    out.extend_from_slice(&payload);
-    out
-}
-
 impl<A: Processor, B: Processor> Processor for MultiQuery<A, B> {
     type Shared = (A::Shared, B::Shared);
     type Local = (A::Local, B::Local);
@@ -589,24 +593,13 @@ impl<A: Processor, B: Processor> Processor for MultiQuery<A, B> {
         local: &mut Self::Local,
         events: &[Record],
     ) {
-        let left_outs = {
-            let mut sub = Ctx::new(ctx.partition, ctx.now, &mut *ctx.aggregator);
-            self.left
-                .process(&mut sub, &shared.0, &mut own.0, &mut local.0, events);
-            sub.into_outputs()
-        };
-        for o in left_outs {
-            ctx.emit(o.ref_ts, tagged(0, o.payload));
-        }
-        let right_outs = {
-            let mut sub = Ctx::new(ctx.partition, ctx.now, &mut *ctx.aggregator);
-            self.right
-                .process(&mut sub, &shared.1, &mut own.1, &mut local.1, events);
-            sub.into_outputs()
-        };
-        for o in right_outs {
-            ctx.emit(o.ref_ts, tagged(1, o.payload));
-        }
+        // Branch outputs stream straight into the shared arena through
+        // tagged sub-contexts — the tag byte is written in place at the
+        // head of each frame, so fan-out costs zero extra copies.
+        self.left
+            .process(&mut ctx.tagged(0), &shared.0, &mut own.0, &mut local.0, events);
+        self.right
+            .process(&mut ctx.tagged(1), &shared.1, &mut own.1, &mut local.1, events);
     }
 }
 
@@ -614,25 +607,24 @@ impl<A: Processor, B: Processor> Processor for MultiQuery<A, B> {
 mod tests {
     use super::*;
     use crate::api::{ScalarAggregator, SharedState};
+    use crate::arena::OutputArena;
     use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
     use crate::crdt::GCounter;
     use crate::nexmark::Event;
-    use std::sync::Arc as StdArc;
 
     fn bid(offset: u64, ts: u64, auction: u64, price: f64) -> Record {
         Record {
             offset,
             event_ts: ts,
             insert_ts: ts,
-            payload: StdArc::new(
-                Event::Bid {
-                    auction,
-                    bidder: 0,
-                    price,
-                    category: auction % 10,
-                }
-                .to_bytes(),
-            ),
+            payload: Event::Bid {
+                auction,
+                bidder: 0,
+                price,
+                category: auction % 10,
+            }
+            .to_bytes()
+            .into(),
         }
     }
 
@@ -644,10 +636,12 @@ mod tests {
         events: &[Record],
     ) -> Vec<crate::api::Output> {
         let mut agg = ScalarAggregator;
-        let mut ctx = Ctx::new(0, 0, &mut agg);
+        let mut arena = OutputArena::new();
+        arena.begin_batch();
+        let mut ctx = Ctx::new(0, 0, &mut agg, &mut arena);
         q.process(&mut ctx, shared, own, local, events);
         let _ = shared.join(own);
-        ctx.into_outputs()
+        arena.take_outputs()
     }
 
     /// Run a processor twice (batch, then idle drain) and return the
@@ -719,7 +713,7 @@ mod tests {
             offset,
             event_ts: ts,
             insert_ts: ts,
-            payload: StdArc::new(Reading { sensor, celsius }.to_bytes()),
+            payload: Reading { sensor, celsius }.to_bytes().into(),
         };
         let outs = run_and_drain(
             &q,
@@ -761,11 +755,10 @@ mod tests {
             .map(|price| (price * 100.0).round() as u64 * 2) // doubled cents
             .tumbling(1000)
             .aggregate(|_p, cents, c: &mut crate::crdt::MaxRegister<u64>| c.put(*cents))
-            .emit_raw(|w, c| {
-                let mut wr = Writer::new();
+            .emit_raw(|w, c, wr| {
                 wr.put_u64(w);
                 wr.put_u64(c.get().copied().unwrap_or(0));
-                Some(wr.into_bytes())
+                true
             });
         let outs = run_and_drain(&q, &[bid(0, 100, 1, 21.0), bid(1, 1500, 2, 1.0)]);
         assert_eq!(outs.len(), 1);

@@ -25,6 +25,7 @@
 //! outputs (which may be physically duplicated) carry `(partition, seq)`
 //! tags for consumer-side deduplication (§3.3).
 
+use crate::arena::OutputArena;
 use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
 use crate::crdt::Crdt;
 use crate::log::Record;
@@ -61,7 +62,12 @@ impl Decode for EmitCursor {
     }
 }
 
-/// One output produced by a processing function.
+/// One output produced by a processing function — the *owned*,
+/// test/oracle-facing view. The engine never materializes these on the
+/// hot path: outputs live as frames inside the batch's [`OutputArena`]
+/// and ship to the log as `(offset, len)` views over one shared
+/// backing. Tests get owned `Output`s via
+/// [`OutputArena::take_outputs`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct Output {
     /// Latency reference: the sim-time this output *became due* (the
@@ -78,7 +84,32 @@ impl Output {
     }
 }
 
+/// Branch-tag prefix of a [`Ctx`]: one byte per [`MultiQuery`] nesting
+/// level, outermost first — written in place at the head of every
+/// emitted frame, replacing the old per-record tag-copy allocation.
+/// Inline and `Copy`; 8 levels is far beyond any real fan-out.
+#[derive(Debug, Clone, Copy, Default)]
+struct TagStack {
+    buf: [u8; 8],
+    len: u8,
+}
+
+impl TagStack {
+    fn push(mut self, tag: u8) -> Self {
+        self.buf[self.len as usize] = tag;
+        self.len += 1;
+        self
+    }
+
+    fn as_slice(&self) -> &[u8] {
+        &self.buf[..self.len as usize]
+    }
+}
+
 /// Per-batch execution context handed to the processing function.
+///
+/// Emission writes *directly into the batch's output arena* through the
+/// ordinary [`Writer`] surface — no per-record `Vec<u8>`.
 pub struct Ctx<'a> {
     /// The partition this invocation processes (the contributor id for
     /// all CRDT inserts).
@@ -88,27 +119,77 @@ pub struct Ctx<'a> {
     /// Batch aggregation service (XLA-backed when artifacts are loaded,
     /// pure Rust otherwise). See [`crate::runtime`].
     pub aggregator: &'a mut dyn BatchAggregator,
-    outputs: Vec<Output>,
+    arena: &'a mut OutputArena,
+    tags: TagStack,
 }
 
 impl<'a> Ctx<'a> {
-    pub fn new(partition: PartitionId, now: SimTime, aggregator: &'a mut dyn BatchAggregator) -> Self {
+    pub fn new(
+        partition: PartitionId,
+        now: SimTime,
+        aggregator: &'a mut dyn BatchAggregator,
+        arena: &'a mut OutputArena,
+    ) -> Self {
         Self {
             partition,
             now,
             aggregator,
-            outputs: Vec::new(),
+            arena,
+            tags: TagStack::default(),
         }
     }
 
-    /// Emit an output record.
-    pub fn emit(&mut self, ref_ts: SimTime, payload: Vec<u8>) {
-        self.outputs.push(Output::new(ref_ts, payload));
+    /// Emit one output record, writing its payload in place via `f` —
+    /// the zero-alloc path.
+    pub fn emit_with(&mut self, ref_ts: SimTime, f: impl FnOnce(&mut Writer)) {
+        self.try_emit_with(ref_ts, |w| {
+            f(w);
+            true
+        });
     }
 
-    /// Finish the invocation, returning accumulated outputs.
-    pub fn into_outputs(self) -> Vec<Output> {
-        self.outputs
+    /// As [`emit_with`](Self::emit_with), but the closure may withdraw
+    /// the record by returning `false` — the frame (tag prefix included)
+    /// is rolled back without a trace. Returns whether it was emitted.
+    pub fn try_emit_with(&mut self, ref_ts: SimTime, f: impl FnOnce(&mut Writer) -> bool) -> bool {
+        let tags = self.tags;
+        self.arena.frame(ref_ts, |w| {
+            w.put_raw(tags.as_slice());
+            f(w)
+        })
+    }
+
+    /// Emit an already-encoded payload (one copy into the arena, no
+    /// allocation).
+    pub fn emit_bytes(&mut self, ref_ts: SimTime, payload: &[u8]) {
+        self.emit_with(ref_ts, |w| w.put_raw(payload));
+    }
+
+    /// Emit an owned payload — compatibility shim over
+    /// [`emit_bytes`](Self::emit_bytes); prefer the in-place variants
+    /// on hot paths.
+    pub fn emit(&mut self, ref_ts: SimTime, payload: Vec<u8>) {
+        self.emit_bytes(ref_ts, &payload);
+    }
+
+    /// A sub-context whose emissions are prefixed with `tag` (appended
+    /// to any tags this context already carries) — how [`MultiQuery`]
+    /// demultiplexes several pipelines onto one output stream without a
+    /// per-record re-copy.
+    pub fn tagged(&mut self, tag: u8) -> Ctx<'_> {
+        Ctx {
+            partition: self.partition,
+            now: self.now,
+            aggregator: &mut *self.aggregator,
+            arena: &mut *self.arena,
+            tags: self.tags.push(tag),
+        }
+    }
+
+    /// Number of frames emitted into the batch so far (cross-pipeline
+    /// total, including any tagged sub-contexts).
+    pub fn emitted(&self) -> usize {
+        self.arena.len()
     }
 }
 
@@ -245,14 +326,39 @@ mod tests {
     }
 
     #[test]
-    fn ctx_collects_outputs() {
+    fn ctx_emits_into_arena() {
         let mut agg = ScalarAggregator;
-        let mut ctx = Ctx::new(3, 100, &mut agg);
+        let mut arena = OutputArena::new();
+        arena.begin_batch();
+        let mut ctx = Ctx::new(3, 100, &mut agg, &mut arena);
         ctx.emit(50, vec![1]);
-        ctx.emit(60, vec![2]);
-        let outs = ctx.into_outputs();
-        assert_eq!(outs.len(), 2);
-        assert_eq!(outs[0].ref_ts, 50);
+        ctx.emit_with(60, |w| w.put_u8(2));
+        ctx.emit_bytes(70, &[3, 4]);
+        assert_eq!(ctx.emitted(), 3);
+        let outs = arena.take_outputs();
+        assert_eq!(outs.len(), 3);
+        assert_eq!(outs[0], Output::new(50, vec![1]));
+        assert_eq!(outs[1], Output::new(60, vec![2]));
+        assert_eq!(outs[2], Output::new(70, vec![3, 4]));
+    }
+
+    #[test]
+    fn tagged_sub_ctx_prefixes_payloads() {
+        let mut agg = ScalarAggregator;
+        let mut arena = OutputArena::new();
+        arena.begin_batch();
+        let mut ctx = Ctx::new(0, 0, &mut agg, &mut arena);
+        ctx.tagged(7).emit_with(10, |w| w.put_u8(42));
+        ctx.emit_with(20, |w| w.put_u8(43));
+        // nested MultiQuery shape: one tag byte per level, outermost first
+        ctx.tagged(0).tagged(1).emit_with(30, |w| w.put_u8(44));
+        // a withdrawn frame rolls back its tag prefix too
+        assert!(!ctx.tagged(9).try_emit_with(40, |_| false));
+        let outs = arena.take_outputs();
+        assert_eq!(outs.len(), 3);
+        assert_eq!(outs[0].payload, vec![7, 42]);
+        assert_eq!(outs[1].payload, vec![43]);
+        assert_eq!(outs[2].payload, vec![0, 1, 44]);
     }
 
     #[test]

@@ -1,0 +1,317 @@
+//! Per-batch output arena: the write-side half of the zero-copy data
+//! plane.
+//!
+//! Before this module, every output record was an owned `Vec<u8>`
+//! (header + payload copy) allocated in the emit stage, wrapped in a
+//! fresh `Arc` by `Topic::append_batch` — two allocations per record on
+//! the hottest path the engine has. The arena replaces that with a
+//! *framed append-only buffer*: emit stages write each record directly
+//! into one shared backing buffer through the ordinary [`Writer`]
+//! surface (so every existing `Encode` impl works unchanged), and the
+//! batch drain ships the whole buffer as **one** `Arc<Vec<u8>>` whose
+//! frames the [`crate::log::Topic`] records reference by `(offset, len)`
+//! — the read-side `read_slice`/`payload_clones` discipline of the data
+//! plane, extended to the write side.
+//!
+//! Frame wire layout (byte-identical to the old per-record
+//! `encode_output`): `u64 seq | u64 ref_ts | u32 len | inner bytes`.
+//! The sequence number is not known at emit time (the engine assigns it
+//! at drain, after dedup bookkeeping), so [`OutputArena::frame`] writes
+//! a placeholder and [`OutputArena::finish`] backpatches it.
+//!
+//! Allocation budget per batch: one backing-buffer allocation (the
+//! buffer is handed off to the log as the shared `Arc` backing, so the
+//! next batch starts from an empty, pre-reserved buffer) plus the `Arc`
+//! cell itself. [`OutputArena::batch_allocs`] counts backing growth so
+//! `micro_hotpath` can assert the ≤1-allocation contract, and the
+//! lifetime counters feed `ClusterMetrics::{output_arena_bytes,
+//! output_frames}`.
+
+use std::sync::Arc;
+
+use crate::codec::Writer;
+use crate::util::SimTime;
+
+/// Bytes of frame header preceding the inner payload:
+/// `u64 seq + u64 ref_ts + u32 inner-len`.
+pub const FRAME_HEADER_BYTES: usize = 8 + 8 + 4;
+
+/// One output record within the batch backing buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Frame {
+    /// Reference timestamp of the output (window end / input insert_ts).
+    pub ref_ts: SimTime,
+    /// Byte offset of the frame (its seq header) in the backing buffer.
+    pub start: u32,
+    /// Total frame length including the header.
+    pub len: u32,
+}
+
+impl Frame {
+    /// `(start, len)` of the inner payload, header stripped.
+    pub fn inner_range(&self) -> (usize, usize) {
+        (
+            self.start as usize + FRAME_HEADER_BYTES,
+            self.len as usize - FRAME_HEADER_BYTES,
+        )
+    }
+}
+
+/// A finished batch: the shared backing plus its frame table. Hand the
+/// backing to [`crate::log::Topic::append_frames`]; every record of the
+/// batch then shares it without a single payload copy.
+#[derive(Debug)]
+pub struct FinishedBatch {
+    pub backing: Arc<Vec<u8>>,
+    pub frames: Vec<Frame>,
+}
+
+/// Framed append-only output buffer, reused across batches.
+#[derive(Debug, Default)]
+pub struct OutputArena {
+    w: Writer,
+    frames: Vec<Frame>,
+    /// High-water byte mark over past batches — the pre-reserve hint
+    /// that keeps steady-state emit loops growth-free.
+    high_water: usize,
+    /// Backing-buffer growth events in the current batch.
+    grew: u64,
+    /// Lifetime bytes shipped through finished batches.
+    total_bytes: u64,
+    /// Lifetime frames shipped through finished batches.
+    total_frames: u64,
+}
+
+impl OutputArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of frames emitted into the current batch.
+    pub fn len(&self) -> usize {
+        self.frames.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.frames.is_empty()
+    }
+
+    /// Backing-buffer growth events in the current batch — the
+    /// "≤1 arena allocation per batch" acceptance counter.
+    pub fn batch_allocs(&self) -> u64 {
+        self.grew
+    }
+
+    /// Lifetime `(bytes, frames)` shipped through [`finish`](Self::finish)
+    /// — drained into `ClusterMetrics::{output_arena_bytes, output_frames}`.
+    pub fn take_totals(&mut self) -> (u64, u64) {
+        (
+            std::mem::take(&mut self.total_bytes),
+            std::mem::take(&mut self.total_frames),
+        )
+    }
+
+    /// Pre-reserve the batch backing to the high-water mark of past
+    /// batches: the single up-front allocation that keeps the per-record
+    /// emit path growth-free in steady state.
+    pub fn begin_batch(&mut self) {
+        self.grew = 0;
+        if self.w.capacity() < self.high_water {
+            self.w.reserve(self.high_water - self.w.len());
+            self.grew += 1;
+        }
+    }
+
+    /// Write one output frame through `f`. The closure receives the
+    /// backing [`Writer`] positioned inside the frame's inner-payload
+    /// slot (after the seq/ref_ts/len header, which this method writes
+    /// and backpatches). Returning `false` cancels the frame: the buffer
+    /// is rolled back and nothing is recorded.
+    pub fn frame(&mut self, ref_ts: SimTime, f: impl FnOnce(&mut Writer) -> bool) -> bool {
+        let start = self.w.len();
+        let cap = self.w.capacity();
+        self.w.put_u64(0); // seq placeholder, patched in finish()
+        self.w.put_u64(ref_ts);
+        let inner_slot = self.w.len();
+        self.w.put_u32(0); // inner length, backpatched below
+        if !f(&mut self.w) {
+            self.w.truncate(start);
+            return false;
+        }
+        let inner_len = (self.w.len() - inner_slot - 4) as u32;
+        self.w.patch_u32(inner_slot, inner_len);
+        if self.w.capacity() != cap {
+            self.grew += 1;
+        }
+        self.frames.push(Frame {
+            ref_ts,
+            start: start as u32,
+            len: (self.w.len() - start) as u32,
+        });
+        true
+    }
+
+    /// Finish the batch: backpatch each frame's sequence number
+    /// (`seq0 + frame index`), hand the backing off as one shared `Arc`,
+    /// and reset for the next batch (frame table capacity retained,
+    /// backing re-reserved lazily by [`begin_batch`](Self::begin_batch)).
+    /// Returns `None` when nothing was emitted.
+    pub fn finish(&mut self, seq0: u64) -> Option<FinishedBatch> {
+        if self.frames.is_empty() {
+            return None;
+        }
+        for (i, fr) in self.frames.iter().enumerate() {
+            self.w.patch_u64(fr.start as usize, seq0 + i as u64);
+        }
+        self.high_water = self.high_water.max(self.w.len());
+        self.total_bytes += self.w.len() as u64;
+        self.total_frames += self.frames.len() as u64;
+        let backing = Arc::new(self.w.take_bytes());
+        let frames = std::mem::take(&mut self.frames);
+        Some(FinishedBatch { backing, frames })
+    }
+
+    /// Return a shipped batch's frame table for reuse. The backing is
+    /// owned by the log records now and stays out; reclaiming the frame
+    /// table is what keeps steady-state batches at ≤1 allocation (the
+    /// backing pre-reserve) instead of re-growing a fresh `Vec<Frame>`
+    /// every batch.
+    pub fn recycle(&mut self, batch: FinishedBatch) {
+        let mut frames = batch.frames;
+        frames.clear();
+        if frames.capacity() > self.frames.capacity() {
+            self.frames = frames;
+        }
+    }
+
+    /// Materialize the current batch as owned `(ref_ts, inner payload)`
+    /// outputs and reset — the test/oracle surface (unit tests assert on
+    /// payload bytes; the engine never calls this).
+    pub fn take_outputs(&mut self) -> Vec<crate::api::Output> {
+        let outs = self
+            .frames
+            .iter()
+            .map(|fr| {
+                let (start, len) = fr.inner_range();
+                crate::api::Output::new(fr.ref_ts, self.w.as_slice()[start..start + len].to_vec())
+            })
+            .collect();
+        self.w.clear();
+        self.frames.clear();
+        outs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::node::{decode_output, encode_output};
+
+    #[test]
+    fn frames_are_byte_identical_to_encode_output() {
+        let mut a = OutputArena::new();
+        a.begin_batch();
+        assert!(a.frame(500, |w| {
+            w.put_u64(7);
+            w.put_f64(3.5);
+            true
+        }));
+        assert!(a.frame(1000, |w| {
+            w.put_bytes(b"xyz");
+            true
+        }));
+        let b = a.finish(42).unwrap();
+        // old path: encode each record separately
+        let mut inner0 = Writer::new();
+        inner0.put_u64(7);
+        inner0.put_f64(3.5);
+        let mut inner1 = Writer::new();
+        inner1.put_bytes(b"xyz");
+        let old0 = encode_output(42, 500, inner0.as_slice());
+        let old1 = encode_output(43, 1000, inner1.as_slice());
+        let f0 = b.frames[0];
+        let f1 = b.frames[1];
+        assert_eq!(
+            &b.backing[f0.start as usize..(f0.start + f0.len) as usize],
+            &old0[..]
+        );
+        assert_eq!(
+            &b.backing[f1.start as usize..(f1.start + f1.len) as usize],
+            &old1[..]
+        );
+        // and the sink-side decoder reads them back
+        let (seq, ts, inner) =
+            decode_output(&b.backing[f1.start as usize..(f1.start + f1.len) as usize]).unwrap();
+        assert_eq!((seq, ts), (43, 1000));
+        assert_eq!(inner, &old1[20..]);
+    }
+
+    #[test]
+    fn cancelled_frame_leaves_no_trace() {
+        let mut a = OutputArena::new();
+        a.begin_batch();
+        assert!(!a.frame(5, |w| {
+            w.put_u64(99); // partially written, then withdrawn
+            false
+        }));
+        assert!(a.is_empty());
+        assert!(a.finish(0).is_none());
+        assert!(a.frame(5, |w| {
+            w.put_u8(1);
+            true
+        }));
+        let b = a.finish(0).unwrap();
+        assert_eq!(b.frames.len(), 1);
+        // the cancelled bytes must not have shifted the surviving frame
+        assert_eq!(b.frames[0].start, 0);
+        let (seq, ts, inner) = decode_output(&b.backing).unwrap();
+        assert_eq!((seq, ts, inner), (0, 5, &[1u8][..]));
+    }
+
+    #[test]
+    fn steady_state_batches_grow_at_most_once() {
+        let mut a = OutputArena::new();
+        // warmup establishes the high-water mark
+        a.begin_batch();
+        for i in 0..256 {
+            a.frame(i, |w| {
+                w.put_u64(i);
+                true
+            });
+        }
+        a.finish(0).unwrap();
+        // steady state: one pre-reserve, zero growth during emits
+        for round in 0..3 {
+            a.begin_batch();
+            let after_reserve = a.batch_allocs();
+            assert!(after_reserve <= 1, "round {round}: {after_reserve}");
+            for i in 0..256 {
+                a.frame(i, |w| {
+                    w.put_u64(i);
+                    true
+                });
+            }
+            assert_eq!(
+                a.batch_allocs(),
+                after_reserve,
+                "round {round}: emit loop grew the backing"
+            );
+            a.finish(0).unwrap();
+        }
+    }
+
+    #[test]
+    fn totals_accumulate_and_drain() {
+        let mut a = OutputArena::new();
+        a.begin_batch();
+        a.frame(1, |w| {
+            w.put_u8(1);
+            true
+        });
+        let b = a.finish(0).unwrap();
+        let (bytes, frames) = a.take_totals();
+        assert_eq!(bytes, b.backing.len() as u64);
+        assert_eq!(frames, 1);
+        assert_eq!(a.take_totals(), (0, 0));
+    }
+}

@@ -7,8 +7,8 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::codec::{Decode, Writer};
-use crate::engine::node::encode_output;
+use crate::arena::OutputArena;
+use crate::codec::Decode;
 use crate::nexmark::Event;
 use crate::util::{NodeId, SimTime};
 
@@ -38,6 +38,10 @@ struct RootState {
     /// combine buffers
     maxes: BTreeMap<u64, (f64, u64)>,
     cats: BTreeMap<u64, BTreeMap<u64, (u64, f64, f64)>>,
+    /// Output arena: the baseline ships batches through the same
+    /// zero-alloc frame path as the Holon engine, so the systems
+    /// comparison doesn't charge only one side for output allocation.
+    arena: OutputArena,
 }
 
 /// One TM work thread for one job incarnation.
@@ -332,40 +336,45 @@ fn run_root(c: &Arc<FlinkCluster>, run: &Arc<RunState>, root: &mut RootState) ->
         did_work = true;
     }
 
-    // emit completed windows (watermark = min over inputs)
+    // emit completed windows (watermark = min over inputs) as arena
+    // frames — sequence numbers are the window ids, which the loop
+    // produces consecutively, exactly matching `finish(first_w)`.
     let wm = root.watermarks.iter().copied().min().unwrap_or(0);
     let now = c.clock.now();
+    let first_w = run.next_window.load(Ordering::Acquire);
+    root.arena.begin_batch();
     loop {
         let w = run.next_window.load(Ordering::Acquire);
         let end = (w + 1) * c.cfg.window_ms;
         if end > wm {
             break;
         }
-        let payload = match c.job {
-            FlinkJob::PassThrough => Vec::new(), // records emitted eagerly
+        match c.job {
+            FlinkJob::PassThrough => {} // records emitted eagerly
             FlinkJob::MaxBid => {
                 let (mx, auc) = root.maxes.remove(&w).unwrap_or((0.0, 0));
-                let mut wr = Writer::new();
-                wr.put_u64(w);
-                wr.put_f64(mx.max(0.0));
-                wr.put_u64(auc);
-                wr.into_bytes()
+                root.arena.frame(end, |wr| {
+                    wr.put_u64(w);
+                    wr.put_f64(mx.max(0.0));
+                    wr.put_u64(auc);
+                    true
+                });
             }
             FlinkJob::AvgByCategory => {
                 let cats = root.cats.remove(&w).unwrap_or_default();
-                let mut wr = Writer::new();
-                wr.put_u64(w);
-                wr.put_u32(cats.len() as u32);
-                for (cat, (cnt, sum, _mx)) in cats {
-                    wr.put_u64(cat);
-                    wr.put_f64(sum / 100.0 / cnt.max(1) as f64);
-                    wr.put_u64(cnt);
-                }
-                wr.into_bytes()
+                root.arena.frame(end, |wr| {
+                    wr.put_u64(w);
+                    wr.put_u32(cats.len() as u32);
+                    for (cat, (cnt, sum, _mx)) in cats {
+                        wr.put_u64(cat);
+                        wr.put_f64(sum / 100.0 / cnt.max(1) as f64);
+                        wr.put_u64(cnt);
+                    }
+                    true
+                });
             }
-        };
+        }
         if c.job != FlinkJob::PassThrough {
-            c.output.append(0, end, encode_output(w, end, &payload));
             // metric dedup across restarts: only first emission counts
             let recorded = c.metric_window.load(Ordering::Acquire);
             if w >= recorded {
@@ -380,6 +389,10 @@ fn run_root(c: &Arc<FlinkCluster>, run: &Arc<RunState>, root: &mut RootState) ->
         }
         run.next_window.store(w + 1, Ordering::Release);
         did_work = true;
+    }
+    if let Some(batch) = root.arena.finish(first_w) {
+        c.output.append_frames(0, &batch);
+        root.arena.recycle(batch);
     }
     did_work
 }
@@ -400,6 +413,7 @@ fn apply_root_flush(c: &Arc<FlinkCluster>, root: &mut RootState, i: usize, flush
         return true;
     }
     let had = !flush.partials.is_empty();
+    root.arena.begin_batch();
     for p in flush.partials {
         match p {
             Partial::Max(w, mx, auc) => {
@@ -422,15 +436,27 @@ fn apply_root_flush(c: &Arc<FlinkCluster>, root: &mut RootState, i: usize, flush
                 }
             }
             Partial::Record(ref_ts) => {
-                // Q0: emit immediately, sequenced by arrival.
+                // Q0: emit sequenced by arrival, as an (empty-payload)
+                // arena frame; the whole flush ships as one batch below.
                 let now = c.clock.now();
-                let seq = c.metric_window.fetch_add(1, Ordering::AcqRel);
-                c.output.append(0, ref_ts, encode_output(seq, ref_ts, &[]));
+                root.arena.frame(ref_ts, |_| true);
                 let latency = now.saturating_sub(ref_ts);
                 c.metrics.latency.record(latency);
                 c.metrics.latency_series.record(now, latency as f64);
                 c.metrics.outputs.fetch_add(1, Ordering::Relaxed);
             }
+        }
+    }
+    if !root.arena.is_empty() {
+        // claim the flush's whole seq range at once — only this (root)
+        // thread emits Q0 records, so the range is exactly contiguous
+        // with the per-record fetch_add it replaces
+        let seq0 = c
+            .metric_window
+            .fetch_add(root.arena.len() as u64, Ordering::AcqRel);
+        if let Some(batch) = root.arena.finish(seq0) {
+            c.output.append_frames(0, &batch);
+            root.arena.recycle(batch);
         }
     }
     root.watermarks[i] = root.watermarks[i].max(flush.watermark);

@@ -185,7 +185,7 @@ impl Default for HolonConfig {
             flink_spare_slots: false,
             use_xla: false,
             artifacts_dir: "artifacts".to_string(),
-            bench_out: "BENCH_PR7.json".to_string(),
+            bench_out: "BENCH_PR8.json".to_string(),
         }
     }
 }

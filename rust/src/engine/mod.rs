@@ -117,6 +117,15 @@ pub struct ClusterMetrics {
     /// `inbox_capacity` when the cap is set (the bounded-memory
     /// guarantee backpressure exists to provide).
     pub inbox_depth_max: Arc<AtomicU64>,
+    /// Bytes shipped through per-batch output arenas (backing buffers
+    /// handed to the log as shared `Arc`s — the zero-copy output path).
+    pub output_arena_bytes: Arc<AtomicU64>,
+    /// Output frames written into arenas (one per output record).
+    pub output_frames: Arc<AtomicU64>,
+    /// Window-store inserts that fell outside the dense ring horizon
+    /// and landed in the spill map. ~0 in a healthy run; a sustained
+    /// rate means lateness/compaction tuning is off.
+    pub window_ring_spills: Arc<AtomicU64>,
 }
 
 impl ClusterMetrics {
@@ -151,6 +160,9 @@ impl ClusterMetrics {
             credits_stalled_rounds: Arc::new(AtomicU64::new(0)),
             outbound_queue_depth_max: Arc::new(AtomicU64::new(0)),
             inbox_depth_max: Arc::new(AtomicU64::new(0)),
+            output_arena_bytes: Arc::new(AtomicU64::new(0)),
+            output_frames: Arc::new(AtomicU64::new(0)),
+            window_ring_spills: Arc::new(AtomicU64::new(0)),
         }
     }
 

@@ -29,6 +29,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use crate::api::{Ctx, Processor, SharedState};
+use crate::arena::OutputArena;
 use crate::clock::SimClock;
 use crate::codec::{Decode, Encode, Reader, Writer};
 use crate::config::HolonConfig;
@@ -115,6 +116,9 @@ struct PartState<S, L> {
     /// verbatim; joined into the node replica after every batch).
     own: S,
     local: L,
+    /// Per-batch output arena (reused across batches; its high-water
+    /// pre-reserve keeps the steady-state emit path allocation-free).
+    arena: OutputArena,
     last_ckpt: SimTime,
     /// `(nxt_idx, nxt_odx)` at the last checkpoint put — together with
     /// `own.dirty_windows() == 0` this gates the skip-re-encode fast
@@ -125,7 +129,9 @@ struct PartState<S, L> {
     last_put: Option<(u64, u64)>,
 }
 
-/// Encode an output record payload: (seq, ref_ts, inner).
+/// Encode an output record payload: (seq, ref_ts, inner). The arena
+/// path ([`OutputArena::frame`]) produces these same bytes in place;
+/// this free function remains for the baseline and for tests/oracles.
 pub fn encode_output(seq: u64, ref_ts: SimTime, inner: &[u8]) -> Vec<u8> {
     let mut w = Writer::with_capacity(inner.len() + 20);
     w.put_u64(seq);
@@ -134,12 +140,14 @@ pub fn encode_output(seq: u64, ref_ts: SimTime, inner: &[u8]) -> Vec<u8> {
     w.into_bytes()
 }
 
-/// Decode an output record payload; returns (seq, ref_ts, inner).
-pub fn decode_output(bytes: &[u8]) -> Option<(u64, SimTime, Vec<u8>)> {
+/// Decode an output record payload; returns (seq, ref_ts, inner). The
+/// inner payload is *borrowed* from the record bytes — consumers (sink
+/// dedup, oracles) read it in place, no per-record copy.
+pub fn decode_output(bytes: &[u8]) -> Option<(u64, SimTime, &[u8])> {
     let mut r = Reader::new(bytes);
     let seq = r.get_u64().ok()?;
     let ref_ts = r.get_u64().ok()?;
-    let inner = r.get_bytes().ok()?.to_vec();
+    let inner = r.get_bytes().ok()?;
     Some((seq, ref_ts, inner))
 }
 
@@ -413,15 +421,20 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
             }
             // Zero-copy RUN_BATCH: the processor runs over the log's
             // record slice in place — no per-poll Vec<Record>, no
-            // payload Arc bumps. (Always invoke the processor: an empty
-            // batch still lets it emit windows completed by freshly
-            // merged gossip.)
-            let ((outs, consumed), nxt_idx) =
-                input.read_slice(p, st.nxt_idx, allowed, |recs| {
-                    let mut pctx = Ctx::new(p, now, aggregator.as_mut());
-                    processor.process(&mut pctx, &shared, &mut st.own, &mut st.local, recs);
-                    (pctx.into_outputs(), recs.len())
-                });
+            // payload Arc bumps — and emits into the partition's
+            // reusable output arena (≤1 allocation per batch: the
+            // high-water pre-reserve). (Always invoke the processor: an
+            // empty batch still lets it emit windows completed by
+            // freshly merged gossip.)
+            st.arena.begin_batch();
+            let arena = &mut st.arena;
+            let own = &mut st.own;
+            let local = &mut st.local;
+            let (consumed, nxt_idx) = input.read_slice(p, st.nxt_idx, allowed, |recs| {
+                let mut pctx = Ctx::new(p, now, aggregator.as_mut(), arena);
+                processor.process(&mut pctx, &shared, own, local, recs);
+                recs.len()
+            });
             budget_events -= consumed as f64;
             // Drain only what this batch touched (own's dirty windows,
             // and within them only the changed sub-state) into the
@@ -446,19 +459,18 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
                     "processor mutated `own` on an empty batch"
                 );
             }
-            if !outs.is_empty() {
-                let batch: Vec<(SimTime, Vec<u8>)> = outs
-                    .into_iter()
-                    .enumerate()
-                    .map(|(i, o)| {
-                        (
-                            o.ref_ts,
-                            encode_output(st.nxt_odx + i as u64, o.ref_ts, &o.payload),
-                        )
-                    })
-                    .collect();
-                st.nxt_odx += batch.len() as u64;
-                output.append_batch(p, batch);
+            // Ship the batch's outputs: seq numbers are backpatched into
+            // the frames, then the whole batch appends as views over one
+            // shared backing — zero payload copies end to end.
+            if let Some(batch) = st.arena.finish(st.nxt_odx) {
+                st.nxt_odx += batch.frames.len() as u64;
+                output.append_frames(p, &batch);
+                st.arena.recycle(batch);
+            }
+            let (arena_bytes, arena_frames) = st.arena.take_totals();
+            if arena_frames > 0 {
+                metrics.output_arena_bytes.fetch_add(arena_bytes, Ordering::Relaxed);
+                metrics.output_frames.fetch_add(arena_frames, Ordering::Relaxed);
             }
             if consumed > 0 {
                 st.nxt_idx = nxt_idx;
@@ -560,6 +572,13 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
             metrics.shard_parallel_merges.fetch_add(par, Ordering::Relaxed);
             metrics.shard_serial_merges.fetch_add(ser, Ordering::Relaxed);
         }
+        // Same drain pattern for out-of-horizon window-ring spills
+        // (inserts the O(1) dense ring couldn't take): ~0 in a healthy
+        // deployment, so a nonzero rate flags lateness/compaction skew.
+        let spills = crate::wcrdt::ring::take_ring_spills();
+        if spills > 0 {
+            metrics.window_ring_spills.fetch_add(spills, Ordering::Relaxed);
+        }
 
         // Flush the whole iteration's sends (heartbeat, claims, gossip)
         // as one batch: a single RNG critical section for all of it, and
@@ -633,6 +652,7 @@ fn recover_partition<P: Processor>(
                 nxt_odx: cp.nxt_odx,
                 own,
                 local,
+                arena: OutputArena::new(),
                 last_ckpt: now,
                 // the store holds exactly this state; skip re-encoding
                 // until the partition actually moves
@@ -646,6 +666,7 @@ fn recover_partition<P: Processor>(
         nxt_odx: 0,
         own: processor.init_shared(all_parts),
         local: P::Local::default(),
+        arena: OutputArena::new(),
         last_ckpt: now,
         last_put: None,
     }
@@ -659,7 +680,7 @@ mod tests {
     fn output_codec_roundtrip() {
         let b = encode_output(7, 123, &[1, 2, 3]);
         let (seq, ts, inner) = decode_output(&b).unwrap();
-        assert_eq!((seq, ts, inner.as_slice()), (7, 123, &[1u8, 2, 3][..]));
+        assert_eq!((seq, ts, inner), (7, 123, &[1u8, 2, 3][..]));
     }
 
     #[test]

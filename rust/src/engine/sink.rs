@@ -72,6 +72,10 @@ pub(crate) fn sink_loop(
             // Zero-copy drain: visit records in place, no Vec<Record>
             // materialization per poll.
             let nxt = output.read_with(p as PartitionId, before, SINK_BATCH, |rec| {
+                // decode_output borrows the inner payload from the
+                // record bytes — the dedup path never copies it (the old
+                // signature materialized a Vec per record just to drop
+                // it here).
                 let Some((seq, ref_ts, _inner)) = decode_output(&rec.payload) else {
                     return;
                 };

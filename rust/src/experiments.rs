@@ -189,6 +189,14 @@ pub struct DataPlaneStats {
     /// Backpressure: high-water mark of any receiver's inbox depth —
     /// bounded by `inbox_capacity` when the cap is set.
     pub inbox_depth_max: u64,
+    /// Output-path: bytes shipped through per-batch output arenas (one
+    /// shared backing `Arc` per batch — the zero-alloc write side).
+    pub output_arena_bytes: u64,
+    /// Output-path: frames (output records) written into arenas.
+    pub output_frames: u64,
+    /// Window-store inserts that fell outside the dense ring horizon
+    /// into the spill map; ~0 in a healthy run.
+    pub window_ring_spills: u64,
 }
 
 /// Measurements of one run.
@@ -276,6 +284,9 @@ fn data_plane_stats(
         outbound_queue_depth_max: bus.map_or(0, |b| b.outbound_depth_max()),
         credits_stalled_rounds: metrics.credits_stalled_rounds.load(Ordering::Acquire),
         inbox_depth_max: bus.map_or(0, |b| b.inbox_depth_max()),
+        output_arena_bytes: metrics.output_arena_bytes.load(Ordering::Acquire),
+        output_frames: metrics.output_frames.load(Ordering::Acquire),
+        window_ring_spills: metrics.window_ring_spills.load(Ordering::Acquire),
     }
 }
 
@@ -929,6 +940,9 @@ pub fn bench_report_json(pr: &str, quick: bool, scenarios: &[BenchScenario]) -> 
             .u64_field("outbound_queue_depth_max", r.data_plane.outbound_queue_depth_max)
             .u64_field("credits_stalled_rounds", r.data_plane.credits_stalled_rounds)
             .u64_field("inbox_depth_max", r.data_plane.inbox_depth_max)
+            .u64_field("output_arena_bytes", r.data_plane.output_arena_bytes)
+            .u64_field("output_frames", r.data_plane.output_frames)
+            .u64_field("window_ring_spills", r.data_plane.window_ring_spills)
             .bool_field("stalled", r.stalled)
             .end_obj();
     }
@@ -964,6 +978,15 @@ mod tests {
         // visited, none is cloned
         assert_eq!(r.data_plane.payload_clones, 0);
         assert!(r.data_plane.records_read >= r.consumed);
+        // outputs ship through the arena: one frame per output record,
+        // and the backing bytes cover at least the frame headers
+        assert!(r.data_plane.output_frames >= r.outputs);
+        assert!(
+            r.data_plane.output_arena_bytes
+                >= r.data_plane.output_frames * crate::arena::FRAME_HEADER_BYTES as u64
+        );
+        // in-order Nexmark input never leaves the ring horizon
+        assert_eq!(r.data_plane.window_ring_spills, 0);
         assert!(r.data_plane.gossip_msgs > 0);
         assert!(r.data_plane.gossip_bytes_encoded > 0);
         // every received gossip payload was classified by its join
@@ -1056,6 +1079,9 @@ mod tests {
             "outbound_queue_depth_max",
             "credits_stalled_rounds",
             "inbox_depth_max",
+            "output_arena_bytes",
+            "output_frames",
+            "window_ring_spills",
             "stalled",
         ] {
             assert_eq!(

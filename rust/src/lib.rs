@@ -8,8 +8,9 @@
 //! The crate is organized bottom-up:
 //!
 //! * substrates: [`codec`], [`clock`], [`log`] (the Kafka substitute),
-//!   [`net`] (simulated network), [`storage`] (checkpoint store),
-//!   [`metrics`], [`config`];
+//!   [`arena`] (per-batch framed output buffer — the zero-alloc write
+//!   side of the data plane), [`net`] (simulated network), [`storage`]
+//!   (checkpoint store), [`metrics`], [`config`];
 //! * the paper's abstractions: [`crdt`] (state-based CRDTs; since trait
 //!   v3 every join reports its effect — `merge ->`
 //!   [`crdt::MergeOutcome`], with per-key/per-shard changed-sets via
@@ -76,7 +77,7 @@
 //!
 //! runs the §5.3 max-throughput ramp (Holon + the Flink-model baseline)
 //! and the Table 2 latency rows headlessly, prints human-readable rows,
-//! and writes a `holon-bench/v1` JSON report (default `BENCH_PR7.json`;
+//! and writes a `holon-bench/v1` JSON report (default `BENCH_PR8.json`;
 //! see EXPERIMENTS.md for the schema and the trajectory log). Each
 //! scenario entry carries events/sec (peak + mean), p50/p99/mean
 //! latency, gossip volume (`gossip_bytes_wire`, per-recipient), and the
@@ -193,8 +194,39 @@
 //! within 20% of the uniform run with `inbox_depth_max ≤
 //! inbox_capacity` (`tests/backpressure.rs` also pins byte-identical
 //! outputs under pressure).
+//!
+//! ## Memory layout (arena output path + ring window store)
+//!
+//! The two allocation hot spots the zero-copy read path left behind are
+//! gone:
+//!
+//! * **Outputs** are written *in place* into a per-batch [`arena::OutputArena`]
+//!   — emit stages ([`api::Ctx::emit_with`] and friends) receive the
+//!   backing [`codec::Writer`] positioned inside a cancellable frame, so
+//!   no per-record `Vec<u8>` is ever built. The batch drain backpatches
+//!   sequence numbers and ships the whole buffer as **one**
+//!   `Arc<Vec<u8>>` via [`log::Topic::append_frames`]; every record of
+//!   the batch references that single shared backing ([`log::SharedBytes`])
+//!   with zero payload copies. Steady-state cost: ≤1 allocation per
+//!   batch (the pre-reserve to the high-water mark, asserted by a
+//!   counting global allocator in `benches/micro_hotpath.rs`) plus the
+//!   `Arc` cell. The frame wire format is byte-identical to the old
+//!   per-record encoding, and the [`baseline`] taskmanager emits through
+//!   the same arena so the systems comparison stays fair.
+//! * **Window state** lives in a [`wcrdt::WindowRing`]: a dense
+//!   ring buffer indexed by `window_id − base` — O(1) lookup/insert on
+//!   the live horizon, zero allocations per in-horizon touch, compaction
+//!   advances the base without moving survivors. Out-of-span windows
+//!   overflow into a spill map (counted by
+//!   `ClusterMetrics::window_ring_spills`, expected 0 in-order);
+//!   ascending iteration keeps `Encode` byte-identical to the
+//!   `BTreeMap` it replaced, so no wire/checkpoint/gossip format
+//!   changed — `tests/properties.rs` pins the ring ≡ BTreeMap
+//!   equivalence by differential property tests and a seeded
+//!   fault-schedule replay.
 
 pub mod api;
+pub mod arena;
 pub mod baseline;
 pub mod benchkit;
 pub mod clock;

@@ -8,11 +8,75 @@
 //! "measured by Kafka insertion timestamps" (§5.1).
 
 use std::collections::BTreeMap;
+use std::ops::Deref;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
+use crate::arena::FinishedBatch;
 use crate::clock::SimClock;
 use crate::util::{PartitionId, SimTime};
+
+/// A byte payload that is a *view* into a shared backing buffer.
+///
+/// The arena output path ships a whole batch of records as one
+/// `Arc<Vec<u8>>`; each record's payload is an `(offset, len)` window
+/// into it. Standalone payloads (`From<Vec<u8>>`) simply own their
+/// backing with a full-range view, so every pre-arena call site keeps
+/// working. `Deref<Target = [u8]>` means readers see plain byte slices
+/// either way; equality is by visible bytes, not backing identity.
+#[derive(Debug, Clone)]
+pub struct SharedBytes {
+    backing: Arc<Vec<u8>>,
+    start: u32,
+    len: u32,
+}
+
+impl SharedBytes {
+    /// View `[start, start + len)` of a shared backing buffer.
+    pub fn view(backing: Arc<Vec<u8>>, start: u32, len: u32) -> Self {
+        debug_assert!((start as usize + len as usize) <= backing.len());
+        Self { backing, start, len }
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.backing[self.start as usize..(self.start + self.len) as usize]
+    }
+
+    /// The shared backing buffer (observability/tests: frames of one
+    /// batch report `Arc::ptr_eq` backings).
+    pub fn backing(&self) -> &Arc<Vec<u8>> {
+        &self.backing
+    }
+}
+
+impl Deref for SharedBytes {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<u8>> for SharedBytes {
+    fn from(v: Vec<u8>) -> Self {
+        let len = v.len() as u32;
+        Self::view(Arc::new(v), 0, len)
+    }
+}
+
+impl From<Arc<Vec<u8>>> for SharedBytes {
+    fn from(backing: Arc<Vec<u8>>) -> Self {
+        let len = backing.len() as u32;
+        Self::view(backing, 0, len)
+    }
+}
+
+impl PartialEq for SharedBytes {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for SharedBytes {}
 
 /// One record on a logged stream.
 #[derive(Debug, Clone, PartialEq)]
@@ -23,8 +87,9 @@ pub struct Record {
     pub event_ts: SimTime,
     /// Append timestamp (sim-time) assigned by the broker.
     pub insert_ts: SimTime,
-    /// Opaque payload bytes.
-    pub payload: Arc<Vec<u8>>,
+    /// Opaque payload bytes (possibly a view into a shared batch
+    /// backing — see [`SharedBytes`]).
+    pub payload: SharedBytes,
 }
 
 /// A single append-only partition.
@@ -87,7 +152,7 @@ impl Topic {
             offset,
             event_ts,
             insert_ts: now,
-            payload,
+            payload: payload.into(),
         });
         offset
     }
@@ -103,7 +168,27 @@ impl Topic {
                 offset: first + i as u64,
                 event_ts,
                 insert_ts: now,
-                payload: Arc::new(payload),
+                payload: payload.into(),
+            });
+        }
+        first
+    }
+
+    /// Append a finished arena batch: every frame becomes one record
+    /// whose payload is a [`SharedBytes`] view into the batch's single
+    /// shared backing — N records, one buffer, one lock acquisition,
+    /// zero payload copies. Returns the offset of the first record.
+    pub fn append_frames(&self, p: PartitionId, batch: &FinishedBatch) -> u64 {
+        let now = self.clock.now();
+        let mut log = self.log(p).write().unwrap();
+        let first = log.records.len() as u64;
+        log.records.reserve(batch.frames.len());
+        for (i, fr) in batch.frames.iter().enumerate() {
+            log.records.push(Record {
+                offset: first + i as u64,
+                event_ts: fr.ref_ts,
+                insert_ts: now,
+                payload: SharedBytes::view(batch.backing.clone(), fr.start, fr.len),
             });
         }
         first
@@ -115,6 +200,9 @@ impl Topic {
     ///
     /// This is the *copying* path: it materializes an owned
     /// `Vec<Record>` per poll (counted in [`read_stats`](Self::read_stats)).
+    /// Since payloads became [`SharedBytes`], each clone is an `Arc`
+    /// refcount bump rather than a byte copy, but the per-poll record
+    /// materialization still makes this unfit for steady-state polling.
     /// Hot paths use [`read_slice`](Self::read_slice) /
     /// [`read_with`](Self::read_with) instead; `read` remains for tests
     /// and oracles that want owned records after the run.
@@ -374,5 +462,45 @@ mod tests {
         let b = broker();
         b.topic("x", 2);
         b.topic("x", 3);
+    }
+
+    #[test]
+    fn append_frames_shares_one_backing_across_records() {
+        use crate::arena::OutputArena;
+        let b = broker();
+        let t = b.topic("out", 1);
+        let mut a = OutputArena::new();
+        a.begin_batch();
+        for ts in [10u64, 20, 30] {
+            a.frame(ts, |w| {
+                w.put_u64(ts * 7);
+                true
+            });
+        }
+        let batch = a.finish(100).unwrap();
+        let expected: Vec<Vec<u8>> = batch
+            .frames
+            .iter()
+            .map(|f| batch.backing[f.start as usize..(f.start + f.len) as usize].to_vec())
+            .collect();
+        let first = t.append_frames(0, &batch);
+        assert_eq!(first, 0);
+        assert_eq!(t.end_offset(0), 3);
+        let (recs, _) = t.read(0, 0, 10);
+        for (rec, want) in recs.iter().zip(&expected) {
+            assert_eq!(&rec.payload[..], &want[..]);
+        }
+        // all three payloads are views into the same allocation
+        assert!(Arc::ptr_eq(recs[0].payload.backing(), recs[2].payload.backing()));
+        assert_eq!(recs[1].event_ts, 20);
+    }
+
+    #[test]
+    fn shared_bytes_equality_is_by_visible_bytes() {
+        let a: SharedBytes = vec![1u8, 2, 3].into();
+        let backing = Arc::new(vec![9u8, 1, 2, 3, 9]);
+        let b = SharedBytes::view(backing, 1, 3);
+        assert_eq!(a, b);
+        assert_eq!(&b[..], &[1, 2, 3]);
     }
 }

@@ -23,7 +23,7 @@ use crate::crdt::{BoundedTopK, GCounter, MapCrdt, PrefixAgg};
 use crate::log::Record;
 use crate::shard::ShardedMapCrdt;
 use crate::util::PartitionId;
-use crate::wcrdt::{WindowAssigner, WindowId, WindowedCrdt};
+use crate::wcrdt::{WindowAssigner, WindowId, WindowRing, WindowedCrdt};
 
 use super::{Event, CATEGORIES};
 
@@ -55,7 +55,9 @@ impl Processor for Q0 {
     ) {
         for rec in events {
             // Latency reference = input insertion time (broker-to-broker).
-            ctx.emit(rec.insert_ts, rec.payload.to_vec());
+            // emit_bytes copies straight into the arena frame — no
+            // intermediate Vec per record.
+            ctx.emit_bytes(rec.insert_ts, &rec.payload);
         }
     }
 }
@@ -119,7 +121,7 @@ impl Processor for Q2 {
         for rec in events {
             if let Ok(Event::Bid { auction, price, .. }) = Event::from_bytes(&rec.payload) {
                 if auction % self.every == 0 {
-                    ctx.emit(rec.insert_ts, Q2Out { auction, price }.to_bytes());
+                    ctx.emit_with(rec.insert_ts, |w| Q2Out { auction, price }.encode(w));
                 }
             }
         }
@@ -257,7 +259,7 @@ impl Processor for Q7 {
         }
         while let Some(tk) = shared.window_value(local.next) {
             let w = local.next;
-            ctx.emit(wa.window_end(w), q7_winner(w, &tk).to_bytes());
+            ctx.emit_with(wa.window_end(w), |wr| q7_winner(w, &tk).encode(wr));
             local.next += 1;
         }
     }
@@ -390,7 +392,7 @@ impl Processor for Q4 {
         }
         while let Some(m) = shared.window_value(local.next) {
             let w = local.next;
-            ctx.emit(wa.window_end(w), q4_out(w, m.iter()).to_bytes());
+            ctx.emit_with(wa.window_end(w), |wr| q4_out(w, m.iter()).encode(wr));
             local.next += 1;
         }
     }
@@ -517,7 +519,7 @@ impl Processor for Q5 {
         }
         while let Some(m) = shared.window_value(local.next) {
             let w = local.next;
-            ctx.emit(wa.window_end(w), q5_hot_item(w, m.iter()).to_bytes());
+            ctx.emit_with(wa.window_end(w), |wr| q5_hot_item(w, m.iter()).encode(wr));
             local.next += 1;
         }
     }
@@ -688,8 +690,9 @@ impl Decode for RatioOut {
 /// emission cursor (the paper's `localCount` WLocal + `prevWatermark`).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Q1Local {
-    /// window -> local bid count (manual WLocal: Default-constructible).
-    pub counts: std::collections::BTreeMap<WindowId, u64>,
+    /// window -> local bid count (manual WLocal: Default-constructible;
+    /// ring-backed like every other window store, same byte layout).
+    pub counts: WindowRing<u64>,
     pub cursor: WindowId,
 }
 
@@ -703,7 +706,7 @@ impl Encode for Q1Local {
 impl Decode for Q1Local {
     fn decode(r: &mut Reader) -> DecodeResult<Self> {
         Ok(Q1Local {
-            counts: std::collections::BTreeMap::decode(r)?,
+            counts: WindowRing::decode(r)?,
             cursor: r.get_u64()?,
         })
     }
@@ -752,7 +755,9 @@ impl Processor for Query1 {
                     // totalCount.insert(1, e.ts)
                     let _ = own.insert_with(p, rec.event_ts, |c| c.add(p as u64, 1));
                     // localCount.insert(1, e.ts)
-                    *local.counts.entry(wa.window_of(rec.event_ts)).or_insert(0) += 1;
+                    *local
+                        .counts
+                        .entry_or_insert_with(wa.window_of(rec.event_ts), || 0) += 1;
                 }
             }
             last_ts = rec.event_ts;
@@ -785,7 +790,7 @@ impl Processor for Query1 {
                 local: local.counts.get(&w).copied().unwrap_or(0),
                 total: total.value(),
             };
-            ctx.emit(wa.window_end(w), out.to_bytes());
+            ctx.emit_with(wa.window_end(w), |wr| out.encode(wr));
             local.counts.remove(&w); // compact the emitted window
             local.cursor += 1;
         }
@@ -797,7 +802,6 @@ mod tests {
     use super::*;
     use crate::api::ScalarAggregator;
     use crate::log::Record;
-    use std::sync::Arc;
 
     fn bid_record(offset: u64, ts: u64, auction: u64, price: f64) -> Record {
         let ev = Event::Bid {
@@ -810,7 +814,7 @@ mod tests {
             offset,
             event_ts: ts,
             insert_ts: ts,
-            payload: Arc::new(ev.to_bytes()),
+            payload: ev.to_bytes().into(),
         }
     }
 
@@ -825,10 +829,12 @@ mod tests {
     ) -> Vec<crate::api::Output> {
         use crate::api::SharedState;
         let mut agg = ScalarAggregator;
-        let mut ctx = Ctx::new(partition, now, &mut agg);
+        let mut arena = crate::arena::OutputArena::new();
+        arena.begin_batch();
+        let mut ctx = Ctx::new(partition, now, &mut agg, &mut arena);
         q.process(&mut ctx, shared, own, local, events);
         let _ = shared.join(own);
-        ctx.into_outputs()
+        arena.take_outputs()
     }
 
     #[test]
@@ -1077,7 +1083,7 @@ mod tests {
                     offset: i,
                     event_ts: i * 7,
                     insert_ts: i * 7 + 1,
-                    payload: Arc::new(ev.to_bytes()),
+                    payload: ev.to_bytes().into(),
                 }
             })
             .collect()

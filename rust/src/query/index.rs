@@ -18,10 +18,8 @@
 //! payload arrives with a different shard layout and the merge rehashes
 //! its keys.
 
-use std::collections::BTreeMap;
-
 use crate::codec::Encode;
-use crate::wcrdt::WindowId;
+use crate::wcrdt::{WindowId, WindowRing};
 
 /// 64-bit fingerprint of an encodable key: FNV-1a over the key's
 /// encoded bytes, with a final avalanche mix so the Bloom probes (low
@@ -103,10 +101,13 @@ impl WindowSig {
     }
 }
 
-/// Per-window signatures of a replica's keyed state.
+/// Per-window signatures of a replica's keyed state. Window-indexed
+/// like the state it summarizes, so it uses the same O(1)
+/// [`WindowRing`] store (signatures live exactly over the compaction
+/// horizon).
 #[derive(Debug, Clone, Default)]
 pub struct SignatureIndex {
-    windows: BTreeMap<WindowId, WindowSig>,
+    windows: WindowRing<WindowSig>,
 }
 
 impl SignatureIndex {
@@ -122,7 +123,7 @@ impl SignatureIndex {
 
     /// The signature of a window, created empty on first touch.
     pub fn sig_mut(&mut self, wid: WindowId) -> &mut WindowSig {
-        self.windows.entry(wid).or_default()
+        self.windows.entry_or_insert_with(wid, WindowSig::default)
     }
 
     /// Whether `wid` may contain a key with fingerprint `fp`.
@@ -133,7 +134,7 @@ impl SignatureIndex {
     /// Drop signatures below `first` (mirrors window compaction — a
     /// compacted window must not look "verifiably empty but queryable").
     pub fn retain_from(&mut self, first: WindowId) {
-        self.windows = self.windows.split_off(&first);
+        self.windows.compact_below(first);
     }
 
     /// Number of signed windows.

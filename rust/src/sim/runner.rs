@@ -341,8 +341,8 @@ pub fn collect_outputs(
         let mut first: BTreeMap<u64, Vec<u8>> = BTreeMap::new();
         for rec in recs {
             if let Some((seq, _ts, inner)) = decode_output(&rec.payload) {
-                first.entry(seq).or_insert_with(|| inner.clone());
-                all.push((seq, inner));
+                first.entry(seq).or_insert_with(|| inner.to_vec());
+                all.push((seq, inner.to_vec()));
             }
         }
         raw.push(all);

@@ -20,10 +20,12 @@
 //! work stealing); a node's watermark is the min over the partitions it
 //! executes, which is what Algorithm 1 tracks per "node".
 
+pub mod ring;
 mod watermark;
 mod window;
 mod wlocal;
 
+pub use ring::WindowRing;
 pub use watermark::WatermarkGen;
 pub use window::{WindowAssigner, WindowId};
 pub use wlocal::{Local, WLocal};
@@ -68,10 +70,15 @@ impl MergeReport {
 }
 
 /// A windowed, replicated, convergent aggregate (Algorithm 1).
+///
+/// The window store is a [`WindowRing`]: compaction bounds the live
+/// horizon, so window access is an O(1) slot probe instead of the old
+/// `BTreeMap` log-n walk — with a spill map for out-of-horizon
+/// stragglers and a byte-identical `Encode` layout (see the ring docs).
 #[derive(Debug, Clone)]
 pub struct WindowedCrdt<C: Crdt> {
     assigner: WindowAssigner,
-    windows: BTreeMap<WindowId, C>,
+    windows: WindowRing<C>,
     progress: BTreeMap<PartitionId, SimTime>,
     /// Windows at or below this id have been compacted away; their
     /// values were final (and identical on every replica) when dropped.
@@ -111,7 +118,7 @@ impl<C: Crdt> WindowedCrdt<C> {
         let progress = participants.into_iter().map(|p| (p, 0)).collect();
         Self {
             assigner,
-            windows: BTreeMap::new(),
+            windows: WindowRing::new(),
             progress,
             compacted_below: 0,
             dirty: std::collections::BTreeSet::new(),
@@ -137,7 +144,7 @@ impl<C: Crdt> WindowedCrdt<C> {
         }
         let wid = self.assigner.window_of(ts);
         debug_assert!(wid >= self.compacted_below, "insert into compacted window");
-        f(self.windows.entry(wid).or_default());
+        f(self.windows.entry_or_insert_with(wid, C::default));
         self.dirty.insert(wid);
         Ok(())
     }
@@ -161,7 +168,7 @@ impl<C: Crdt> WindowedCrdt<C> {
         if wid < self.assigner.window_of(own) {
             return false;
         }
-        f(self.windows.entry(wid).or_default());
+        f(self.windows.entry_or_insert_with(wid, C::default));
         self.dirty.insert(wid);
         true
     }
@@ -232,7 +239,7 @@ impl<C: Crdt> WindowedCrdt<C> {
     #[must_use = "the report drives receive-path dirty-marking; discard with `let _ =` if unneeded"]
     pub fn merge(&mut self, other: &Self) -> MergeReport {
         let mut report = MergeReport::default();
-        for (&w, win) in &other.windows {
+        for (w, win) in other.windows.iter() {
             if w < self.compacted_below {
                 continue; // already finalized and dropped here
             }
@@ -277,16 +284,12 @@ impl<C: Crdt> WindowedCrdt<C> {
     }
 
     /// Drop windows strictly below `wid` (metadata compaction). Callers
-    /// only compact windows they have already emitted.
+    /// only compact windows they have already emitted. Also advances the
+    /// ring base, which is what keeps the dense span anchored to the
+    /// live horizon.
     pub fn compact_below(&mut self, wid: WindowId) {
         self.compacted_below = self.compacted_below.max(wid);
-        while let Some((&w, _)) = self.windows.iter().next() {
-            if w < wid {
-                self.windows.remove(&w);
-            } else {
-                break;
-            }
-        }
+        self.windows.compact_below(wid);
     }
 
     /// Delta-based synchronization (paper §7): a partial replica
@@ -300,7 +303,7 @@ impl<C: Crdt> WindowedCrdt<C> {
     pub fn take_delta(&mut self) -> Self {
         let dirty = std::mem::take(&mut self.dirty);
         self.progress_dirty = false;
-        let mut windows = BTreeMap::new();
+        let mut windows = WindowRing::new();
         for w in &dirty {
             if let Some(c) = self.windows.get_mut(w) {
                 windows.insert(*w, c.take_delta());
@@ -409,7 +412,7 @@ impl<C: Crdt> WindowedCrdt<C> {
     /// Checkpoint slice: this partition's contributions + its progress
     /// entry (see DESIGN.md — partition state forms a CRDT).
     pub fn project_with(&self, myself: PartitionId, f: impl Fn(&C) -> C) -> Self {
-        let windows = self.windows.iter().map(|(&w, c)| (w, f(c))).collect();
+        let windows = self.windows.iter().map(|(w, c)| (w, f(c))).collect();
         let mut progress: BTreeMap<PartitionId, SimTime> =
             self.progress.keys().map(|&p| (p, 0)).collect();
         if let Some(&ts) = self.progress.get(&myself) {
@@ -433,7 +436,7 @@ impl<C: Crdt> WindowedCrdt<C> {
     /// Ids of the live (uncompacted) windows, ascending. The read path
     /// uses this to seed its signature index from an existing replica.
     pub fn window_ids(&self) -> impl Iterator<Item = WindowId> + '_ {
-        self.windows.keys().copied()
+        self.windows.keys()
     }
 
     /// Direct read access for tests/benches.
@@ -459,7 +462,7 @@ impl<C: Crdt> Decode for WindowedCrdt<C> {
     fn decode(r: &mut Reader) -> DecodeResult<Self> {
         Ok(Self {
             assigner: WindowAssigner::decode(r)?,
-            windows: BTreeMap::decode(r)?,
+            windows: WindowRing::decode(r)?,
             progress: BTreeMap::decode(r)?,
             compacted_below: r.get_u64()?,
             dirty: Default::default(),

@@ -1,0 +1,499 @@
+//! `WindowRing<T>` — a ring buffer over the live window horizon.
+//!
+//! Every windowed store in the system (`WindowedCrdt`, `WLocal`, the
+//! query `SignatureIndex`, per-partition emit counters) used to be a
+//! `BTreeMap<WindowId, T>`, paying a log-n probe and a node allocation
+//! per window touch on the hottest path the engine has. But compaction
+//! already bounds the live span to a handful of windows, so the map is
+//! really a dense array in disguise: this type indexes `window_id −
+//! base` into a contiguous slot ring for O(1), allocation-free access
+//! inside the horizon, spilling to a small `BTreeMap` only for
+//! out-of-horizon windows (late stragglers below the ring base after
+//! compaction, or far-future windows beyond [`MAX_DENSE_SPAN`]).
+//!
+//! The ring is a drop-in *logical* map replacement:
+//!
+//! * iteration is always in ascending `WindowId` order (dense range
+//!   merged with both spill ranges), so [`Encode`] produces bytes
+//!   **identical** to the `BTreeMap<WindowId, T>` layout it replaces —
+//!   `u32 count` followed by sorted `(u64 key, value)` pairs. Gossip
+//!   payloads, checkpoints and golden outputs do not move by a byte.
+//! * `PartialEq` is logical (same key/value pairs), independent of how
+//!   entries are split between dense slots and spill.
+//!
+//! Invariant: the spill map never holds a key inside the dense range
+//! `[base, base+len)` — extending the dense range migrates any spilled
+//! keys it swallows, which is what keeps single-pass ordered iteration
+//! correct. Spill insertions are counted in a thread-local drained by
+//! the engine into `ClusterMetrics::window_ring_spills`: in a healthy
+//! deployment the counter stays ~0, so a nonzero rate is a direct
+//! signal that lateness/compaction tuning is off.
+
+use std::cell::Cell;
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
+
+use super::WindowId;
+
+/// Hard cap on the dense slot span. Far above any real live horizon
+/// (compaction holds ~16 windows); a workload that somehow touches a
+/// wider spread degrades to the spill map instead of allocating an
+/// unbounded slot array.
+pub const MAX_DENSE_SPAN: usize = 1024;
+
+thread_local! {
+    static RING_SPILLS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Drain this thread's count of out-of-horizon spill insertions
+/// (accumulated across every [`WindowRing`] the thread touched).
+pub fn take_ring_spills() -> u64 {
+    RING_SPILLS.with(|c| c.replace(0))
+}
+
+fn note_spill() {
+    RING_SPILLS.with(|c| c.set(c.get() + 1));
+}
+
+/// Ring-over-horizon window store. See the module docs.
+#[derive(Debug, Clone)]
+pub struct WindowRing<T> {
+    /// WindowId of `slots[0]`. Meaningless while `slots` is empty.
+    base: WindowId,
+    /// Dense coverage `[base, base + slots.len())`; `None` = absent.
+    slots: VecDeque<Option<T>>,
+    /// Occupied dense slots.
+    live: usize,
+    /// Out-of-horizon entries; never overlaps the dense range.
+    spill: BTreeMap<WindowId, T>,
+}
+
+impl<T> Default for WindowRing<T> {
+    fn default() -> Self {
+        Self {
+            base: 0,
+            slots: VecDeque::new(),
+            live: 0,
+            spill: BTreeMap::new(),
+        }
+    }
+}
+
+impl<T> WindowRing<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of occupied windows.
+    pub fn len(&self) -> usize {
+        self.live + self.spill.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Entries currently held by the spill map (observability/tests).
+    pub fn spilled(&self) -> usize {
+        self.spill.len()
+    }
+
+    fn dense_idx(&self, w: WindowId) -> Option<usize> {
+        if !self.slots.is_empty() && w >= self.base {
+            let idx = (w - self.base) as usize;
+            if idx < self.slots.len() {
+                return Some(idx);
+            }
+        }
+        None
+    }
+
+    pub fn get(&self, w: &WindowId) -> Option<&T> {
+        match self.dense_idx(*w) {
+            Some(i) => self.slots[i].as_ref(),
+            None => self.spill.get(w),
+        }
+    }
+
+    pub fn get_mut(&mut self, w: &WindowId) -> Option<&mut T> {
+        match self.dense_idx(*w) {
+            Some(i) => self.slots[i].as_mut(),
+            None => self.spill.get_mut(w),
+        }
+    }
+
+    pub fn contains_key(&self, w: &WindowId) -> bool {
+        self.get(w).is_some()
+    }
+
+    /// First (lowest) occupied WindowId.
+    pub fn first_key(&self) -> Option<WindowId> {
+        self.iter().next().map(|(w, _)| w)
+    }
+
+    /// Get-or-insert in the slot for `w`, placing new out-of-horizon
+    /// entries in the spill map (counted). The hot path — a window
+    /// inside the dense range — is an index probe, no allocation.
+    pub fn entry_or_insert_with(&mut self, w: WindowId, f: impl FnOnce() -> T) -> &mut T {
+        // existing spill entry wins: the dense range must not shadow it
+        if self.spill.contains_key(&w) {
+            return self.spill.get_mut(&w).unwrap();
+        }
+        if self.slots.is_empty() {
+            // anchor the ring on the first touched window
+            self.base = w;
+            self.slots.push_back(Some(f()));
+            self.live += 1;
+            return self.slots[0].as_mut().unwrap();
+        }
+        if w >= self.base {
+            let idx = (w - self.base) as usize;
+            if idx < self.slots.len() {
+                let slot = &mut self.slots[idx];
+                if slot.is_none() {
+                    *slot = Some(f());
+                    self.live += 1;
+                }
+                return slot.as_mut().unwrap();
+            }
+            // extend the dense range upward when it stays within span
+            if idx < MAX_DENSE_SPAN {
+                let old_end = self.base + self.slots.len() as u64;
+                while self.slots.len() <= idx {
+                    self.slots.push_back(None);
+                }
+                self.migrate_spill_range(old_end, self.base + self.slots.len() as u64);
+                let slot = &mut self.slots[idx];
+                if slot.is_none() {
+                    *slot = Some(f());
+                    self.live += 1;
+                }
+                return slot.as_mut().unwrap();
+            }
+        } else {
+            // below base: extend downward when the total span allows
+            let grow = (self.base - w) as usize;
+            if grow + self.slots.len() <= MAX_DENSE_SPAN {
+                let old_base = self.base;
+                for _ in 0..grow {
+                    self.slots.push_front(None);
+                }
+                self.base = w;
+                self.migrate_spill_range(w, old_base);
+                let slot = &mut self.slots[0];
+                if slot.is_none() {
+                    *slot = Some(f());
+                    self.live += 1;
+                }
+                return slot.as_mut().unwrap();
+            }
+        }
+        // out of horizon in either direction: spill
+        note_spill();
+        self.spill.entry(w).or_insert_with(f)
+    }
+
+    /// Move spill entries inside `[lo, hi)` into their (newly covering)
+    /// dense slots, preserving the no-overlap invariant.
+    fn migrate_spill_range(&mut self, lo: WindowId, hi: WindowId) {
+        if self.spill.is_empty() {
+            return;
+        }
+        let keys: Vec<WindowId> = self.spill.range(lo..hi).map(|(k, _)| *k).collect();
+        for k in keys {
+            let v = self.spill.remove(&k).unwrap();
+            let idx = (k - self.base) as usize;
+            debug_assert!(self.slots[idx].is_none());
+            self.slots[idx] = Some(v);
+            self.live += 1;
+        }
+    }
+
+    pub fn remove(&mut self, w: &WindowId) -> Option<T> {
+        match self.dense_idx(*w) {
+            Some(i) => {
+                let v = self.slots[i].take();
+                if v.is_some() {
+                    self.live -= 1;
+                }
+                // keep the deque from pinning dead low slots forever
+                self.trim_front();
+                v
+            }
+            None => self.spill.remove(w),
+        }
+    }
+
+    /// Drop leading empty slots, advancing `base` (cheap, keeps the
+    /// dense span anchored near the live horizon).
+    fn trim_front(&mut self) {
+        while matches!(self.slots.front(), Some(None)) {
+            self.slots.pop_front();
+            self.base += 1;
+        }
+        if self.slots.is_empty() {
+            // fully drained: next insert re-anchors
+            self.base = 0;
+        }
+    }
+
+    /// Remove all windows strictly below `w` (compaction). The ring
+    /// base advances with the floor, which is what keeps the dense
+    /// span bounded by the live horizon between compactions.
+    pub fn compact_below(&mut self, w: WindowId) {
+        while !self.slots.is_empty() && self.base < w {
+            if self.slots.pop_front().unwrap().is_some() {
+                self.live -= 1;
+            }
+            self.base += 1;
+        }
+        self.trim_front();
+        // split_off keeps >= w
+        self.spill = self.spill.split_off(&w);
+    }
+
+    /// Iterate `(WindowId, &T)` in ascending WindowId order across the
+    /// spill-below / dense / spill-above segments.
+    pub fn iter(&self) -> impl Iterator<Item = (WindowId, &T)> {
+        let base = self.base;
+        let end = base + self.slots.len() as u64;
+        let below = self.spill.range(..base).map(|(k, v)| (*k, v));
+        let dense = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(move |(i, s)| s.as_ref().map(|v| (base + i as u64, v)));
+        let above = self.spill.range(end..).map(|(k, v)| (*k, v));
+        below.chain(dense).chain(above)
+    }
+
+    /// Occupied WindowIds in ascending order.
+    pub fn keys(&self) -> impl Iterator<Item = WindowId> + '_ {
+        self.iter().map(|(w, _)| w)
+    }
+
+    /// Insert, returning the previous value (BTreeMap semantics).
+    pub fn insert(&mut self, w: WindowId, v: T) -> Option<T> {
+        let mut fresh = Some(v);
+        let slot = self.entry_or_insert_with(w, || fresh.take().unwrap());
+        fresh.take().map(|v| std::mem::replace(slot, v))
+    }
+}
+
+impl<T: PartialEq> PartialEq for WindowRing<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.len() == other.len()
+            && self
+                .iter()
+                .zip(other.iter())
+                .all(|((wa, va), (wb, vb))| wa == wb && va == vb)
+    }
+}
+
+impl<T> FromIterator<(WindowId, T)> for WindowRing<T> {
+    fn from_iter<I: IntoIterator<Item = (WindowId, T)>>(it: I) -> Self {
+        let mut r = Self::new();
+        for (w, v) in it {
+            r.insert(w, v);
+        }
+        r
+    }
+}
+
+impl<T: Encode> Encode for WindowRing<T> {
+    fn encode(&self, w: &mut Writer) {
+        // byte-identical to BTreeMap<WindowId, T>: count + sorted pairs
+        w.put_u32(self.len() as u32);
+        for (wid, v) in self.iter() {
+            w.put_u64(wid);
+            v.encode(w);
+        }
+    }
+}
+
+impl<T: Decode> Decode for WindowRing<T> {
+    fn decode(r: &mut Reader) -> DecodeResult<Self> {
+        let n = r.get_u32()? as usize;
+        let mut ring = Self::new();
+        for _ in 0..n {
+            let w = r.get_u64()?;
+            let v = T::decode(r)?;
+            ring.insert(w, v);
+        }
+        Ok(ring)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys<T>(r: &WindowRing<T>) -> Vec<WindowId> {
+        r.keys().collect()
+    }
+
+    #[test]
+    fn dense_insert_get_remove() {
+        let mut r = WindowRing::new();
+        *r.entry_or_insert_with(5, || 0u64) += 10;
+        *r.entry_or_insert_with(7, || 0) += 20;
+        *r.entry_or_insert_with(5, || 0) += 1;
+        assert_eq!(r.get(&5), Some(&11));
+        assert_eq!(r.get(&6), None);
+        assert_eq!(r.get(&7), Some(&20));
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.spilled(), 0);
+        assert_eq!(r.remove(&5), Some(11));
+        assert_eq!(r.len(), 1);
+        assert_eq!(keys(&r), vec![7]);
+    }
+
+    #[test]
+    fn iterates_in_window_order_across_segments() {
+        let _ = take_ring_spills();
+        let mut r = WindowRing::new();
+        r.entry_or_insert_with(1000, || 'a');
+        // far below: spills (span would exceed MAX_DENSE_SPAN)
+        r.entry_or_insert_with(3, || 'b');
+        // far above: spills
+        r.entry_or_insert_with(1000 + MAX_DENSE_SPAN as u64 + 5, || 'c');
+        r.entry_or_insert_with(1001, || 'd');
+        assert_eq!(keys(&r), vec![3, 1000, 1001, 1000 + MAX_DENSE_SPAN as u64 + 5]);
+        assert_eq!(r.spilled(), 2);
+        assert_eq!(take_ring_spills(), 2);
+    }
+
+    #[test]
+    fn compact_below_drops_all_segments_and_advances_base() {
+        let mut r = WindowRing::new();
+        for w in [100u64, 101, 103, 5, 2000] {
+            r.entry_or_insert_with(w, || w);
+        }
+        r.compact_below(102);
+        assert_eq!(keys(&r), vec![103, 2000]);
+        // post-compaction inserts above the floor stay dense
+        r.entry_or_insert_with(104, || 104);
+        assert_eq!(r.get(&104), Some(&104));
+        assert_eq!(keys(&r), vec![103, 104, 2000]);
+    }
+
+    #[test]
+    fn late_insert_at_exact_floor_minus_one_spills_or_extends_safely() {
+        // Regression shape for the wid − base underflow class: after
+        // compaction to floor f, an insert at exactly f − 1 must land
+        // correctly (never index-underflow into the dense ring).
+        let mut r = WindowRing::new();
+        for w in 10u64..20 {
+            r.entry_or_insert_with(w, || w);
+        }
+        r.compact_below(15);
+        let _ = take_ring_spills();
+        *r.entry_or_insert_with(14, || 140) = 140;
+        assert_eq!(r.get(&14), Some(&140));
+        assert_eq!(keys(&r), vec![14, 15, 16, 17, 18, 19]);
+        // iteration order and logical equality survive a re-encode
+        let enc = {
+            let mut w = Writer::new();
+            r.encode(&mut w);
+            w.into_bytes()
+        };
+        let back = WindowRing::<u64>::from_bytes(&enc).unwrap();
+        assert_eq!(back, r);
+        // and when the gap really is out of horizon, it spills instead
+        let mut far = WindowRing::new();
+        far.entry_or_insert_with(MAX_DENSE_SPAN as u64 + 50, || 1u64);
+        far.compact_below(MAX_DENSE_SPAN as u64 + 50);
+        let _ = take_ring_spills();
+        far.entry_or_insert_with(10, || 2);
+        assert_eq!(far.spilled(), 1);
+        assert_eq!(take_ring_spills(), 1);
+        assert_eq!(keys(&far), vec![10, MAX_DENSE_SPAN as u64 + 50]);
+    }
+
+    #[test]
+    fn encode_is_byte_identical_to_btreemap() {
+        let mut m: BTreeMap<WindowId, u64> = BTreeMap::new();
+        let mut r: WindowRing<u64> = WindowRing::new();
+        for (w, v) in [(7u64, 70u64), (3, 30), (4000, 9), (5, 50)] {
+            m.insert(w, v);
+            r.entry_or_insert_with(w, || v);
+        }
+        let mut wm = Writer::new();
+        m.encode(&mut wm);
+        let mut wr = Writer::new();
+        r.encode(&mut wr);
+        assert_eq!(wm.as_slice(), wr.as_slice());
+        // decode round-trips logically
+        let back = WindowRing::<u64>::from_bytes(wr.as_slice()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn dense_extension_migrates_spilled_keys() {
+        let mut r = WindowRing::new();
+        r.entry_or_insert_with(100, || 1u64);
+        // beyond span: spills
+        let far = 100 + MAX_DENSE_SPAN as u64 + 10;
+        r.entry_or_insert_with(far, || 2);
+        assert_eq!(r.spilled(), 1);
+        // compaction moves the base past the gap; the next insert near
+        // `far` extends the dense range over it — the spilled entry must
+        // migrate, not be shadowed by an empty dense slot
+        r.compact_below(far - 5);
+        r.entry_or_insert_with(far + 1, || 3);
+        assert_eq!(r.spilled(), 0);
+        assert_eq!(r.get(&far), Some(&2));
+        assert_eq!(keys(&r), vec![far, far + 1]);
+    }
+
+    #[test]
+    fn downward_extension_covers_nearby_late_windows() {
+        let mut r = WindowRing::new();
+        r.entry_or_insert_with(50, || 'x');
+        let _ = take_ring_spills();
+        r.entry_or_insert_with(47, || 'y'); // fits: extends down
+        assert_eq!(take_ring_spills(), 0);
+        assert_eq!(keys(&r), vec![47, 50]);
+        assert_eq!(r.get(&47), Some(&'y'));
+    }
+
+    #[test]
+    fn logical_eq_ignores_physical_layout() {
+        // same logical content, different insertion orders → different
+        // dense/spill splits, but equal
+        let mut a = WindowRing::new();
+        a.entry_or_insert_with(10, || 1u64);
+        a.entry_or_insert_with(11, || 2);
+        let mut b = WindowRing::new();
+        b.entry_or_insert_with(11, || 2u64);
+        b.entry_or_insert_with(10, || 1);
+        assert_eq!(a, b);
+        b.entry_or_insert_with(12, || 3);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn remove_then_reinsert_keeps_ring_consistent() {
+        let mut r = WindowRing::new();
+        for w in 0u64..8 {
+            r.entry_or_insert_with(w, || w);
+        }
+        for w in 0u64..8 {
+            assert_eq!(r.remove(&w), Some(w));
+        }
+        assert!(r.is_empty());
+        // fully drained ring re-anchors wherever the next insert lands
+        r.entry_or_insert_with(1_000_000, || 42);
+        assert_eq!(r.get(&1_000_000), Some(&42));
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.spilled(), 0);
+    }
+
+    #[test]
+    fn from_iterator_builds_sorted_or_not() {
+        let r: WindowRing<u64> = [(9u64, 90u64), (2, 20), (5, 50)].into_iter().collect();
+        assert_eq!(keys(&r), vec![2, 5, 9]);
+        assert_eq!(r.get(&5), Some(&50));
+    }
+}

@@ -5,19 +5,20 @@
 //! to the owning partition; the runtime checkpoints and recovers them
 //! with the partition state, so they share the exactly-once guarantee.
 
-use std::collections::BTreeMap;
-
+use super::ring::WindowRing;
 use super::window::{WindowAssigner, WindowId};
 use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
 use crate::util::SimTime;
 
 /// A windowed, partition-local value folded with a user `fold` function
 /// applied via [`WLocal::update`]. Completion tracks the partition's own
-/// watermark only (no global coordination — it is local state).
+/// watermark only (no global coordination — it is local state). The
+/// window store is the same O(1) [`WindowRing`] as [`WindowedCrdt`]'s
+/// (byte-identical `Encode` layout to the old `BTreeMap`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct WLocal<T: Clone> {
     assigner: WindowAssigner,
-    windows: BTreeMap<WindowId, T>,
+    windows: WindowRing<T>,
     watermark: SimTime,
     zero: T,
 }
@@ -26,7 +27,7 @@ impl<T: Clone> WLocal<T> {
     pub fn new(assigner: WindowAssigner, zero: T) -> Self {
         Self {
             assigner,
-            windows: BTreeMap::new(),
+            windows: WindowRing::new(),
             watermark: 0,
             zero,
         }
@@ -35,10 +36,8 @@ impl<T: Clone> WLocal<T> {
     /// Fold an event at `ts` into its window.
     pub fn update(&mut self, ts: SimTime, f: impl FnOnce(&mut T)) {
         let wid = self.assigner.window_of(ts);
-        f(self
-            .windows
-            .entry(wid)
-            .or_insert_with(|| self.zero.clone()));
+        let zero = &self.zero;
+        f(self.windows.entry_or_insert_with(wid, || zero.clone()));
     }
 
     pub fn increment_watermark(&mut self, ts: SimTime) {
@@ -63,7 +62,7 @@ impl<T: Clone> WLocal<T> {
     }
 
     pub fn compact_below(&mut self, wid: WindowId) {
-        self.windows.retain(|&w, _| w >= wid);
+        self.windows.compact_below(wid);
     }
 
     pub fn live_windows(&self) -> usize {
@@ -84,7 +83,7 @@ impl<T: Clone + Decode> Decode for WLocal<T> {
     fn decode(r: &mut Reader) -> DecodeResult<Self> {
         Ok(Self {
             assigner: WindowAssigner::decode(r)?,
-            windows: BTreeMap::decode(r)?,
+            windows: WindowRing::decode(r)?,
             watermark: r.get_u64()?,
             zero: T::decode(r)?,
         })

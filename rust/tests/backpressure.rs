@@ -52,7 +52,7 @@ fn dedup_payloads(output: &Topic, partitions: u32) -> Vec<Vec<Vec<u8>>> {
                     continue;
                 }
                 seen = seq + 1;
-                outs.push(inner);
+                outs.push(inner.to_vec());
             }
             outs
         })

@@ -223,7 +223,7 @@ fn physical_duplicates_are_byte_identical() {
                 let (seq, _ts, inner) = decode_output(&rec.payload).unwrap();
                 match first.get(&seq) {
                     None => {
-                        first.insert(seq, inner);
+                        first.insert(seq, inner.to_vec());
                     }
                     Some(orig) => {
                         assert_eq!(orig, &inner, "partition {p} seq {seq} duplicate differs");

@@ -55,6 +55,15 @@ def scenario(**overrides):
         "output_arena_bytes": 0,
         "output_frames": 0,
         "window_ring_spills": 0,
+        "stage_latency_ingest_p50_ms": 40,
+        "stage_latency_ingest_p99_ms": 120,
+        "stage_latency_fire_p50_ms": 80,
+        "stage_latency_fire_p99_ms": 400,
+        "stage_latency_converge_p50_ms": 300,
+        "stage_latency_converge_p99_ms": 900,
+        "stage_latency_emit_p50_ms": 310,
+        "stage_latency_emit_p99_ms": 950,
+        "trace_dropped_events": 0,
         "stalled": False,
     }
     base.update(overrides)
@@ -291,6 +300,54 @@ def test_overloaded_scenario_passes():
             )
         ]
     )
+    assert validate(d) == []
+
+
+def test_stage_latency_fields_are_required():
+    # PR9 flight-recorder stage-latency fields are part of the schema: a
+    # report missing any of them (an old binary) must fail validation
+    for stage in ("ingest", "fire", "converge", "emit"):
+        for pct in ("p50", "p99"):
+            field = f"stage_latency_{stage}_{pct}_ms"
+            d = doc()
+            del d["scenarios"][0][field]
+            assert any(field in e for e in validate(d)), field
+    d = doc()
+    del d["scenarios"][0]["trace_dropped_events"]
+    assert any("trace_dropped_events" in e for e in validate(d))
+
+
+def test_stage_latency_fields_are_typed_counters():
+    d = doc()
+    d["scenarios"][0]["stage_latency_fire_p99_ms"] = -1
+    assert any("stage_latency_fire_p99_ms" in e for e in validate(d))
+    d = doc()
+    d["scenarios"][0]["stage_latency_emit_p50_ms"] = 1.5
+    assert any("stage_latency_emit_p50_ms" in e for e in validate(d))
+    d = doc()
+    d["scenarios"][0]["trace_dropped_events"] = True
+    assert any("trace_dropped_events" in e for e in validate(d))
+
+
+def test_stage_p50_above_p99_fails():
+    # percentiles off one histogram are monotone; an inversion means the
+    # emitter wired the fields to the wrong histograms
+    for stage in ("ingest", "fire", "converge", "emit"):
+        d = doc()
+        d["scenarios"][0][f"stage_latency_{stage}_p50_ms"] = 500
+        d["scenarios"][0][f"stage_latency_{stage}_p99_ms"] = 100
+        assert any("exceeds" in e for e in validate(d)), stage
+    # the end-to-end latency pair is gated by the same rule
+    d = doc()
+    d["scenarios"][0]["latency_p50_ms"] = 901
+    assert any("exceeds" in e for e in validate(d))
+
+
+def test_stage_p50_equal_to_p99_passes():
+    d = doc()
+    for stage in ("ingest", "fire", "converge", "emit"):
+        d["scenarios"][0][f"stage_latency_{stage}_p50_ms"] = 77
+        d["scenarios"][0][f"stage_latency_{stage}_p99_ms"] = 77
     assert validate(d) == []
 
 

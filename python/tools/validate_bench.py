@@ -2,8 +2,8 @@
 """Validate a BENCH_*.json perf-trajectory report (schema holon-bench/v1).
 
 Usage:
-    python python/tools/validate_bench.py BENCH_PR8.json
-    python python/tools/validate_bench.py BENCH_PR8.json --baseline BENCH_BASELINE.json
+    python python/tools/validate_bench.py BENCH_PR9.json
+    python python/tools/validate_bench.py BENCH_PR9.json --baseline BENCH_BASELINE.json
 
 Exit code 0 when the document is schema-valid (and, with --baseline, no
 scenario regressed), 1 otherwise (errors on stderr). Stdlib-only so the
@@ -64,8 +64,27 @@ SCENARIO_FIELDS = {
     "output_arena_bytes": (int,),
     "output_frames": (int,),
     "window_ring_spills": (int,),
+    "stage_latency_ingest_p50_ms": (int,),
+    "stage_latency_ingest_p99_ms": (int,),
+    "stage_latency_fire_p50_ms": (int,),
+    "stage_latency_fire_p99_ms": (int,),
+    "stage_latency_converge_p50_ms": (int,),
+    "stage_latency_converge_p99_ms": (int,),
+    "stage_latency_emit_p50_ms": (int,),
+    "stage_latency_emit_p99_ms": (int,),
+    "trace_dropped_events": (int,),
     "stalled": (bool,),
 }
+
+# each stage's p50 may not exceed its p99 (histogram percentiles are
+# monotone; a violation means the emitter wired the fields wrong)
+STAGE_PAIRS = [
+    ("stage_latency_ingest_p50_ms", "stage_latency_ingest_p99_ms"),
+    ("stage_latency_fire_p50_ms", "stage_latency_fire_p99_ms"),
+    ("stage_latency_converge_p50_ms", "stage_latency_converge_p99_ms"),
+    ("stage_latency_emit_p50_ms", "stage_latency_emit_p99_ms"),
+    ("latency_p50_ms", "latency_p99_ms"),
+]
 
 SYSTEMS = {"holon", "flink", "flink_spare"}
 
@@ -140,6 +159,17 @@ def validate(doc: object) -> list[str]:
                     f"{where}.shard_count ({sc['shard_count']}) != "
                     f"len(shard_gossip_bytes) ({len(sc['shard_gossip_bytes'])})"
                 )
+        # percentile ordering within each stage histogram
+        for lo, hi in STAGE_PAIRS:
+            a, b = sc.get(lo), sc.get(hi)
+            if (
+                isinstance(a, int)
+                and isinstance(b, int)
+                and not isinstance(a, bool)
+                and not isinstance(b, bool)
+                and a > b
+            ):
+                errors.append(f"{where}.{lo} ({a}) exceeds {hi} ({b})")
     return errors
 
 

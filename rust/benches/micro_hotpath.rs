@@ -313,6 +313,29 @@ fn main() {
         assert_eq!(read, 4096);
         assert_eq!(clones, 0, "arena-batch drain must clone zero payloads");
         println!("drained {read} arena-framed records: {clones} payload clones");
+        // The engine's emit loop now carries flight-recorder call sites
+        // inline (holon::trace overhead contract): with tracing disabled
+        // the same 4096-frame loop must STILL allocate zero times — a
+        // disabled record call is one predicted branch, nothing else.
+        let trace = holon::trace::TraceHandle::disabled(0);
+        arena.begin_batch();
+        let before = allocs();
+        for i in 0..4096u64 {
+            arena.frame(i, |w| {
+                w.put_u64(i);
+                w.put_f64(i as f64);
+                true
+            });
+            trace.record(i, holon::trace::TraceKind::WindowEmitted, i, 1, 16);
+        }
+        let during = allocs() - before;
+        assert_eq!(
+            during, 0,
+            "disabled tracing allocated {during} times in the emit loop (contract: 0)"
+        );
+        println!("4096-frame emit loop with disabled trace call sites: {during} allocs");
+        let b = arena.finish(0).unwrap();
+        arena.recycle(b);
         bench("arena_emit_4096_frames", 20, 2_000, || {
             arena.begin_batch();
             emit_batch(&mut arena);
@@ -350,6 +373,39 @@ fn main() {
                 *bt.entry(i % 16).or_insert(0) += 1;
             }
             std::hint::black_box(&bt);
+        });
+    }
+
+    section("micro: flight recorder + stage-latency histogram");
+    {
+        use holon::metrics::LatencyHistogram;
+        use holon::trace::{TraceHandle, TraceKind, Tracer, DEFAULT_RING_CAP};
+        // atomic-bucket record: the per-output hot path of the sink and
+        // the per-batch path of the nodes
+        let h = LatencyHistogram::new();
+        bench("latency_histogram_record", 1000, 200_000, || {
+            h.record(std::hint::black_box(37));
+        });
+        // disabled trace record: one predicted branch, zero allocations
+        let disabled = TraceHandle::disabled(0);
+        let before = allocs();
+        for i in 0..100_000u64 {
+            disabled.record(i, TraceKind::GossipRound, i, 0, 0);
+        }
+        assert_eq!(
+            allocs() - before,
+            0,
+            "disabled trace records must not allocate"
+        );
+        bench("trace_record_disabled", 1000, 200_000, || {
+            disabled.record(1, TraceKind::GossipRound, 1, 0, 0);
+        });
+        // enabled record into a warmed ring: a mutex lock + array write
+        // (the ring never grows past its pre-allocated capacity)
+        let tracer = Tracer::new(DEFAULT_RING_CAP);
+        let live = tracer.handle(0);
+        bench("trace_record_enabled_ring", 200, 100_000, || {
+            live.record(1, TraceKind::GossipRound, 1, 0, 0);
         });
     }
 

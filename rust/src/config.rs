@@ -144,6 +144,18 @@ pub struct HolonConfig {
     /// Where `holon bench` writes its machine-readable report (the
     /// perf-trajectory data point; schema in EXPERIMENTS.md).
     pub bench_out: String,
+
+    // -- observability ---------------------------------------------------
+    /// Enable the flight recorder (per-node bounded event rings; see
+    /// `crate::trace`). Off by default: the instrumentation compiles in
+    /// permanently but records nothing — disabled handles cost one
+    /// predicted branch per call site and zero allocations.
+    pub trace: bool,
+    /// Where to write the Chrome `trace_event` JSON dump at the end of
+    /// a traced run (empty = don't write). The CLI front end turns
+    /// `--trace-out=path` into `trace = true` as well; as a plain
+    /// config key the two are independent.
+    pub trace_out: String,
 }
 
 impl Default for HolonConfig {
@@ -185,7 +197,9 @@ impl Default for HolonConfig {
             flink_spare_slots: false,
             use_xla: false,
             artifacts_dir: "artifacts".to_string(),
-            bench_out: "BENCH_PR8.json".to_string(),
+            bench_out: "BENCH_PR9.json".to_string(),
+            trace: false,
+            trace_out: String::new(),
         }
     }
 }
@@ -258,6 +272,8 @@ impl HolonConfig {
             "use_xla" => self.use_xla = parse!(),
             "artifacts_dir" => self.artifacts_dir = value.to_string(),
             "bench_out" => self.bench_out = value.to_string(),
+            "trace" => self.trace = parse!(),
+            "trace_out" => self.trace_out = value.to_string(),
             _ => return Err(ConfigError::UnknownKey(key.to_string())),
         }
         Ok(())
@@ -407,6 +423,8 @@ impl HolonConfig {
         m.insert("use_xla", self.use_xla.to_string());
         m.insert("artifacts_dir", self.artifacts_dir.clone());
         m.insert("bench_out", self.bench_out.clone());
+        m.insert("trace", self.trace.to_string());
+        m.insert("trace_out", self.trace_out.clone());
         m.iter()
             .map(|(k, v)| format!("{k} = {v}"))
             .collect::<Vec<_>>()
@@ -556,6 +574,19 @@ mod tests {
             .unwrap();
         assert_eq!(c.inbox_capacity, 64);
         assert_eq!(c.changefeed_retention, 512);
+        let mut c2 = HolonConfig::default();
+        c2.apply_text(&c.dump()).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn trace_knobs_parse_and_roundtrip() {
+        let mut c = HolonConfig::default();
+        assert!(!c.trace, "flight recorder is opt-in");
+        assert!(c.trace_out.is_empty());
+        c.apply_text("trace = true\ntrace_out = out/trace.json\n").unwrap();
+        assert!(c.trace);
+        assert_eq!(c.trace_out, "out/trace.json");
         let mut c2 = HolonConfig::default();
         c2.apply_text(&c.dump()).unwrap();
         assert_eq!(c, c2);

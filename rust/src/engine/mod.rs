@@ -126,44 +126,102 @@ pub struct ClusterMetrics {
     /// and landed in the spill map. ~0 in a healthy run; a sustained
     /// rate means lateness/compaction tuning is off.
     pub window_ring_spills: Arc<AtomicU64>,
+    /// Flight-recorder ring overwrites: events lost because a node's
+    /// trace ring wrapped (newest events win). Zero when tracing is
+    /// disabled or the rings never fill.
+    pub trace_dropped_events: Arc<AtomicU64>,
+    /// Stage latency: source insert → node pickup (sampled once per
+    /// RUN_BATCH batch at its first record).
+    pub stage_ingest: LatencyHistogram,
+    /// Stage latency: window end → the cluster watermark floor passing
+    /// it at a node (the window *fires*).
+    pub stage_fire: LatencyHistogram,
+    /// Stage latency: window end (`ref_ts`) → the converged output
+    /// being accepted by the sink — the paper's end-to-end latency.
+    pub stage_converge: LatencyHistogram,
+    /// Stage latency: output insert into the log → the sink draining
+    /// it (the tail the sink's poll cadence adds on top of converge).
+    pub stage_emit: LatencyHistogram,
+    /// Registry of every named `u64` counter above, keyed by its bench
+    /// JSON field name (fields without a JSON column keep their struct
+    /// name). One place to enumerate counters — `DataPlaneStats`, the
+    /// JSON writer and the flight-recorder dump all read through it.
+    counters: Arc<Vec<(&'static str, Arc<AtomicU64>)>>,
+}
+
+/// Builds [`ClusterMetrics`] counters while registering each one under
+/// its bench JSON field name (one source of truth for enumeration).
+struct CounterReg(Vec<(&'static str, Arc<AtomicU64>)>);
+
+impl CounterReg {
+    fn mk(&mut self, name: &'static str) -> Arc<AtomicU64> {
+        let c = Arc::new(AtomicU64::new(0));
+        self.0.push((name, c.clone()));
+        c
+    }
 }
 
 impl ClusterMetrics {
     pub fn new(bucket_ms: u64) -> Self {
+        let mut reg = CounterReg(Vec::with_capacity(32));
         Self {
             processed: TimeSeries::new(bucket_ms),
             latency: LatencyHistogram::new(),
             latency_series: TimeSeries::new(bucket_ms),
-            outputs: Arc::new(AtomicU64::new(0)),
-            duplicates: Arc::new(AtomicU64::new(0)),
-            gaps: Arc::new(AtomicU64::new(0)),
-            steals: Arc::new(AtomicU64::new(0)),
-            recoveries: Arc::new(AtomicU64::new(0)),
-            gossip_sent: Arc::new(AtomicU64::new(0)),
-            gossip_payload_bytes: Arc::new(AtomicU64::new(0)),
+            outputs: reg.mk("outputs"),
+            duplicates: reg.mk("dedup_duplicates"),
+            gaps: reg.mk("seq_gaps"),
+            steals: reg.mk("steals"),
+            recoveries: reg.mk("recoveries"),
+            gossip_sent: reg.mk("gossip_msgs"),
+            gossip_payload_bytes: reg.mk("gossip_bytes_encoded"),
             shard_gossip_bytes: Arc::new(Mutex::new(Vec::new())),
-            shard_parallel_merges: Arc::new(AtomicU64::new(0)),
-            shard_serial_merges: Arc::new(AtomicU64::new(0)),
-            merge_changed: Arc::new(AtomicU64::new(0)),
-            merge_noop: Arc::new(AtomicU64::new(0)),
-            redundant_gossip_bytes: Arc::new(AtomicU64::new(0)),
-            gossip_skipped: Arc::new(AtomicU64::new(0)),
-            queries_served: Arc::new(AtomicU64::new(0)),
-            query_index_hits: Arc::new(AtomicU64::new(0)),
-            query_index_misses: Arc::new(AtomicU64::new(0)),
-            query_scan_rows_avoided: Arc::new(AtomicU64::new(0)),
-            changefeed_lag: Arc::new(AtomicU64::new(0)),
-            dropped_partition: Arc::new(AtomicU64::new(0)),
-            dropped_loss: Arc::new(AtomicU64::new(0)),
-            dropped_no_inbox: Arc::new(AtomicU64::new(0)),
-            dropped_backpressure: Arc::new(AtomicU64::new(0)),
-            credits_stalled_rounds: Arc::new(AtomicU64::new(0)),
-            outbound_queue_depth_max: Arc::new(AtomicU64::new(0)),
-            inbox_depth_max: Arc::new(AtomicU64::new(0)),
-            output_arena_bytes: Arc::new(AtomicU64::new(0)),
-            output_frames: Arc::new(AtomicU64::new(0)),
-            window_ring_spills: Arc::new(AtomicU64::new(0)),
+            shard_parallel_merges: reg.mk("shard_parallel_merges"),
+            shard_serial_merges: reg.mk("shard_serial_merges"),
+            merge_changed: reg.mk("merge_changed"),
+            merge_noop: reg.mk("merge_noop"),
+            redundant_gossip_bytes: reg.mk("redundant_gossip_bytes"),
+            gossip_skipped: reg.mk("gossip_skipped"),
+            queries_served: reg.mk("queries_served"),
+            query_index_hits: reg.mk("query_index_hits"),
+            query_index_misses: reg.mk("query_index_misses"),
+            query_scan_rows_avoided: reg.mk("query_scan_rows_avoided"),
+            changefeed_lag: reg.mk("changefeed_lag"),
+            dropped_partition: reg.mk("dropped_partition"),
+            dropped_loss: reg.mk("dropped_loss"),
+            dropped_no_inbox: reg.mk("dropped_no_inbox"),
+            dropped_backpressure: reg.mk("dropped_backpressure"),
+            credits_stalled_rounds: reg.mk("credits_stalled_rounds"),
+            outbound_queue_depth_max: reg.mk("outbound_queue_depth_max"),
+            inbox_depth_max: reg.mk("inbox_depth_max"),
+            output_arena_bytes: reg.mk("output_arena_bytes"),
+            output_frames: reg.mk("output_frames"),
+            window_ring_spills: reg.mk("window_ring_spills"),
+            trace_dropped_events: reg.mk("trace_dropped_events"),
+            stage_ingest: LatencyHistogram::new(),
+            stage_fire: LatencyHistogram::new(),
+            stage_converge: LatencyHistogram::new(),
+            stage_emit: LatencyHistogram::new(),
+            counters: Arc::new(reg.0),
         }
+    }
+
+    /// Look up a counter by its registered (bench JSON) name. The
+    /// returned `Arc` aliases the corresponding named field.
+    pub fn counter(&self, name: &str) -> Option<&Arc<AtomicU64>> {
+        self.counters
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, c)| c)
+    }
+
+    /// `(name, current value)` snapshot of every registered counter, in
+    /// registration order — what the flight-recorder dump embeds.
+    pub fn counter_snapshot(&self) -> Vec<(&'static str, u64)> {
+        self.counters
+            .iter()
+            .map(|(n, c)| (*n, c.load(Ordering::Acquire)))
+            .collect()
     }
 
     /// Fold a drained [`crate::query::QueryStats`] into the read-path
@@ -226,6 +284,10 @@ pub struct HolonCluster<P: Processor> {
     pub bus: Bus,
     pub store: CheckpointStore,
     pub metrics: ClusterMetrics,
+    /// Flight recorder shared by all node threads and the sink
+    /// (disabled unless `cfg.trace` — a disabled recorder's handles
+    /// are a single branch on the hot paths).
+    pub tracer: Arc<crate::trace::Tracer>,
     processor: P,
     shutdown: Arc<AtomicBool>,
     nodes: Mutex<BTreeMap<NodeId, NodeHandle>>,
@@ -272,6 +334,11 @@ impl<P: Processor> HolonCluster<P> {
             cfg.seed ^ 0xB05,
         );
         let metrics = ClusterMetrics::new(500);
+        let tracer = Arc::new(if cfg.trace {
+            crate::trace::Tracer::new(crate::trace::DEFAULT_RING_CAP)
+        } else {
+            crate::trace::Tracer::disabled()
+        });
         let cluster = Arc::new(Self {
             clock,
             broker,
@@ -280,6 +347,7 @@ impl<P: Processor> HolonCluster<P> {
             bus,
             store: CheckpointStore::new(),
             metrics,
+            tracer,
             processor,
             shutdown: Arc::new(AtomicBool::new(false)),
             nodes: Mutex::new(BTreeMap::new()),
@@ -322,6 +390,7 @@ impl<P: Processor> HolonCluster<P> {
             metrics: self.metrics.clone(),
             state_out: self.final_states.clone(),
             reads,
+            trace: self.tracer.handle(id),
         };
         let join = std::thread::Builder::new()
             .name(format!("holon-node-{id}"))
@@ -438,6 +507,36 @@ impl<P: Processor> HolonCluster<P> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// The counter registry must alias the named fields (same atomics,
+    /// not copies) under the bench JSON field names, with no duplicate
+    /// registrations — it is the single enumeration point for
+    /// `DataPlaneStats`, the JSON writer and trace-dump snapshots.
+    #[test]
+    fn counter_registry_aliases_the_named_fields() {
+        let m = ClusterMetrics::new(500);
+        m.outputs.fetch_add(3, Ordering::Relaxed);
+        assert!(Arc::ptr_eq(m.counter("outputs").unwrap(), &m.outputs));
+        assert!(Arc::ptr_eq(
+            m.counter("dedup_duplicates").unwrap(),
+            &m.duplicates
+        ));
+        assert!(Arc::ptr_eq(m.counter("seq_gaps").unwrap(), &m.gaps));
+        assert!(Arc::ptr_eq(m.counter("gossip_msgs").unwrap(), &m.gossip_sent));
+        assert!(Arc::ptr_eq(
+            m.counter("gossip_bytes_encoded").unwrap(),
+            &m.gossip_payload_bytes
+        ));
+        assert!(Arc::ptr_eq(
+            m.counter("trace_dropped_events").unwrap(),
+            &m.trace_dropped_events
+        ));
+        assert!(m.counter("no_such_counter").is_none());
+        let snap = m.counter_snapshot();
+        assert_eq!(snap.iter().find(|(n, _)| *n == "outputs").unwrap().1, 3);
+        let names: std::collections::BTreeSet<_> = snap.iter().map(|(n, _)| *n).collect();
+        assert_eq!(names.len(), snap.len(), "duplicate registry names");
+    }
 
     /// Regression (changefeed gap storms): retention was hard-coded at
     /// 256 while the comment tied it to the gossip cadence. The derived

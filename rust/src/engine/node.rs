@@ -36,6 +36,7 @@ use crate::config::HolonConfig;
 use crate::log::Topic;
 use crate::net::{Bus, MsgKind};
 use crate::storage::{CheckpointStore, PartitionCheckpoint};
+use crate::trace::{TraceHandle, TraceKind};
 use crate::util::{NodeId, PartitionId, SimTime, XorShift64};
 
 use super::membership::{target_owner, Membership};
@@ -106,6 +107,9 @@ pub struct NodeCtx<P: Processor> {
     /// encodes (full state or delta) is also published here for read-path
     /// subscribers, at zero extra encode cost (shared `Arc`).
     pub reads: crate::query::ReadHandle,
+    /// Flight-recorder endpoint (a single branch per record call when
+    /// tracing is disabled — the instrumentation stays in permanently).
+    pub trace: TraceHandle,
 }
 
 /// Execution state of one owned partition.
@@ -127,6 +131,10 @@ struct PartState<S, L> {
     /// skip the encode too instead of serializing state just to have the
     /// put refused.
     last_put: Option<(u64, u64)>,
+    /// When this partition was stolen/recovered — consumed by the first
+    /// finished output batch to close the recovery timeline in the
+    /// flight recorder (`TraceKind::FirstOutput`).
+    recovered_at: Option<SimTime>,
 }
 
 /// Encode an output record payload: (seq, ref_ts, inner). The arena
@@ -212,6 +220,7 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
         metrics,
         state_out,
         reads,
+        trace,
     } = ctx;
 
     let all_parts: Vec<PartitionId> = (0..cfg.partitions).collect();
@@ -246,6 +255,9 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
     // unknown = unbounded) and how much the last flush left parked.
     let mut peer_credits: BTreeMap<NodeId, u64> = BTreeMap::new();
     let mut parked_last_flush: u64 = 0;
+    // Stage-latency fire tracking: the watermark floor as of the last
+    // iteration — every window end it passes this iteration *fired*.
+    let mut last_floor: SimTime = 0;
 
     // Announce ourselves, then wait one heartbeat round before claiming
     // anything: peers' announcements arrive during the grace period, so
@@ -280,7 +292,7 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
             // bytes as a final full snapshot so late subscribers can
             // still bootstrap to the node's last state.
             for (&p, st) in parts.iter_mut() {
-                checkpoint_partition(&store, p, st);
+                checkpoint_partition(&store, p, st, &trace, now);
             }
             let bytes = shared.to_bytes();
             let floor = shared.watermark_floor();
@@ -308,11 +320,25 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
                         // the outcome feeds the redundancy counters.
                         if shared.join(&other).is_changed() {
                             metrics.merge_changed.fetch_add(1, Ordering::Relaxed);
+                            trace.record(
+                                now,
+                                TraceKind::DeltaMerged,
+                                msg.from as u64,
+                                msg.payload.len() as u64,
+                                0,
+                            );
                         } else {
                             metrics.merge_noop.fetch_add(1, Ordering::Relaxed);
                             metrics
                                 .redundant_gossip_bytes
                                 .fetch_add(msg.payload.len() as u64, Ordering::Relaxed);
+                            trace.record(
+                                now,
+                                TraceKind::MergeNoop,
+                                msg.from as u64,
+                                msg.payload.len() as u64,
+                                0,
+                            );
                         }
                     }
                     membership.heard_from(msg.from, now);
@@ -353,7 +379,10 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
             let target = targets[&p];
             let owned = parts.contains_key(&p);
             if target == id && !owned {
-                let st = recover_partition::<P>(&store, &processor, &all_parts, &mut shared, p, now, &metrics);
+                trace.record(now, TraceKind::StealStart, p as u64, 0, 0);
+                let st = recover_partition::<P>(
+                    &store, &processor, &all_parts, &mut shared, p, now, &metrics, &trace,
+                );
                 parts.insert(p, st);
                 bus.broadcast(id, MsgKind::Claim, encode_claim(p, now));
                 metrics.steals.fetch_add(1, Ordering::Relaxed);
@@ -365,7 +394,7 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
                     .map_or(false, |&(n, ts)| n == target && now.saturating_sub(ts) <= 2 * cfg.failure_timeout_ms);
                 if claimed {
                     let mut st = parts.remove(&p).unwrap();
-                    checkpoint_partition(&store, p, &mut st);
+                    checkpoint_partition(&store, p, &mut st, &trace, now);
                 }
             }
         }
@@ -401,6 +430,7 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
                 budget_events = tight;
             }
             metrics.credits_stalled_rounds.fetch_add(1, Ordering::Relaxed);
+            trace.record(now, TraceKind::Backpressure, parked_last_flush, tight as u64, 0);
         }
         let mut did_work = false;
         // Budgeted pass in rotated partition order: under sustained
@@ -431,6 +461,12 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
             let own = &mut st.own;
             let local = &mut st.local;
             let (consumed, nxt_idx) = input.read_slice(p, st.nxt_idx, allowed, |recs| {
+                // Stage-ingest latency: how long the batch's oldest
+                // record sat queued in the input log before pickup (one
+                // sample per batch — the oldest bounds the rest).
+                if let Some(first) = recs.first() {
+                    metrics.stage_ingest.record(now.saturating_sub(first.insert_ts));
+                }
                 let mut pctx = Ctx::new(p, now, aggregator.as_mut(), arena);
                 processor.process(&mut pctx, &shared, own, local, recs);
                 recs.len()
@@ -464,6 +500,27 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
             // shared backing — zero payload copies end to end.
             if let Some(batch) = st.arena.finish(st.nxt_odx) {
                 st.nxt_odx += batch.frames.len() as u64;
+                if trace.enabled() {
+                    let span = batch.frames.first().map_or(0, |f| f.ref_ts);
+                    trace.record(
+                        now,
+                        TraceKind::WindowEmitted,
+                        span,
+                        batch.frames.len() as u64,
+                        batch.backing.len() as u64,
+                    );
+                    // Recovery timeline close: first batch of outputs
+                    // after a steal/restore marks the partition live.
+                    if let Some(t0) = st.recovered_at.take() {
+                        trace.record(
+                            now,
+                            TraceKind::FirstOutput,
+                            p as u64,
+                            now.saturating_sub(t0),
+                            0,
+                        );
+                    }
+                }
                 output.append_frames(p, &batch);
                 st.arena.recycle(batch);
             }
@@ -479,6 +536,28 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
             }
         }
         batch_rotation = batch_rotation.wrapping_add(1);
+
+        // Stage-fire latency: every window boundary the global watermark
+        // floor passed since the last iteration just became fireable.
+        // `now - window_end` is how long the window waited between
+        // closing (event-time end) and the cluster agreeing it is
+        // complete — the coordination-lag component of end-to-end
+        // latency. Capped at 32 boundaries per iteration so a huge floor
+        // jump (recovery catch-up) cannot turn this into an O(windows)
+        // scan; the skipped boundaries fired in the same instant anyway.
+        let floor = shared.watermark_floor();
+        if floor != SimTime::MAX && cfg.window_ms > 0 && floor > last_floor {
+            trace.record(now, TraceKind::WatermarkAdvanced, floor, last_floor, 0);
+            let mut wend = (last_floor / cfg.window_ms + 1) * cfg.window_ms;
+            let mut steps = 0;
+            while wend <= floor && steps < 32 {
+                metrics.stage_fire.record(now.saturating_sub(wend));
+                trace.record(now, TraceKind::WindowFired, wend, now.saturating_sub(wend), 0);
+                wend += cfg.window_ms;
+                steps += 1;
+            }
+            last_floor = floor;
+        }
 
         // 5. Gossip the shared replica (sampled fan-out when configured;
         // delta payloads with periodic full anti-entropy when enabled).
@@ -496,6 +575,7 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
                 // (the round still counts toward the full-sync cadence,
                 // which keeps anti-entropy flowing on idle replicas).
                 metrics.gossip_skipped.fetch_add(1, Ordering::Relaxed);
+                trace.record(now, TraceKind::GossipSkipped, gossip_round, 0, 0);
             } else {
                 // Discard per-shard byte samples accumulated by
                 // checkpoint encodes on this thread, so the drain below
@@ -524,6 +604,13 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
                 metrics
                     .gossip_payload_bytes
                     .fetch_add(payload.len() as u64, Ordering::Relaxed);
+                trace.record(
+                    now,
+                    TraceKind::GossipRound,
+                    gossip_round,
+                    payload.len() as u64,
+                    plan.full as u64,
+                );
                 // Changefeed: subscribers ride the gossip encode — same
                 // Arc, no extra serialization. Full rounds double as
                 // bootstrap snapshots for late/lagging subscribers.
@@ -559,7 +646,7 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
         // 6. Periodic checkpoints (staggered per partition via last_ckpt).
         for (&p, st) in parts.iter_mut() {
             if now.saturating_sub(st.last_ckpt) >= cfg.checkpoint_interval_ms {
-                checkpoint_partition(&store, p, st);
+                checkpoint_partition(&store, p, st, &trace, now);
                 st.last_ckpt = now;
             }
         }
@@ -579,11 +666,48 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
         if spills > 0 {
             metrics.window_ring_spills.fetch_add(spills, Ordering::Relaxed);
         }
+        // And for window opens (first local contribution to a window):
+        // one summary event per iteration — span = newest opened
+        // window's end, detail = count, aux = oldest opened window's
+        // end — instead of one event per open, keeping the hot insert
+        // path at a thread-local Cell update.
+        let (opened, oldest, newest) = crate::wcrdt::take_window_opens();
+        if opened > 0 && cfg.window_ms > 0 {
+            trace.record(
+                now,
+                TraceKind::WindowOpened,
+                (newest + 1).saturating_mul(cfg.window_ms),
+                opened,
+                (oldest + 1).saturating_mul(cfg.window_ms),
+            );
+        }
+        // Fold this node's ring overwrites into the cluster counter so
+        // the bench/validator surface sees trace loss explicitly.
+        let tdrops = trace.take_dropped();
+        if tdrops > 0 {
+            metrics.trace_dropped_events.fetch_add(tdrops, Ordering::Relaxed);
+        }
 
         // Flush the whole iteration's sends (heartbeat, claims, gossip)
         // as one batch: a single RNG critical section for all of it, and
         // the parked count feeds the next iteration's budget shrink.
-        parked_last_flush = bus.flush(id).parked;
+        parked_last_flush = if trace.enabled() {
+            // Traced flush: per-peer outcome events (span = peer id,
+            // detail = delivered, aux = parked<<32 | dropped) ride the
+            // same single flush pass via the callback.
+            bus.flush_with(id, |to, pf| {
+                trace.record(
+                    now,
+                    TraceKind::PeerFlush,
+                    to as u64,
+                    pf.delivered,
+                    (pf.parked.min(u32::MAX as u64) << 32) | pf.dropped.min(u32::MAX as u64),
+                );
+            })
+            .parked
+        } else {
+            bus.flush(id).parked
+        };
         // Mirror bus-level backpressure observability into the cluster
         // counters (bus totals, so `store`/`fetch_max` are idempotent
         // across nodes).
@@ -609,6 +733,8 @@ fn checkpoint_partition<S: SharedState, L: Encode>(
     store: &CheckpointStore,
     p: PartitionId,
     st: &mut PartState<S, L>,
+    trace: &TraceHandle,
+    now: SimTime,
 ) {
     // Skip the re-encode when nothing moved since the last put: offsets
     // unchanged and no window of the contribution accumulator touched.
@@ -620,6 +746,7 @@ fn checkpoint_partition<S: SharedState, L: Encode>(
         return;
     }
     let state = encode_checkpoint_state(&st.local, &st.own);
+    trace.record(now, TraceKind::Checkpoint, p as u64, state.len() as u64, st.nxt_idx);
     st.own.mark_clean();
     st.last_put = Some((st.nxt_idx, st.nxt_odx));
     store.put(
@@ -640,6 +767,7 @@ fn recover_partition<P: Processor>(
     p: PartitionId,
     now: SimTime,
     metrics: &ClusterMetrics,
+    trace: &TraceHandle,
 ) -> PartState<P::Shared, P::Local> {
     if let Some(cp) = store.get(p) {
         if let Some((local, own)) = decode_checkpoint_state::<P::Shared, P::Local>(&cp.state) {
@@ -647,6 +775,7 @@ fn recover_partition<P: Processor>(
             // state already arrived via gossip the join is a no-op.
             let _ = shared.join(&own);
             metrics.recoveries.fetch_add(1, Ordering::Relaxed);
+            trace.record(now, TraceKind::CheckpointRestore, p as u64, cp.nxt_idx, cp.nxt_odx);
             return PartState {
                 nxt_idx: cp.nxt_idx,
                 nxt_odx: cp.nxt_odx,
@@ -657,6 +786,7 @@ fn recover_partition<P: Processor>(
                 // the store holds exactly this state; skip re-encoding
                 // until the partition actually moves
                 last_put: Some((cp.nxt_idx, cp.nxt_odx)),
+                recovered_at: Some(now),
             };
         }
     }
@@ -669,6 +799,7 @@ fn recover_partition<P: Processor>(
         arena: OutputArena::new(),
         last_ckpt: now,
         last_put: None,
+        recovered_at: Some(now),
     }
 }
 

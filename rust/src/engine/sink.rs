@@ -15,6 +15,7 @@ use std::thread::JoinHandle;
 use crate::api::Processor;
 use crate::clock::SimClock;
 use crate::log::Topic;
+use crate::trace::{self, TraceHandle, TraceKind};
 use crate::util::PartitionId;
 
 use super::node::decode_output;
@@ -28,10 +29,11 @@ const SINK_BATCH: usize = 1024;
 /// Spawn the sink thread for a cluster.
 pub fn spawn_sink<P: Processor>(cluster: &Arc<HolonCluster<P>>) -> JoinHandle<()> {
     let c = cluster.clone();
+    let trace = c.tracer.handle(trace::SINK_NODE);
     std::thread::Builder::new()
         .name("holon-sink".to_string())
         .spawn(move || {
-            sink_loop(&c.output, &c.metrics, &c.clock, c.cfg.poll_interval_ms, || {
+            sink_loop(&c.output, &c.metrics, &c.clock, c.cfg.poll_interval_ms, trace, || {
                 c.shutdown_requested()
             })
         })
@@ -55,6 +57,7 @@ pub(crate) fn sink_loop(
     metrics: &ClusterMetrics,
     clock: &SimClock,
     poll_interval_ms: u64,
+    trace: TraceHandle,
     shutdown: impl Fn() -> bool,
 ) {
     let parts = output.partitions() as usize;
@@ -83,6 +86,7 @@ pub(crate) fn sink_loop(
                     // Replay duplicate — deterministic outputs make it
                     // byte-identical; drop it.
                     metrics.duplicates.fetch_add(1, Ordering::Relaxed);
+                    trace.record(rec.insert_ts, TraceKind::SinkDeduped, ref_ts, 0, seq);
                     return;
                 }
                 if seq > *expected {
@@ -96,11 +100,24 @@ pub(crate) fn sink_loop(
                 metrics.latency.record(latency);
                 metrics.latency_series.record(rec.insert_ts, latency as f64);
                 metrics.outputs.fetch_add(1, Ordering::Relaxed);
+                // Stage breakdown: *converge* is window-end → output-log
+                // append (the distributed agreement + emit path, the
+                // paper's latency measurement); *emit* is output-log
+                // append → sink pickup (pure consumer-side queueing).
+                metrics.stage_converge.record(latency);
+                metrics
+                    .stage_emit
+                    .record(clock.now().saturating_sub(rec.insert_ts));
+                trace.record(rec.insert_ts, TraceKind::WindowConverged, ref_ts, latency, seq);
             });
             if nxt != before {
                 idle = false;
                 offsets[p] = nxt;
             }
+        }
+        let tdrops = trace.take_dropped();
+        if tdrops > 0 {
+            metrics.trace_dropped_events.fetch_add(tdrops, Ordering::Relaxed);
         }
         if idle {
             if stopping {
@@ -144,7 +161,7 @@ mod tests {
         append_seqs(&t, 0, 0..(SINK_BATCH as u64 + 500));
         append_seqs(&t, 1, 0..10);
         let m = ClusterMetrics::new(500);
-        sink_loop(&t, &m, &clock, 1, || true);
+        sink_loop(&t, &m, &clock, 1, TraceHandle::disabled(trace::SINK_NODE), || true);
         assert_eq!(
             m.outputs.load(Ordering::Acquire),
             SINK_BATCH as u64 + 500 + 10
@@ -170,7 +187,9 @@ mod tests {
         let m2 = m.clone();
         let clock2 = clock.clone();
         let h = std::thread::spawn(move || {
-            sink_loop(&t2, &m2, &clock2, 1, || stop2.load(Ordering::Acquire))
+            sink_loop(&t2, &m2, &clock2, 1, TraceHandle::disabled(trace::SINK_NODE), || {
+                stop2.load(Ordering::Acquire)
+            })
         });
         // let the sink drain the first batch, then append more and only
         // then request shutdown
@@ -191,7 +210,7 @@ mod tests {
         let (clock, t) = topic_with(1);
         append_seqs(&t, 0, [0, 1, 5, 6]);
         let m = ClusterMetrics::new(500);
-        sink_loop(&t, &m, &clock, 1, || true);
+        sink_loop(&t, &m, &clock, 1, TraceHandle::disabled(trace::SINK_NODE), || true);
         assert_eq!(m.outputs.load(Ordering::Acquire), 4);
         assert_eq!(m.gaps.load(Ordering::Acquire), 3);
     }
@@ -201,7 +220,7 @@ mod tests {
         let (clock, t) = topic_with(1);
         append_seqs(&t, 0, [0, 1, 2, 1, 2, 3]);
         let m = ClusterMetrics::new(500);
-        sink_loop(&t, &m, &clock, 1, || true);
+        sink_loop(&t, &m, &clock, 1, TraceHandle::disabled(trace::SINK_NODE), || true);
         assert_eq!(m.outputs.load(Ordering::Acquire), 4);
         assert_eq!(m.duplicates.load(Ordering::Acquire), 2);
         assert_eq!(m.gaps.load(Ordering::Acquire), 0);

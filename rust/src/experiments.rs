@@ -197,6 +197,29 @@ pub struct DataPlaneStats {
     /// Window-store inserts that fell outside the dense ring horizon
     /// into the spill map; ~0 in a healthy run.
     pub window_ring_spills: u64,
+    /// Stage latency, ingest: sim-ms a batch's oldest record sat queued
+    /// in the input log before pickup (p50).
+    pub stage_latency_ingest_p50_ms: u64,
+    /// Stage latency, ingest p99.
+    pub stage_latency_ingest_p99_ms: u64,
+    /// Stage latency, fire: sim-ms between a window's event-time end
+    /// and the global watermark floor passing it (p50).
+    pub stage_latency_fire_p50_ms: u64,
+    /// Stage latency, fire p99.
+    pub stage_latency_fire_p99_ms: u64,
+    /// Stage latency, converge: sim-ms from window end to the output's
+    /// append in the output log (p50) — the paper's end-to-end latency.
+    pub stage_latency_converge_p50_ms: u64,
+    /// Stage latency, converge p99.
+    pub stage_latency_converge_p99_ms: u64,
+    /// Stage latency, emit: sim-ms from output-log append to sink
+    /// pickup (p50) — consumer-side queueing only.
+    pub stage_latency_emit_p50_ms: u64,
+    /// Stage latency, emit p99.
+    pub stage_latency_emit_p99_ms: u64,
+    /// Flight-recorder events overwritten before export (ring
+    /// wraparound); zero when tracing is off.
+    pub trace_dropped_events: u64,
 }
 
 /// Measurements of one run.
@@ -287,6 +310,15 @@ fn data_plane_stats(
         output_arena_bytes: metrics.output_arena_bytes.load(Ordering::Acquire),
         output_frames: metrics.output_frames.load(Ordering::Acquire),
         window_ring_spills: metrics.window_ring_spills.load(Ordering::Acquire),
+        stage_latency_ingest_p50_ms: metrics.stage_ingest.p50(),
+        stage_latency_ingest_p99_ms: metrics.stage_ingest.p99(),
+        stage_latency_fire_p50_ms: metrics.stage_fire.p50(),
+        stage_latency_fire_p99_ms: metrics.stage_fire.p99(),
+        stage_latency_converge_p50_ms: metrics.stage_converge.p50(),
+        stage_latency_converge_p99_ms: metrics.stage_converge.p99(),
+        stage_latency_emit_p50_ms: metrics.stage_emit.p50(),
+        stage_latency_emit_p99_ms: metrics.stage_emit.p99(),
+        trace_dropped_events: metrics.trace_dropped_events.load(Ordering::Acquire),
     }
 }
 
@@ -423,6 +455,16 @@ fn run_holon_with<P: crate::api::Processor>(
     );
     let produced = prod.stop();
     cluster.stop();
+    // Flight-recorder export: a traced run with a destination writes
+    // the Chrome trace_event dump next to the metrics it explains
+    // (open in Perfetto / chrome://tracing).
+    if cfg.trace && !cfg.trace_out.is_empty() {
+        let json = cluster.tracer.chrome_trace_json(&cluster.metrics.counter_snapshot());
+        match std::fs::write(&cfg.trace_out, json.as_bytes()) {
+            Ok(()) => println!("trace dump written to {}", cfg.trace_out),
+            Err(e) => eprintln!("warning: could not write trace dump {}: {e}", cfg.trace_out),
+        }
+    }
     let dp = data_plane_stats(&cluster.metrics, &cluster.input, &cluster.output, Some(&cluster.bus));
     collect(SystemKind::Holon, workload, &cluster.metrics, produced, cfg.duration_ms, dp)
 }
@@ -943,6 +985,15 @@ pub fn bench_report_json(pr: &str, quick: bool, scenarios: &[BenchScenario]) -> 
             .u64_field("output_arena_bytes", r.data_plane.output_arena_bytes)
             .u64_field("output_frames", r.data_plane.output_frames)
             .u64_field("window_ring_spills", r.data_plane.window_ring_spills)
+            .u64_field("stage_latency_ingest_p50_ms", r.data_plane.stage_latency_ingest_p50_ms)
+            .u64_field("stage_latency_ingest_p99_ms", r.data_plane.stage_latency_ingest_p99_ms)
+            .u64_field("stage_latency_fire_p50_ms", r.data_plane.stage_latency_fire_p50_ms)
+            .u64_field("stage_latency_fire_p99_ms", r.data_plane.stage_latency_fire_p99_ms)
+            .u64_field("stage_latency_converge_p50_ms", r.data_plane.stage_latency_converge_p50_ms)
+            .u64_field("stage_latency_converge_p99_ms", r.data_plane.stage_latency_converge_p99_ms)
+            .u64_field("stage_latency_emit_p50_ms", r.data_plane.stage_latency_emit_p50_ms)
+            .u64_field("stage_latency_emit_p99_ms", r.data_plane.stage_latency_emit_p99_ms)
+            .u64_field("trace_dropped_events", r.data_plane.trace_dropped_events)
             .bool_field("stalled", r.stalled)
             .end_obj();
     }
@@ -995,6 +1046,23 @@ mod tests {
         // broadcast fan-out: wire volume is the encoded volume times the
         // recipients each shared-Arc payload reached
         assert!(r.data_plane.gossip_bytes_wire >= r.data_plane.gossip_bytes_encoded);
+        // stage-latency breakdown: each stage histogram saw samples and
+        // is internally ordered (the validator enforces the same)
+        let d = &r.data_plane;
+        for (p50, p99) in [
+            (d.stage_latency_ingest_p50_ms, d.stage_latency_ingest_p99_ms),
+            (d.stage_latency_fire_p50_ms, d.stage_latency_fire_p99_ms),
+            (d.stage_latency_converge_p50_ms, d.stage_latency_converge_p99_ms),
+            (d.stage_latency_emit_p50_ms, d.stage_latency_emit_p99_ms),
+        ] {
+            assert!(p50 <= p99, "stage p50 {p50} must not exceed p99 {p99}");
+        }
+        // converge is the paper's end-to-end latency: same histogram
+        // feed as the top-level percentiles
+        assert_eq!(d.stage_latency_converge_p50_ms, r.latency_p50_ms);
+        assert_eq!(d.stage_latency_converge_p99_ms, r.latency_p99_ms);
+        // tracing is off in bench runs: nothing may be dropped
+        assert_eq!(d.trace_dropped_events, 0);
     }
 
     #[test]
@@ -1082,6 +1150,15 @@ mod tests {
             "output_arena_bytes",
             "output_frames",
             "window_ring_spills",
+            "stage_latency_ingest_p50_ms",
+            "stage_latency_ingest_p99_ms",
+            "stage_latency_fire_p50_ms",
+            "stage_latency_fire_p99_ms",
+            "stage_latency_converge_p50_ms",
+            "stage_latency_converge_p99_ms",
+            "stage_latency_emit_p50_ms",
+            "stage_latency_emit_p99_ms",
+            "trace_dropped_events",
             "stalled",
         ] {
             assert_eq!(

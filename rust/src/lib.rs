@@ -77,7 +77,7 @@
 //!
 //! runs the §5.3 max-throughput ramp (Holon + the Flink-model baseline)
 //! and the Table 2 latency rows headlessly, prints human-readable rows,
-//! and writes a `holon-bench/v1` JSON report (default `BENCH_PR8.json`;
+//! and writes a `holon-bench/v1` JSON report (default `BENCH_PR9.json`;
 //! see EXPERIMENTS.md for the schema and the trajectory log). Each
 //! scenario entry carries events/sec (peak + mean), p50/p99/mean
 //! latency, gossip volume (`gossip_bytes_wire`, per-recipient), and the
@@ -224,6 +224,54 @@
 //!   changed — `tests/properties.rs` pins the ring ≡ BTreeMap
 //!   equivalence by differential property tests and a seeded
 //!   fault-schedule replay.
+//!
+//! ## Observability & tracing (the flight recorder)
+//!
+//! Aggregate counters say *what* happened; the [`trace`] flight
+//! recorder says *when and in what order*. Every node — and the sink,
+//! under [`trace::SINK_NODE`] — owns a bounded pre-allocated ring of
+//! [`trace::TraceEvent`]s covering the whole window lifecycle
+//! (`window_opened → delta_merged → watermark_advanced → window_fired
+//! → window_converged → window_emitted → sink_deduped`), gossip-round
+//! causality (`gossip_round`/`gossip_skipped` at the sender,
+//! per-peer `peer_flush` outcomes from [`net::Bus::flush_with`]),
+//! recovery timelines (`steal_start → checkpoint_restore →
+//! first_output`), and `checkpoint`/`backpressure` events.
+//!
+//! **Span pairing** is by plain integers, never pointers: window
+//! events share the window-end timestamp as `span_id`, gossip events
+//! the sender's round id, recovery events the partition id — so one
+//! window's lifecycle lines up across every node and the sink in a
+//! single Perfetto view.
+//!
+//! **Overhead contract:** instrumentation stays in the hot paths
+//! permanently. Disabled (default), [`trace::TraceHandle::record`] is
+//! one branch — the `micro_hotpath` counting-allocator harness
+//! asserts the steady-state emit loop still makes **zero** global
+//! allocations with a disabled handle threaded through it. Enabled,
+//! recording is one uncontended lock plus a `Copy` store into the
+//! pre-allocated ring; when the ring wraps, the oldest events are
+//! overwritten and counted (`trace_dropped_events` in the bench
+//! JSON), so the newest diagnostics always survive.
+//!
+//! The recorder feeds two export surfaces. (1) `holon trace` (and
+//! `--trace-out=FILE` on `run`/`sim`/`bench`) writes Chrome
+//! `trace_event` JSON — open it at <https://ui.perfetto.dev> or
+//! `about:tracing`; `tid` is the node id. (2) When a sim oracle
+//! falsifies, the harness re-runs the *shrunk* plan with tracing on
+//! and writes `holon-trace-dump-seed<seed>.json` next to the repro
+//! line, turning every failure into a browsable timeline. Because an
+//! event is six integers, a trace of a deterministic execution is
+//! itself deterministic — the seeded-script test in [`trace`] pins
+//! byte-identical dumps for identical event streams (live full-run
+//! dumps are additionally subject to wall-clock thread interleaving
+//! through the scaled [`clock::SimClock`]).
+//!
+//! From the span pairs the engine derives the **stage-latency
+//! breakdown** that decomposes the end-to-end latency histogram:
+//! `stage_latency_{ingest,fire,converge,emit}_{p50,p99}` in the bench
+//! JSON, measuring source→node pickup, window-end→watermark-fire,
+//! fire→sink-convergence, and convergence→sink-drain respectively.
 
 pub mod api;
 pub mod arena;
@@ -245,5 +293,6 @@ pub mod runtime;
 pub mod shard;
 pub mod sim;
 pub mod storage;
+pub mod trace;
 pub mod util;
 pub mod wcrdt;

@@ -12,7 +12,14 @@
 //! holon inspect  [--config=FILE] [--key=value ...] — print the resolved config
 //! holon query    [--staleness=MS] [--key=value ...] — run Q4 briefly, then answer
 //!                point/range/top-k queries from every replica's read path
+//! holon trace    [q0|q4|q7|query1] [--key=value ...] — traced live run; writes a
+//!                Chrome trace_event dump (default holon-trace.json; Perfetto-ready)
 //! ```
+//!
+//! `--trace-out=FILE` on any subcommand enables the flight recorder for
+//! the run and writes the dump there (`holon run q7 --trace-out=t.json`);
+//! `holon sim` additionally dumps a trace of the shrunk failing schedule
+//! automatically when an oracle falsifies.
 //!
 //! Keyed workloads run over sharded keyed state when `--shard-count=N`
 //! is set (`holon run q4 --shard-count=16`): same outputs byte for
@@ -65,6 +72,11 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // A dump destination implies recording (the keys stay independent
+    // at the config layer so `dump()` roundtrips).
+    if !cfg.trace_out.is_empty() {
+        cfg.trace = true;
+    }
 
     match rest.first().copied() {
         Some("run") => cmd_run(&cfg, &rest[1..]),
@@ -79,11 +91,13 @@ fn main() {
         }
         Some("bench") => cmd_bench(&cfg, &rest[1..]),
         Some("query") => cmd_query(&cfg, &rest[1..]),
+        Some("trace") => cmd_trace(&cfg, &rest[1..]),
         _ => {
-            eprintln!("usage: holon <run|sim|generate|inspect|bench|query> [options]");
+            eprintln!("usage: holon <run|sim|generate|inspect|bench|query|trace> [options]");
             eprintln!("       holon run q7 --system=holon --scenario=concurrent --nodes=5");
             eprintln!("       holon sim --seeds=100 --start-seed=0");
             eprintln!("       holon query --staleness=0 --shard-count=8");
+            eprintln!("       holon trace q7 --trace-out=holon-trace.json");
             std::process::exit(2);
         }
     }
@@ -304,7 +318,7 @@ fn cmd_bench(cfg: &HolonConfig, args: &[&str]) {
             ],
         );
     }
-    let json = bench_report_json("PR7", quick, &scenarios);
+    let json = bench_report_json("PR9", quick, &scenarios);
     if let Err(e) = std::fs::write(&cfg.bench_out, json.as_bytes()) {
         eprintln!("error writing {}: {e}", cfg.bench_out);
         std::process::exit(1);
@@ -410,4 +424,57 @@ fn cmd_query(cfg: &HolonConfig, args: &[&str]) {
             s.served, s.index_hits, s.index_misses, s.scan_rows_avoided
         );
     }
+}
+
+/// Traced live run: the chosen workload with the flight recorder on,
+/// dumping a Chrome `trace_event` JSON at the end (open the file in
+/// Perfetto or chrome://tracing to see the window lifecycle, gossip
+/// rounds, and recovery timelines per node). All config keys apply —
+/// `holon trace q7 --nodes=3 --duration-ms=10000 --scenario=crash`.
+fn cmd_trace(cfg: &HolonConfig, args: &[&str]) {
+    let mut workload = Workload::Q7;
+    let mut scenario = Scenario::Baseline;
+    for a in args {
+        match *a {
+            "q0" => workload = Workload::Q0,
+            "q4" => workload = Workload::Q4,
+            "q7" => workload = Workload::Q7,
+            "query1" => workload = Workload::Query1,
+            "--scenario=baseline" => scenario = Scenario::Baseline,
+            "--scenario=concurrent" => scenario = Scenario::ConcurrentFailures,
+            "--scenario=subsequent" => scenario = Scenario::SubsequentFailures,
+            "--scenario=crash" => scenario = Scenario::CrashFailures,
+            other => {
+                eprintln!("unknown trace option: {other}");
+                std::process::exit(2);
+            }
+        }
+    }
+    let mut cfg = cfg.clone();
+    cfg.trace = true;
+    if cfg.trace_out.is_empty() {
+        cfg.trace_out = "holon-trace.json".to_string();
+    }
+    let schedule = scenario.schedule(cfg.duration_ms / 3);
+    section(&format!(
+        "holon trace — {:?} on {} nodes, {} s, scenario {:?} → {}",
+        workload,
+        cfg.nodes,
+        cfg.duration_ms / 1000,
+        scenario,
+        cfg.trace_out,
+    ));
+    let result = run_holon(&cfg, workload, schedule);
+    row(
+        "result",
+        &[
+            ("outputs", result.outputs.to_string()),
+            ("p99_ms", result.latency_p99_ms.to_string()),
+            ("steals", result.steals.to_string()),
+            (
+                "trace_dropped",
+                result.data_plane.trace_dropped_events.to_string(),
+            ),
+        ],
+    );
 }

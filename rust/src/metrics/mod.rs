@@ -10,23 +10,32 @@
 //! [`crate::engine::ClusterMetrics`]; this module holds the reusable
 //! measurement primitives they feed into.
 
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::util::SimTime;
 
 /// Log-bucketed latency histogram (HDR-style, base-1.07 buckets over
-/// sim-ms). Cheap concurrent recording, percentile queries at the end.
+/// sim-ms). Recording is lock-free — one relaxed `fetch_add` per bucket
+/// plus a `fetch_max` for the tail — so the sink's per-output `record()`
+/// never contends with concurrent recorders or end-of-run readers (the
+/// old `Mutex<HistInner>` serialized every output through one lock).
+/// Percentile queries walk a snapshot of the bucket array at the end;
+/// concurrent recording during a query can only under-count in-flight
+/// samples, never corrupt the histogram.
 #[derive(Debug, Clone)]
 pub struct LatencyHistogram {
-    inner: Arc<Mutex<HistInner>>,
+    inner: Arc<HistInner>,
 }
 
 #[derive(Debug)]
 struct HistInner {
-    buckets: Vec<u64>,
-    count: u64,
-    sum: f64,
-    max: u64,
+    buckets: [AtomicU64; NBUCKETS],
+    count: AtomicU64,
+    /// Integer sim-ms sum: exact for the u64 latencies we record, and
+    /// atomically updatable (the old f64 sum was neither).
+    sum_ms: AtomicU64,
+    max: AtomicU64,
 }
 
 const GROWTH: f64 = 1.07;
@@ -40,8 +49,22 @@ fn bucket_of(ms: u64) -> usize {
     b.min(NBUCKETS - 1)
 }
 
+/// Bucket upper-bound table, computed once — `percentile()` used to call
+/// `powi` per bucket on every query. One extra entry covers the
+/// `bucket_value(b + 1)` upper-bound read off the last bucket.
+fn bucket_values() -> &'static [u64; NBUCKETS + 1] {
+    static TABLE: OnceLock<[u64; NBUCKETS + 1]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u64; NBUCKETS + 1];
+        for (b, v) in t.iter_mut().enumerate() {
+            *v = GROWTH.powi(b as i32) as u64;
+        }
+        t
+    })
+}
+
 fn bucket_value(b: usize) -> u64 {
-    GROWTH.powi(b as i32) as u64
+    bucket_values()[b.min(NBUCKETS)]
 }
 
 impl Default for LatencyHistogram {
@@ -52,56 +75,62 @@ impl Default for LatencyHistogram {
 
 impl LatencyHistogram {
     pub fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
         Self {
-            inner: Arc::new(Mutex::new(HistInner {
-                buckets: vec![0; NBUCKETS],
-                count: 0,
-                sum: 0.0,
-                max: 0,
-            })),
+            inner: Arc::new(HistInner {
+                buckets: [ZERO; NBUCKETS],
+                count: AtomicU64::new(0),
+                sum_ms: AtomicU64::new(0),
+                max: AtomicU64::new(0),
+            }),
         }
     }
 
+    /// Record one latency sample. Lock-free: four relaxed atomic RMWs,
+    /// no allocation, safe from any thread.
     pub fn record(&self, latency_ms: u64) {
-        let mut h = self.inner.lock().unwrap();
-        h.buckets[bucket_of(latency_ms)] += 1;
-        h.count += 1;
-        h.sum += latency_ms as f64;
-        h.max = h.max.max(latency_ms);
+        let h = &*self.inner;
+        h.buckets[bucket_of(latency_ms)].fetch_add(1, Ordering::Relaxed);
+        h.count.fetch_add(1, Ordering::Relaxed);
+        h.sum_ms.fetch_add(latency_ms, Ordering::Relaxed);
+        h.max.fetch_max(latency_ms, Ordering::Relaxed);
     }
 
     pub fn count(&self) -> u64 {
-        self.inner.lock().unwrap().count
+        self.inner.count.load(Ordering::Relaxed)
     }
 
     pub fn mean(&self) -> f64 {
-        let h = self.inner.lock().unwrap();
-        if h.count == 0 {
+        let count = self.count();
+        if count == 0 {
             0.0
         } else {
-            h.sum / h.count as f64
+            self.inner.sum_ms.load(Ordering::Relaxed) as f64 / count as f64
         }
     }
 
     pub fn max(&self) -> u64 {
-        self.inner.lock().unwrap().max
+        self.inner.max.load(Ordering::Relaxed)
     }
 
     /// Approximate percentile (bucket upper bound), q in [0, 1].
     pub fn percentile(&self, q: f64) -> u64 {
-        let h = self.inner.lock().unwrap();
-        if h.count == 0 {
+        let h = &*self.inner;
+        let count = h.count.load(Ordering::Relaxed);
+        if count == 0 {
             return 0;
         }
-        let target = (q * h.count as f64).ceil() as u64;
+        let max = h.max.load(Ordering::Relaxed);
+        let target = (q * count as f64).ceil() as u64;
         let mut seen = 0;
-        for (b, &n) in h.buckets.iter().enumerate() {
-            seen += n;
+        for (b, n) in h.buckets.iter().enumerate() {
+            seen += n.load(Ordering::Relaxed);
             if seen >= target {
-                return bucket_value(b + 1).min(h.max.max(1));
+                return bucket_value(b + 1).min(max.max(1));
             }
         }
-        h.max
+        max
     }
 
     pub fn p99(&self) -> u64 {
@@ -113,11 +142,13 @@ impl LatencyHistogram {
     }
 
     pub fn reset(&self) {
-        let mut h = self.inner.lock().unwrap();
-        h.buckets.iter_mut().for_each(|b| *b = 0);
-        h.count = 0;
-        h.sum = 0.0;
-        h.max = 0;
+        let h = &*self.inner;
+        for b in h.buckets.iter() {
+            b.store(0, Ordering::Relaxed);
+        }
+        h.count.store(0, Ordering::Relaxed);
+        h.sum_ms.store(0, Ordering::Relaxed);
+        h.max.store(0, Ordering::Relaxed);
     }
 }
 
@@ -279,6 +310,42 @@ mod tests {
         // log buckets: accept a loose band around the true values
         assert!((400..700).contains(&p50), "p50={p50}");
         assert!(p99 >= 900, "p99={p99}");
+    }
+
+    /// Satellite pin for the atomic-bucket rewrite: many threads
+    /// hammering `record()` concurrently (the sink path plus stage
+    /// recorders) must lose no samples and keep the aggregates exact —
+    /// the property the old mutex bought, now without the contention.
+    #[test]
+    fn histogram_concurrent_recording_loses_nothing() {
+        let h = LatencyHistogram::new();
+        let threads = 8;
+        let per_thread = 10_000u64;
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let h = h.clone();
+                s.spawn(move || {
+                    for i in 0..per_thread {
+                        h.record((t * per_thread + i) % 1000 + 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), threads * per_thread);
+        // integer sum is exact: mean of the uniform 1..=1000 cycle
+        let expected_mean = 500.5;
+        assert!((h.mean() - expected_mean).abs() < 1.0, "mean={}", h.mean());
+        assert_eq!(h.max(), 1000);
+        assert!(h.p50() <= h.p99());
+    }
+
+    #[test]
+    fn histogram_bucket_value_table_matches_powi() {
+        for b in 0..=NBUCKETS {
+            assert_eq!(bucket_value(b), GROWTH.powi(b as i32) as u64, "bucket {b}");
+        }
+        // out-of-range indices clamp to the table's last entry
+        assert_eq!(bucket_value(NBUCKETS + 5), bucket_value(NBUCKETS));
     }
 
     #[test]

@@ -144,6 +144,21 @@ pub struct FlushStats {
     pub parked: u64,
 }
 
+/// What one [`Bus::flush_with`] batch did toward a single peer —
+/// reported through the per-peer callback so the flight recorder can
+/// attribute gossip-round outcomes (delivered / parked / dropped)
+/// without the bus knowing about tracing.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PeerFlush {
+    /// Messages moved into this peer's inbox.
+    pub delivered: u64,
+    /// Messages left parked for this peer (inbox at capacity).
+    pub parked: u64,
+    /// Messages dropped toward this peer this batch (loss, partition,
+    /// or unregistered target).
+    pub dropped: u64,
+}
+
 /// Dropped-message accounting, split by cause. Restart churn
 /// (`no_inbox`), partitions, lossy links and backpressure shedding are
 /// different operational problems; folding them into one counter made
@@ -389,6 +404,21 @@ impl Bus {
     /// don't fit stay parked (in order) for the next flush; their
     /// count is returned so the caller can feed the backpressure loop.
     pub fn flush(&self, from: NodeId) -> FlushStats {
+        self.flush_with(from, |_, _| {})
+    }
+
+    /// [`flush`](Self::flush) with a per-peer outcome callback: after
+    /// each non-empty peer queue is processed, `on_peer(to, outcome)`
+    /// reports what this batch did toward that peer. The flight
+    /// recorder rides this hook to attribute gossip-round causality
+    /// (who got the payload, who parked, who dropped and why) without
+    /// the bus knowing anything about tracing. Called with internal
+    /// locks held — keep the callback allocation-free and cheap.
+    pub fn flush_with(
+        &self,
+        from: NodeId,
+        mut on_peer: impl FnMut(NodeId, PeerFlush),
+    ) -> FlushStats {
         let mut stats = FlushStats::default();
         let ob = match self.inner.outbound.read().unwrap().get(&from) {
             Some(ob) => ob.clone(),
@@ -415,6 +445,13 @@ impl Bus {
                 self.inner
                     .dropped_no_inbox
                     .fetch_add(q.len() as u64, Ordering::Relaxed);
+                on_peer(
+                    to,
+                    PeerFlush {
+                        dropped: q.len() as u64,
+                        ..PeerFlush::default()
+                    },
+                );
                 q.clear();
                 continue;
             };
@@ -422,9 +459,17 @@ impl Bus {
                 self.inner
                     .dropped_partition
                     .fetch_add(q.len() as u64, Ordering::Relaxed);
+                on_peer(
+                    to,
+                    PeerFlush {
+                        dropped: q.len() as u64,
+                        ..PeerFlush::default()
+                    },
+                );
                 q.clear();
                 continue;
             }
+            let mut peer = PeerFlush::default();
             let mut inq = inbox.lock().unwrap();
             let mut free = match cfg.inbox_capacity {
                 0 => usize::MAX,
@@ -437,10 +482,12 @@ impl Bus {
                 }
                 if cfg.drop_prob > 0.0 && rng.chance(cfg.drop_prob) {
                     self.inner.dropped_loss.fetch_add(1, Ordering::Relaxed);
+                    peer.dropped += 1;
                     continue;
                 }
                 if overlay.extra_drop_prob > 0.0 && rng.chance(overlay.extra_drop_prob) {
                     self.inner.dropped_loss.fetch_add(1, Ordering::Relaxed);
+                    peer.dropped += 1;
                     continue;
                 }
                 let jitter = if cfg.jitter_ms > 0 {
@@ -465,11 +512,14 @@ impl Bus {
                 ));
                 free -= 1;
                 stats.delivered += 1;
+                peer.delivered += 1;
             }
             self.inner
                 .inbox_depth_max
                 .fetch_max(inq.queue.len() as u64, Ordering::Relaxed);
             stats.parked += q.len() as u64;
+            peer.parked = q.len() as u64;
+            on_peer(to, peer);
         }
         drop(rng);
         if bytes > 0 {
@@ -757,6 +807,36 @@ mod tests {
         assert_eq!(d.backpressure, 0);
         assert_eq!(b.stats().1, d.total());
         assert_eq!(d.total(), 2);
+    }
+
+    /// `flush_with` reports one outcome per non-empty peer queue and
+    /// agrees with both the returned `FlushStats` and the drop split.
+    #[test]
+    fn flush_with_reports_per_peer_outcomes() {
+        let clock = SimClock::manual();
+        let b = bus_with_capacity(&clock, 1);
+        for n in 1..=4 {
+            b.register(n);
+        }
+        // peer 2: healthy but capacity 1 → 1 delivered, 1 parked.
+        b.send(1, 2, MsgKind::Gossip, vec![1]);
+        b.send(1, 2, MsgKind::Gossip, vec![2]);
+        // peer 3: partitioned away → dropped.
+        b.set_partition(&[&[1, 2, 4], &[3]]);
+        b.send(1, 3, MsgKind::Gossip, vec![3]);
+        // peer 4: nothing enqueued → no callback at all.
+        let mut seen: Vec<(NodeId, PeerFlush)> = Vec::new();
+        let stats = b.flush_with(1, |to, pf| seen.push((to, pf)));
+        seen.sort_by_key(|(to, _)| *to);
+        assert_eq!(
+            seen,
+            vec![
+                (2, PeerFlush { delivered: 1, parked: 1, dropped: 0 }),
+                (3, PeerFlush { delivered: 0, parked: 0, dropped: 1 }),
+            ]
+        );
+        assert_eq!(stats, FlushStats { delivered: 1, parked: 1 });
+        assert_eq!(b.drop_stats().partition, 1);
     }
 
     #[test]

@@ -48,6 +48,10 @@ pub struct SimFailure {
     pub original_plan: FaultPlan,
     pub shrunk_plan: FaultPlan,
     pub repro: String,
+    /// Path of the flight-recorder dump written from a traced re-run of
+    /// the shrunk schedule (Chrome `trace_event` JSON; open in
+    /// Perfetto). `None` only when the dump could not be written.
+    pub trace_dump: Option<String>,
 }
 
 impl std::fmt::Display for SimFailure {
@@ -56,7 +60,11 @@ impl std::fmt::Display for SimFailure {
         writeln!(f, "  seed:     {}", self.seed)?;
         writeln!(f, "  plan:     {}", self.original_plan)?;
         writeln!(f, "  shrunk:   {}", self.shrunk_plan)?;
-        write!(f, "  repro:    {}", self.repro)
+        write!(f, "  repro:    {}", self.repro)?;
+        if let Some(path) = &self.trace_dump {
+            write!(f, "\n  trace:    {path}")?;
+        }
+        Ok(())
     }
 }
 
@@ -83,12 +91,32 @@ pub fn run_seed_with(
                 },
                 SHRINK_BUDGET,
             );
+            // Flight-recorder dump: re-run the shrunk schedule with
+            // tracing on so the failure ships with a Perfetto-ready
+            // timeline of the window lifecycle / gossip / recovery
+            // leading up to it.
+            let trace_dump = {
+                let mut tspec = spec.clone();
+                tspec.trace = true;
+                let traced = run_plan(&tspec, &shrunk, mutation);
+                traced.trace_json.and_then(|json| {
+                    let path = format!("holon-trace-dump-seed{}.json", spec.seed);
+                    match std::fs::write(&path, json.as_bytes()) {
+                        Ok(()) => Some(path),
+                        Err(e) => {
+                            eprintln!("warning: could not write trace dump {path}: {e}");
+                            None
+                        }
+                    }
+                })
+            };
             Err(SimFailure {
                 seed: spec.seed,
                 failure: first_failure.to_string(),
                 original_plan: plan.clone(),
                 shrunk_plan: shrunk.clone(),
                 repro: repro_line(spec.seed, &shrunk),
+                trace_dump,
             })
         }
     }

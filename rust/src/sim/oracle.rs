@@ -216,6 +216,7 @@ mod tests {
             deduped,
             replicas: BTreeMap::new(),
             steals: 0,
+            trace_json: None,
         }
     }
 

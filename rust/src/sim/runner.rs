@@ -43,6 +43,11 @@ pub struct SimSpec {
     /// Post-plan settling time before the graceful stop (heal + gossip
     /// convergence + emission of the remaining completed windows).
     pub drain_ms: SimTime,
+    /// Run with the flight recorder on and harvest the Chrome
+    /// `trace_event` dump into [`RunArtifacts::trace_json`]. Off for
+    /// exploration runs; the harness flips it on for the post-shrink
+    /// repro run so every oracle failure ships with a timeline.
+    pub trace: bool,
 }
 
 impl Default for SimSpec {
@@ -56,6 +61,7 @@ impl Default for SimSpec {
             window_ms: 1000,
             wall_ms_per_sim_sec: 50.0,
             drain_ms: 4000,
+            trace: false,
         }
     }
 }
@@ -79,6 +85,7 @@ impl SimSpec {
             // ~5 events per sim-ms per node: the 48k-event input takes a
             // few sim-seconds to consume, so faults land mid-processing.
             holon_event_cost_us: 200.0,
+            trace: self.trace,
             ..HolonConfig::default()
         }
     }
@@ -118,6 +125,9 @@ pub struct RunArtifacts {
     pub replicas: BTreeMap<NodeId, Vec<u8>>,
     /// Work-stealing count (plan effectiveness signal, not an oracle).
     pub steals: u64,
+    /// Chrome `trace_event` dump of the run — present only when
+    /// [`SimSpec::trace`] was set.
+    pub trace_json: Option<String>,
 }
 
 /// Pre-seed a byte-identical input log: event timestamps are a pure
@@ -316,6 +326,10 @@ pub fn run_plan_with<P: crate::api::Processor>(
             .metrics
             .steals
             .load(std::sync::atomic::Ordering::Acquire),
+        trace_json: cluster
+            .tracer
+            .is_enabled()
+            .then(|| cluster.tracer.chrome_trace_json(&cluster.metrics.counter_snapshot())),
     };
     if let Some(m) = mutation {
         apply_mutation(&mut artifacts, m);

@@ -1,0 +1,526 @@
+//! Flight recorder: deterministic, low-overhead event tracing.
+//!
+//! Every node (and the sink, under [`SINK_NODE`]) owns a bounded ring
+//! buffer of structured [`TraceEvent`]s recording the full window
+//! lifecycle — opened → delta merged → watermark advanced → fired →
+//! converged → emitted → delivered/deduped at the sink — plus
+//! gossip-round causality (round id, encode size, per-peer flush
+//! outcome), recovery timelines (steal → checkpoint restore → first
+//! output), and checkpoint/backpressure events.
+//!
+//! # Overhead contract
+//!
+//! The recorder is built so instrumentation can stay in the hot paths
+//! permanently:
+//!
+//! - **Disabled** (the default): [`TraceHandle::record`] is a single
+//!   branch on an inline bool — no lock, no allocation. The
+//!   `micro_hotpath` counting-allocator harness asserts the
+//!   steady-state emit loop stays at zero global allocations with a
+//!   disabled handle threaded through it.
+//! - **Enabled**: one uncontended per-node mutex lock and a `Copy`
+//!   store into a pre-allocated ring. The ring never grows; when full
+//!   it overwrites the oldest event and counts the loss in
+//!   `dropped_events` (exported as the `trace_dropped_events` bench
+//!   counter), so the newest — most diagnostic — events always
+//!   survive.
+//!
+//! # Span pairing
+//!
+//! Events pair into spans through `span_id`, never through pointers:
+//!
+//! - window lifecycle events use the **window end timestamp** (sim ms)
+//!   as `span_id`, so a window's open/fire/converge/emit/dedup line up
+//!   across nodes and the sink;
+//! - gossip events use the sender's **round id** (`GossipRound` at the
+//!   sender, `PeerFlush` outcomes for the same flush batch);
+//! - recovery events use the **partition id**
+//!   (`StealStart` → `CheckpointRestore` → `FirstOutput`).
+//!
+//! # Determinism
+//!
+//! An event is fully determined by `(t, node, kind, span_id, detail,
+//! aux)` — all plain integers, no wall-clock reads, no addresses — so
+//! a trace of a deterministic execution is itself deterministic: the
+//! seeded-script test below pins that the same event stream produces
+//! byte-identical Chrome-trace dumps. Live cluster runs read the
+//! scaled [`crate::clock::SimClock`], whose millisecond quantisation
+//! absorbs most scheduling jitter but is still wall-driven; the
+//! byte-identity guarantee therefore attaches to the *event stream*,
+//! and full-run dumps are diffable modulo thread interleaving.
+//!
+//! # Export
+//!
+//! [`Tracer::chrome_trace_json`] writes the Chrome `trace_event`
+//! format (instant events, `ts` in microseconds, `tid` = node id)
+//! loadable in Perfetto / `about:tracing`. The sim harness dumps the
+//! recorder automatically when an oracle falsifies, attaching the
+//! dump path next to the `HOLON_SIM_SEED=…` repro line.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::benchkit::JsonWriter;
+use crate::util::{NodeId, SimTime};
+
+/// Pseudo node id the sink records under (`tid` in the Chrome dump).
+pub const SINK_NODE: NodeId = NodeId::MAX;
+
+/// Default per-node ring capacity (events). At the ~6 events per
+/// node-loop iteration of a busy node this holds the last few hundred
+/// iterations — enough to reconstruct a failure tail without growing.
+pub const DEFAULT_RING_CAP: usize = 4096;
+
+/// What happened. Names are the Chrome-trace event names; see the
+/// module docs for span-pairing rules.
+#[repr(u8)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TraceKind {
+    /// First local contribution materialised a window. `span_id` =
+    /// window end ts of the *newest* window in the drained batch,
+    /// `detail` = count opened since last drain, `aux` = oldest
+    /// window end ts.
+    WindowOpened,
+    /// A gossip join changed local state. `span_id` = peer node id,
+    /// `detail` = payload bytes, `aux` unused (the receiver cannot
+    /// tell a full-sync payload from a delta; the sender's
+    /// [`TraceKind::GossipRound`] event carries that bit).
+    DeltaMerged,
+    /// A gossip join was a no-op (redundant bytes). Fields as
+    /// [`TraceKind::DeltaMerged`].
+    MergeNoop,
+    /// The cluster-wide watermark floor advanced. `span_id` = new
+    /// floor (sim ms), `detail` = previous floor.
+    WatermarkAdvanced,
+    /// The floor passed a window end: the window fired. `span_id` =
+    /// window end ts.
+    WindowFired,
+    /// Output record accepted by the sink: the value all replicas
+    /// converged on. `span_id` = ref_ts (window end ts), `detail` =
+    /// end-to-end latency ms, `aux` = sequence number.
+    WindowConverged,
+    /// A batch of output frames left a node. `span_id` = ref_ts of
+    /// the first frame, `detail` = frame count, `aux` = batch bytes.
+    WindowEmitted,
+    /// Duplicate output dropped at the sink. `span_id` = ref_ts,
+    /// `aux` = sequence number.
+    SinkDeduped,
+    /// A gossip round was encoded and broadcast. `span_id` = round
+    /// id, `detail` = payload bytes, `aux` = 1 full sync / 0 delta.
+    GossipRound,
+    /// A delta round had nothing to ship. `span_id` = round id.
+    GossipSkipped,
+    /// Outcome of one `Bus::flush` toward one peer. `span_id` = peer
+    /// node id, `detail` = delivered count, `aux` = parked count
+    /// (high 32 bits) | dropped count (low 32 bits).
+    PeerFlush,
+    /// A node began stealing an unowned/failed partition. `span_id` =
+    /// partition id.
+    StealStart,
+    /// Checkpoint restore during recovery. `span_id` = partition id,
+    /// `detail` = restored input cursor, `aux` = restored output seq.
+    CheckpointRestore,
+    /// First output batch from a recovered partition. `span_id` =
+    /// partition id, `detail` = ms since the steal began.
+    FirstOutput,
+    /// A partition checkpoint was encoded and stored. `span_id` =
+    /// partition id, `detail` = encoded bytes, `aux` = input cursor.
+    Checkpoint,
+    /// Credit backpressure engaged (parked traffic or a zero-credit
+    /// live peer). `span_id` = messages left parked by the last flush,
+    /// `detail` = the shrunk per-iteration event budget.
+    Backpressure,
+}
+
+impl TraceKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceKind::WindowOpened => "window_opened",
+            TraceKind::DeltaMerged => "delta_merged",
+            TraceKind::MergeNoop => "merge_noop",
+            TraceKind::WatermarkAdvanced => "watermark_advanced",
+            TraceKind::WindowFired => "window_fired",
+            TraceKind::WindowConverged => "window_converged",
+            TraceKind::WindowEmitted => "window_emitted",
+            TraceKind::SinkDeduped => "sink_deduped",
+            TraceKind::GossipRound => "gossip_round",
+            TraceKind::GossipSkipped => "gossip_skipped",
+            TraceKind::PeerFlush => "peer_flush",
+            TraceKind::StealStart => "steal_start",
+            TraceKind::CheckpointRestore => "checkpoint_restore",
+            TraceKind::FirstOutput => "first_output",
+            TraceKind::Checkpoint => "checkpoint",
+            TraceKind::Backpressure => "backpressure",
+        }
+    }
+}
+
+/// One recorded event. Plain `Copy` integers only: recording is a
+/// struct store, and dumps are deterministic functions of the stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Sim time (ms) the event was recorded at.
+    pub t: SimTime,
+    /// Recording node ([`SINK_NODE`] for the sink).
+    pub node: NodeId,
+    pub kind: TraceKind,
+    /// Span correlation key — see module docs.
+    pub span_id: u64,
+    pub detail: u64,
+    pub aux: u64,
+}
+
+/// Bounded event ring. Pre-allocated to capacity at creation;
+/// overwrites the oldest event when full and counts the loss.
+#[derive(Debug)]
+pub struct TraceRing {
+    buf: Vec<TraceEvent>,
+    cap: usize,
+    /// Oldest element (== next overwrite slot) once the ring is full.
+    head: usize,
+    /// Lifetime events overwritten.
+    dropped: u64,
+    /// Overwrites since the last [`TraceRing::take_dropped`] drain.
+    fresh_dropped: u64,
+}
+
+impl TraceRing {
+    fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self {
+            buf: Vec::with_capacity(cap),
+            cap,
+            head: 0,
+            dropped: 0,
+            fresh_dropped: 0,
+        }
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+            self.fresh_dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Lifetime count of overwritten (lost) events.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    fn take_dropped(&mut self) -> u64 {
+        std::mem::take(&mut self.fresh_dropped)
+    }
+
+    /// Events oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.buf[self.head..].iter().chain(self.buf[..self.head].iter())
+    }
+}
+
+/// Per-process flight recorder: hands out per-node [`TraceHandle`]s
+/// and renders the combined dump. Cheap to share (`Arc<Tracer>`).
+#[derive(Debug)]
+pub struct Tracer {
+    enabled: bool,
+    cap: usize,
+    rings: Mutex<BTreeMap<NodeId, Arc<Mutex<TraceRing>>>>,
+}
+
+impl Tracer {
+    /// An enabled recorder with `cap` events per node ring.
+    pub fn new(cap: usize) -> Self {
+        Self {
+            enabled: true,
+            cap: cap.max(1),
+            rings: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// A recorder whose handles record nothing (a single branch on
+    /// the hot path, zero allocations).
+    pub fn disabled() -> Self {
+        Self {
+            enabled: false,
+            cap: 1,
+            rings: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Handle for `node`. Re-requesting a node's handle (e.g. after a
+    /// crash-restart in the sim) reattaches to the same ring so the
+    /// pre-crash tail survives in the dump.
+    pub fn handle(&self, node: NodeId) -> TraceHandle {
+        if !self.enabled {
+            return TraceHandle::disabled(node);
+        }
+        let ring = self
+            .rings
+            .lock()
+            .unwrap()
+            .entry(node)
+            .or_insert_with(|| Arc::new(Mutex::new(TraceRing::new(self.cap))))
+            .clone();
+        TraceHandle {
+            enabled: true,
+            node,
+            ring: Some(ring),
+        }
+    }
+
+    /// Total events currently held across all rings.
+    pub fn event_count(&self) -> usize {
+        self.rings
+            .lock()
+            .unwrap()
+            .values()
+            .map(|r| r.lock().unwrap().len())
+            .sum()
+    }
+
+    /// Lifetime overwritten events across all rings.
+    pub fn dropped_total(&self) -> u64 {
+        self.rings
+            .lock()
+            .unwrap()
+            .values()
+            .map(|r| r.lock().unwrap().dropped())
+            .sum()
+    }
+
+    /// Render the Chrome `trace_event` JSON dump: one instant event
+    /// per recorded [`TraceEvent`], `ts` in microseconds, `tid` = node
+    /// id, rings in ascending node order, each oldest → newest.
+    /// `counters` lands in `otherData` as an end-of-run snapshot.
+    pub fn chrome_trace_json(&self, counters: &[(&str, u64)]) -> String {
+        let mut w = JsonWriter::new();
+        w.obj();
+        w.arr_field("traceEvents");
+        let rings = self.rings.lock().unwrap();
+        for (node, ring) in rings.iter() {
+            let ring = ring.lock().unwrap();
+            for ev in ring.iter() {
+                w.obj()
+                    .str_field("name", ev.kind.name())
+                    .str_field("ph", "i")
+                    .str_field("s", "t")
+                    .u64_field("ts", ev.t.saturating_mul(1000))
+                    .u64_field("pid", 0)
+                    .u64_field("tid", *node as u64)
+                    .obj_field("args")
+                    .u64_field("span", ev.span_id)
+                    .u64_field("detail", ev.detail)
+                    .u64_field("aux", ev.aux)
+                    .end_obj()
+                    .end_obj();
+            }
+        }
+        drop(rings);
+        w.end_arr();
+        w.str_field("displayTimeUnit", "ms");
+        w.obj_field("otherData");
+        w.str_field("schema", "holon-trace/v1");
+        w.u64_field("dropped_events", self.dropped_total());
+        for (k, v) in counters {
+            w.u64_field(k, *v);
+        }
+        w.end_obj();
+        w.end_obj();
+        w.finish()
+    }
+}
+
+/// A node's recording endpoint. Clone-cheap; safe to thread through
+/// hot paths — `record` is a branch when disabled.
+#[derive(Debug, Clone)]
+pub struct TraceHandle {
+    enabled: bool,
+    node: NodeId,
+    ring: Option<Arc<Mutex<TraceRing>>>,
+}
+
+impl TraceHandle {
+    /// A handle that records nothing — the default for code paths
+    /// (unit tests, benches) that don't wire a recorder.
+    pub fn disabled(node: NodeId) -> Self {
+        Self {
+            enabled: false,
+            node,
+            ring: None,
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record one event. Disabled: a single branch. Enabled: one
+    /// uncontended lock + `Copy` store into the pre-allocated ring —
+    /// never allocates.
+    #[inline]
+    pub fn record(&self, t: SimTime, kind: TraceKind, span_id: u64, detail: u64, aux: u64) {
+        if !self.enabled {
+            return;
+        }
+        if let Some(ring) = &self.ring {
+            ring.lock().unwrap().push(TraceEvent {
+                t,
+                node: self.node,
+                kind,
+                span_id,
+                detail,
+                aux,
+            });
+        }
+    }
+
+    /// Drain the ring's overwrite count since the last call — the
+    /// node loop mirrors this into the `trace_dropped_events` metric.
+    pub fn take_dropped(&self) -> u64 {
+        match &self.ring {
+            Some(ring) => ring.lock().unwrap().take_dropped(),
+            None => 0,
+        }
+    }
+}
+
+/// Feed a seeded, scripted event stream into `tracer` — the
+/// deterministic stand-in for a cluster run used by the byte-identity
+/// test (the layer the same-seed ⇒ same-dump guarantee is pinned at).
+/// Returns the event count.
+pub fn scripted_events(tracer: &Tracer, seed: u64, events: usize, nodes: u32) -> usize {
+    use crate::util::XorShift64;
+    const KINDS: [TraceKind; 8] = [
+        TraceKind::WindowOpened,
+        TraceKind::DeltaMerged,
+        TraceKind::WatermarkAdvanced,
+        TraceKind::WindowFired,
+        TraceKind::WindowConverged,
+        TraceKind::WindowEmitted,
+        TraceKind::GossipRound,
+        TraceKind::PeerFlush,
+    ];
+    let mut rng = XorShift64::new(seed);
+    let nodes = nodes.max(1);
+    let handles: Vec<TraceHandle> = (0..nodes).map(|n| tracer.handle(n)).collect();
+    let mut t: SimTime = 0;
+    for _ in 0..events {
+        t += rng.next_u64() % 7;
+        let h = &handles[(rng.next_u64() % nodes as u64) as usize];
+        let kind = KINDS[(rng.next_u64() % KINDS.len() as u64) as usize];
+        let span = rng.next_u64() % 1000;
+        let detail = rng.next_u64() % 4096;
+        h.record(t, kind, span, detail, 0);
+    }
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_wraparound_keeps_newest_and_counts_drops() {
+        let tracer = Tracer::new(4);
+        let h = tracer.handle(0);
+        for i in 0..10u64 {
+            h.record(i, TraceKind::WindowFired, i, 0, 0);
+        }
+        let rings = tracer.rings.lock().unwrap();
+        let ring = rings[&0].lock().unwrap();
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.dropped(), 6);
+        let kept: Vec<u64> = ring.iter().map(|e| e.t).collect();
+        assert_eq!(kept, vec![6, 7, 8, 9], "oldest overwritten, newest kept, order preserved");
+        drop(ring);
+        drop(rings);
+        assert_eq!(tracer.dropped_total(), 6);
+        // the drain-for-metrics counter resets, the lifetime one doesn't
+        assert_eq!(h.take_dropped(), 6);
+        assert_eq!(h.take_dropped(), 0);
+        assert_eq!(tracer.dropped_total(), 6);
+    }
+
+    #[test]
+    fn same_seed_twice_yields_byte_identical_dumps() {
+        let mk = |seed: u64| {
+            let tracer = Tracer::new(256);
+            scripted_events(&tracer, seed, 1000, 3);
+            tracer.chrome_trace_json(&[("processed", 42)])
+        };
+        let a = mk(0xD00D);
+        let b = mk(0xD00D);
+        assert_eq!(a, b, "same seed must give byte-identical dumps");
+        assert!(a.contains("\"traceEvents\""));
+        assert!(a.contains("\"schema\":\"holon-trace/v1\""));
+        assert!(a.contains("\"dropped_events\":"));
+        let c = mk(0xBEEF);
+        assert_ne!(a, c, "different seeds should differ");
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let tracer = Tracer::disabled();
+        let h = tracer.handle(7);
+        assert!(!h.enabled());
+        h.record(1, TraceKind::GossipRound, 1, 1, 1);
+        assert_eq!(tracer.event_count(), 0);
+        assert_eq!(tracer.dropped_total(), 0);
+        assert_eq!(h.take_dropped(), 0);
+        // and its dump is still a valid empty document
+        let dump = tracer.chrome_trace_json(&[]);
+        assert!(dump.contains("\"traceEvents\":[]"));
+    }
+
+    #[test]
+    fn handle_reattaches_to_existing_ring() {
+        let tracer = Tracer::new(16);
+        let h1 = tracer.handle(3);
+        h1.record(1, TraceKind::StealStart, 0, 0, 0);
+        // crash-restart: a fresh handle for the same node sees the ring
+        let h2 = tracer.handle(3);
+        h2.record(2, TraceKind::CheckpointRestore, 0, 0, 0);
+        assert_eq!(tracer.event_count(), 2);
+    }
+
+    #[test]
+    fn kind_names_are_unique() {
+        let all = [
+            TraceKind::WindowOpened,
+            TraceKind::DeltaMerged,
+            TraceKind::MergeNoop,
+            TraceKind::WatermarkAdvanced,
+            TraceKind::WindowFired,
+            TraceKind::WindowConverged,
+            TraceKind::WindowEmitted,
+            TraceKind::SinkDeduped,
+            TraceKind::GossipRound,
+            TraceKind::GossipSkipped,
+            TraceKind::PeerFlush,
+            TraceKind::StealStart,
+            TraceKind::CheckpointRestore,
+            TraceKind::FirstOutput,
+            TraceKind::Checkpoint,
+            TraceKind::Backpressure,
+        ];
+        let names: std::collections::BTreeSet<&str> = all.iter().map(|k| k.name()).collect();
+        assert_eq!(names.len(), all.len());
+    }
+}

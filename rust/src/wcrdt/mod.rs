@@ -30,11 +30,38 @@ pub use watermark::WatermarkGen;
 pub use window::{WindowAssigner, WindowId};
 pub use wlocal::{Local, WLocal};
 
+use std::cell::Cell;
 use std::collections::BTreeMap;
 
 use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
 use crate::crdt::{Crdt, MergeOutcome};
 use crate::util::{PartitionId, SimTime};
+
+thread_local! {
+    /// `(count, oldest wid, newest wid)` of windows newly materialised
+    /// by *local* inserts on this thread since the last drain. Windows
+    /// learned through merge/gossip are not "opened" here — the peer
+    /// that first saw data for them already recorded the open.
+    static WINDOW_OPENS: Cell<(u64, WindowId, WindowId)> =
+        const { Cell::new((0, WindowId::MAX, 0)) };
+}
+
+fn note_window_open(wid: WindowId) {
+    WINDOW_OPENS.with(|c| {
+        let (n, lo, hi) = c.get();
+        c.set((n + 1, lo.min(wid), hi.max(wid)));
+    });
+}
+
+/// Drain this thread's window-open record (accumulated across every
+/// [`WindowedCrdt`] the thread touched): `(count, oldest wid, newest
+/// wid)`, with `count == 0` meaning nothing opened. The node loop
+/// drains this once per iteration into a single `window_opened`
+/// flight-recorder event — the same thread-local-drain idiom as
+/// [`ring::take_ring_spills`].
+pub fn take_window_opens() -> (u64, WindowId, WindowId) {
+    WINDOW_OPENS.with(|c| c.replace((0, WindowId::MAX, 0)))
+}
 
 /// Errors from WCRDT operations.
 #[derive(Debug, thiserror::Error, PartialEq, Eq)]
@@ -144,7 +171,11 @@ impl<C: Crdt> WindowedCrdt<C> {
         }
         let wid = self.assigner.window_of(ts);
         debug_assert!(wid >= self.compacted_below, "insert into compacted window");
+        let before = self.windows.len();
         f(self.windows.entry_or_insert_with(wid, C::default));
+        if self.windows.len() > before {
+            note_window_open(wid);
+        }
         self.dirty.insert(wid);
         Ok(())
     }
@@ -168,7 +199,11 @@ impl<C: Crdt> WindowedCrdt<C> {
         if wid < self.assigner.window_of(own) {
             return false;
         }
+        let before = self.windows.len();
         f(self.windows.entry_or_insert_with(wid, C::default));
+        if self.windows.len() > before {
+            note_window_open(wid);
+        }
         self.dirty.insert(wid);
         true
     }
@@ -478,6 +513,26 @@ mod tests {
 
     fn wcrdt(parts: &[PartitionId]) -> WindowedCrdt<GCounter> {
         WindowedCrdt::new(WindowAssigner::tumbling(1000), parts.iter().copied())
+    }
+
+    /// Only *first local contributions* count as window opens — repeat
+    /// inserts into a live window and windows learned via merge do not
+    /// — and the thread-local drain resets.
+    #[test]
+    fn window_opens_drain_counts_first_local_contributions() {
+        let _ = take_window_opens(); // isolate from other tests on this thread
+        let mut w = wcrdt(&[0, 1]);
+        w.insert_with(0, 100, |c| c.add(0, 1)).unwrap(); // opens wid 0
+        w.insert_with(0, 200, |c| c.add(0, 1)).unwrap(); // same window: no open
+        w.insert_with(0, 2500, |c| c.add(0, 1)).unwrap(); // opens wid 2
+        assert_eq!(take_window_opens(), (2, 0, 2));
+        assert_eq!(take_window_opens(), (0, WindowId::MAX, 0), "drain resets");
+        // windows arriving through merge are the peer's opens, not ours
+        let mut other = wcrdt(&[0, 1]);
+        other.insert_with(1, 5500, |c| c.add(1, 1)).unwrap();
+        let _ = take_window_opens();
+        let _ = w.merge(&other);
+        assert_eq!(take_window_opens().0, 0);
     }
 
     #[test]

@@ -96,6 +96,7 @@ fn assert_dedup_invariant(cluster: &HolonCluster<Query1>, cfg: &HolonConfig) {
         deduped,
         replicas: Default::default(),
         steals: 0,
+        trace_json: None,
     };
     if let Err(f) = check_exactly_once(&artifacts) {
         panic!("dedup invariant violated: {f}");

@@ -105,6 +105,17 @@ fn oracles_catch_injected_dedup_bug() {
     assert!(failure.repro.contains("HOLON_SIM_PLAN="));
     let reparsed = FaultPlan::parse(&failure.shrunk_plan.to_plan_string()).unwrap();
     assert_eq!(reparsed, failure.shrunk_plan);
+    // every falsification ships with a flight-recorder dump of the
+    // shrunk schedule, and the failure report names its path
+    let dump = failure
+        .trace_dump
+        .as_deref()
+        .expect("oracle failure must write a trace dump");
+    assert_eq!(dump, &format!("holon-trace-dump-seed{}.json", spec.seed));
+    let json = std::fs::read_to_string(dump).expect("dump file exists");
+    assert!(json.contains("\"traceEvents\""), "not a Chrome trace: {json:.40}");
+    assert!(format!("{failure}").contains(dump), "report must name the dump");
+    let _ = std::fs::remove_file(dump);
     eprintln!("caught: {failure}");
 }
 

@@ -1,0 +1,622 @@
+"""Tests for holon-lint, the determinism/exactly-once static analyzer.
+
+Two layers:
+
+* fixture repos built under ``tmp_path`` exercising each rule's
+  positive/negative space, the scrubber, and the waiver machinery;
+* a meta-test asserting the *real* tree lints clean under ``--strict``
+  — the same invocation the CI ``lint-smoke`` job runs.
+"""
+
+import importlib.util
+import json
+import pathlib
+import sys
+import textwrap
+
+_spec = importlib.util.spec_from_file_location(
+    "holon_lint",
+    pathlib.Path(__file__).resolve().parents[1] / "tools" / "holon_lint.py",
+)
+hl = importlib.util.module_from_spec(_spec)
+# dataclass field resolution needs the module visible in sys.modules
+# while the body executes (PEP 563 deferred annotations)
+sys.modules["holon_lint"] = hl
+_spec.loader.exec_module(hl)
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[2]
+
+
+# ---------------------------------------------------------------------------
+# fixture helpers
+# ---------------------------------------------------------------------------
+
+
+def repo(tmp_path, files):
+    """Build a throwaway repo: {relpath: source} -> root path."""
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return tmp_path
+
+
+def lint(tmp_path, files):
+    return hl.run_lint(repo(tmp_path, files))
+
+
+def rules_of(report):
+    return sorted(f.rule for f in report.unwaived)
+
+
+# ---------------------------------------------------------------------------
+# scrubber
+# ---------------------------------------------------------------------------
+
+
+class TestScrub:
+    def test_offsets_are_preserved(self):
+        src = 'let a = "x";\nlet b = 1; // trailing\n'
+        code, _ = hl.scrub(src)
+        assert len(code) == len(src)
+        assert code.count("\n") == src.count("\n")
+
+    def test_line_comment_collected_and_blanked(self):
+        code, comments = hl.scrub("let a = 1; // HashMap here\nlet b = 2;\n")
+        assert "HashMap" not in code
+        assert comments == [(0, " HashMap here")]
+
+    def test_nested_block_comments(self):
+        code, _ = hl.scrub("/* outer /* inner */ still comment */ fn f() {}")
+        assert "inner" not in code
+        assert "still" not in code
+        assert "fn f()" in code
+
+    def test_escaped_quote_in_string(self):
+        code, _ = hl.scrub(r'let s = "a\"HashMap\""; let t = 1;')
+        assert "HashMap" not in code
+        assert "let t = 1;" in code
+
+    def test_raw_string_with_hashes(self):
+        code, _ = hl.scrub('let s = r#"Instant "quoted" inside"#; let t = 1;')
+        assert "Instant" not in code
+        assert "let t = 1;" in code
+
+    def test_char_literal_vs_lifetime(self):
+        src = "fn f<'a>(x: &'a str) { let c = '\"'; let d = 1; }"
+        code, _ = hl.scrub(src)
+        # the lifetime survives, the char literal is blanked, and the
+        # quote inside it did not open a string that eats the rest
+        assert "'a str" in code
+        assert "let d = 1;" in code
+
+    def test_trigger_tokens_in_strings_do_not_flag(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {
+                "rust/src/crdt/x.rs": '''
+                pub fn f() -> &'static str {
+                    "HashMap and Instant and .lock().unwrap()"
+                }
+                '''
+            },
+        )
+        assert rep.unwaived == []
+
+    def test_match_brace(self):
+        code = "fn f() { if x { y } else { z } } fn g() {}"
+        end = hl.match_brace(code, code.index("{"))
+        assert code[:end].endswith("{ z } }")
+
+
+# ---------------------------------------------------------------------------
+# D1 hash-on-wire
+# ---------------------------------------------------------------------------
+
+
+class TestHashOnWire:
+    def test_flags_in_encode_path_module(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {"rust/src/crdt/c.rs": "use std::collections::HashMap;\n"},
+        )
+        assert rules_of(rep) == ["hash-on-wire"]
+        assert rep.unwaived[0].line == 1
+
+    def test_silent_outside_classified_modules(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {"rust/src/util/mod.rs": "use std::collections::HashMap;\n"},
+        )
+        assert rep.unwaived == []
+
+    def test_classified_single_files(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {
+                "rust/src/codec.rs": "use std::collections::HashSet;\n",
+                "rust/src/query/index.rs": "use std::collections::HashMap;\n",
+            },
+        )
+        assert rules_of(rep) == ["hash-on-wire", "hash-on-wire"]
+
+    def test_test_region_is_exempt(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {
+                "rust/src/crdt/c.rs": """
+                pub fn f() {}
+                #[cfg(test)]
+                mod tests {
+                    use std::collections::HashMap;
+                }
+                """
+            },
+        )
+        assert rep.unwaived == []
+
+
+# ---------------------------------------------------------------------------
+# D2 wall-clock
+# ---------------------------------------------------------------------------
+
+
+class TestWallClock:
+    def test_flags_instant_and_thread_rng(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {
+                "rust/src/engine/mod.rs": """
+                use std::time::Instant;
+                pub fn f() { let _r = thread_rng(); }
+                """
+            },
+        )
+        assert rules_of(rep) == ["wall-clock", "wall-clock"]
+
+    def test_clock_and_benchkit_and_trace_exempt(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {
+                "rust/src/clock.rs": "use std::time::Instant;\n",
+                "rust/src/benchkit.rs": "use std::time::Instant;\n",
+                "rust/src/trace/mod.rs": "use std::time::SystemTime;\n",
+            },
+        )
+        assert rep.unwaived == []
+
+    def test_flags_even_in_tests(self, tmp_path):
+        # wall time in a test is still a determinism leak (seeded replay)
+        rep = lint(
+            tmp_path,
+            {
+                "rust/src/net/mod.rs": """
+                #[cfg(test)]
+                mod tests {
+                    use std::time::SystemTime;
+                }
+                """
+            },
+        )
+        assert rules_of(rep) == ["wall-clock"]
+
+
+# ---------------------------------------------------------------------------
+# D3 discarded-merge
+# ---------------------------------------------------------------------------
+
+
+class TestDiscardedMerge:
+    def test_flags_discarded_merge(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {"rust/src/util/x.rs": "fn f() { let _ = a.merge(&b); }\n"},
+        )
+        assert rules_of(rep) == ["discarded-merge"]
+
+    def test_flags_multiline_statement(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {
+                "rust/src/util/x.rs": """
+                fn f() {
+                    let _ = shared
+                        .join_delta_into(&mut other);
+                }
+                """
+            },
+        )
+        assert rules_of(rep) == ["discarded-merge"]
+
+    def test_thread_join_is_not_a_lattice_join(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {"rust/src/util/x.rs": "fn f() { let _ = handle.join(); }\n"},
+        )
+        assert rep.unwaived == []
+
+    def test_bound_outcome_is_fine(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {"rust/src/util/x.rs": "fn f() { let out = a.merge(&b); use_(out); }\n"},
+        )
+        assert rep.unwaived == []
+
+    def test_take_delta_and_ingest_count(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {
+                "rust/src/util/x.rs": """
+                fn f() {
+                    let _ = s.take_delta();
+                    let _ = q.ingest(&wm);
+                }
+                """
+            },
+        )
+        assert rules_of(rep) == ["discarded-merge", "discarded-merge"]
+
+
+# ---------------------------------------------------------------------------
+# D4 float-crdt-field
+# ---------------------------------------------------------------------------
+
+
+class TestFloatCrdtField:
+    def test_flags_float_field_in_crdt_module(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {"rust/src/crdt/c.rs": "pub struct S { pub v: f64 }\n"},
+        )
+        assert rules_of(rep) == ["float-crdt-field"]
+
+    def test_impl_crdt_elsewhere_is_tracked(self, tmp_path):
+        # a Crdt impl outside crdt/ pulls its struct into scope for D4
+        rep = lint(
+            tmp_path,
+            {
+                "rust/src/query/agg.rs": """
+                pub struct QAgg { pub v: f32 }
+                impl Crdt for QAgg {}
+                """
+            },
+        )
+        assert rules_of(rep) == ["float-crdt-field"]
+
+    def test_non_crdt_struct_outside_modules_ignored(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {"rust/src/metrics/mod.rs": "pub struct Gauge { pub v: f64 }\n"},
+        )
+        assert rep.unwaived == []
+
+    def test_tuple_struct_payload(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {"rust/src/wcrdt/c.rs": "pub struct W(pub f64);\n"},
+        )
+        assert rules_of(rep) == ["float-crdt-field"]
+
+
+# ---------------------------------------------------------------------------
+# A1 zero-alloc
+# ---------------------------------------------------------------------------
+
+
+class TestZeroAlloc:
+    def test_flags_allocations_in_annotated_fn(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {
+                "rust/src/util/x.rs": """
+                // lint: zero-alloc
+                fn hot() {
+                    let v = vec![1, 2];
+                    let s = format!("{v:?}");
+                }
+                fn cold() { let _v = Vec::<u8>::new(); }
+                """
+            },
+        )
+        # only the annotated fn is policed; `cold` allocates freely
+        assert rules_of(rep) == ["zero-alloc", "zero-alloc"]
+        labels = sorted(f.message.split("`")[1] for f in rep.unwaived)
+        assert labels == ["format!", "vec!"]
+
+    def test_clean_annotated_fn(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {
+                "rust/src/util/x.rs": """
+                // lint: zero-alloc
+                #[inline]
+                fn hot(buf: &mut [u8]) { buf[0] = 1; }
+                """
+            },
+        )
+        assert rep.unwaived == []
+        assert rep.problems == []
+
+    def test_dangling_annotation_is_a_problem(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {"rust/src/util/x.rs": "// lint: zero-alloc\nconst X: u8 = 1;\n"},
+        )
+        assert [p.kind for p in rep.problems] == ["dangling-zero-alloc"]
+
+
+# ---------------------------------------------------------------------------
+# S1 lock-unwrap
+# ---------------------------------------------------------------------------
+
+
+class TestLockUnwrap:
+    def test_flags_in_data_plane_module(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {"rust/src/engine/mod.rs": "fn f() { m.lock().unwrap(); }\n"},
+        )
+        assert rules_of(rep) == ["lock-unwrap"]
+
+    def test_flags_formatted_multiline_chain(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {
+                "rust/src/net/mod.rs": """
+                fn f() {
+                    let g = m
+                        .lock()
+                        .unwrap();
+                }
+                """
+            },
+        )
+        assert rules_of(rep) == ["lock-unwrap"]
+
+    def test_test_region_exempt_and_util_unclassified(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {
+                "rust/src/util/mod.rs": "fn f() { m.lock().unwrap(); }\n",
+                "rust/src/engine/node.rs": """
+                #[cfg(test)]
+                mod tests {
+                    fn f() { m.lock().unwrap(); }
+                }
+                """,
+            },
+        )
+        assert rep.unwaived == []
+
+
+# ---------------------------------------------------------------------------
+# waivers
+# ---------------------------------------------------------------------------
+
+
+class TestWaivers:
+    def test_trailing_inline_waiver(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {
+                "rust/src/crdt/c.rs": (
+                    "use std::collections::HashMap; "
+                    "// lint:allow(hash-on-wire): sorted before emit\n"
+                )
+            },
+        )
+        assert rep.unwaived == []
+        assert rep.stale_waivers == []
+        assert [f.waived for f in rep.findings] == [True]
+
+    def test_standalone_waiver_binds_next_code_line(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {
+                "rust/src/crdt/c.rs": """
+                // lint:allow(discarded-merge): fold from bottom
+
+                fn f() { let _ = a.merge(&b); }
+                """
+            },
+        )
+        assert rep.unwaived == []
+        assert rep.stale_waivers == []
+
+    def test_waiver_does_not_leak_to_other_lines(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {
+                "rust/src/crdt/c.rs": """
+                fn f() {
+                    // lint:allow(discarded-merge): only this one
+                    let _ = a.merge(&b);
+                    let _ = c.merge(&d);
+                }
+                """
+            },
+        )
+        assert rules_of(rep) == ["discarded-merge"]
+
+    def test_missing_reason_is_an_error(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {
+                "rust/src/crdt/c.rs": (
+                    "use std::collections::HashMap; // lint:allow(hash-on-wire)\n"
+                )
+            },
+        )
+        assert [p.kind for p in rep.problems] == ["waiver-missing-reason"]
+        # the un-suppressed finding is still reported
+        assert rules_of(rep) == ["hash-on-wire"]
+
+    def test_unknown_rule_and_unknown_directive(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {
+                "rust/src/crdt/c.rs": """
+                // lint:allow(no-such-rule): reason
+                // lint: frobnicate
+                pub fn f() {}
+                """
+            },
+        )
+        assert sorted(p.kind for p in rep.problems) == [
+            "unknown-directive",
+            "unknown-rule",
+        ]
+
+    def test_doc_comments_cannot_carry_directives(self, tmp_path):
+        # `//! lint:allow...` starts with `!`, not whitespace, so the
+        # directive regex must not fire — doc text stays inert
+        rep = lint(
+            tmp_path,
+            {
+                "rust/src/crdt/c.rs": """
+                //! lint:allow(hash-on-wire): doc text, not a directive
+                use std::collections::HashMap;
+                """
+            },
+        )
+        assert rules_of(rep) == ["hash-on-wire"]
+
+    def test_allow_tests_scope(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {
+                "rust/src/crdt/c.rs": """
+                fn prod() { let _ = a.merge(&b); }
+                // lint:allow-tests(discarded-merge): asserted on state
+                #[cfg(test)]
+                mod tests {
+                    fn t() { let _ = a.merge(&b); }
+                }
+                """
+            },
+        )
+        # the production discard is NOT covered by the tests-scope waiver
+        assert rules_of(rep) == ["discarded-merge"]
+        assert rep.stale_waivers == []
+
+    def test_allow_file_scope(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {
+                "rust/tests/props.rs": """
+                // lint:allow-file(discarded-merge): bytes are the oracle
+                fn a() { let _ = x.merge(&y); }
+                fn b() { let _ = y.merge(&x); }
+                """
+            },
+        )
+        assert rep.unwaived == []
+        assert rep.stale_waivers == []
+
+    def test_integration_tests_dir_is_all_test_scope(self, tmp_path):
+        # rust/tests/* files are test code wholesale: allow-tests covers them
+        rep = lint(
+            tmp_path,
+            {
+                "rust/tests/props.rs": """
+                // lint:allow-tests(discarded-merge): law checks
+                fn a() { let _ = x.merge(&y); }
+                """
+            },
+        )
+        assert rep.unwaived == []
+
+    def test_stale_waiver_detected(self, tmp_path):
+        rep = lint(
+            tmp_path,
+            {
+                "rust/src/crdt/c.rs": (
+                    "pub fn f() {} // lint:allow(hash-on-wire): nothing here\n"
+                )
+            },
+        )
+        assert len(rep.stale_waivers) == 1
+        assert rep.stale_waivers[0].rule == "hash-on-wire"
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+class TestCli:
+    def test_exit_codes(self, tmp_path, capsys):
+        root = repo(
+            tmp_path,
+            {"rust/src/crdt/c.rs": "use std::collections::HashMap;\n"},
+        )
+        assert hl.main(["--root", str(root)]) == 1
+        out = capsys.readouterr().out
+        assert "[hash-on-wire]" in out
+        assert "hint:" in out
+
+    def test_clean_tree_exits_zero(self, tmp_path):
+        root = repo(tmp_path, {"rust/src/crdt/c.rs": "pub fn f() {}\n"})
+        assert hl.main(["--root", str(root)]) == 0
+
+    def test_stale_waiver_fails_only_under_strict(self, tmp_path, capsys):
+        root = repo(
+            tmp_path,
+            {
+                "rust/src/crdt/c.rs": (
+                    "pub fn f() {} // lint:allow(hash-on-wire): stale\n"
+                )
+            },
+        )
+        assert hl.main(["--root", str(root)]) == 0
+        assert hl.main(["--root", str(root), "--strict"]) == 1
+        assert "stale-waiver" in capsys.readouterr().out
+
+    def test_json_output(self, tmp_path, capsys):
+        root = repo(
+            tmp_path,
+            {"rust/src/crdt/c.rs": "use std::collections::HashMap;\n"},
+        )
+        assert hl.main(["--root", str(root), "--json"]) == 1
+        doc = json.loads(capsys.readouterr().out)
+        assert doc["files_scanned"] == 1
+        assert [f["rule"] for f in doc["findings"]] == ["hash-on-wire"]
+
+    def test_missing_tree_is_usage_error(self, tmp_path):
+        assert hl.main(["--root", str(tmp_path)]) == 2
+
+    def test_list_rules(self, capsys):
+        assert hl.main(["--list-rules"]) == 0
+        out = capsys.readouterr().out
+        for rid in hl.RULES:
+            assert rid in out
+
+
+# ---------------------------------------------------------------------------
+# the real tree
+# ---------------------------------------------------------------------------
+
+
+class TestRealTree:
+    def test_repo_lints_clean_under_strict(self):
+        rep = hl.run_lint(REPO_ROOT)
+        assert rep.problems == [], [p.message for p in rep.problems]
+        assert rep.unwaived == [], [
+            f"{f.rel}:{f.line} [{f.rule}]" for f in rep.unwaived
+        ]
+        assert rep.stale_waivers == [], [
+            f"{w.rel}:{w.line} [{w.rule}]" for w in rep.stale_waivers
+        ]
+
+    def test_scans_the_whole_tree_quickly(self):
+        rep = hl.run_lint(REPO_ROOT)
+        assert rep.files_scanned > 50
+        assert rep.elapsed_ms < 2000
+
+    def test_known_waivers_are_live(self):
+        # spot-check the paper-motivated waivers stay attached to code
+        rep = hl.run_lint(REPO_ROOT)
+        used = {(w.rel, w.rule) for w in rep.waivers if w.used}
+        assert ("rust/src/crdt/agg.rs", "float-crdt-field") in used
+        assert ("rust/src/api/mod.rs", "hash-on-wire") in used
+        assert ("rust/src/crdt/mod.rs", "discarded-merge") in used

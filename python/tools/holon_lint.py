@@ -1,0 +1,842 @@
+#!/usr/bin/env python3
+"""holon-lint — determinism & exactly-once static analysis for the Rust tree.
+
+Every guarantee this repo reproduces from the paper (deterministic
+replay, byte-identical cross-replica outputs, exactly-once under
+failure) rests on *source-level* disciplines that the runtime
+differential suites assume but cannot themselves enforce:
+
+  hash-on-wire      (D1)  no ``HashMap``/``HashSet`` in modules whose
+                          iteration order can reach the wire (gossip /
+                          checkpoint / emit encode paths). Unordered
+                          iteration is the classic nondeterminism leak in
+                          stream processors that *intend* to be
+                          deterministic — ``BTreeMap`` / ``WindowRing`` /
+                          sort-before-emit only.
+  wall-clock        (D2)  no ``SystemTime`` / ``Instant`` / ambient RNG
+                          outside the allowlisted wall-clock modules
+                          (clock.rs, benchkit.rs, trace/). All data-plane
+                          time flows through ``SimClock``; all randomness
+                          through seeded ``util::XorShift64``.
+  discarded-merge   (D3)  no ``let _ = …merge/join/take_delta…``: the
+                          trait-v3 contract is that every join reports
+                          its effect (``MergeOutcome``); silently
+                          discarding it hides divergence and breaks the
+                          dirty-marking discipline delta gossip relies on.
+  float-crdt-field  (D4)  no raw ``f32``/``f64`` fields in CRDT state
+                          structs — float addition is not associative, so
+                          merge order would leak into converged values.
+                          Use ``util::OrdF64`` (total order, join = max)
+                          or a documented prefix discipline (waived).
+  zero-alloc        (A1)  functions annotated ``// lint: zero-alloc``
+                          (arena emit path, WindowRing in-horizon touch,
+                          TraceHandle::record, gossip encode) must not
+                          contain allocating constructs (``Vec::new``,
+                          ``vec!``, ``format!``, ``to_vec``, ``Box::new``,
+                          …) — the static twin of the counting
+                          ``#[global_allocator]`` in micro_hotpath.
+  lock-unwrap       (S1)  no bare ``.lock().unwrap()`` in data-plane
+                          modules: a poisoned mutex cascades the panic
+                          across every in-process node, turning one
+                          partition's bug into a cluster-wide abort the
+                          exactly-once recovery machinery never gets to
+                          handle. Use ``util::LockExt::plane_lock()``.
+
+Waivers
+-------
+Findings are suppressed by an inline comment carrying a mandatory
+reason, one of::
+
+    x.lock().unwrap();           // lint:allow(lock-unwrap): <reason>
+    // lint:allow(lock-unwrap): <reason>   (applies to the next code line)
+
+or, at file granularity (place anywhere in the file, conventionally at
+the top)::
+
+    // lint:allow-file(<rule>): <reason>    whole file
+    // lint:allow-tests(<rule>): <reason>   #[cfg(test)] regions only
+
+A waiver that no longer suppresses anything is *stale* and fails the run
+under ``--strict`` — the waiver set can only shrink. A waiver without a
+reason is always an error.
+
+Usage
+-----
+    python3 python/tools/holon_lint.py [--root DIR] [--strict] [--json]
+    python3 python/tools/holon_lint.py --list-rules
+
+Exit codes: 0 clean; 1 findings / directive errors (plus stale waivers
+under ``--strict``); 2 usage error. Stdlib-only by design: this is the
+one correctness gate that executes even in containers without a cargo
+toolchain (see EXPERIMENTS.md, "Static analysis").
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import re
+import sys
+import time
+
+# ---------------------------------------------------------------------------
+# Rule registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    paper_tag: str
+    summary: str
+    hint: str
+
+
+RULES = {
+    r.id: r
+    for r in [
+        Rule(
+            "hash-on-wire",
+            "D1",
+            "HashMap/HashSet in an encode-path module (iteration order can "
+            "reach the wire)",
+            "use BTreeMap/BTreeSet or WindowRing; if every order-dependent "
+            "read is sorted before leaving the function, waive with that "
+            "proof as the reason",
+        ),
+        Rule(
+            "wall-clock",
+            "D2",
+            "wall-clock or ambient randomness outside the allowlisted clock "
+            "modules",
+            "route time through SimClock and randomness through a seeded "
+            "util::XorShift64 (seeds derive from the sim plan)",
+        ),
+        Rule(
+            "discarded-merge",
+            "D3",
+            "MergeOutcome discarded via `let _ = ...`",
+            "consume the outcome (ClusterMetrics::note_join where a metrics "
+            "handle is in scope) or waive with the reason the outcome is "
+            "irrelevant at this site",
+        ),
+        Rule(
+            "float-crdt-field",
+            "D4",
+            "raw f32/f64 field in CRDT state (float merges are not "
+            "associative)",
+            "store util::OrdF64 (total order) or integer-scaled values, or "
+            "waive with the algebraic argument (e.g. prefix discipline: "
+            "join never adds floats)",
+        ),
+        Rule(
+            "zero-alloc",
+            "A1",
+            "allocating construct inside a `// lint: zero-alloc` function",
+            "hoist the allocation to a setup/recycle path (arena, ring, "
+            "pre-sized buffer); the counting allocator in micro_hotpath is "
+            "the runtime ground truth for transitive callees",
+        ),
+        Rule(
+            "lock-unwrap",
+            "S1",
+            "bare .lock().unwrap() in a data-plane module (poison-abort "
+            "cascade hazard)",
+            "use util::LockExt::plane_lock() — recovers the poisoned guard; "
+            "CRDT state is monotone, so a torn update is re-converged by "
+            "the next merge instead of aborting every in-process node",
+        ),
+    ]
+}
+
+DEFAULT_ROOTS = ("rust/src", "rust/tests", "rust/benches")
+
+# Module classification (paths are repo-relative, posix separators).
+D1_PREFIXES = (
+    "rust/src/crdt/",
+    "rust/src/wcrdt/",
+    "rust/src/shard/",
+    "rust/src/net/",
+    "rust/src/api/",
+    "rust/src/engine/",
+    "rust/src/storage/",
+)
+D1_FILES = ("rust/src/codec.rs", "rust/src/arena.rs", "rust/src/query/index.rs")
+
+D2_EXEMPT_FILES = ("rust/src/clock.rs", "rust/src/benchkit.rs")
+D2_EXEMPT_PREFIXES = ("rust/src/trace/",)
+
+S1_PREFIXES = (
+    "rust/src/engine/",
+    "rust/src/net/",
+    "rust/src/query/",
+    "rust/src/trace/",
+    "rust/src/log/",
+    "rust/src/storage/",
+    "rust/src/metrics/",
+    "rust/src/crdt/",
+    "rust/src/wcrdt/",
+    "rust/src/shard/",
+    "rust/src/api/",
+    "rust/src/runtime/",
+)
+S1_FILES = ("rust/src/arena.rs", "rust/src/codec.rs")
+
+D4_PREFIXES = ("rust/src/crdt/", "rust/src/wcrdt/", "rust/src/shard/")
+
+# ---------------------------------------------------------------------------
+# Rust source scrubbing (lightweight tokenizer)
+# ---------------------------------------------------------------------------
+
+_RAW_STR_RE = re.compile(r'b?r(#*)"')
+_CHAR_LIT_RE = re.compile(
+    r"'(?:\\(?:x[0-9a-fA-F]{2}|u\{[0-9a-fA-F_]{1,6}\}|.)|[^\\'\n])'"
+)
+_IDENT_CHARS = set("abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789_")
+
+
+def scrub(text: str):
+    """Blank comments, strings and char literals out of Rust source.
+
+    Returns ``(code, comments)`` where ``code`` is the same length as
+    ``text`` (newlines preserved, everything non-code replaced by
+    spaces) so offsets map 1:1, and ``comments`` is a list of
+    ``(line0, comment_text)`` for every ``//`` comment (text excludes
+    the slashes). Handles nested block comments, escaped quotes, raw
+    strings (``r"…"``/``r#"…"#``/``br"…"``) and the char-literal vs
+    lifetime ambiguity.
+    """
+    n = len(text)
+    out = list(text)
+    comments = []
+    i = 0
+    line = 0
+
+    def blank(a, b):
+        for k in range(a, b):
+            if out[k] != "\n":
+                out[k] = " "
+
+    while i < n:
+        c = text[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c == "/" and text.startswith("//", i):
+            j = text.find("\n", i)
+            if j == -1:
+                j = n
+            comments.append((line, text[i + 2 : j]))
+            blank(i, j)
+            i = j
+            continue
+        if c == "/" and text.startswith("/*", i):
+            depth = 1
+            j = i + 2
+            while j < n and depth:
+                if text.startswith("/*", j):
+                    depth += 1
+                    j += 2
+                elif text.startswith("*/", j):
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            blank(i, j)
+            line += text.count("\n", i, j)
+            i = j
+            continue
+        if c in "rb":
+            prev = text[i - 1] if i > 0 else " "
+            if prev not in _IDENT_CHARS:
+                m = _RAW_STR_RE.match(text, i)
+                if m:
+                    closer = '"' + "#" * len(m.group(1))
+                    j = text.find(closer, m.end())
+                    j = n if j == -1 else j + len(closer)
+                    blank(i, j)
+                    line += text.count("\n", i, j)
+                    i = j
+                    continue
+        if c == '"':
+            prev = text[i - 1] if i > 0 else " "
+            # b"..." byte strings: the 'b' is blanked as part of the code
+            # being a prefix is fine — we only start here at the quote.
+            j = i + 1
+            while j < n:
+                if text[j] == "\\":
+                    j += 2
+                    continue
+                if text[j] == '"':
+                    j += 1
+                    break
+                j += 1
+            blank(i, j)
+            line += text.count("\n", i, j)
+            i = j
+            continue
+        if c == "'":
+            m = _CHAR_LIT_RE.match(text, i)
+            if m:
+                blank(i, m.end())
+                i = m.end()
+                continue
+            # lifetime tick — leave in place, it is inert for every rule
+            i += 1
+            continue
+        i += 1
+    return "".join(out), comments
+
+
+def match_brace(code: str, open_idx: int) -> int:
+    """Offset one past the ``}`` matching the ``{`` at ``open_idx``
+    (``len(code)`` when unbalanced)."""
+    depth = 0
+    for j in range(open_idx, len(code)):
+        ch = code[j]
+        if ch == "{":
+            depth += 1
+        elif ch == "}":
+            depth -= 1
+            if depth == 0:
+                return j + 1
+    return len(code)
+
+
+# ---------------------------------------------------------------------------
+# Findings, waivers, directives
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    rel: str
+    line: int  # 1-based
+    message: str
+    waived: bool = False
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class Waiver:
+    rel: str
+    line: int  # 1-based, where the directive sits
+    scope: str  # "inline" | "file" | "tests"
+    rule: str
+    reason: str
+    target_line: int  # inline only: the code line it covers
+    used: bool = False
+
+
+@dataclasses.dataclass
+class Problem:
+    """Engine-level error: malformed/stale directives."""
+
+    rel: str
+    line: int
+    kind: str  # stale-waiver | waiver-missing-reason | unknown-rule |
+    #            unknown-directive | dangling-zero-alloc
+    message: str
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+_DIRECTIVE_RE = re.compile(r"^\s*lint\s*:\s*(.+?)\s*$")
+_ALLOW_RE = re.compile(
+    r"^allow(-file|-tests)?\s*\(\s*([A-Za-z0-9_-]+)\s*\)\s*(?::\s*(.*))?$"
+)
+
+
+class SourceFile:
+    def __init__(self, root: pathlib.Path, path: pathlib.Path):
+        self.path = path
+        self.rel = path.relative_to(root).as_posix()
+        self.raw = path.read_text(encoding="utf-8", errors="replace")
+        self.code, self.comments = scrub(self.raw)
+        # offset -> line lookup
+        self.line_starts = [0]
+        for m in re.finditer(r"\n", self.raw):
+            self.line_starts.append(m.end())
+        self.is_test_file = self.rel.startswith(("rust/tests/", "rust/benches/"))
+        self.test_regions = self._find_test_regions()
+        self.code_lines = self.code.split("\n")
+
+    def line_of(self, offset: int) -> int:
+        """1-based line number of a byte offset."""
+        import bisect
+
+        return bisect.bisect_right(self.line_starts, offset)
+
+    def _find_test_regions(self):
+        regions = []
+        for m in re.finditer(r"#\s*\[\s*cfg\s*\(\s*test\s*\)\s*\]", self.code):
+            open_idx = self.code.find("{", m.end())
+            if open_idx == -1:
+                continue
+            end = match_brace(self.code, open_idx)
+            regions.append((self.line_of(m.start()), self.line_of(end - 1)))
+        return regions
+
+    def in_test(self, line: int) -> bool:
+        if self.is_test_file:
+            return True
+        return any(a <= line <= b for a, b in self.test_regions)
+
+    def line_has_code(self, line: int) -> bool:
+        idx = line - 1
+        if idx < 0 or idx >= len(self.code_lines):
+            return False
+        return bool(self.code_lines[idx].strip())
+
+    def next_code_line(self, line: int) -> int:
+        """First line >= `line` with code on it (for standalone waivers)."""
+        j = line
+        while j <= len(self.code_lines) and not self.line_has_code(j):
+            j += 1
+        return j
+
+
+def parse_directives(sf: SourceFile, problems: list):
+    """Extract waivers and zero-alloc annotations from `//` comments."""
+    waivers = []
+    zero_alloc_lines = []  # 1-based directive lines
+    for line0, text in sf.comments:
+        dm = _DIRECTIVE_RE.match(text)
+        if not dm:
+            continue
+        body = dm.group(1)
+        line = line0 + 1
+        if body == "zero-alloc":
+            zero_alloc_lines.append(line)
+            continue
+        am = _ALLOW_RE.match(body)
+        if not am:
+            problems.append(
+                Problem(
+                    sf.rel,
+                    line,
+                    "unknown-directive",
+                    f"unrecognized lint directive `lint: {body}`",
+                )
+            )
+            continue
+        scope = {None: "inline", "-file": "file", "-tests": "tests"}[am.group(1)]
+        rule = am.group(2)
+        reason = (am.group(3) or "").strip()
+        if rule not in RULES:
+            problems.append(
+                Problem(
+                    sf.rel,
+                    line,
+                    "unknown-rule",
+                    f"waiver names unknown rule `{rule}` "
+                    f"(known: {', '.join(sorted(RULES))})",
+                )
+            )
+            continue
+        if not reason:
+            problems.append(
+                Problem(
+                    sf.rel,
+                    line,
+                    "waiver-missing-reason",
+                    f"waiver for `{rule}` carries no reason — the reason is "
+                    "mandatory",
+                )
+            )
+            continue
+        target = line if sf.line_has_code(line) else sf.next_code_line(line + 1)
+        waivers.append(Waiver(sf.rel, line, scope, rule, reason, target))
+    return waivers, zero_alloc_lines
+
+
+# ---------------------------------------------------------------------------
+# Rule checks
+# ---------------------------------------------------------------------------
+
+_HASH_RE = re.compile(r"\bHash(?:Map|Set)\b")
+_WALLCLOCK_RE = re.compile(
+    r"\b(SystemTime|Instant|thread_rng|from_entropy)\b|\brand\s*::\s*random\b"
+)
+_LET_DISCARD_RE = re.compile(r"\blet\s+_\s*=\s*")
+_MERGE_CALLEE_RE = re.compile(
+    r"\b(merge_report|merge_entry|join_delta_into|take_delta|ingest|merge|join)"
+    r"\s*\("
+)
+_LOCK_UNWRAP_RE = re.compile(r"\.\s*lock\s*\(\s*\)\s*\.\s*unwrap\s*\(\s*\)")
+_FLOAT_RE = re.compile(r"\b(f32|f64)\b")
+_STRUCT_RE = re.compile(r"\bstruct\s+(\w+)")
+_IMPL_CRDT_RE = re.compile(r"\bimpl\s*(?:<[^>]*>)?\s+(?:[\w:]+\s*::\s*)?Crdt\s+for\s+(\w+)")
+_FN_RE = re.compile(r"\bfn\s+(\w+)")
+_ALLOC_BANNED = [
+    (re.compile(r"\bVec\s*::\s*new\b"), "Vec::new"),
+    (re.compile(r"\bvec!\s*"), "vec!"),
+    (re.compile(r"\bformat!\s*"), "format!"),
+    (re.compile(r"\.\s*to_vec\s*\("), ".to_vec()"),
+    (re.compile(r"\bString\s*::\s*from\b"), "String::from"),
+    (re.compile(r"\bString\s*::\s*new\b"), "String::new"),
+    (re.compile(r"\bBox\s*::\s*new\b"), "Box::new"),
+    (re.compile(r"\.\s*to_string\s*\("), ".to_string()"),
+    (re.compile(r"\.\s*to_owned\s*\("), ".to_owned()"),
+]
+
+
+def _statement_end(code: str, start: int) -> int:
+    """Offset of the `;` ending the statement starting at `start`
+    (depth-aware for parens/brackets/braces in the expression)."""
+    depth = 0
+    for j in range(start, min(len(code), start + 4000)):
+        ch = code[j]
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == ";" and depth <= 0:
+            return j
+    return min(len(code), start + 4000)
+
+
+def check_hash_on_wire(sf: SourceFile, findings):
+    if not (sf.rel.startswith(D1_PREFIXES) or sf.rel in D1_FILES):
+        return
+    for m in _HASH_RE.finditer(sf.code):
+        line = sf.line_of(m.start())
+        if sf.in_test(line):
+            continue
+        findings.append(
+            Finding(
+                "hash-on-wire",
+                sf.rel,
+                line,
+                f"`{m.group(0)}` in encode-path module `{sf.rel}` — unordered "
+                "iteration here can reach the wire",
+            )
+        )
+
+
+def check_wall_clock(sf: SourceFile, findings):
+    if sf.rel in D2_EXEMPT_FILES or sf.rel.startswith(D2_EXEMPT_PREFIXES):
+        return
+    for m in _WALLCLOCK_RE.finditer(sf.code):
+        line = sf.line_of(m.start())
+        tok = m.group(0)
+        findings.append(
+            Finding(
+                "wall-clock",
+                sf.rel,
+                line,
+                f"`{tok}` outside the wall-clock allowlist — data-plane time "
+                "must flow through SimClock, randomness through seeded RNGs",
+            )
+        )
+
+
+def check_discarded_merge(sf: SourceFile, findings):
+    for m in _LET_DISCARD_RE.finditer(sf.code):
+        end = _statement_end(sf.code, m.end())
+        expr = sf.code[m.end() : end]
+        hit = None
+        for cm in _MERGE_CALLEE_RE.finditer(expr):
+            name = cm.group(1)
+            if name == "join":
+                # `handle.join()` (zero args) is a thread join, not a
+                # lattice join — only flag calls that pass an argument.
+                rest = expr[cm.end() :].lstrip()
+                if rest.startswith(")"):
+                    continue
+            hit = name
+            break
+        if hit is None:
+            continue
+        line = sf.line_of(m.start())
+        findings.append(
+            Finding(
+                "discarded-merge",
+                sf.rel,
+                line,
+                f"MergeOutcome of `{hit}` discarded by `let _ = …`",
+            )
+        )
+
+
+def check_lock_unwrap(sf: SourceFile, findings):
+    if not (sf.rel.startswith(S1_PREFIXES) or sf.rel in S1_FILES):
+        return
+    for m in _LOCK_UNWRAP_RE.finditer(sf.code):
+        line = sf.line_of(m.start())
+        if sf.in_test(line):
+            continue
+        findings.append(
+            Finding(
+                "lock-unwrap",
+                sf.rel,
+                line,
+                "bare `.lock().unwrap()` in a data-plane module — a poisoned "
+                "mutex cascades the panic across in-process nodes",
+            )
+        )
+
+
+def collect_crdt_impls(files) -> set:
+    types = set()
+    for sf in files:
+        for m in _IMPL_CRDT_RE.finditer(sf.code):
+            types.add(m.group(1))
+    return types
+
+
+def check_float_fields(sf: SourceFile, crdt_types: set, findings):
+    in_crdt_module = sf.rel.startswith(D4_PREFIXES)
+    if not sf.rel.startswith("rust/src/"):
+        return
+    for m in _STRUCT_RE.finditer(sf.code):
+        name = m.group(1)
+        line = sf.line_of(m.start())
+        if sf.in_test(line):
+            continue
+        if not in_crdt_module and name not in crdt_types:
+            continue
+        # find the struct body: first '{' before any ';' terminator
+        semi = sf.code.find(";", m.end())
+        brace = sf.code.find("{", m.end())
+        if brace == -1 or (semi != -1 and semi < brace):
+            # tuple/unit struct: scan the `(...)` payload if any
+            paren = sf.code.find("(", m.end())
+            if paren != -1 and (semi == -1 or paren < semi):
+                span = sf.code[paren : semi if semi != -1 else paren + 400]
+                fm = _FLOAT_RE.search(span)
+                if fm:
+                    findings.append(
+                        Finding(
+                            "float-crdt-field",
+                            sf.rel,
+                            sf.line_of(paren + fm.start()),
+                            f"raw `{fm.group(0)}` field in CRDT state struct "
+                            f"`{name}` — float merges are not associative",
+                        )
+                    )
+            continue
+        end = match_brace(sf.code, brace)
+        for fm in _FLOAT_RE.finditer(sf.code, brace, end):
+            findings.append(
+                Finding(
+                    "float-crdt-field",
+                    sf.rel,
+                    sf.line_of(fm.start()),
+                    f"raw `{fm.group(0)}` field in CRDT state struct `{name}` "
+                    "— float merges are not associative",
+                )
+            )
+
+
+def check_zero_alloc(sf: SourceFile, zero_alloc_lines, findings, problems):
+    for dline in zero_alloc_lines:
+        # the annotated fn starts on the first fn-bearing code line below
+        # the directive (attributes / doc comments may intervene)
+        start_off = sf.line_starts[dline - 1] if dline - 1 < len(sf.line_starts) else 0
+        fm = _FN_RE.search(sf.code, start_off)
+        if not fm or sf.line_of(fm.start()) > dline + 12:
+            problems.append(
+                Problem(
+                    sf.rel,
+                    dline,
+                    "dangling-zero-alloc",
+                    "`lint: zero-alloc` annotation is not followed by a "
+                    "function definition",
+                )
+            )
+            continue
+        brace = sf.code.find("{", fm.end())
+        if brace == -1:
+            continue
+        end = match_brace(sf.code, brace)
+        fn_name = fm.group(1)
+        for rx, label in _ALLOC_BANNED:
+            for am in rx.finditer(sf.code, brace, end):
+                findings.append(
+                    Finding(
+                        "zero-alloc",
+                        sf.rel,
+                        sf.line_of(am.start()),
+                        f"`{label}` inside `// lint: zero-alloc` fn "
+                        f"`{fn_name}`",
+                    )
+                )
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Report:
+    findings: list
+    waivers: list
+    problems: list
+    files_scanned: int
+    elapsed_ms: float
+
+    @property
+    def unwaived(self):
+        return [f for f in self.findings if not f.waived]
+
+    @property
+    def stale_waivers(self):
+        return [w for w in self.waivers if not w.used]
+
+
+def apply_waivers(findings, waivers, files_by_rel):
+    """Match findings against waivers; inline beats tests beats file."""
+    by_key = {}
+    for w in waivers:
+        by_key.setdefault((w.rel, w.rule, w.scope), []).append(w)
+    for f in findings:
+        sf = files_by_rel[f.rel]
+        for w in by_key.get((f.rel, f.rule, "inline"), []):
+            if w.target_line == f.line:
+                f.waived = True
+                w.used = True
+                break
+        if f.waived:
+            continue
+        if sf.in_test(f.line):
+            for w in by_key.get((f.rel, f.rule, "tests"), []):
+                f.waived = True
+                w.used = True
+                break
+        if f.waived:
+            continue
+        for w in by_key.get((f.rel, f.rule, "file"), []):
+            f.waived = True
+            w.used = True
+            break
+
+
+def run_lint(root: pathlib.Path, roots=DEFAULT_ROOTS) -> Report:
+    t0 = time.monotonic()
+    paths = []
+    for r in roots:
+        base = root / r
+        if base.is_dir():
+            paths.extend(sorted(base.rglob("*.rs")))
+    files = [SourceFile(root, p) for p in paths]
+    files_by_rel = {sf.rel: sf for sf in files}
+
+    findings, waivers, problems = [], [], []
+    crdt_types = collect_crdt_impls(files)
+    for sf in files:
+        ws, za = parse_directives(sf, problems)
+        waivers.extend(ws)
+        check_hash_on_wire(sf, findings)
+        check_wall_clock(sf, findings)
+        check_discarded_merge(sf, findings)
+        check_lock_unwrap(sf, findings)
+        check_float_fields(sf, crdt_types, findings)
+        check_zero_alloc(sf, za, findings, problems)
+
+    apply_waivers(findings, waivers, files_by_rel)
+    elapsed = (time.monotonic() - t0) * 1000.0
+    return Report(findings, waivers, problems, len(files), elapsed)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def _print_report(rep: Report, strict: bool):
+    for f in rep.unwaived:
+        r = RULES[f.rule]
+        print(f"{f.rel}:{f.line}: [{f.rule}] {f.message}")
+        print(f"    hint: {r.hint}")
+    for p in rep.problems:
+        print(f"{p.rel}:{p.line}: [{p.kind}] {p.message}")
+    for w in rep.stale_waivers:
+        sev = "error" if strict else "warning"
+        print(
+            f"{w.rel}:{w.line}: [stale-waiver] {sev}: waiver for "
+            f"`{w.rule}` suppresses nothing — remove it (the waiver set "
+            "only shrinks)"
+        )
+    waived = sum(1 for f in rep.findings if f.waived)
+    print(
+        f"holon-lint: {len(rep.findings)} finding(s) "
+        f"({waived} waived, {len(rep.unwaived)} unwaived), "
+        f"{len(rep.stale_waivers)} stale waiver(s), "
+        f"{len(rep.problems)} directive error(s) — "
+        f"{rep.files_scanned} files in {rep.elapsed_ms:.0f} ms"
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="holon-lint",
+        description="determinism & exactly-once static analysis over the "
+        "Rust tree (stdlib-only; see module docstring for the rule set)",
+    )
+    ap.add_argument(
+        "--root",
+        default=None,
+        help="repo root (default: two levels above this script)",
+    )
+    ap.add_argument(
+        "--strict",
+        action="store_true",
+        help="also fail on stale waivers (CI gate mode)",
+    )
+    ap.add_argument("--json", action="store_true", help="machine-readable output")
+    ap.add_argument(
+        "--list-rules", action="store_true", help="print the rule registry and exit"
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in RULES.values():
+            print(f"{r.id:18s} ({r.paper_tag})  {r.summary}")
+            print(f"{'':18s}        fix: {r.hint}")
+        return 0
+
+    root = (
+        pathlib.Path(args.root).resolve()
+        if args.root
+        else pathlib.Path(__file__).resolve().parents[2]
+    )
+    if not (root / "rust" / "src").is_dir():
+        print(f"holon-lint: no rust/src under {root}", file=sys.stderr)
+        return 2
+
+    rep = run_lint(root)
+    if args.json:
+        print(
+            json.dumps(
+                {
+                    "findings": [f.as_dict() for f in rep.findings],
+                    "stale_waivers": [
+                        dataclasses.asdict(w) for w in rep.stale_waivers
+                    ],
+                    "problems": [p.as_dict() for p in rep.problems],
+                    "files_scanned": rep.files_scanned,
+                    "elapsed_ms": rep.elapsed_ms,
+                },
+                indent=2,
+            )
+        )
+    else:
+        _print_report(rep, args.strict)
+
+    failed = bool(rep.unwaived or rep.problems)
+    if args.strict and rep.stale_waivers:
+        failed = True
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,6 +3,7 @@
 //! (scalar vs AOT XLA kernel). These are the numbers the perf pass in
 //! EXPERIMENTS.md §Perf iterates on.
 
+// lint:allow-file(discarded-merge): benchmark bodies discard outcomes by design — timing is the observable
 use holon::api::{BatchAggregator, ScalarAggregator};
 use holon::benchkit::{bench, section};
 use holon::clock::SimClock;

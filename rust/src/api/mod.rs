@@ -151,6 +151,7 @@ impl<'a> Ctx<'a> {
     /// As [`emit_with`](Self::emit_with), but the closure may withdraw
     /// the record by returning `false` — the frame (tag prefix included)
     /// is rolled back without a trace. Returns whether it was emitted.
+    // lint: zero-alloc
     pub fn try_emit_with(&mut self, ref_ts: SimTime, f: impl FnOnce(&mut Writer) -> bool) -> bool {
         let tags = self.tags;
         self.arena.frame(ref_ts, |w| {
@@ -219,8 +220,16 @@ impl BatchAggregator for ScalarAggregator {
         // scan over the windows seen so far (keyed queries like Q4 put
         // hundreds of (window × key) segments in one batch). Values fold
         // in item order per window, so float sums match the old scan.
-        let mut acc: std::collections::HashMap<WindowId, (f64, u64, f64)> =
-            std::collections::HashMap::with_capacity(items.len().min(1024));
+        // Classified non-wire (audited for holon-lint D1): the map is
+        // consumed only by the `collect` + `sort_unstable_by_key` below,
+        // so its iteration order never escapes this function — the
+        // emitted `windows` vec is strictly window-ordered.
+        #[allow(clippy::disallowed_types)]
+        let mut acc =
+            // lint:allow(hash-on-wire): iteration order is quotiented out by the sort below — nothing order-dependent leaves this function
+            std::collections::HashMap::<WindowId, (f64, u64, f64)>::with_capacity(
+                items.len().min(1024),
+            );
         for &(v, w) in items {
             let e = acc.entry(w).or_insert((0.0, 0, f64::NEG_INFINITY));
             e.0 += v;

@@ -338,6 +338,7 @@ mod tests {
         s.1.increment_watermark(0, 700);
         assert_eq!(SharedState::dirty_windows(&s), 0);
         assert!(SharedState::has_delta(&s));
+        // lint:allow(discarded-merge): draining purely to disarm the delta flag — the payload is asserted elsewhere, this test watches `has_delta`
         let _ = SharedState::take_delta(&mut s);
         assert!(!SharedState::has_delta(&s));
         // a dirty window arms it too

@@ -127,6 +127,7 @@ impl OutputArena {
     /// slot (after the seq/ref_ts/len header, which this method writes
     /// and backpatches). Returning `false` cancels the frame: the buffer
     /// is rolled back and nothing is recorded.
+    // lint: zero-alloc
     pub fn frame(&mut self, ref_ts: SimTime, f: impl FnOnce(&mut Writer) -> bool) -> bool {
         let start = self.w.len();
         let cap = self.w.capacity();

@@ -7,6 +7,10 @@
 //! machine-readable `BENCH_*.json` perf-trajectory reports written by
 //! `holon bench` (schema documented in EXPERIMENTS.md).
 
+// Benchmarks measure wall time by definition; this module is the
+// sanctioned boundary. Mirrors the holon-lint D2 (wall-clock) exemption.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 /// Minimal streaming JSON emitter (no serde in the vendored crate set):

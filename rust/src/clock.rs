@@ -8,6 +8,10 @@
 //! between the compared systems are preserved because both run against
 //! the same clock.
 
+// This module is the sanctioned wall-time boundary: everything above it
+// sees only sim-time. Mirrors the holon-lint D2 (wall-clock) exemption.
+#![allow(clippy::disallowed_methods)]
+
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};

@@ -14,12 +14,19 @@ use super::{Crdt, MergeOutcome};
 use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
 
 /// One contributor's running aggregate over its input prefix.
+///
+/// The float fields are sound under the prefix discipline (waived from
+/// holon-lint D4): a join never adds two cells' floats — it keeps the
+/// larger-`count` cell *wholesale* (two replicas of one contributor are
+/// totally ordered by `count`), so merge order cannot reach the values.
+/// Within a single contributor, values fold in deterministic input
+/// order, making every replica's cell bit-identical.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AggCell {
     pub count: u64,
-    pub sum: f64,
-    pub min: f64,
-    pub max: f64,
+    pub sum: f64, // lint:allow(float-crdt-field): prefix discipline — join keeps the larger-count cell wholesale, floats are never added across replicas
+    pub min: f64, // lint:allow(float-crdt-field): prefix discipline — see `sum`
+    pub max: f64, // lint:allow(float-crdt-field): prefix discipline — see `sum`
 }
 
 impl Default for AggCell {
@@ -191,6 +198,7 @@ impl Decode for PrefixAgg {
     }
 }
 
+// lint:allow-tests(discarded-merge): law-check tests merge for effect; outcomes are asserted by check_merge_outcome
 #[cfg(test)]
 mod tests {
     use super::*;

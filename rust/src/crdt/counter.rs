@@ -151,6 +151,7 @@ impl Decode for PNCounter {
     }
 }
 
+// lint:allow-tests(discarded-merge): law-check tests merge for effect; outcomes are asserted by check_merge_outcome
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -64,6 +64,7 @@ impl<K: Ord + Clone, C: Crdt> MapCrdt<K, C> {
             Some(mine) => mine.merge(value),
             None => {
                 let mut fresh = C::default();
+                // lint:allow(discarded-merge): joining into a fresh ⊥ entry — the map-level outcome is `Changed` regardless (the map gains a key) and is returned below
                 let _ = fresh.merge(value);
                 self.entries.insert(key.clone(), fresh);
                 MergeOutcome::Changed
@@ -128,6 +129,7 @@ impl<K: Ord + Clone + Decode, C: Crdt> Decode for MapCrdt<K, C> {
     }
 }
 
+// lint:allow-tests(discarded-merge): clone-accounting tests merge for the side effect on the clone counter, not the outcome
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -293,6 +293,7 @@ impl<T: Ord + Clone + Decode> Decode for ORSet<T> {
     }
 }
 
+// lint:allow-tests(discarded-merge): law-check tests merge for effect; outcomes are asserted by check_merge_outcome
 #[cfg(test)]
 mod tests {
     use super::*;

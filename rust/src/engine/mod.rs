@@ -26,7 +26,7 @@ use crate::log::{LogBroker, Topic};
 use crate::metrics::{LatencyHistogram, TimeSeries};
 use crate::net::{Bus, NetConfig};
 use crate::storage::CheckpointStore;
-use crate::util::{NodeId, PartitionId};
+use crate::util::{LockExt, NodeId, PartitionId};
 
 /// Cluster-wide observability counters shared by nodes and the sink.
 #[derive(Debug, Clone)]
@@ -235,13 +235,27 @@ impl ClusterMetrics {
             .fetch_add(s.scan_rows_avoided, Ordering::Relaxed);
     }
 
+    /// Fold a join's reported outcome into the merge-effectiveness
+    /// counters. The trait-v3 contract is that every join reports its
+    /// effect — call sites must consume the
+    /// [`MergeOutcome`](crate::crdt::MergeOutcome) rather than
+    /// discard it (holon-lint rule `discarded-merge`); this is
+    /// the standard sink for outcomes with no better use in scope.
+    pub fn note_join(&self, outcome: crate::crdt::MergeOutcome) {
+        if outcome.is_changed() {
+            self.merge_changed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.merge_noop.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     /// Fold a node's per-shard encoded gossip byte counts (index =
     /// shard id) into the cluster-wide counters.
     pub fn add_shard_gossip_bytes(&self, per_shard: &[u64]) {
         if per_shard.is_empty() {
             return;
         }
-        let mut v = self.shard_gossip_bytes.lock().unwrap();
+        let mut v = self.shard_gossip_bytes.plane_lock();
         if v.len() < per_shard.len() {
             v.resize(per_shard.len(), 0);
         }
@@ -360,7 +374,7 @@ impl<P: Processor> HolonCluster<P> {
             cluster.spawn_node(id);
         }
         let sink = sink::spawn_sink(&cluster);
-        *cluster.sink.lock().unwrap() = Some(sink);
+        *cluster.sink.plane_lock() = Some(sink);
         cluster
     }
 
@@ -369,8 +383,7 @@ impl<P: Processor> HolonCluster<P> {
         self.bus.register(id);
         let reads = self
             .read_handles
-            .lock()
-            .unwrap()
+            .plane_lock()
             .entry(id)
             .or_insert_with(|| {
                 crate::query::ReadHandle::with_retention(effective_changefeed_retention(&self.cfg))
@@ -396,7 +409,7 @@ impl<P: Processor> HolonCluster<P> {
             .name(format!("holon-node-{id}"))
             .spawn(move || node::node_main(ctx))
             .expect("spawn node");
-        self.nodes.lock().unwrap().insert(
+        self.nodes.plane_lock().insert(
             id,
             NodeHandle {
                 failed,
@@ -408,14 +421,14 @@ impl<P: Processor> HolonCluster<P> {
     /// Kill a node abruptly (no final checkpoint, queued messages lost) —
     /// the §5.2 failure injection.
     pub fn fail_node(&self, id: NodeId) {
-        let mut nodes = self.nodes.lock().unwrap();
+        let mut nodes = self.nodes.plane_lock();
         if let Some(h) = nodes.get_mut(&id) {
             h.failed.store(true, Ordering::Release);
             if let Some(j) = h.join.take() {
                 drop(nodes); // don't hold the lock while joining
                 let _ = j.join();
                 self.bus.unregister(id);
-                self.nodes.lock().unwrap().remove(&id);
+                self.nodes.plane_lock().remove(&id);
                 return;
             }
         }
@@ -425,7 +438,7 @@ impl<P: Processor> HolonCluster<P> {
     /// it re-learns membership and steals back its share of partitions).
     pub fn restart_node(self: &Arc<Self>, id: NodeId) {
         assert!(
-            !self.nodes.lock().unwrap().contains_key(&id),
+            !self.nodes.plane_lock().contains_key(&id),
             "node {id} is still running"
         );
         self.spawn_node(id);
@@ -437,7 +450,7 @@ impl<P: Processor> HolonCluster<P> {
     /// id has never held state.
     pub fn add_node(self: &Arc<Self>, id: NodeId) {
         assert!(
-            !self.nodes.lock().unwrap().contains_key(&id),
+            !self.nodes.plane_lock().contains_key(&id),
             "node {id} is already running"
         );
         self.spawn_node(id);
@@ -447,19 +460,19 @@ impl<P: Processor> HolonCluster<P> {
     /// down gracefully (call after [`stop`](Self::stop); killed nodes do
     /// not publish). Keyed by node id.
     pub fn final_replicas(&self) -> BTreeMap<NodeId, Vec<u8>> {
-        self.final_states.lock().unwrap().clone()
+        self.final_states.plane_lock().clone()
     }
 
     /// The changefeed read handle of node `id` — present for any node
     /// that was ever spawned, even while it is down (the handle and its
     /// subscribers' cursors outlive node restarts).
     pub fn read_handle(&self, id: NodeId) -> Option<crate::query::ReadHandle> {
-        self.read_handles.lock().unwrap().get(&id).cloned()
+        self.read_handles.plane_lock().get(&id).cloned()
     }
 
     /// Ids of currently running nodes.
     pub fn running_nodes(&self) -> Vec<NodeId> {
-        self.nodes.lock().unwrap().keys().copied().collect()
+        self.nodes.plane_lock().keys().copied().collect()
     }
 
     /// All partition ids of this deployment.
@@ -471,7 +484,7 @@ impl<P: Processor> HolonCluster<P> {
     pub fn stop(&self) {
         self.shutdown.store(true, Ordering::Release);
         let handles: Vec<_> = {
-            let mut nodes = self.nodes.lock().unwrap();
+            let mut nodes = self.nodes.plane_lock();
             nodes
                 .iter_mut()
                 .filter_map(|(_, h)| h.join.take())
@@ -480,7 +493,7 @@ impl<P: Processor> HolonCluster<P> {
         for h in handles {
             let _ = h.join();
         }
-        if let Some(s) = self.sink.lock().unwrap().take() {
+        if let Some(s) = self.sink.plane_lock().take() {
             let _ = s.join();
         }
     }

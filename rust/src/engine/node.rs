@@ -37,7 +37,7 @@ use crate::log::Topic;
 use crate::net::{Bus, MsgKind};
 use crate::storage::{CheckpointStore, PartitionCheckpoint};
 use crate::trace::{TraceHandle, TraceKind};
-use crate::util::{NodeId, PartitionId, SimTime, XorShift64};
+use crate::util::{LockExt, NodeId, PartitionId, SimTime, XorShift64};
 
 use super::membership::{target_owner, Membership};
 use super::ClusterMetrics;
@@ -187,6 +187,23 @@ fn decode_claim(bytes: &[u8]) -> Option<(PartitionId, SimTime)> {
     Some((r.get_u32().ok()?, r.get_u64().ok()?))
 }
 
+/// Encode one gossip round's payload — the full replica or the pending
+/// delta — into a fresh pre-sized buffer. Full rounds drop the dirty
+/// markers afterwards: every peer is about to see the full state
+/// (delta-mode full-sync forces fanout = all; non-delta mode has no
+/// delta reader at all), so no peer's missing windows are lost.
+// lint: zero-alloc
+fn encode_gossip_round<S: SharedState>(shared: &mut S, full: bool, size_hint: usize) -> Writer {
+    let mut w = Writer::with_capacity(size_hint);
+    if full {
+        shared.encode(&mut w);
+        shared.mark_clean();
+    } else {
+        shared.take_delta().encode(&mut w);
+    }
+    w
+}
+
 fn encode_checkpoint_state<S: Encode, L: Encode>(local: &L, own: &S) -> Vec<u8> {
     // Single-pass nested encode: byte-identical to the old
     // put_bytes(&x.to_bytes()) layout without materializing the two
@@ -298,7 +315,7 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
             let floor = shared.watermark_floor();
             let wm = if floor == SimTime::MAX { 0 } else { floor };
             reads.publish_full(Arc::new(bytes.clone()), wm);
-            state_out.lock().unwrap().insert(id, bytes);
+            state_out.plane_lock().insert(id, bytes);
             return;
         }
 
@@ -483,7 +500,11 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
             // watermark bump), so skip the drain entirely; recovery
             // joins the full accumulator already.
             if consumed > 0 {
-                let _ = st.own.join_delta_into(&mut shared);
+                // The outcome feeds the merge-effectiveness counters: a
+                // `Changed` drain is a batch that contributed fresh
+                // state, a no-op drain a batch whose contribution the
+                // replica already subsumed (steal replay).
+                metrics.note_join(st.own.join_delta_into(&mut shared));
             } else {
                 // contract (documented on Processor::process): an empty
                 // batch must not mutate `own` — anything it wrote here
@@ -586,18 +607,7 @@ pub fn node_main<P: Processor>(ctx: NodeCtx<P>) {
                 // buffer so a round is a single exact allocation (the
                 // payload used to be re-wrapped per broadcast call and,
                 // before that, cloned per recipient).
-                let mut w = Writer::with_capacity(gossip_size_hint);
-                if plan.full {
-                    shared.encode(&mut w);
-                    // Every peer is about to see the full state
-                    // (delta-mode full-sync forces fanout = all;
-                    // non-delta mode has no delta reader at all): the
-                    // dirty markers can drop without losing any peer's
-                    // missing windows.
-                    shared.mark_clean();
-                } else {
-                    shared.take_delta().encode(&mut w);
-                }
+                let w = encode_gossip_round(&mut shared, plan.full, gossip_size_hint);
                 gossip_size_hint = w.len();
                 metrics.add_shard_gossip_bytes(&crate::shard::take_shard_encoded_bytes());
                 let payload = Arc::new(w.into_bytes());
@@ -772,8 +782,9 @@ fn recover_partition<P: Processor>(
     if let Some(cp) = store.get(p) {
         if let Some((local, own)) = decode_checkpoint_state::<P::Shared, P::Local>(&cp.state) {
             // The recovered contribution re-joins the replica; if newer
-            // state already arrived via gossip the join is a no-op.
-            let _ = shared.join(&own);
+            // state already arrived via gossip the join is a no-op —
+            // the counters record which case this recovery hit.
+            metrics.note_join(shared.join(&own));
             metrics.recoveries.fetch_add(1, Ordering::Relaxed);
             trace.record(now, TraceKind::CheckpointRestore, p as u64, cp.nxt_idx, cp.nxt_odx);
             return PartState {

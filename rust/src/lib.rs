@@ -272,6 +272,58 @@
 //! `stage_latency_{ingest,fire,converge,emit}_{p50,p99}` in the bench
 //! JSON, measuring source→node pickup, window-end→watermark-fire,
 //! fire→sink-convergence, and convergence→sink-drain respectively.
+//!
+//! ## Determinism hazards & static analysis (holon-lint)
+//!
+//! The runtime suites above *check* determinism and exactly-once; the
+//! disciplines that make those checks pass are **source-level** and are
+//! enforced by `python/tools/holon_lint.py`, a stdlib-only analyzer
+//! over `rust/{src,tests,benches}` (CI `lint-smoke` job — it runs even
+//! where no cargo toolchain exists). The hazards, each mapped to the
+//! paper guarantee it would silently break:
+//!
+//! * **hash-on-wire (D1)** — `HashMap`/`HashSet` in a module whose
+//!   iteration order can reach the wire (crdt, wcrdt, shard, net, api,
+//!   engine, storage, codec, arena, query::index). Unordered iteration
+//!   makes two replicas encode the same lattice state as different
+//!   bytes, falsifying byte-identical gossip/checkpoint/emit. Use
+//!   `BTreeMap`, [`wcrdt::WindowRing`], or sort before emitting.
+//! * **wall-clock (D2)** — `SystemTime`/`Instant`/ambient RNG outside
+//!   [`clock`], [`benchkit`], [`trace`]. All data-plane time flows
+//!   through [`clock::SimClock`]; all randomness through seeded
+//!   `util::XorShift64` — otherwise seeded fault schedules stop
+//!   replaying.
+//! * **discarded-merge (D3)** — `let _ = …merge/join/take_delta…`.
+//!   The trait-v3 contract is that every join reports its effect
+//!   ([`crdt::MergeOutcome`]); discarding it hides divergence and
+//!   breaks the dirty-marking discipline delta gossip rests on. Feed
+//!   outcomes to `ClusterMetrics::note_join` or waive with the reason
+//!   the outcome is irrelevant at that site.
+//! * **float-crdt-field (D4)** — raw `f32`/`f64` fields in CRDT state.
+//!   Float addition is not associative, so merge order would leak into
+//!   converged values. Use `util::OrdF64` (join = max under a total
+//!   order) or a documented prefix discipline
+//!   ([`crdt::PrefixAgg`]'s waiver: joins move whole cells, floats are
+//!   never added across replicas).
+//! * **zero-alloc (A1)** — functions annotated `// lint: zero-alloc`
+//!   (the arena emit path, `WindowRing` in-horizon touch,
+//!   `TraceHandle::record`, the gossip encode round) must contain no
+//!   allocating construct; the counting `#[global_allocator]` in
+//!   `benches/micro_hotpath.rs` is the runtime ground truth for
+//!   transitive callees, this is its always-on static twin.
+//! * **lock-unwrap (S1)** — bare `.lock().unwrap()` in data-plane
+//!   modules. A poisoned mutex cascades one partition's panic across
+//!   every in-process node — a cluster-wide abort the exactly-once
+//!   recovery machinery never gets to handle. `util::LockExt::plane_lock`
+//!   recovers the guard instead; sound because CRDT state is monotone,
+//!   so a torn update is re-converged by the next merge.
+//!
+//! Waivers are inline comments with a mandatory reason
+//! (`// lint:allow(rule): why`, plus `allow-file`/`allow-tests`
+//! granularity); a waiver that stops suppressing anything fails CI
+//! (`--strict`), so the waiver set only shrinks. `clippy.toml` at the
+//! repo root mirrors D1/D2 as `disallowed_types`/`disallowed_methods`
+//! once a cargo toolchain is present.
 
 pub mod api;
 pub mod arena;

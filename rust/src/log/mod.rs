@@ -14,7 +14,7 @@ use std::sync::{Arc, Mutex, RwLock};
 
 use crate::arena::FinishedBatch;
 use crate::clock::SimClock;
-use crate::util::{PartitionId, SimTime};
+use crate::util::{LockExt, PartitionId, SimTime};
 
 /// A byte payload that is a *view* into a shared backing buffer.
 ///
@@ -301,7 +301,7 @@ impl LogBroker {
     /// Create (or fetch) a topic with the given partition count.
     /// Partition counts are immutable once created, like Kafka's.
     pub fn topic(&self, name: &str, partitions: u32) -> Arc<Topic> {
-        let mut topics = self.inner.topics.lock().unwrap();
+        let mut topics = self.inner.topics.plane_lock();
         if let Some(t) = topics.get(name) {
             assert_eq!(
                 t.partitions(),
@@ -317,7 +317,7 @@ impl LogBroker {
 
     /// Fetch an existing topic.
     pub fn get(&self, name: &str) -> Option<Arc<Topic>> {
-        self.inner.topics.lock().unwrap().get(name).cloned()
+        self.inner.topics.plane_lock().get(name).cloned()
     }
 
     pub fn clock(&self) -> &SimClock {

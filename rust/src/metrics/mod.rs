@@ -13,7 +13,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
-use crate::util::SimTime;
+use crate::util::{LockExt, SimTime};
 
 /// Log-bucketed latency histogram (HDR-style, base-1.07 buckets over
 /// sim-ms). Recording is lock-free — one relaxed `fetch_add` per bucket
@@ -183,7 +183,7 @@ impl TimeSeries {
     /// Record a measurement at sim-time `t`.
     pub fn record(&self, t: SimTime, value: f64) {
         let idx = (t / self.bucket_ms) as usize;
-        let mut s = self.inner.lock().unwrap();
+        let mut s = self.inner.plane_lock();
         if s.samples.len() <= idx {
             s.samples.resize(idx + 1, (0.0, 0));
         }
@@ -194,7 +194,7 @@ impl TimeSeries {
     /// Record `n` occurrences at time `t` (throughput counting).
     pub fn bump(&self, t: SimTime, n: u64) {
         let idx = (t / self.bucket_ms) as usize;
-        let mut s = self.inner.lock().unwrap();
+        let mut s = self.inner.plane_lock();
         if s.samples.len() <= idx {
             s.samples.resize(idx + 1, (0.0, 0));
         }
@@ -204,8 +204,7 @@ impl TimeSeries {
     /// Mean value per bucket (None for empty buckets).
     pub fn means(&self) -> Vec<Option<f64>> {
         self.inner
-            .lock()
-            .unwrap()
+            .plane_lock()
             .samples
             .iter()
             .map(|&(sum, n)| if n == 0 { None } else { Some(sum / n as f64) })
@@ -216,8 +215,7 @@ impl TimeSeries {
     pub fn rates_per_sec(&self) -> Vec<f64> {
         let per_bucket = self.bucket_ms as f64 / 1000.0;
         self.inner
-            .lock()
-            .unwrap()
+            .plane_lock()
             .samples
             .iter()
             .map(|&(_, n)| n as f64 / per_bucket)
@@ -225,7 +223,7 @@ impl TimeSeries {
     }
 
     pub fn counts(&self) -> Vec<u64> {
-        self.inner.lock().unwrap().samples.iter().map(|&(_, n)| n).collect()
+        self.inner.plane_lock().samples.iter().map(|&(_, n)| n).collect()
     }
 }
 

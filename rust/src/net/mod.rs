@@ -42,7 +42,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::clock::SimClock;
-use crate::util::{NodeId, SimTime, XorShift64};
+use crate::util::{LockExt, NodeId, SimTime, XorShift64};
 
 /// Message kinds on the buses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -299,7 +299,7 @@ impl Bus {
         let sent_at = self.clock.now();
         let cap = self.outbound_cap();
         let ob = self.sender_outbound(from);
-        let mut ob = ob.lock().unwrap();
+        let mut ob = ob.plane_lock();
         let q = ob.queues.entry(to).or_default();
         q.push_back(OutMsg {
             kind,
@@ -378,7 +378,7 @@ impl Bus {
             return;
         }
         if fanout > 0 && fanout < peers.len() {
-            let mut rng = self.inner.rng.lock().unwrap();
+            let mut rng = self.inner.rng.plane_lock();
             for i in 0..fanout {
                 let j = i + rng.next_below((peers.len() - i) as u64) as usize;
                 peers.swap(i, j);
@@ -424,7 +424,7 @@ impl Bus {
             Some(ob) => ob.clone(),
             None => return stats,
         };
-        let mut ob = ob.lock().unwrap();
+        let mut ob = ob.plane_lock();
         if ob.queues.values().all(|q| q.is_empty()) {
             return stats;
         }
@@ -436,7 +436,7 @@ impl Bus {
         let mut bytes = 0u64;
         // ONE RNG critical section for the whole batch (the synchronous
         // bus locked it once per message, on the sender's hot path).
-        let mut rng = self.inner.rng.lock().unwrap();
+        let mut rng = self.inner.rng.plane_lock();
         for (&to, q) in ob.queues.iter_mut() {
             if q.is_empty() {
                 continue;
@@ -470,7 +470,7 @@ impl Bus {
                 continue;
             }
             let mut peer = PeerFlush::default();
-            let mut inq = inbox.lock().unwrap();
+            let mut inq = inbox.plane_lock();
             let mut free = match cfg.inbox_capacity {
                 0 => usize::MAX,
                 cap => cap.saturating_sub(inq.queue.len()),
@@ -538,7 +538,7 @@ impl Bus {
                 None => return Vec::new(),
             }
         };
-        let mut inbox = inbox.lock().unwrap();
+        let mut inbox = inbox.plane_lock();
         let mut due: Vec<(SimTime, Msg)> = Vec::new();
         let mut rest = VecDeque::with_capacity(inbox.queue.len());
         while let Some((at, msg)) = inbox.queue.pop_front() {
@@ -571,7 +571,7 @@ impl Bus {
         let inboxes = self.inner.inboxes.read().unwrap();
         match inboxes.get(&node) {
             Some(inbox) => {
-                let depth = inbox.lock().unwrap().queue.len();
+                let depth = inbox.plane_lock().queue.len();
                 (self.inner.cfg.inbox_capacity.saturating_sub(depth)) as u64
             }
             None => 0,

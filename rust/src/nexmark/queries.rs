@@ -797,6 +797,7 @@ impl Processor for Query1 {
     }
 }
 
+// lint:allow-tests(discarded-merge): end-to-end query tests drain state for effect and assert on emitted outputs
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -19,7 +19,7 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, Weak};
 
-use crate::util::SimTime;
+use crate::util::{LockExt, SimTime};
 
 /// Default ring retention (items) — the *floor*: deployments size the
 /// ring from the gossip config via
@@ -122,7 +122,7 @@ impl ReadHandle {
     /// Publish a full-state payload: appended to the feed AND installed
     /// as the bootstrap snapshot. Returns the item's cursor.
     pub fn publish_full(&self, payload: Arc<Vec<u8>>, watermark: SimTime) -> u64 {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.plane_lock();
         let cursor = inner.next_cursor;
         inner.push(FeedItem {
             cursor,
@@ -140,7 +140,7 @@ impl ReadHandle {
 
     /// Publish a delta payload. Returns the item's cursor.
     pub fn publish_delta(&self, payload: Arc<Vec<u8>>, watermark: SimTime) -> u64 {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.plane_lock();
         let cursor = inner.next_cursor;
         inner.push(FeedItem {
             cursor,
@@ -153,12 +153,12 @@ impl ReadHandle {
 
     /// Latest bootstrap snapshot, if any full state was published yet.
     pub fn snapshot(&self) -> Option<StateSnapshot> {
-        self.inner.lock().unwrap().snapshot.clone()
+        self.inner.plane_lock().snapshot.clone()
     }
 
     /// Subscribe from the live tail (items published after this call).
     pub fn subscribe(&self) -> Subscription {
-        let at = self.inner.lock().unwrap().next_cursor;
+        let at = self.inner.plane_lock().next_cursor;
         self.subscribe_at(at)
     }
 
@@ -166,7 +166,7 @@ impl ReadHandle {
     /// fallen out of retention the first `poll` reports [`FeedGap`].
     pub fn subscribe_at(&self, cursor: u64) -> Subscription {
         let cur = Arc::new(AtomicU64::new(cursor));
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.plane_lock();
         inner.subscribers.push(Arc::downgrade(&cur));
         Subscription {
             inner: Arc::clone(&self.inner),
@@ -176,18 +176,18 @@ impl ReadHandle {
 
     /// Cursor the next published item will receive.
     pub fn latest_cursor(&self) -> u64 {
-        self.inner.lock().unwrap().next_cursor
+        self.inner.plane_lock().next_cursor
     }
 
     /// Oldest cursor still retained in the ring.
     pub fn oldest_retained(&self) -> u64 {
-        self.inner.lock().unwrap().oldest_retained()
+        self.inner.plane_lock().oldest_retained()
     }
 
     /// Items the slowest live subscriber is behind the head (0 when no
     /// subscribers). Dead subscriptions are pruned here.
     pub fn max_lag(&self) -> u64 {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.plane_lock();
         let head = inner.next_cursor;
         let mut lag = 0u64;
         inner.subscribers.retain(|w| match w.upgrade() {
@@ -220,7 +220,7 @@ impl Subscription {
     /// subscription. Returns [`FeedGap`] if the cursor fell behind
     /// retention (cursor is NOT advanced; re-bootstrap via snapshot).
     pub fn poll(&mut self, max: usize) -> Result<Vec<FeedItem>, FeedGap> {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.inner.plane_lock();
         let want = self.cursor.load(Ordering::Relaxed);
         let oldest = inner.oldest_retained();
         if want < oldest {

@@ -682,6 +682,7 @@ mod tests {
         assert_eq!(q.cursor(), 2);
         let mut final_wm = flat(&[0]);
         final_wm.increment_watermark(0, 1000);
+        // lint:allow(discarded-merge): watermark-only ingest to close the window — the point query on the next line asserts the resulting state
         let _ = q.ingest(&final_wm);
         assert_eq!(q.point(0, &2, 0).unwrap().value.unwrap().value(), 7);
     }

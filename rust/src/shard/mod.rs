@@ -516,6 +516,7 @@ impl<K: Ord + Clone + Encode + Decode, C: Crdt> Decode for ShardedMapCrdt<K, C> 
     }
 }
 
+// lint:allow-tests(discarded-merge): tests join shards for effect and assert on values and dirty-sets directly
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -17,7 +17,7 @@ use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
 use crate::codec::{Decode, DecodeResult, Encode, Reader, Writer};
-use crate::util::PartitionId;
+use crate::util::{LockExt, PartitionId};
 
 /// A checkpoint of one partition: offsets + opaque processor state.
 #[derive(Debug, Clone, PartialEq)]
@@ -77,7 +77,7 @@ impl CheckpointStore {
     /// Monotone put: ignored if an equal-or-newer checkpoint exists.
     /// Returns whether the checkpoint was accepted.
     pub fn put(&self, p: PartitionId, cp: PartitionCheckpoint) -> bool {
-        let mut s = self.inner.lock().unwrap();
+        let mut s = self.inner.plane_lock();
         s.puts += 1;
         match s.map.get(&p) {
             Some(cur) if cur.dominates(&cp) && cur.nxt_idx != cp.nxt_idx => {
@@ -98,23 +98,23 @@ impl CheckpointStore {
 
     /// Fetch the latest checkpoint of a partition.
     pub fn get(&self, p: PartitionId) -> Option<PartitionCheckpoint> {
-        self.inner.lock().unwrap().map.get(&p).cloned()
+        self.inner.plane_lock().map.get(&p).cloned()
     }
 
     /// All partition ids with a checkpoint.
     pub fn partitions(&self) -> Vec<PartitionId> {
-        self.inner.lock().unwrap().map.keys().copied().collect()
+        self.inner.plane_lock().map.keys().copied().collect()
     }
 
     /// (total puts, rejected stale puts) — observability for tests.
     pub fn stats(&self) -> (u64, u64) {
-        let s = self.inner.lock().unwrap();
+        let s = self.inner.plane_lock();
         (s.puts, s.stale_puts)
     }
 
     /// Persist the whole store to a file (length-prefixed entries).
     pub fn save_to(&self, path: &PathBuf) -> std::io::Result<()> {
-        let s = self.inner.lock().unwrap();
+        let s = self.inner.plane_lock();
         let mut w = Writer::new();
         w.put_u32(s.map.len() as u32);
         for (&p, cp) in &s.map {

@@ -61,7 +61,7 @@ use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
 use crate::benchkit::JsonWriter;
-use crate::util::{NodeId, SimTime};
+use crate::util::{LockExt, NodeId, SimTime};
 
 /// Pseudo node id the sink records under (`tid` in the Chrome dump).
 pub const SINK_NODE: NodeId = NodeId::MAX;
@@ -272,8 +272,7 @@ impl Tracer {
         }
         let ring = self
             .rings
-            .lock()
-            .unwrap()
+            .plane_lock()
             .entry(node)
             .or_insert_with(|| Arc::new(Mutex::new(TraceRing::new(self.cap))))
             .clone();
@@ -287,20 +286,18 @@ impl Tracer {
     /// Total events currently held across all rings.
     pub fn event_count(&self) -> usize {
         self.rings
-            .lock()
-            .unwrap()
+            .plane_lock()
             .values()
-            .map(|r| r.lock().unwrap().len())
+            .map(|r| r.plane_lock().len())
             .sum()
     }
 
     /// Lifetime overwritten events across all rings.
     pub fn dropped_total(&self) -> u64 {
         self.rings
-            .lock()
-            .unwrap()
+            .plane_lock()
             .values()
-            .map(|r| r.lock().unwrap().dropped())
+            .map(|r| r.plane_lock().dropped())
             .sum()
     }
 
@@ -312,9 +309,9 @@ impl Tracer {
         let mut w = JsonWriter::new();
         w.obj();
         w.arr_field("traceEvents");
-        let rings = self.rings.lock().unwrap();
+        let rings = self.rings.plane_lock();
         for (node, ring) in rings.iter() {
-            let ring = ring.lock().unwrap();
+            let ring = ring.plane_lock();
             for ev in ring.iter() {
                 w.obj()
                     .str_field("name", ev.kind.name())
@@ -374,13 +371,14 @@ impl TraceHandle {
     /// Record one event. Disabled: a single branch. Enabled: one
     /// uncontended lock + `Copy` store into the pre-allocated ring —
     /// never allocates.
+    // lint: zero-alloc
     #[inline]
     pub fn record(&self, t: SimTime, kind: TraceKind, span_id: u64, detail: u64, aux: u64) {
         if !self.enabled {
             return;
         }
         if let Some(ring) = &self.ring {
-            ring.lock().unwrap().push(TraceEvent {
+            ring.plane_lock().push(TraceEvent {
                 t,
                 node: self.node,
                 kind,
@@ -395,7 +393,7 @@ impl TraceHandle {
     /// node loop mirrors this into the `trace_dropped_events` metric.
     pub fn take_dropped(&self) -> u64 {
         match &self.ring {
-            Some(ring) => ring.lock().unwrap().take_dropped(),
+            Some(ring) => ring.plane_lock().take_dropped(),
             None => 0,
         }
     }

@@ -45,6 +45,30 @@ impl From<f64> for OrdF64 {
     }
 }
 
+/// Poison-recovering mutex access for data-plane modules.
+///
+/// A bare `.lock().unwrap()` turns one panicking thread into a cascade:
+/// every sibling node in the in-process cluster that touches the same
+/// mutex re-panics on the poison flag, so a single partition's bug
+/// aborts the whole cluster before the exactly-once recovery machinery
+/// (heartbeat timeout → steal → checkpoint restore) ever observes the
+/// failure. Recovering the guard is sound here: the protected state is
+/// either CRDT state — monotone, so a torn update is subsumed by the
+/// next merge/anti-entropy round — or an append-only collection whose
+/// operations leave it valid on unwind. Enforced by holon-lint rule
+/// `lock-unwrap` (S1); see python/tools/holon_lint.py.
+pub trait LockExt<T> {
+    /// Lock, recovering the guard from a poisoned mutex instead of
+    /// propagating the panic.
+    fn plane_lock(&self) -> std::sync::MutexGuard<'_, T>;
+}
+
+impl<T> LockExt<T> for std::sync::Mutex<T> {
+    fn plane_lock(&self) -> std::sync::MutexGuard<'_, T> {
+        self.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -59,5 +83,17 @@ mod tests {
     #[test]
     fn ordf64_handles_negative_zero() {
         assert!(OrdF64(-0.0) < OrdF64(0.0));
+    }
+
+    #[test]
+    fn plane_lock_recovers_a_poisoned_mutex() {
+        let m = std::sync::Mutex::new(1u32);
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison the lock");
+        }));
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        *m.plane_lock() += 1;
+        assert_eq!(*m.plane_lock(), 2);
     }
 }

@@ -506,6 +506,7 @@ impl<C: Crdt> Decode for WindowedCrdt<C> {
     }
 }
 
+// lint:allow-tests(discarded-merge): tests join replicas for effect and assert on the resulting window state/bytes
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -135,6 +135,7 @@ impl<T> WindowRing<T> {
     /// Get-or-insert in the slot for `w`, placing new out-of-horizon
     /// entries in the spill map (counted). The hot path — a window
     /// inside the dense range — is an index probe, no allocation.
+    // lint: zero-alloc
     pub fn entry_or_insert_with(&mut self, w: WindowId, f: impl FnOnce() -> T) -> &mut T {
         // existing spill entry wins: the dense range must not shadow it
         if self.spill.contains_key(&w) {

@@ -10,6 +10,7 @@
 //! replica with nothing dirty and no watermark movement skips the
 //! gossip encode/broadcast entirely.
 
+// lint:allow-file(discarded-merge): amplification harness merges to advance replica state; the assertions are on bytes shipped, not outcomes
 use std::sync::atomic::Ordering;
 
 use holon::api::SharedState;

@@ -2,6 +2,7 @@
 //! generated states, WCRDT convergence/determinism invariants, codec
 //! round-trips, and coordinator assignment invariants.
 
+// lint:allow-file(discarded-merge): property suites merge for effect across random schedules; outcomes are checked by the dedicated merge_outcome properties
 use std::collections::BTreeMap;
 
 use holon::codec::{Decode, Encode, Writer};
